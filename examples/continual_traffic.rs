@@ -1,0 +1,124 @@
+//! **End-to-end driver** (Fig. 6 + §V-B): continual hierarchical FL on
+//! synthetic METR-LA traffic, training the real 2-layer GRU through the
+//! AOT Pallas/JAX artifacts via PJRT — all three setups (flat FL,
+//! location-clustered HFL, HFLOP HFL) — logging per-round loss/MSE curves
+//! and communication cost.
+//!
+//! This is the run recorded in EXPERIMENTS.md: it proves the full stack
+//! composes (L3 rust coordinator -> PJRT -> L2 jax train_step -> L1
+//! Pallas fused GRU cell) on a real workload.
+//!
+//! Paper-scale is 20 clients x 100 rounds x 5 epochs x full windows; on
+//! this 1-core testbed the default is scaled (20 clients, 30 rounds,
+//! 1 epoch x 8 batches — a few thousand real train steps). Flags:
+//!   --rounds R --epochs E --batches B --clients N --variant small|paper
+//!   --setups flat,hier,hflop   --mode single (only §V-B1 CL table)
+//!
+//! Run: `cargo run --release --example continual_traffic -- --rounds 30`
+
+use hflop::cli;
+use hflop::config::Setup;
+use hflop::data::window::ContinualWindow;
+use hflop::experiments::{fig6, Scenario, ScenarioConfig};
+use hflop::fl::FlConfig;
+use hflop::metrics::export::{ascii_table, ResultsWriter};
+use hflop::runtime::{Engine, Manifest, Preload};
+
+fn main() -> anyhow::Result<()> {
+    hflop::init_logging();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv)?;
+
+    let manifest = Manifest::load_default()?;
+    let variant = args.str_or("variant", "paper");
+    let engine = Engine::new(&manifest, &variant, Preload::Training)?;
+    let init = manifest.load_init_params(engine.variant())?;
+    println!(
+        "engine: {} | model '{}': {} params ({} bytes)",
+        engine.platform(),
+        variant,
+        engine.variant().param_count,
+        engine.variant().model_bytes
+    );
+
+    let sc = Scenario::build(ScenarioConfig {
+        n_clients: args.usize_or("clients", 20)?,
+        n_edges: args.usize_or("edges", 4)?,
+        weeks: args.usize_or("weeks", 8)?,
+        seed: args.u64_or("seed", 42)?,
+        ..Default::default()
+    })?;
+    println!(
+        "scenario: {} clients on {} sensors, {} edges, HFLOP cost {:.1} (optimal={})",
+        sc.cfg.n_clients,
+        sc.dataset.n_sensors(),
+        sc.cfg.n_edges,
+        sc.hflop_cost,
+        sc.hflop_optimal
+    );
+
+    let fl = FlConfig {
+        epochs: args.usize_or("epochs", 1)?,
+        batches_per_epoch: args.usize_or("batches", 8)?,
+        l: args.usize_or("l", 2)?,
+        lr: args.f64_or("lr", 1e-3)? as f32,
+        rounds: args.usize_or("rounds", 30)?,
+        eval_every: 1,
+    };
+    let window = ContinualWindow::paper(sc.dataset.n_steps, args.usize_or("shift", 288)?);
+
+    let setups: Vec<Setup> = args
+        .str_or("setups", "flat,hier,hflop")
+        .split(',')
+        .map(Setup::parse)
+        .collect::<Result<_, _>>()?;
+
+    let out = ResultsWriter::default_dir()?;
+    let mut table = Vec::new();
+    let mut csv_rows: Vec<Vec<f64>> = Vec::new();
+    for (si, &setup) in setups.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let run = fig6::run_setup(&sc, &engine, setup, fl.clone(), window.clone(), init.clone(), 7)?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "[{}] {} rounds in {:.1}s — first-round MSE {:.5}, final MSE {:.5}, converged@{:?}, comm {:.4} GB",
+            setup.name(),
+            fl.rounds,
+            wall,
+            run.curves.mean_at(0),
+            run.mean_final_mse,
+            run.rounds_to_converge,
+            run.ledger.total_gb()
+        );
+        // Loss curve (mean over clients), ten-round granularity.
+        let curve: Vec<String> = (0..run.curves.n_rounds())
+            .step_by((run.curves.n_rounds() / 10).max(1))
+            .map(|r| format!("{:.4}", run.curves.mean_at(r)))
+            .collect();
+        println!("    mse curve: {}", curve.join(" -> "));
+        table.push(vec![
+            setup.name().to_string(),
+            format!("{:.5}", run.curves.mean_at(0)),
+            format!("{:.5}", run.mean_final_mse),
+            format!("{:?}", run.rounds_to_converge),
+            format!("{:.4}", run.ledger.total_gb()),
+            format!("{:.1}", wall),
+        ]);
+        for round in 0..run.curves.n_rounds() {
+            csv_rows.push(vec![si as f64, round as f64, run.curves.mean_at(round) as f64]);
+        }
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["setup", "first_mse", "final_mse", "converged@", "comm_gb", "wall_s"],
+            &table
+        )
+    );
+    out.write_csv("fig6_e2e.csv", &["setup", "round", "mean_mse"], &csv_rows)?;
+    println!("wrote results/fig6_e2e.csv");
+    println!(
+        "paper Fig. 6: all three setups converge to comparable MSE (~20 rounds), hierarchy does not hurt accuracy"
+    );
+    Ok(())
+}

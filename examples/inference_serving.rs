@@ -1,0 +1,130 @@
+//! Inference serving experiments (Fig. 7 + Fig. 8) plus the *real* PJRT
+//! serving hot path.
+//!
+//! Part 1 — Fig. 7: response-time distributions for flat FL /
+//!   location-clustered HFL / HFLOP under the paper's latency assumptions
+//!   (cloud RTT U(50,100) ms, edge RTT U(8,10) ms), with ASCII histograms.
+//! Part 2 — Fig. 8: end-to-end latency vs edge→cloud speedup at rates λ
+//!   and λ×10; reports the crossover (paper: flat FL wins above 14.25%).
+//! Part 3 — real serving: the dynamic batcher executing the GRU
+//!   `predict` artifacts through PJRT, reporting measured service times —
+//!   the numbers that justify the simulation's service-time scale.
+//!
+//! Run: `cargo run --release --example inference_serving`
+
+use hflop::experiments::{fig7, fig8, Scenario, ScenarioConfig};
+use hflop::inference::serving::{BatchingServer, InferenceRequest};
+use hflop::metrics::export::{ascii_table, ResultsWriter};
+use hflop::runtime::{Engine, Manifest, Preload};
+use hflop::util::rng::Rng;
+use hflop::util::stats::Histogram;
+
+fn main() -> anyhow::Result<()> {
+    hflop::init_logging();
+    let out = ResultsWriter::default_dir()?;
+
+    let sc = Scenario::build(ScenarioConfig {
+        n_clients: 20,
+        n_edges: 4,
+        weeks: 5,
+        balanced_clients: false,
+        ..Default::default()
+    })?;
+
+    // ---- Fig. 7 ----------------------------------------------------------
+    println!("== Fig. 7: inference response times while training ==");
+    let r = fig7::run(&sc, &fig7::Fig7Config::default());
+    let rows = vec![
+        ("flat", &r.flat, "79.07 ± 15.94"),
+        ("hier", &r.location, "17.72 ± 24.26"),
+        ("hflop", &r.hflop, "9.89 ± 4.63"),
+    ];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(name, o, paper)| {
+            vec![
+                name.to_string(),
+                format!("{:.2} ± {:.2}", o.latency.mean(), o.latency.std()),
+                paper.to_string(),
+                format!("{:.1}%", 100.0 * o.spill_fraction()),
+                format!("{}", o.total()),
+            ]
+        })
+        .collect();
+    println!("{}", ascii_table(&["setup", "ours (ms)", "paper (ms)", "spill", "requests"], &table));
+
+    for (name, o, _) in &rows {
+        let mut h = Histogram::new(0.0, 120.0, 12);
+        for &s in &o.samples {
+            h.push(s);
+        }
+        println!("{name} response-time histogram (ms):\n{}", h.render(40));
+    }
+
+    // ---- Fig. 8 ----------------------------------------------------------
+    println!("== Fig. 8: end-to-end latency vs cloud speedup ==");
+    for (panel, scale) in [("a", 1.0), ("b", 10.0)] {
+        let cfg = fig8::Fig8Config { lambda_scale: scale, ..Default::default() };
+        let rows = fig8::run(&sc, &cfg);
+        let cx = fig8::crossover(&rows);
+        println!("fig8{panel}: lambda x{scale}  crossover = {cx:?}  (paper 8b: 0.1425)");
+        for r in rows.iter().step_by(4) {
+            println!(
+                "  speedup {:>4.0}%: flat {:>7.2} ms | hier {:>7.2} ms | hflop {:>7.2} ms",
+                r.speedup * 100.0,
+                r.flat_ms,
+                r.location_ms,
+                r.hflop_ms
+            );
+        }
+        out.write_csv(
+            &format!("fig8{panel}_example.csv"),
+            &["speedup", "flat_ms", "location_ms", "hflop_ms"],
+            &rows
+                .iter()
+                .map(|r| vec![r.speedup, r.flat_ms, r.location_ms, r.hflop_ms])
+                .collect::<Vec<_>>(),
+        )?;
+    }
+
+    // ---- Real serving hot path -------------------------------------------
+    println!("== Real PJRT serving (dynamic batcher, GRU predict artifact) ==");
+    match Manifest::load_default() {
+        Err(e) => println!("(skipping: {e})"),
+        Ok(manifest) => {
+            let engine = Engine::new(&manifest, "paper", Preload::Serving)?;
+            let params = manifest.load_init_params(engine.variant())?;
+            let seq = engine.variant().seq_len;
+            let mut server = BatchingServer::new(&engine, params);
+            let mut rng = Rng::new(1);
+            for id in 0..2048u64 {
+                let window: Vec<f32> = (0..seq).map(|_| rng.normal() as f32).collect();
+                server.submit(InferenceRequest { id, window })?;
+            }
+            server.flush()?;
+            let s = &server.stats;
+            println!(
+                "batched: {} requests / {} batches | mean batch exec {:.3} ms | throughput {:.0} req/s",
+                s.requests,
+                s.batches,
+                s.batch_exec_ms.mean(),
+                s.exec_throughput_rps()
+            );
+            // Singles for comparison (B=1 artifact).
+            let mut single = BatchingServer::new(&engine, manifest.load_init_params(engine.variant())?);
+            for id in 0..256u64 {
+                let window: Vec<f32> = (0..seq).map(|_| rng.normal() as f32).collect();
+                single.submit(InferenceRequest { id, window })?;
+                single.flush()?;
+            }
+            println!(
+                "unbatched: mean exec {:.3} ms | throughput {:.0} req/s  (batching speedup: {:.2}x per request)",
+                single.stats.batch_exec_ms.mean(),
+                single.stats.exec_throughput_rps(),
+                single.stats.batch_exec_ms.mean()
+                    / (s.batch_exec_ms.mean() / engine.variant().serve_batch as f64)
+            );
+        }
+    }
+    Ok(())
+}

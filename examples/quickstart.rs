@@ -1,0 +1,81 @@
+//! Quickstart: the library in five minutes.
+//!
+//! 1. Build an HFLOP instance and solve it exactly.
+//! 2. Turn the solution into an FL hierarchy.
+//! 3. Load the AOT model artifacts through PJRT and run a few training
+//!    rounds + one real inference (requires `make artifacts`).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hflop::data::window::ContinualWindow;
+use hflop::experiments::{Scenario, ScenarioConfig};
+use hflop::fl::{ContinualHfl, FlConfig, Hierarchy};
+use hflop::hflop::InstanceBuilder;
+use hflop::runtime::{Engine, Manifest, Preload};
+use hflop::solver::{self, SolveOptions};
+
+fn main() -> anyhow::Result<()> {
+    hflop::init_logging();
+
+    // --- 1. HFLOP: place aggregators, assign devices --------------------
+    // 20 devices, 4 candidate edge hosts, the paper's §V-D cost topology.
+    let inst = InstanceBuilder::unit_cost(20, 4, 42).build();
+    let sol = solver::solve(&inst, &SolveOptions::exact())?;
+    println!(
+        "HFLOP: communication cost {:.1}, {} aggregators open, optimal = {}",
+        sol.cost,
+        sol.assignment.n_open(),
+        sol.proven_optimal
+    );
+
+    // --- 2. Solution -> FL hierarchy ------------------------------------
+    let hierarchy = Hierarchy::from_assignment(&sol.assignment);
+    println!(
+        "hierarchy: {} clusters, {} participating devices",
+        hierarchy.n_clusters(),
+        hierarchy.n_participants()
+    );
+
+    // --- 3. Real training through the PJRT runtime ----------------------
+    let Ok(manifest) = Manifest::load_default() else {
+        println!("(run `make artifacts` to enable the PJRT part)");
+        return Ok(());
+    };
+    let engine = Engine::new(&manifest, "small", Preload::All)?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // Synthetic traffic world: 8 clients, 2 edges (fast demo scale).
+    let sc = Scenario::build(ScenarioConfig {
+        n_clients: 8,
+        n_edges: 2,
+        weeks: 5,
+        ..Default::default()
+    })?;
+    let init = manifest.load_init_params(engine.variant())?;
+    let fl = FlConfig { epochs: 1, batches_per_epoch: 2, l: 2, lr: 1e-2, rounds: 6, eval_every: 1 };
+    let window = ContinualWindow::paper(sc.dataset.n_steps, 288);
+    let clients =
+        hflop::experiments::fig6::build_clients(&sc, &engine, window.train_range(), 7);
+    let mut sys = ContinualHfl::new(
+        &engine,
+        hflop::experiments::fig6::hierarchy_for(&sc, hflop::config::Setup::Hflop),
+        clients,
+        window,
+        fl,
+        init.clone(),
+        Some(&sc.inst),
+    );
+    sys.run()?;
+    println!(
+        "trained 6 rounds: mean val MSE {:.5} -> {:.5}, comm {:.4} GB",
+        sys.curves.mean_at(0),
+        sys.curves.converged_mean(2),
+        sys.ledger.total_gb()
+    );
+
+    // --- 4. One real inference ------------------------------------------
+    let window_in = vec![0.0f32; engine.variant().seq_len];
+    let pred = engine.predict(&sys.global_params, &window_in)?;
+    println!("inference on trained global model: {:.4}", pred[0]);
+    Ok(())
+}

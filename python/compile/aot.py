@@ -1,0 +1,193 @@
+"""AOT compile path: lower L2/L1 to HLO text artifacts for the rust runtime.
+
+Emits, per model variant (``paper``, ``small``):
+
+    artifacts/train_step_<v>.hlo.txt   (params.., x[B,T,I], y[B,O], lr) ->
+                                       (params.., loss)
+    artifacts/predict_<v>.hlo.txt      (params.., x[1,T,I]) -> (y[1,O],)
+    artifacts/predict_b8_<v>.hlo.txt   (params.., x[8,T,I]) -> (y[8,O],)
+                                       -- used by the L3 dynamic batcher
+    artifacts/eval_<v>.hlo.txt         (params.., x[Be,T,I], y[Be,O]) -> (mse,)
+    artifacts/params_init_<v>.bin      flat f32 LE initial parameters
+    artifacts/manifest.json            shapes / ABI / file index
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs only here, at build time (``make artifacts``); the rust binary
+is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+SERVE_BATCH = 8  # L3 dynamic batcher max batch; predict_b8 artifact
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XLA HLO text via stablehlo (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(cfg: M.ModelConfig):
+    """ShapeDtypeStructs for the parameter ABI."""
+    return [jax.ShapeDtypeStruct(s, jnp.float32)
+            for _, s in cfg.param_shapes()]
+
+
+def lower_variant(cfg: M.ModelConfig, out_dir: str) -> dict:
+    """Lower all artifacts of one model variant; return its manifest entry."""
+    f32 = jnp.float32
+    pspecs = _specs(cfg)
+    n = len(pspecs)
+
+    x_train = jax.ShapeDtypeStruct((cfg.train_batch, cfg.seq_len, cfg.in_dim), f32)
+    y_train = jax.ShapeDtypeStruct((cfg.train_batch, cfg.out_dim), f32)
+    x_pred1 = jax.ShapeDtypeStruct((1, cfg.seq_len, cfg.in_dim), f32)
+    x_pred8 = jax.ShapeDtypeStruct((SERVE_BATCH, cfg.seq_len, cfg.in_dim), f32)
+    x_eval = jax.ShapeDtypeStruct((cfg.eval_batch, cfg.seq_len, cfg.in_dim), f32)
+    y_eval = jax.ShapeDtypeStruct((cfg.eval_batch, cfg.out_dim), f32)
+    lr = jax.ShapeDtypeStruct((), f32)
+
+    def train_fn(*args):
+        return M.train_step(cfg, list(args[:n]), args[n], args[n + 1], args[n + 2])
+
+    def predict_fn(*args):
+        return M.predict(cfg, list(args[:n]), args[n])
+
+    def eval_fn(*args):
+        return M.eval_mse(cfg, list(args[:n]), args[n], args[n + 1])
+
+    artifacts = {}
+
+    def emit(name, fn, specs):
+        path = os.path.join(out_dir, f"{name}_{cfg.name}.hlo.txt")
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        artifacts[name] = {"file": os.path.basename(path), "sha256_16": digest}
+        print(f"  {name}_{cfg.name}: {len(text)} chars")
+
+    emit("train_step", train_fn, pspecs + [x_train, y_train, lr])
+    emit("predict", predict_fn, pspecs + [x_pred1])
+    emit("predict_b8", predict_fn, pspecs + [x_pred8])
+    emit("eval", eval_fn, pspecs + [x_eval, y_eval])
+
+    # Initial parameters, shared bit-exactly between python tests and rust.
+    params = M.init_params(cfg, jax.random.PRNGKey(42))
+    flat = np.concatenate([np.asarray(p, dtype=np.float32).ravel()
+                           for p in params])
+    pbin = os.path.join(out_dir, f"params_init_{cfg.name}.bin")
+    flat.astype("<f4").tofile(pbin)
+
+    return {
+        "hidden": cfg.hidden,
+        "layers": cfg.layers,
+        "in_dim": cfg.in_dim,
+        "out_dim": cfg.out_dim,
+        "seq_len": cfg.seq_len,
+        "train_batch": cfg.train_batch,
+        "eval_batch": cfg.eval_batch,
+        "serve_batch": SERVE_BATCH,
+        "param_count": cfg.param_count(),
+        "model_bytes": cfg.model_bytes(),
+        "params": [{"name": nm, "shape": list(sh)}
+                   for nm, sh in cfg.param_shapes()],
+        "params_init": os.path.basename(pbin),
+        "artifacts": artifacts,
+        # Positional ABI (documented for the rust runtime):
+        "abi": {
+            "train_step": "params.., x[B,T,I], y[B,O], lr -> (params.., loss)",
+            "predict": "params.., x[1,T,I] -> (y,)",
+            "predict_b8": f"params.., x[{SERVE_BATCH},T,I] -> (y,)",
+            "eval": "params.., x[Be,T,I], y[Be,O] -> (mse,)",
+        },
+    }
+
+
+def emit_oracle(cfg: M.ModelConfig, out_dir: str) -> dict:
+    """Golden input/output vectors for the rust runtime integration tests.
+
+    Runs predict / train_step / eval in jax on deterministic inputs and
+    dumps flattened f32 values to JSON. ``rust/tests/runtime_roundtrip.rs``
+    loads the artifacts through PJRT and asserts allclose against these.
+    """
+    params = M.init_params(cfg, jax.random.PRNGKey(42))
+    kx, ky, kp = jax.random.split(jax.random.PRNGKey(7), 3)
+    x_t = jax.random.normal(kx, (cfg.train_batch, cfg.seq_len, cfg.in_dim),
+                            jnp.float32)
+    y_t = jax.random.normal(ky, (cfg.train_batch, cfg.out_dim), jnp.float32)
+    x_p = jax.random.normal(kp, (1, cfg.seq_len, cfg.in_dim), jnp.float32)
+    lr = jnp.float32(0.01)
+
+    pred = M.predict(cfg, params, x_p)[0]
+    ts = M.train_step(cfg, params, x_t, y_t, lr)
+    x_e = jnp.tile(x_t, (max(1, cfg.eval_batch // cfg.train_batch), 1, 1)
+                   )[: cfg.eval_batch]
+    y_e = jnp.tile(y_t, (max(1, cfg.eval_batch // cfg.train_batch), 1)
+                   )[: cfg.eval_batch]
+    mse = M.eval_mse(cfg, params, x_e, y_e)[0]
+
+    def flat(a):
+        return [float(v) for v in np.asarray(a, dtype=np.float32).ravel()]
+
+    oracle = {
+        "lr": float(lr),
+        "x_train": flat(x_t), "y_train": flat(y_t),
+        "x_pred": flat(x_p), "pred": flat(pred),
+        "x_eval": flat(x_e), "y_eval": flat(y_e), "mse": float(mse),
+        "train_loss": float(ts[-1]),
+        # first/last updated parameter arrays keep the file small while
+        # still pinning both ends of the output tuple
+        "new_params_first": flat(ts[0]),
+        "new_params_last": flat(ts[len(ts) - 2]),
+    }
+    path = os.path.join(out_dir, f"oracle_{cfg.name}.json")
+    with open(path, "w") as f:
+        json.dump(oracle, f)
+    return {"file": os.path.basename(path)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land in its directory")
+    ap.add_argument("--variants", default="small,paper")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "models": {}}
+    for name in args.variants.split(","):
+        cfg = M.VARIANTS[name.strip()]
+        print(f"lowering variant '{cfg.name}' "
+              f"({cfg.param_count()} params, {cfg.model_bytes()} bytes)")
+        entry = lower_variant(cfg, out_dir)
+        entry["oracle"] = emit_oracle(cfg, out_dir)
+        manifest["models"][cfg.name] = entry
+
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

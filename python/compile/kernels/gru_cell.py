@@ -1,0 +1,234 @@
+"""L1 — fused GRU cell as Pallas kernels.
+
+The paper (Lackinger et al., 2024) trains a 2-layer GRU (hidden 128) for
+traffic-flow prediction on every FL device; the GRU cell is the compute
+hot-spot of both the training and the inference path. This module provides:
+
+  * ``gru_cell_fwd_pallas``  — the fused forward cell. One ``pallas_call``
+    computes all three gates and the state update for a hidden-dimension
+    tile, so no ``[B, 3H]`` pre-activation tensor is ever materialized in
+    HBM. The grid tiles the hidden dimension in ``block_h``-wide blocks
+    (MXU-friendly; 128 by default), with the weight tiles
+    ``[I, block_h]`` / ``[H, block_h]`` staged into VMEM per grid step via
+    ``BlockSpec``.
+
+  * ``gru_gate_grads_pallas`` — the fused backward *gate-gradient* kernel:
+    all elementwise gradient algebra of the cell (8 intermediate tensors in
+    a naive implementation) fused into one pass over each hidden tile.
+
+  * ``gru_cell`` — a ``jax.custom_vjp`` wrapper: forward runs the Pallas
+    fused cell, backward runs the Pallas gate-grad kernel followed by the
+    weight/input GEMMs in plain jnp (XLA fuses those fine; the GEMM is not
+    where fusion wins — the elementwise gate algebra is).
+
+Hardware adaptation (GPU paper -> TPU thinking, see DESIGN.md): instead of
+threadblock tiles in shared memory, ``BlockSpec`` expresses the HBM->VMEM
+schedule; gate math targets the MXU via ``[B, I] x [I, block_h]`` matmuls
+with f32 accumulation.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO that the
+rust runtime executes. Real-TPU perf is estimated in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default hidden-dimension tile. 128 matches the MXU systolic array width
+# and the paper's hidden size, so the paper model runs as a single tile per
+# grid step while larger models pipeline tiles through VMEM.
+DEFAULT_BLOCK_H = 128
+
+
+def _pick_block_h(hidden: int, block_h: int | None) -> int:
+    """Choose a hidden tile size that divides ``hidden``."""
+    if block_h is None:
+        block_h = min(hidden, DEFAULT_BLOCK_H)
+    if hidden % block_h != 0:
+        # Fall back to the largest divisor of ``hidden`` not above block_h.
+        for cand in range(min(block_h, hidden), 0, -1):
+            if hidden % cand == 0:
+                block_h = cand
+                break
+    return block_h
+
+
+def _fwd_kernel(x_ref, h_ref, wi_ref, wh_ref, bi_ref, bh_ref,
+                o_ref, r_ref, z_ref, n_ref, hn_ref, *, block_h: int):
+    """Fused GRU cell forward for one hidden tile.
+
+    Refs (VMEM tiles staged by BlockSpec):
+      x_ref  [B, I]        full input (shared across tiles)
+      h_ref  [B, H]        full previous hidden (the h-side GEMM needs it all)
+      wi_ref [3, I, Hb]    per-gate input-weight columns of this tile
+      wh_ref [3, H, Hb]    per-gate hidden-weight columns of this tile
+      bi_ref [3, Hb], bh_ref [3, Hb]
+      outputs: new hidden tile + residuals (r, z, n, hn_pre), each [B, Hb].
+    """
+    j = pl.program_id(0)
+    x = x_ref[...]
+    h = h_ref[...]
+
+    # Gate pre-activations for this hidden tile: two GEMMs per gate,
+    # f32 accumulation on the MXU.
+    pre_i_r = jnp.dot(x, wi_ref[0], preferred_element_type=jnp.float32)
+    pre_i_z = jnp.dot(x, wi_ref[1], preferred_element_type=jnp.float32)
+    pre_i_n = jnp.dot(x, wi_ref[2], preferred_element_type=jnp.float32)
+    pre_h_r = jnp.dot(h, wh_ref[0], preferred_element_type=jnp.float32)
+    pre_h_z = jnp.dot(h, wh_ref[1], preferred_element_type=jnp.float32)
+    pre_h_n = jnp.dot(h, wh_ref[2], preferred_element_type=jnp.float32)
+
+    r = jax.nn.sigmoid(pre_i_r + bi_ref[0][None, :] + pre_h_r + bh_ref[0][None, :])
+    z = jax.nn.sigmoid(pre_i_z + bi_ref[1][None, :] + pre_h_z + bh_ref[1][None, :])
+    hn_pre = pre_h_n + bh_ref[2][None, :]
+    n = jnp.tanh(pre_i_n + bi_ref[2][None, :] + r * hn_pre)
+
+    # This tile's slice of the previous hidden state for the convex update.
+    h_blk = jax.lax.dynamic_slice_in_dim(h, j * block_h, block_h, axis=1)
+    o_ref[...] = (1.0 - z) * n + z * h_blk
+    r_ref[...] = r
+    z_ref[...] = z
+    n_ref[...] = n
+    hn_ref[...] = hn_pre
+
+
+def gru_cell_fwd_pallas(x, h, wi, wh, bi, bh, *, block_h: int | None = None):
+    """Fused GRU cell forward. Returns (h_new, r, z, n, hn_pre).
+
+    Tiles the hidden dimension into ``block_h``-wide blocks. See module
+    docstring for shapes.
+    """
+    b, _i = x.shape
+    hidden = h.shape[1]
+    hb = _pick_block_h(hidden, block_h)
+    grid = (hidden // hb,)
+    dt = x.dtype
+
+    out_shapes = [jax.ShapeDtypeStruct((b, hidden), dt) for _ in range(5)]
+    tile = pl.BlockSpec((b, hb), lambda j: (0, j))
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, block_h=hb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, x.shape[1]), lambda j: (0, 0)),        # x (full)
+            pl.BlockSpec((b, hidden), lambda j: (0, 0)),            # h (full)
+            pl.BlockSpec((3, x.shape[1], hb), lambda j: (0, 0, j)),  # wi tile
+            pl.BlockSpec((3, hidden, hb), lambda j: (0, 0, j)),      # wh tile
+            pl.BlockSpec((3, hb), lambda j: (0, j)),                 # bi tile
+            pl.BlockSpec((3, hb), lambda j: (0, j)),                 # bh tile
+        ],
+        out_specs=[tile, tile, tile, tile, tile],
+        out_shape=out_shapes,
+        interpret=True,
+        name="gru_cell_fwd",
+    )(x, h, wi, wh, bi, bh)
+
+
+def _bwd_gate_kernel(g_ref, h_ref, r_ref, z_ref, n_ref, hn_ref,
+                     drp_ref, dzp_ref, dnp_ref, dhnp_ref, dhd_ref):
+    """Fused elementwise gate-gradient algebra for one hidden tile."""
+    g = g_ref[...]
+    h = h_ref[...]
+    r = r_ref[...]
+    z = z_ref[...]
+    n = n_ref[...]
+    hn_pre = hn_ref[...]
+
+    dn = g * (1.0 - z)
+    dz = g * (h - n)
+    dh_direct = g * z
+    dn_pre = dn * (1.0 - n * n)
+    dhn_pre = dn_pre * r
+    dr = dn_pre * hn_pre
+    drp_ref[...] = dr * r * (1.0 - r)
+    dzp_ref[...] = dz * z * (1.0 - z)
+    dnp_ref[...] = dn_pre
+    dhnp_ref[...] = dhn_pre
+    dhd_ref[...] = dh_direct
+
+
+def gru_gate_grads_pallas(g, h, r, z, n, hn_pre, *, block_h: int | None = None):
+    """Fused backward gate gradients (all inputs/outputs [B, H]).
+
+    Returns (dr_pre, dz_pre, dn_pre, dhn_pre, dh_direct).
+    """
+    b, hidden = g.shape
+    hb = _pick_block_h(hidden, block_h)
+    grid = (hidden // hb,)
+    tile = pl.BlockSpec((b, hb), lambda j: (0, j))
+    out_shapes = [jax.ShapeDtypeStruct((b, hidden), g.dtype) for _ in range(5)]
+    return pl.pallas_call(
+        _bwd_gate_kernel,
+        grid=grid,
+        in_specs=[tile] * 6,
+        out_specs=[tile] * 5,
+        out_shape=out_shapes,
+        interpret=True,
+        name="gru_gate_grads",
+    )(g, h, r, z, n, hn_pre)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def gru_cell(x, h, wi, wh, bi, bh, block_h=None):
+    """GRU cell step with a Pallas fused forward and hand-derived VJP.
+
+    Differentiable wrt all six tensor arguments. ``block_h`` is static.
+    """
+    h_new, _r, _z, _n, _hn = gru_cell_fwd_pallas(x, h, wi, wh, bi, bh,
+                                                 block_h=block_h)
+    return h_new
+
+
+def _gru_cell_fwd(x, h, wi, wh, bi, bh, block_h):
+    h_new, r, z, n, hn_pre = gru_cell_fwd_pallas(x, h, wi, wh, bi, bh,
+                                                 block_h=block_h)
+    return h_new, (x, h, wi, wh, r, z, n, hn_pre)
+
+
+def _gru_cell_bwd(block_h, res, g):
+    x, h, wi, wh, r, z, n, hn_pre = res
+    dr_pre, dz_pre, dn_pre, dhn_pre, dh_direct = gru_gate_grads_pallas(
+        g, h, r, z, n, hn_pre, block_h=block_h)
+
+    # GEMM stage of the backward pass (plain jnp; XLA fuses/fissions these).
+    # Input gradient: sum over gates of dpre_g @ Wi[g]^T.
+    dx = (dr_pre @ wi[0].T + dz_pre @ wi[1].T + dn_pre @ wi[2].T)
+    # Hidden gradient: direct path + h-side GEMM transposes.
+    dh = (dh_direct + dr_pre @ wh[0].T + dz_pre @ wh[1].T
+          + dhn_pre @ wh[2].T)
+    # Weight gradients.
+    dwi = jnp.stack([x.T @ dr_pre, x.T @ dz_pre, x.T @ dn_pre])
+    dwh = jnp.stack([h.T @ dr_pre, h.T @ dz_pre, h.T @ dhn_pre])
+    dbi = jnp.stack([dr_pre.sum(0), dz_pre.sum(0), dn_pre.sum(0)])
+    dbh = jnp.stack([dr_pre.sum(0), dz_pre.sum(0), dhn_pre.sum(0)])
+    return dx, dh, dwi, dwh, dbi, dbh
+
+
+gru_cell.defvjp(_gru_cell_fwd, _gru_cell_bwd)
+
+
+def vmem_footprint_bytes(batch: int, in_dim: int, hidden: int,
+                         block_h: int | None = None,
+                         dtype_bytes: int = 4) -> dict:
+    """Static VMEM footprint estimate for one forward grid step.
+
+    Used by the perf analysis in EXPERIMENTS.md §Perf: interpret mode gives
+    no TPU wallclock, so we reason about the HBM<->VMEM schedule
+    structurally. Returns a breakdown dict in bytes.
+    """
+    hb = _pick_block_h(hidden, block_h)
+    parts = {
+        "x": batch * in_dim * dtype_bytes,
+        "h_full": batch * hidden * dtype_bytes,
+        "wi_tile": 3 * in_dim * hb * dtype_bytes,
+        "wh_tile": 3 * hidden * hb * dtype_bytes,
+        "bias_tiles": 2 * 3 * hb * dtype_bytes,
+        "outputs": 5 * batch * hb * dtype_bytes,
+    }
+    parts["total"] = sum(parts.values())
+    parts["block_h"] = hb
+    parts["grid"] = hidden // hb
+    return parts

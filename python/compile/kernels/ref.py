@@ -1,0 +1,101 @@
+"""Pure-jnp reference oracle for the fused GRU cell kernel.
+
+This module is the correctness ground truth for
+``kernels.gru_cell`` (the Pallas implementation). It is used by pytest
+(``python/tests/test_kernel.py``) to validate both the forward fused cell
+and the custom-VJP backward pass, and by ``model_ref`` variants used in
+end-to-end numeric checks.
+
+Conventions (match torch.nn.GRU):
+    r = sigmoid(x @ Wi[0] + bi[0] + h @ Wh[0] + bh[0])
+    z = sigmoid(x @ Wi[1] + bi[1] + h @ Wh[1] + bh[1])
+    n = tanh   (x @ Wi[2] + bi[2] + r * (h @ Wh[2] + bh[2]))
+    h' = (1 - z) * n + z * h
+
+Shapes:
+    x  : [B, I]      input at one timestep
+    h  : [B, H]      previous hidden state
+    wi : [3, I, H]   stacked input->gate weights  (r, z, n)
+    wh : [3, H, H]   stacked hidden->gate weights (r, z, n)
+    bi : [3, H]      input biases
+    bh : [3, H]      hidden biases
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gru_cell_ref(x, h, wi, wh, bi, bh):
+    """One GRU cell step, pure jnp. Returns the new hidden state [B, H]."""
+    pre_i = jnp.einsum("bi,gih->gbh", x, wi) + bi[:, None, :]
+    pre_h = jnp.einsum("bh,ghk->gbk", h, wh) + bh[:, None, :]
+    r = jax.nn.sigmoid(pre_i[0] + pre_h[0])
+    z = jax.nn.sigmoid(pre_i[1] + pre_h[1])
+    n = jnp.tanh(pre_i[2] + r * pre_h[2])
+    return (1.0 - z) * n + z * h
+
+
+def gru_cell_ref_residuals(x, h, wi, wh, bi, bh):
+    """Like :func:`gru_cell_ref` but also returns the residual tensors the
+    Pallas forward kernel emits: (h', r, z, n, hn_pre)."""
+    pre_i = jnp.einsum("bi,gih->gbh", x, wi) + bi[:, None, :]
+    pre_h = jnp.einsum("bh,ghk->gbk", h, wh) + bh[:, None, :]
+    r = jax.nn.sigmoid(pre_i[0] + pre_h[0])
+    z = jax.nn.sigmoid(pre_i[1] + pre_h[1])
+    hn_pre = pre_h[2]
+    n = jnp.tanh(pre_i[2] + r * hn_pre)
+    h_new = (1.0 - z) * n + z * h
+    return h_new, r, z, n, hn_pre
+
+
+def gru_gate_grads_ref(g, h_blk, r, z, n, hn_pre):
+    """Reference for the fused backward *gate-gradient* kernel.
+
+    Given the upstream gradient ``g = dL/dh'`` and the forward residuals,
+    computes the pre-activation gate gradients that feed the (jnp) GEMMs of
+    the backward pass.
+
+    Returns (dr_pre, dz_pre, dn_pre, dhn_pre, dh_direct), all [B, H].
+    """
+    dn = g * (1.0 - z)
+    dz = g * (h_blk - n)
+    dh_direct = g * z
+    dn_pre = dn * (1.0 - n * n)
+    dhn_pre = dn_pre * r
+    dr = dn_pre * hn_pre
+    dr_pre = dr * r * (1.0 - r)
+    dz_pre = dz * z * (1.0 - z)
+    return dr_pre, dz_pre, dn_pre, dhn_pre, dh_direct
+
+
+def gru_forward_ref(layer_params, head, x):
+    """Multi-layer GRU forward over a sequence, pure jnp.
+
+    Args:
+        layer_params: list of (wi, wh, bi, bh) per layer.
+        head: (w_out [H, O], b_out [O]).
+        x: [B, T, I] input sequence.
+    Returns:
+        y: [B, O] prediction from the final hidden state of the last layer.
+    """
+    b = x.shape[0]
+    hs = [jnp.zeros((b, wh.shape[1]), x.dtype) for (_, wh, _, _) in layer_params]
+
+    def step(hs, x_t):
+        inp = x_t
+        new_hs = []
+        for (wi, wh, bi, bh), h in zip(layer_params, hs):
+            h_new = gru_cell_ref(inp, h, wi, wh, bi, bh)
+            new_hs.append(h_new)
+            inp = h_new
+        return new_hs, None
+
+    hs, _ = jax.lax.scan(step, hs, jnp.swapaxes(x, 0, 1))
+    w_out, b_out = head
+    return hs[-1] @ w_out + b_out
+
+
+def mse_ref(layer_params, head, x, y):
+    """Mean squared error of the reference forward pass."""
+    pred = gru_forward_ref(layer_params, head, x)
+    return jnp.mean((pred - y) ** 2)

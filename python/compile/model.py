@@ -1,0 +1,167 @@
+"""L2 — the paper's GRU traffic-flow forecasting model in JAX.
+
+Defines the multi-layer GRU (the paper: hidden 128, 2 layers, lr 1e-4,
+batch 16 — §V-B1), its forward pass built on the L1 Pallas fused cell
+(``kernels.gru_cell``), the MSE loss, and the SGD ``train_step`` with
+forward+backward. Everything here runs at *build time only*: ``aot.py``
+lowers these functions to HLO text which the rust runtime executes.
+
+Parameter layout (flat order, recorded in the artifact manifest):
+    for each layer l in 0..L:
+        wi_l [3, I_l, H]   (I_0 = in_dim, I_{l>0} = H)
+        wh_l [3, H, H]
+        bi_l [3, H]
+        bh_l [3, H]
+    w_out [H, out_dim]
+    b_out [out_dim]
+
+All functions below take/return parameters as a flat list in this order so
+the AOT artifacts have a stable positional ABI for the rust side.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.gru_cell import gru_cell
+from compile.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + lowering configuration for one model variant."""
+
+    name: str
+    in_dim: int = 1
+    hidden: int = 128
+    layers: int = 2
+    out_dim: int = 1
+    seq_len: int = 12
+    train_batch: int = 16
+    eval_batch: int = 64
+    block_h: int | None = None  # Pallas hidden tile; None = auto
+
+    @property
+    def n_param_arrays(self) -> int:
+        return 4 * self.layers + 2
+
+    def param_shapes(self):
+        """Flat list of (name, shape) in ABI order."""
+        shapes = []
+        for l in range(self.layers):
+            in_l = self.in_dim if l == 0 else self.hidden
+            shapes.append((f"wi_{l}", (3, in_l, self.hidden)))
+            shapes.append((f"wh_{l}", (3, self.hidden, self.hidden)))
+            shapes.append((f"bi_{l}", (3, self.hidden)))
+            shapes.append((f"bh_{l}", (3, self.hidden)))
+        shapes.append(("w_out", (self.hidden, self.out_dim)))
+        shapes.append(("b_out", (self.out_dim,)))
+        return shapes
+
+    def param_count(self) -> int:
+        return sum(math.prod(s) for _, s in self.param_shapes())
+
+    def model_bytes(self) -> int:
+        """Serialized (f32) model size — the paper's cost-model payload."""
+        return 4 * self.param_count()
+
+
+# The paper's model: 2-layer GRU, hidden 128 -> ~594 KB serialized (§V-D).
+PAPER = ModelConfig(name="paper", hidden=128, layers=2, seq_len=12,
+                    train_batch=16)
+# A small variant for fast tests (python unit tests + rust integration).
+SMALL = ModelConfig(name="small", hidden=8, layers=1, seq_len=6,
+                    train_batch=4, eval_batch=8, block_h=4)
+
+VARIANTS = {c.name: c for c in (PAPER, SMALL)}
+
+
+def init_params(cfg: ModelConfig, key) -> list:
+    """Glorot-ish uniform initialization, returned as the flat ABI list."""
+    params = []
+    for l in range(cfg.layers):
+        in_l = cfg.in_dim if l == 0 else cfg.hidden
+        key, k1, k2 = jax.random.split(key, 3)
+        s_i = 1.0 / math.sqrt(max(in_l, 1))
+        s_h = 1.0 / math.sqrt(cfg.hidden)
+        params.append(jax.random.uniform(k1, (3, in_l, cfg.hidden),
+                                         minval=-s_i, maxval=s_i))
+        params.append(jax.random.uniform(k2, (3, cfg.hidden, cfg.hidden),
+                                         minval=-s_h, maxval=s_h))
+        params.append(jnp.zeros((3, cfg.hidden)))
+        params.append(jnp.zeros((3, cfg.hidden)))
+    key, k3 = jax.random.split(key)
+    s_o = 1.0 / math.sqrt(cfg.hidden)
+    params.append(jax.random.uniform(k3, (cfg.hidden, cfg.out_dim),
+                                     minval=-s_o, maxval=s_o))
+    params.append(jnp.zeros((cfg.out_dim,)))
+    return [p.astype(jnp.float32) for p in params]
+
+
+def _split_params(cfg: ModelConfig, flat):
+    """Flat ABI list -> (layer_params, head)."""
+    layers = []
+    i = 0
+    for _ in range(cfg.layers):
+        layers.append(tuple(flat[i:i + 4]))
+        i += 4
+    head = (flat[i], flat[i + 1])
+    return layers, head
+
+
+def forward(cfg: ModelConfig, flat_params, x):
+    """Model forward pass using the Pallas fused cell.
+
+    x: [B, T, in_dim] -> y_hat [B, out_dim].
+    """
+    layer_params, head = _split_params(cfg, flat_params)
+    b = x.shape[0]
+    h0 = [jnp.zeros((b, cfg.hidden), x.dtype) for _ in range(cfg.layers)]
+
+    def step(hs, x_t):
+        inp = x_t
+        new_hs = []
+        for (wi, wh, bi, bh), h in zip(layer_params, hs):
+            h_new = gru_cell(inp, h, wi, wh, bi, bh, cfg.block_h)
+            new_hs.append(h_new)
+            inp = h_new
+        return new_hs, None
+
+    hs, _ = jax.lax.scan(step, h0, jnp.swapaxes(x, 0, 1))
+    w_out, b_out = head
+    return hs[-1] @ w_out + b_out
+
+
+def forward_ref(cfg: ModelConfig, flat_params, x):
+    """Pure-jnp forward (oracle) with the same ABI."""
+    layer_params, head = _split_params(cfg, flat_params)
+    return kref.gru_forward_ref([tuple(p) for p in layer_params], head, x)
+
+
+def mse_loss(cfg: ModelConfig, flat_params, x, y):
+    pred = forward(cfg, flat_params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+def train_step(cfg: ModelConfig, flat_params, x, y, lr):
+    """One SGD step. Returns (new_flat_params..., loss).
+
+    This is the artifact the rust FL clients execute for each local batch;
+    FedAvg over the resulting parameter blocks happens on the rust side.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda ps: mse_loss(cfg, ps, x, y))(list(flat_params))
+    new_params = [p - lr * g for p, g in zip(flat_params, grads)]
+    return tuple(new_params) + (loss,)
+
+
+def predict(cfg: ModelConfig, flat_params, x):
+    """Inference entry point (serving path artifact)."""
+    return (forward(cfg, flat_params, x),)
+
+
+def eval_mse(cfg: ModelConfig, flat_params, x, y):
+    """Batched evaluation MSE (per-client test metric for Fig. 6)."""
+    return (mse_loss(cfg, flat_params, x, y),)

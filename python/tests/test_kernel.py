@@ -1,0 +1,219 @@
+"""L1 correctness: Pallas fused GRU cell vs the pure-jnp oracle.
+
+This is the core numeric signal for the whole stack: the AOT artifacts the
+rust runtime executes lower through exactly these kernels. Hypothesis
+sweeps shapes (batch, input dim, hidden dim, tile size); explicit tests pin
+edge cases (tile == hidden, non-divisible tile fallback, single row).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gru_cell as K
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(b, i, h, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (b, i), jnp.float32)
+    hp = jax.random.normal(ks[1], (b, h), jnp.float32)
+    wi = jax.random.normal(ks[2], (3, i, h), jnp.float32) * 0.3
+    wh = jax.random.normal(ks[3], (3, h, h), jnp.float32) * 0.3
+    bi = jax.random.normal(ks[4], (3, h), jnp.float32) * 0.1
+    bh = jax.random.normal(ks[5], (3, h), jnp.float32) * 0.1
+    return x, hp, wi, wh, bi, bh
+
+
+def assert_fwd_matches(b, i, h, block_h, seed=0, tol=1e-5):
+    args = make_inputs(b, i, h, seed)
+    got = K.gru_cell_fwd_pallas(*args, block_h=block_h)
+    want = R.gru_cell_ref_residuals(*args)
+    for g, w, name in zip(got, want, ["h_new", "r", "z", "n", "hn_pre"]):
+        np.testing.assert_allclose(g, w, rtol=tol, atol=tol, err_msg=name)
+
+
+class TestForwardExplicit:
+    def test_single_tile(self):
+        assert_fwd_matches(4, 3, 8, block_h=8)
+
+    def test_multi_tile(self):
+        assert_fwd_matches(4, 3, 8, block_h=4)
+
+    def test_tile_of_one(self):
+        assert_fwd_matches(2, 2, 4, block_h=1)
+
+    def test_batch_of_one(self):
+        assert_fwd_matches(1, 5, 16, block_h=8)
+
+    def test_paper_shape_layer0(self):
+        # Layer 0 of the paper model: in_dim=1, hidden=128, one MXU tile.
+        assert_fwd_matches(16, 1, 128, block_h=128, tol=1e-4)
+
+    def test_paper_shape_layer1(self):
+        # Layer 1: 128 -> 128 with 64-wide tiles (two grid steps).
+        assert_fwd_matches(16, 128, 128, block_h=64, tol=1e-4)
+
+    def test_block_h_auto(self):
+        assert_fwd_matches(3, 4, 32, block_h=None)
+
+    def test_non_divisible_block_falls_back(self):
+        # hidden=12, block 8 -> largest divisor <= 8 is 6.
+        assert K.__dict__["_pick_block_h"](12, 8) == 6
+        assert_fwd_matches(2, 3, 12, block_h=8)
+
+    def test_pick_block_h_divides(self):
+        for hidden in [1, 2, 6, 12, 128, 96]:
+            for req in [None, 1, 5, 8, 128]:
+                hb = K._pick_block_h(hidden, req)
+                assert hidden % hb == 0
+                assert 1 <= hb <= hidden
+
+    def test_deterministic(self):
+        args = make_inputs(4, 3, 8, seed=7)
+        a = K.gru_cell_fwd_pallas(*args, block_h=4)
+        b = K.gru_cell_fwd_pallas(*args, block_h=4)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_tile_size_invariance(self):
+        # Same numerics regardless of tiling decomposition.
+        args = make_inputs(4, 3, 24, seed=3)
+        outs = [K.gru_cell_fwd_pallas(*args, block_h=hb)[0]
+                for hb in (24, 12, 8, 4)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-6)
+
+    def test_output_in_convex_range(self):
+        # h' is a convex combination of n in (-1,1) and previous h.
+        args = make_inputs(8, 4, 16, seed=11)
+        h_new = K.gru_cell_fwd_pallas(*args, block_h=8)[0]
+        h_prev = args[1]
+        hi = np.maximum(np.abs(np.asarray(h_prev)), 1.0)
+        assert np.all(np.abs(np.asarray(h_new)) <= hi + 1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    i=st.integers(1, 16),
+    hpow=st.integers(0, 5),
+    blk=st.sampled_from([None, 1, 2, 4, 8, 16]),
+    seed=st.integers(0, 10_000),
+)
+def test_forward_matches_ref_hypothesis(b, i, hpow, blk, seed):
+    h = 2 ** hpow
+    assert_fwd_matches(b, i, h, block_h=blk, seed=seed, tol=2e-5)
+
+
+class TestGateGrads:
+    def test_matches_ref(self):
+        b, h = 4, 8
+        ks = jax.random.split(jax.random.PRNGKey(1), 6)
+        g = jax.random.normal(ks[0], (b, h))
+        hb = jax.random.normal(ks[1], (b, h))
+        r = jax.nn.sigmoid(jax.random.normal(ks[2], (b, h)))
+        z = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h)))
+        n = jnp.tanh(jax.random.normal(ks[4], (b, h)))
+        hn = jax.random.normal(ks[5], (b, h))
+        got = K.gru_gate_grads_pallas(g, hb, r, z, n, hn, block_h=4)
+        want = R.gru_gate_grads_ref(g, hb, r, z, n, hn)
+        for a, w in zip(got, want):
+            np.testing.assert_allclose(a, w, rtol=1e-5, atol=1e-6)
+
+    def test_zero_upstream_gives_zero(self):
+        b, h = 3, 4
+        zeros = jnp.zeros((b, h))
+        r = z = jnp.full((b, h), 0.5)
+        n = hn = jnp.zeros((b, h))
+        got = K.gru_gate_grads_pallas(zeros, zeros, r, z, n, hn, block_h=2)
+        for a in got:
+            np.testing.assert_array_equal(a, np.zeros((b, h)))
+
+
+class TestCustomVJP:
+    def grads(self, fn, args):
+        return jax.grad(lambda *a: jnp.sum(fn(*a) ** 2),
+                        argnums=tuple(range(6)))(*args)
+
+    def assert_grads_match(self, b, i, h, blk, seed=0, tol=1e-4):
+        args = make_inputs(b, i, h, seed)
+        gk = jax.grad(
+            lambda *a: jnp.sum(K.gru_cell(*a, blk) ** 2),
+            argnums=tuple(range(6)))(*args)
+        gr = self.grads(R.gru_cell_ref, args)
+        names = ["dx", "dh", "dwi", "dwh", "dbi", "dbh"]
+        for a, w, name in zip(gk, gr, names):
+            np.testing.assert_allclose(a, w, rtol=tol, atol=tol, err_msg=name)
+
+    def test_small(self):
+        self.assert_grads_match(4, 3, 8, 4)
+
+    def test_single_tile(self):
+        self.assert_grads_match(2, 5, 8, 8)
+
+    def test_paper_layer0(self):
+        self.assert_grads_match(8, 1, 128, 128, tol=5e-4)
+
+    def test_value_unchanged_by_vjp_wrapper(self):
+        args = make_inputs(4, 3, 8, seed=5)
+        a = K.gru_cell(*args, 4)
+        b = K.gru_cell_fwd_pallas(*args, block_h=4)[0]
+        np.testing.assert_array_equal(a, b)
+
+    def test_finite_difference_x(self):
+        # Directional finite-difference check on dx, independent of the ref.
+        args = make_inputs(2, 3, 4, seed=9)
+        x = args[0]
+        rest = args[1:]
+
+        def f(xv):
+            return jnp.sum(K.gru_cell(xv, *rest, 4) ** 2)
+
+        g = jax.grad(f)(x)
+        v = jax.random.normal(jax.random.PRNGKey(123), x.shape)
+        eps = 1e-3
+        fd = (f(x + eps * v) - f(x - eps * v)) / (2 * eps)
+        np.testing.assert_allclose(jnp.vdot(g, v), fd, rtol=2e-2, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    i=st.integers(1, 8),
+    hpow=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_vjp_matches_ref_hypothesis(b, i, hpow, seed):
+    h = 2 ** hpow
+    args = make_inputs(b, i, h, seed)
+    gk = jax.grad(lambda *a: jnp.mean(K.gru_cell(*a, None) ** 2),
+                  argnums=tuple(range(6)))(*args)
+    gr = jax.grad(lambda *a: jnp.mean(R.gru_cell_ref(*a) ** 2),
+                  argnums=tuple(range(6)))(*args)
+    for a, w in zip(gk, gr):
+        np.testing.assert_allclose(a, w, rtol=5e-4, atol=5e-5)
+
+
+class TestVmemFootprint:
+    def test_paper_model_fits_vmem(self):
+        # A TPU core has ~16 MiB VMEM; the paper model tile must fit easily.
+        fp = K.vmem_footprint_bytes(16, 128, 128, 128)
+        assert fp["total"] < 16 * 1024 * 1024
+        assert fp["grid"] == 1
+
+    def test_tiling_reduces_footprint(self):
+        big = K.vmem_footprint_bytes(16, 512, 512, 512)
+        small = K.vmem_footprint_bytes(16, 512, 512, 128)
+        assert small["total"] < big["total"]
+        assert small["grid"] == 4
+
+    def test_breakdown_sums(self):
+        fp = K.vmem_footprint_bytes(8, 32, 64, 32)
+        parts = [v for k, v in fp.items()
+                 if k not in ("total", "block_h", "grid")]
+        assert sum(parts) == fp["total"]

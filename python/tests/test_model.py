@@ -1,0 +1,164 @@
+"""L2 correctness: model forward / loss / train_step vs the pure-jnp oracle,
+plus training-dynamics sanity (loss decreases on a learnable series).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = M.SMALL
+
+
+def make_batch(cfg, b=None, seed=0):
+    b = b or cfg.train_batch
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (b, cfg.seq_len, cfg.in_dim), jnp.float32)
+    y = jax.random.normal(ky, (b, cfg.out_dim), jnp.float32)
+    return x, y
+
+
+class TestParamABI:
+    def test_shapes_small(self):
+        shapes = dict(SMALL.param_shapes())
+        assert shapes["wi_0"] == (3, 1, 8)
+        assert shapes["wh_0"] == (3, 8, 8)
+        assert shapes["w_out"] == (8, 1)
+        assert SMALL.n_param_arrays == 6
+
+    def test_paper_model_size_matches_paper(self):
+        # §V-D: "size in serialized format is 594 KB". Ours: 598,020 bytes.
+        assert abs(M.PAPER.model_bytes() - 594 * 1024) < 12 * 1024
+        assert M.PAPER.n_param_arrays == 10
+
+    def test_init_matches_declared_shapes(self):
+        for cfg in (M.SMALL, M.PAPER):
+            params = M.init_params(cfg, jax.random.PRNGKey(0))
+            assert len(params) == cfg.n_param_arrays
+            for p, (_, s) in zip(params, cfg.param_shapes()):
+                assert p.shape == s
+                assert p.dtype == jnp.float32
+
+    def test_param_count(self):
+        params = M.init_params(SMALL, jax.random.PRNGKey(0))
+        assert sum(p.size for p in params) == SMALL.param_count()
+
+
+class TestForward:
+    def test_matches_ref_small(self):
+        params = M.init_params(SMALL, jax.random.PRNGKey(1))
+        x, _ = make_batch(SMALL)
+        got = M.forward(SMALL, params, x)
+        want = M.forward_ref(SMALL, params, x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_matches_ref_two_layers(self):
+        cfg = M.ModelConfig(name="t2", hidden=8, layers=2, seq_len=4,
+                            train_batch=3, block_h=4)
+        params = M.init_params(cfg, jax.random.PRNGKey(2))
+        x, _ = make_batch(cfg)
+        np.testing.assert_allclose(
+            M.forward(cfg, params, x), M.forward_ref(cfg, params, x),
+            rtol=1e-5, atol=1e-6)
+
+    def test_output_shape(self):
+        params = M.init_params(SMALL, jax.random.PRNGKey(0))
+        x, _ = make_batch(SMALL, b=7)
+        assert M.forward(SMALL, params, x).shape == (7, SMALL.out_dim)
+
+    def test_batch_independence(self):
+        # Prediction for a row must not depend on other rows in the batch.
+        params = M.init_params(SMALL, jax.random.PRNGKey(3))
+        x, _ = make_batch(SMALL, b=4, seed=5)
+        full = M.forward(SMALL, params, x)
+        row0 = M.forward(SMALL, params, x[:1])
+        np.testing.assert_allclose(full[:1], row0, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), b=st.integers(1, 6))
+def test_forward_matches_ref_hypothesis(seed, b):
+    params = M.init_params(SMALL, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (b, SMALL.seq_len, SMALL.in_dim))
+    np.testing.assert_allclose(
+        M.forward(SMALL, params, x), M.forward_ref(SMALL, params, x),
+        rtol=2e-5, atol=2e-6)
+
+
+class TestTrainStep:
+    def test_returns_params_and_loss(self):
+        params = M.init_params(SMALL, jax.random.PRNGKey(0))
+        x, y = make_batch(SMALL)
+        out = M.train_step(SMALL, params, x, y, jnp.float32(0.01))
+        assert len(out) == SMALL.n_param_arrays + 1
+        assert out[-1].shape == ()
+        for p, q in zip(params, out[:-1]):
+            assert p.shape == q.shape
+
+    def test_zero_lr_is_identity(self):
+        params = M.init_params(SMALL, jax.random.PRNGKey(0))
+        x, y = make_batch(SMALL)
+        out = M.train_step(SMALL, params, x, y, jnp.float32(0.0))
+        for p, q in zip(params, out[:-1]):
+            np.testing.assert_array_equal(p, q)
+
+    def test_loss_is_mse_of_forward(self):
+        params = M.init_params(SMALL, jax.random.PRNGKey(0))
+        x, y = make_batch(SMALL)
+        out = M.train_step(SMALL, params, x, y, jnp.float32(0.01))
+        pred = M.forward(SMALL, params, x)
+        np.testing.assert_allclose(out[-1], jnp.mean((pred - y) ** 2),
+                                   rtol=1e-6)
+
+    def test_grad_matches_ref_model(self):
+        params = M.init_params(SMALL, jax.random.PRNGKey(4))
+        x, y = make_batch(SMALL, seed=9)
+
+        def loss_ref(ps):
+            pred = M.forward_ref(SMALL, ps, x)
+            return jnp.mean((pred - y) ** 2)
+
+        gref = jax.grad(loss_ref)(list(params))
+        lr = 0.05
+        out = M.train_step(SMALL, params, x, y, jnp.float32(lr))
+        for p, q, g in zip(params, out[:-1], gref):
+            np.testing.assert_allclose(q, p - lr * g, rtol=1e-4, atol=1e-5)
+
+    def test_training_reduces_loss(self):
+        # Learnable toy task: predict the mean of the last 3 inputs.
+        cfg = SMALL
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(77)
+        step = jax.jit(lambda ps, x, y: M.train_step(cfg, ps, x, y,
+                                                     jnp.float32(0.05)))
+        first = last = None
+        for i in range(60):
+            key, kx = jax.random.split(key)
+            x = jax.random.normal(kx, (cfg.train_batch, cfg.seq_len,
+                                       cfg.in_dim))
+            y = jnp.mean(x[:, -3:, 0], axis=1, keepdims=True)
+            out = step(params, x, y)
+            params, loss = list(out[:-1]), float(out[-1])
+            if first is None:
+                first = loss
+            last = loss
+        assert last < first * 0.7, (first, last)
+
+    def test_eval_mse_matches_manual(self):
+        params = M.init_params(SMALL, jax.random.PRNGKey(0))
+        x, y = make_batch(SMALL, b=SMALL.eval_batch)
+        (mse,) = M.eval_mse(SMALL, params, x, y)
+        pred = M.forward(SMALL, params, x)
+        np.testing.assert_allclose(mse, jnp.mean((pred - y) ** 2), rtol=1e-6)
+
+    def test_predict_wraps_forward(self):
+        params = M.init_params(SMALL, jax.random.PRNGKey(0))
+        x, _ = make_batch(SMALL, b=1)
+        (p,) = M.predict(SMALL, params, x)
+        np.testing.assert_array_equal(p, M.forward(SMALL, params, x))

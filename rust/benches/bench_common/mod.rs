@@ -1,0 +1,82 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `bench(name, iters, f)` reports mean / std / min per iteration;
+//! `bench_n` auto-scales iteration counts to a time budget. All benches
+//! print a aligned `name: mean ± std (min)` line so `cargo bench` output
+//! is diffable and EXPERIMENTS.md can quote it directly.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_time(self.mean_s),
+            format!("±{}", fmt_time(self.std_s)),
+            fmt_time(self.min_s),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` `iters` times, timing each run.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    // Warmup.
+    std::hint::black_box(f());
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / iters as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    r.report();
+    r
+}
+
+/// Run `f` repeatedly until ~`budget_s` seconds elapse (at least 3 iters).
+pub fn bench_auto<T>(name: &str, budget_s: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let per = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / per) as usize).clamp(3, 10_000);
+    bench(name, iters, f)
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "std", "min"
+    );
+}

@@ -1,0 +1,42 @@
+//! Bench: Fig. 9 — the cost-savings sweep (solve + cost accounting per
+//! density) and the closed-form cost model itself.
+
+mod bench_common;
+use bench_common::{bench, bench_auto, header};
+
+use hflop::experiments::fig9;
+use hflop::hflop::InstanceBuilder;
+use hflop::metrics::cost::{flat_fl_bytes, hfl_bytes};
+use hflop::solver::{self, SolveOptions};
+
+fn main() {
+    header("Fig. 9: density sweep (200 devices, reps=3)");
+    let mut rows_out = None;
+    bench("fig9/full_sweep n=200", 2, || {
+        let cfg = fig9::Fig9Config { n_devices: 200, reps: 3, ..Default::default() };
+        let rows = fig9::run(&cfg).expect("fig9");
+        rows_out = Some(rows.clone());
+        rows
+    });
+    if let Some(rows) = rows_out {
+        for r in rows {
+            println!(
+                "  -> m={:<3} hflop {:.1}% ± {:.1} | uncap {:.1}% ± {:.1}",
+                r.m, r.hflop_savings_pct, r.hflop_ci95, r.uncap_savings_pct, r.uncap_ci95
+            );
+        }
+    }
+
+    header("absolute reference (paper: 2.37 / 0.53 / 0.24 GB)");
+    bench("fig9/absolute_reference", 3, || fig9::absolute_reference(5).unwrap());
+    let (f, c, u) = fig9::absolute_reference(5).unwrap();
+    println!("  -> flat {f:.2} GB | hflop {c:.2} GB | uncap {u:.2} GB");
+
+    header("cost-model microbench");
+    let inst = InstanceBuilder::unit_cost(500, 20, 3).build();
+    let sol = solver::solve(&inst, &SolveOptions::heuristic()).unwrap().assignment;
+    bench_auto("cost/hfl_bytes n=500 m=20", 0.5, || {
+        hfl_bytes(&inst, &sol, 100, 598_020)
+    });
+    bench_auto("cost/flat_fl_bytes", 0.2, || flat_fl_bytes(500, 100, 598_020));
+}

@@ -1,0 +1,84 @@
+//! Bench: FL round engine — FedAvg over paper-sized parameter blocks,
+//! one full aggregation round (mock runtime to isolate coordination
+//! overhead from model execution), and the continual window machinery.
+//! The paper's system claim is that orchestration is not the bottleneck;
+//! this bench quantifies L3 overhead per round.
+
+mod bench_common;
+use bench_common::{bench, bench_auto, header};
+
+use hflop::data::window::{ClientData, ContinualWindow, WindowSpec};
+use hflop::fl::{fedavg, Client, ContinualHfl, FlConfig, Hierarchy, MockRuntime, ModelRuntime};
+use hflop::util::rng::Rng;
+
+fn main() {
+    header("FedAvg over paper-sized blocks (149,505 f32 params)");
+    let mut rng = Rng::new(2);
+    let blocks: Vec<Vec<f32>> = (0..20)
+        .map(|_| (0..149_505).map(|_| rng.normal() as f32).collect())
+        .collect();
+    for k in [2usize, 5, 20] {
+        bench_auto(&format!("fl/fedavg k={k}"), 1.0, || {
+            let refs: Vec<(&[f32], f64)> =
+                blocks[..k].iter().map(|b| (b.as_slice(), 1.0)).collect();
+            fedavg(&refs)
+        });
+    }
+
+    header("Coordination overhead: full aggregation round (mock model)");
+    let rt = MockRuntime::new(12, 16);
+    for n_clients in [10usize, 50, 200] {
+        let raw: Vec<f32> = (0..6000).map(|i| ((i as f32) * 0.01).sin()).collect();
+        let clients: Vec<Client> = (0..n_clients)
+            .map(|id| {
+                Client::new(
+                    id,
+                    ClientData::new(&raw, WindowSpec { seq_len: 12, horizon: 1 }, (0, 4000)),
+                    9,
+                )
+            })
+            .collect();
+        let hierarchy = Hierarchy {
+            clusters: (0..4)
+                .map(|j| hflop::fl::Cluster {
+                    edge_id: j,
+                    members: (0..n_clients).filter(|i| i % 4 == j).collect(),
+                })
+                .collect(),
+            flat: false,
+        };
+        let window = ContinualWindow::new(4000, 1000, 0, 6000);
+        let fl = FlConfig {
+            epochs: 1,
+            batches_per_epoch: 2,
+            l: 2,
+            lr: 0.01,
+            rounds: 1,
+            eval_every: 1,
+        };
+        let mut sys = ContinualHfl::new(
+            &rt,
+            hierarchy,
+            clients,
+            window,
+            fl,
+            vec![0.0; rt.n_params()],
+            None,
+        );
+        let mut round = 0usize;
+        bench(&format!("fl/round n_clients={n_clients}"), 5, || {
+            let r = sys.step_round(round).unwrap();
+            round += 1;
+            r
+        });
+    }
+
+    header("Continual window machinery");
+    let raw: Vec<f32> = (0..40_000).map(|i| ((i as f32) * 0.01).cos()).collect();
+    let cd = ClientData::new(&raw, WindowSpec { seq_len: 12, horizon: 1 }, (0, 30_000));
+    let mut rng2 = Rng::new(3);
+    bench_auto("data/sample_batch b=16", 0.5, || {
+        cd.sample_batch((0, 30_000), 16, &mut rng2)
+    });
+    bench_auto("data/windows 6048-span", 0.5, || cd.windows((0, 6048)));
+}

@@ -1,0 +1,74 @@
+//! Bench: Fig. 7 / Fig. 8 — the inference-serving DES. Reports both the
+//! experiment outputs (latency means per setup, crossover speedup) and
+//! the simulator's own event throughput (events/s), which is the L3
+//! bottleneck for large sweeps.
+
+mod bench_common;
+use bench_common::{bench, header};
+
+use hflop::experiments::{fig7, fig8, Scenario, ScenarioConfig};
+use hflop::inference::simulation::{simulate, ServingConfig};
+use hflop::inference::LatencyModel;
+
+fn main() {
+    let sc = Scenario::build(ScenarioConfig {
+        n_clients: 20,
+        n_edges: 4,
+        weeks: 5,
+        balanced_clients: false,
+        ..Default::default()
+    })
+    .expect("scenario");
+
+    header("Fig. 7: three-setup serving simulation (120 simulated seconds)");
+    let mut last = None;
+    bench("fig7/run_all_setups", 3, || {
+        let r = fig7::run(&sc, &fig7::Fig7Config::default());
+        last = Some((
+            r.flat.latency.mean(),
+            r.location.latency.mean(),
+            r.hflop.latency.mean(),
+        ));
+        r
+    });
+    if let Some((f, l, h)) = last {
+        println!(
+            "  -> means: flat {f:.2} ms | hier {l:.2} ms | hflop {h:.2} ms   (paper: 79.07 / 17.72 / 9.89)"
+        );
+    }
+
+    header("Fig. 8: speedup sweep (both panels)");
+    bench("fig8/panel_a_sweep", 2, || {
+        fig8::run(&sc, &fig8::Fig8Config { duration_s: 30.0, ..Default::default() })
+    });
+    let mut cx = None;
+    bench("fig8/panel_b_sweep", 2, || {
+        let rows = fig8::run(
+            &sc,
+            &fig8::Fig8Config { duration_s: 30.0, lambda_scale: 10.0, ..Default::default() },
+        );
+        cx = fig8::crossover(&rows);
+        rows
+    });
+    println!("  -> fig8b crossover: {cx:?} (paper: 0.1425)");
+
+    header("DES core throughput");
+    for &(devices, rate) in &[(20usize, 50.0f64), (100, 50.0), (100, 200.0)] {
+        let cfg = ServingConfig {
+            assign: (0..devices).map(|i| Some(i % 4)).collect(),
+            lambda: vec![rate; devices],
+            capacity: vec![rate * devices as f64; 4],
+            latency: LatencyModel::default(),
+            duration_s: 10.0,
+            queue_window_s: 0.25,
+            seed: 3,
+        };
+        let events = (devices as f64 * rate * 10.0) as u64;
+        let r = bench(
+            &format!("des/simulate dev={devices} rate={rate} (~{events} req)"),
+            3,
+            || simulate(&cfg),
+        );
+        println!("  -> ~{:.2} M requests/s simulated", events as f64 / r.mean_s / 1e6);
+    }
+}

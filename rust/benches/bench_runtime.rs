@@ -1,0 +1,87 @@
+//! Bench: the PJRT hot path — model execution through the AOT artifacts.
+//! This is the L3 serving/training critical path: predict (B=1), batched
+//! predict (B=8), train_step, eval, plus the dynamic batcher overhead on
+//! top of raw execution. Requires `make artifacts`.
+
+mod bench_common;
+use bench_common::{bench_auto, header};
+
+use hflop::inference::serving::{BatchingServer, InferenceRequest};
+use hflop::runtime::{Engine, Manifest, Preload};
+use hflop::util::rng::Rng;
+
+fn main() {
+    let Ok(manifest) = Manifest::load_default() else {
+        println!("artifacts not built — run `make artifacts` first; skipping runtime bench");
+        return;
+    };
+
+    for variant in ["small", "paper"] {
+        let engine = Engine::new(&manifest, variant, Preload::All).expect("engine");
+        let v = engine.variant().clone();
+        let params = manifest.load_init_params(&v).expect("params");
+        let mut rng = Rng::new(1);
+
+        header(&format!(
+            "PJRT hot path — variant '{variant}' (GRU h={} L={}, {} params)",
+            v.hidden, v.layers, v.param_count
+        ));
+
+        let x1: Vec<f32> = (0..v.seq_len * v.in_dim).map(|_| rng.normal() as f32).collect();
+        bench_auto(&format!("runtime/{variant}/predict_b1"), 2.0, || {
+            engine.predict(&params, &x1).unwrap()
+        });
+
+        let xb: Vec<f32> = (0..v.serve_batch * v.seq_len * v.in_dim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let rb = bench_auto(&format!("runtime/{variant}/predict_b8"), 2.0, || {
+            engine.predict_batch(&params, &xb).unwrap()
+        });
+        println!(
+            "  -> batched throughput {:.0} req/s",
+            v.serve_batch as f64 / rb.mean_s
+        );
+
+        let xt: Vec<f32> = (0..v.train_batch * v.seq_len * v.in_dim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let yt: Vec<f32> = (0..v.train_batch * v.out_dim).map(|_| rng.normal() as f32).collect();
+        let rt = bench_auto(&format!("runtime/{variant}/train_step"), 2.0, || {
+            engine.train_step(&params, &xt, &yt, 1e-3).unwrap()
+        });
+        println!(
+            "  -> {:.0} samples/s training throughput",
+            v.train_batch as f64 / rt.mean_s
+        );
+
+        let xe: Vec<f32> = (0..v.eval_batch * v.seq_len * v.in_dim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let ye: Vec<f32> = (0..v.eval_batch * v.out_dim).map(|_| rng.normal() as f32).collect();
+        bench_auto(&format!("runtime/{variant}/eval_b{}", v.eval_batch), 2.0, || {
+            engine.eval_mse(&params, &xe, &ye).unwrap()
+        });
+
+        // Batcher overhead: full submit->flush cycle vs raw predict_batch.
+        let mut server = BatchingServer::new(&engine, params.clone());
+        let windows: Vec<Vec<f32>> = (0..v.serve_batch)
+            .map(|_| (0..v.seq_len * v.in_dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut id = 0u64;
+        let rs = bench_auto(&format!("runtime/{variant}/batcher_cycle_b8"), 2.0, || {
+            let mut out = Vec::new();
+            for w in &windows {
+                id += 1;
+                out = server.submit(InferenceRequest { id, window: w.clone() }).unwrap();
+            }
+            out
+        });
+        println!(
+            "  -> batcher overhead per request: {:.1} µs (cycle {:.3} ms vs raw {:.3} ms)",
+            (rs.mean_s - rb.mean_s).max(0.0) / v.serve_batch as f64 * 1e6,
+            rs.mean_s * 1e3,
+            rb.mean_s * 1e3,
+        );
+    }
+}

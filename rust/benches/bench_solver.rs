@@ -1,0 +1,44 @@
+//! Bench: Fig. 2 — exact HFLOP solve time vs instance size, plus the
+//! LP-simplex microbenchmark and the exact-vs-heuristic ablation.
+//! Regenerates the data behind paper Fig. 2 (see EXPERIMENTS.md).
+
+mod bench_common;
+use bench_common::{bench, bench_auto, header};
+
+use hflop::hflop::InstanceBuilder;
+use hflop::solver::greedy::greedy;
+use hflop::solver::local_search::{local_search, LocalSearchOptions};
+use hflop::solver::milp::build_relaxation;
+use hflop::solver::{branch_and_bound, BbOptions};
+
+fn main() {
+    header("Fig. 2: exact solve time vs instance size (B&B + simplex, 1 core)");
+    for &(n, m) in &[(25usize, 4usize), (50, 4), (100, 6), (200, 8), (400, 10)] {
+        let insts: Vec<_> = (0..3)
+            .map(|r| InstanceBuilder::unit_cost(n, m, 7000 + r).build())
+            .collect();
+        let mut i = 0;
+        bench(&format!("fig2/solve_exact n={n} m={m}"), 3, || {
+            let inst = &insts[i % insts.len()];
+            i += 1;
+            branch_and_bound(inst, &BbOptions { time_limit_s: 30.0, ..Default::default() })
+        });
+    }
+
+    header("LP relaxation microbench (simplex hot path)");
+    for &(n, m) in &[(50usize, 5usize), (100, 8), (200, 10)] {
+        let inst = InstanceBuilder::unit_cost(n, m, 11).build();
+        bench_auto(&format!("lp/relaxation n={n} m={m}"), 1.0, || {
+            build_relaxation(&inst, &[], n * m <= 400).solve()
+        });
+    }
+
+    header("Heuristics (large-instance path, §IV-C)");
+    for &(n, m) in &[(200usize, 10usize), (500, 20), (1000, 32)] {
+        let inst = InstanceBuilder::unit_cost(n, m, 13).build();
+        bench(&format!("heuristic/greedy n={n} m={m}"), 3, || greedy(&inst));
+        bench(&format!("heuristic/local_search n={n} m={m}"), 3, || {
+            local_search(&inst, &LocalSearchOptions::default())
+        });
+    }
+}

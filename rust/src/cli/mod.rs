@@ -1,0 +1,131 @@
+//! Hand-rolled CLI argument parser (no `clap` in the offline environment).
+//!
+//! Grammar: `hflop <subcommand> [--key value | --flag] [positional..]`.
+//! Typed accessors with defaults; `--help` rendering is the caller's job
+//! (`main.rs` owns the usage strings).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+/// Parse: `--key value` when the next token is not another option, else a
+/// boolean flag. First bare token is the subcommand.
+pub fn parse(argv: &[String]) -> Result<Args, CliError> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    while let Some(tok) = it.next() {
+        if let Some(name) = tok.strip_prefix("--") {
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    args.options.insert(name.to_string(), it.next().unwrap().clone());
+                }
+                _ => args.flags.push(name.to_string()),
+            }
+        } else if args.subcommand.is_none() && args.positional.is_empty() {
+            args.subcommand = Some(tok.clone());
+        } else {
+            args.positional.push(tok.clone());
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn from_env() -> Result<Args, CliError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        parse(&argv)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue(key.to_string(), v.clone())),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue(key.to_string(), v.clone())),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue(key.to_string(), v.clone())),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // Schema-light grammar: a flag followed by a bare token would be
+        // read as `--key value`, so flags go last (documented in --help).
+        let a = parse(&argv("solve input.toml --n 100 --m 8 --exact")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("solve"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 100);
+        assert_eq!(a.usize_or("m", 0).unwrap(), 8);
+        assert!(a.has_flag("exact"));
+        assert_eq!(a.positional, vec!["input.toml"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&argv("train")).unwrap();
+        assert_eq!(a.usize_or("rounds", 100).unwrap(), 100);
+        assert_eq!(a.str_or("variant", "paper"), "paper");
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&argv("x --verbose --seed 7")).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_numeric_value_errors() {
+        let a = parse(&argv("x --n abc")).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_and_empty() {
+        let a = parse(&argv("x --fast")).unwrap();
+        assert!(a.has_flag("fast"));
+        assert!(parse(&[]).unwrap().subcommand.is_none());
+    }
+}

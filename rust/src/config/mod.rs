@@ -1,0 +1,212 @@
+//! Typed experiment configuration, loadable from TOML-subset files
+//! (`configs/*.toml`) with CLI overrides.
+//!
+//! One [`ExperimentConfig`] drives the launcher: which setup (flat /
+//! location-clustered / HFLOP), the FL schedule, the data generator, the
+//! serving parameters, and the seeds. Defaults reproduce the paper's
+//! §V settings scaled to this testbed (see EXPERIMENTS.md for the
+//! scaling notes).
+
+use crate::fl::FlConfig;
+use crate::inference::LatencyModel;
+use crate::util::tomlmini::Config;
+
+/// Which clustering policy an experiment runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Setup {
+    Flat,
+    LocationClustered,
+    Hflop,
+    HflopUncapacitated,
+}
+
+impl Setup {
+    pub fn parse(s: &str) -> anyhow::Result<Setup> {
+        Ok(match s {
+            "flat" | "vanilla" | "centralized" => Setup::Flat,
+            "location" | "hierarchical" | "hier" => Setup::LocationClustered,
+            "hflop" => Setup::Hflop,
+            "hflop-uncap" | "uncapacitated" => Setup::HflopUncapacitated,
+            other => anyhow::bail!("unknown setup '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Setup::Flat => "flat",
+            Setup::LocationClustered => "location",
+            Setup::Hflop => "hflop",
+            Setup::HflopUncapacitated => "hflop-uncap",
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub setup: Setup,
+    /// Model variant from the artifact manifest ("paper" or "small").
+    pub variant: String,
+    /// FL clients participating (paper: 20, 5 per cluster).
+    pub n_clients: usize,
+    /// Candidate edge hosts / clusters (paper: 4).
+    pub n_edges: usize,
+    pub fl: FlConfig,
+    pub latency: LatencyModel,
+    /// Synthetic-data seed (dataset identity).
+    pub data_seed: u64,
+    /// Experiment-level seed (sampling, workloads).
+    pub seed: u64,
+    /// Continual window shift per aggregation round, timesteps.
+    pub window_shift: usize,
+    /// λ_i sampling range (req/s).
+    pub lambda_range: (f64, f64),
+    /// r_j sampling range (req/s).
+    pub capacity_range: (f64, f64),
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            setup: Setup::Hflop,
+            variant: "paper".into(),
+            n_clients: 20,
+            n_edges: 4,
+            fl: FlConfig::default(),
+            latency: LatencyModel::default(),
+            data_seed: 1234,
+            seed: 42,
+            window_shift: 288, // one day per aggregation round
+            lambda_range: (20.0, 60.0),
+            capacity_range: (250.0, 450.0),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file, falling back to defaults per key.
+    pub fn from_file(path: &str) -> anyhow::Result<ExperimentConfig> {
+        let c = Config::load(path)?;
+        Self::from_config(&c)
+    }
+
+    pub fn from_config(c: &Config) -> anyhow::Result<ExperimentConfig> {
+        let d = ExperimentConfig::default();
+        let mut cfg = ExperimentConfig {
+            setup: Setup::parse(c.str_or("setup", d.setup.name()))?,
+            variant: c.str_or("variant", &d.variant).to_string(),
+            n_clients: c.usize_or("clients", d.n_clients),
+            n_edges: c.usize_or("edges", d.n_edges),
+            data_seed: c.i64_or("data_seed", d.data_seed as i64) as u64,
+            seed: c.i64_or("seed", d.seed as i64) as u64,
+            window_shift: c.usize_or("window_shift", d.window_shift),
+            lambda_range: (
+                c.f64_or("lambda.min", d.lambda_range.0),
+                c.f64_or("lambda.max", d.lambda_range.1),
+            ),
+            capacity_range: (
+                c.f64_or("capacity.min", d.capacity_range.0),
+                c.f64_or("capacity.max", d.capacity_range.1),
+            ),
+            fl: FlConfig {
+                epochs: c.usize_or("fl.epochs", d.fl.epochs),
+                batches_per_epoch: c.usize_or("fl.batches_per_epoch", d.fl.batches_per_epoch),
+                l: c.usize_or("fl.l", d.fl.l),
+                lr: c.f64_or("fl.lr", d.fl.lr as f64) as f32,
+                rounds: c.usize_or("fl.rounds", d.fl.rounds),
+                eval_every: c.usize_or("fl.eval_every", d.fl.eval_every),
+            },
+            latency: LatencyModel {
+                edge_rtt_ms: (
+                    c.f64_or("latency.edge_rtt_min", d.latency.edge_rtt_ms.0),
+                    c.f64_or("latency.edge_rtt_max", d.latency.edge_rtt_ms.1),
+                ),
+                cloud_rtt_ms: (
+                    c.f64_or("latency.cloud_rtt_min", d.latency.cloud_rtt_ms.0),
+                    c.f64_or("latency.cloud_rtt_max", d.latency.cloud_rtt_ms.1),
+                ),
+                edge_service_ms: c.f64_or("latency.edge_service_ms", d.latency.edge_service_ms),
+                speedup: c.f64_or("latency.speedup", d.latency.speedup),
+                stochastic_service: c.bool_or("latency.stochastic", d.latency.stochastic_service),
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&mut self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_clients > 0, "clients must be positive");
+        anyhow::ensure!(self.n_edges > 0, "edges must be positive");
+        anyhow::ensure!(self.fl.rounds > 0, "rounds must be positive");
+        anyhow::ensure!(self.fl.l > 0, "l must be positive");
+        anyhow::ensure!(self.fl.lr > 0.0, "lr must be positive");
+        anyhow::ensure!(
+            self.lambda_range.0 <= self.lambda_range.1,
+            "lambda range inverted"
+        );
+        anyhow::ensure!(
+            self.capacity_range.0 <= self.capacity_range.1,
+            "capacity range inverted"
+        );
+        anyhow::ensure!(
+            (0.0..=0.95).contains(&self.latency.speedup),
+            "speedup out of [0, 0.95]"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_mirror_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.n_clients, 20);
+        assert_eq!(c.n_edges, 4);
+        assert_eq!(c.fl.l, 2);
+        assert_eq!(c.fl.epochs, 5);
+        assert_eq!(c.latency.cloud_rtt_ms, (50.0, 100.0));
+        assert_eq!(c.latency.edge_rtt_ms, (8.0, 10.0));
+    }
+
+    #[test]
+    fn parse_setup_aliases() {
+        assert_eq!(Setup::parse("flat").unwrap(), Setup::Flat);
+        assert_eq!(Setup::parse("hier").unwrap(), Setup::LocationClustered);
+        assert_eq!(Setup::parse("hflop").unwrap(), Setup::Hflop);
+        assert_eq!(Setup::parse("uncapacitated").unwrap(), Setup::HflopUncapacitated);
+        assert!(Setup::parse("wat").is_err());
+    }
+
+    #[test]
+    fn from_config_overrides() {
+        let toml = r#"
+setup = "flat"
+clients = 8
+[fl]
+rounds = 30
+lr = 0.01
+[latency]
+speedup = 0.5
+"#;
+        let c = Config::parse(toml).unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.setup, Setup::Flat);
+        assert_eq!(e.n_clients, 8);
+        assert_eq!(e.fl.rounds, 30);
+        assert!((e.fl.lr - 0.01).abs() < 1e-9);
+        assert!((e.latency.speedup - 0.5).abs() < 1e-12);
+        // Untouched keys keep defaults.
+        assert_eq!(e.n_edges, 4);
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let c = Config::parse("clients = 0\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+        let c = Config::parse("[latency]\nspeedup = 0.99\n").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Traffic data substrate: the synthetic METR-LA substitute, per-sensor
+//! normalization, sliding-window sample extraction, and the continual-
+//! learning window scheduler.
+//!
+//! The real METR-LA dataset (207 loop detectors, 4 months of 5-minute
+//! readings, 34,272 timestamps — §V-A) is not available offline; `synth`
+//! generates a statistically analogous dataset preserving the properties
+//! the paper's experiments exercise. See DESIGN.md §3 for the
+//! substitution rationale.
+
+pub mod synth;
+pub mod window;
+
+pub use synth::{SynthConfig, TrafficDataset};
+pub use window::{make_windows, ContinualWindow, WindowSpec};
+
+/// Timestamps per hour at the METR-LA 5-minute cadence.
+pub const STEPS_PER_HOUR: usize = 12;
+/// Timestamps per day.
+pub const STEPS_PER_DAY: usize = 24 * STEPS_PER_HOUR;
+/// Timestamps per week.
+pub const STEPS_PER_WEEK: usize = 7 * STEPS_PER_DAY;
+
+/// Per-sensor z-score normalization statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Normalizer {
+    pub mean: f32,
+    pub std: f32,
+}
+
+impl Normalizer {
+    pub fn fit(xs: &[f32]) -> Normalizer {
+        assert!(!xs.is_empty());
+        let n = xs.len() as f64;
+        let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        Normalizer { mean: mean as f32, std: (var.sqrt().max(1e-6)) as f32 }
+    }
+
+    #[inline]
+    pub fn transform(&self, x: f32) -> f32 {
+        (x - self.mean) / self.std
+    }
+
+    #[inline]
+    pub fn inverse(&self, z: f32) -> f32 {
+        z * self.std + self.mean
+    }
+
+    pub fn transform_vec(&self, xs: &[f32]) -> Vec<f32> {
+        xs.iter().map(|&x| self.transform(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizer_roundtrip() {
+        let xs = [10.0f32, 20.0, 30.0, 40.0];
+        let nz = Normalizer::fit(&xs);
+        for &x in &xs {
+            let z = nz.transform(x);
+            assert!((nz.inverse(z) - x).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn normalizer_zero_mean_unit_std() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i % 37) as f32).collect();
+        let nz = Normalizer::fit(&xs);
+        let zs = nz.transform_vec(&xs);
+        let mean: f64 = zs.iter().map(|&z| z as f64).sum::<f64>() / zs.len() as f64;
+        let var: f64 = zs.iter().map(|&z| (z as f64 - mean).powi(2)).sum::<f64>() / zs.len() as f64;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn normalizer_constant_series_no_nan() {
+        let nz = Normalizer::fit(&[5.0f32; 10]);
+        let z = nz.transform(5.0);
+        assert!(z.is_finite());
+        assert!(z.abs() < 1e-3);
+    }
+
+    #[test]
+    fn cadence_constants() {
+        assert_eq!(STEPS_PER_DAY, 288);
+        assert_eq!(STEPS_PER_WEEK, 2016);
+        // Paper: 4 months ≈ 34,272 timestamps.
+        assert!((17 * STEPS_PER_WEEK) as i64 - 34_272i64 == 0);
+    }
+}

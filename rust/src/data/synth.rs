@@ -1,0 +1,322 @@
+//! Synthetic METR-LA: traffic-speed time series with the structure the
+//! paper's experiments rely on.
+//!
+//! What must be preserved (DESIGN.md §3):
+//! * **Spatial cluster structure** — sensors along highway "corridors" in
+//!   the LA bounding box, so location-based clustering (Fig. 5) finds
+//!   meaningful groups.
+//! * **Non-IID per-sensor series** — each sensor has its own free-flow
+//!   speed, rush-hour depth, and noise level.
+//! * **Temporal periodicity** — daily and weekly seasonality with weekday
+//!   rush hours (the structure a GRU can learn).
+//! * **Drift** — slowly evolving congestion patterns over the 4-month
+//!   horizon, which is what makes *continual* retraining beneficial
+//!   (§V-B1) and what the paper attributes Fig. 6's late-round MSE
+//!   oscillation to ("one reason for this increase may be the changing
+//!   data").
+//! * **Correlated congestion waves** — corridor-level shocks shared by
+//!   neighbouring sensors (accidents/closures), giving realistic
+//!   heteroscedastic noise.
+
+use super::{STEPS_PER_DAY, STEPS_PER_WEEK};
+use crate::topology::geo::{GeoPoint, BBox, LA_BBOX};
+use crate::util::rng::Rng;
+
+/// Generator configuration. Defaults mirror METR-LA's published shape:
+/// 207 sensors, 5-minute cadence, 34,272 timestamps (= 17 weeks).
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub n_sensors: usize,
+    pub n_steps: usize,
+    pub n_corridors: usize,
+    pub bbox: BBox,
+    pub seed: u64,
+    /// Strength of the slow drift component (0 disables; 1 = default).
+    pub drift_scale: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            n_sensors: 207,
+            n_steps: 34_272,
+            n_corridors: 6,
+            bbox: LA_BBOX,
+            seed: 1234,
+            drift_scale: 1.0,
+        }
+    }
+}
+
+impl SynthConfig {
+    /// A small config for unit tests (seconds, not minutes, to generate).
+    pub fn tiny(seed: u64) -> SynthConfig {
+        SynthConfig {
+            n_sensors: 12,
+            n_steps: 2 * STEPS_PER_WEEK,
+            n_corridors: 3,
+            seed,
+            ..Default::default()
+        }
+    }
+}
+
+/// The generated dataset: sensor locations + speed series (mph),
+/// row-major `[sensor][timestep]`.
+#[derive(Debug, Clone)]
+pub struct TrafficDataset {
+    pub locations: Vec<GeoPoint>,
+    pub series: Vec<Vec<f32>>,
+    pub corridor_of: Vec<usize>,
+    pub n_steps: usize,
+}
+
+/// Per-sensor latent parameters.
+struct SensorProfile {
+    free_flow: f64,     // free-flow speed, mph
+    rush_depth_am: f64, // fractional speed drop in the AM peak
+    rush_depth_pm: f64,
+    weekend_lift: f64,  // weekend speeds are closer to free flow
+    noise_std: f64,
+    phase_jitter: f64,  // shifts the peak time slightly per sensor
+}
+
+/// Smooth bump centered at `center` hours with width `width` hours.
+fn rush_bump(hour: f64, center: f64, width: f64) -> f64 {
+    let d = (hour - center) / width;
+    (-0.5 * d * d).exp()
+}
+
+pub fn generate(cfg: &SynthConfig) -> TrafficDataset {
+    assert!(cfg.n_sensors > 0 && cfg.n_steps > 0 && cfg.n_corridors > 0);
+    let mut rng = Rng::new(cfg.seed);
+
+    // --- corridor geometry: straight highway segments across the bbox ----
+    let (lat0, lat1, lon0, lon1) = cfg.bbox;
+    let corridors: Vec<(GeoPoint, GeoPoint)> = (0..cfg.n_corridors)
+        .map(|_| {
+            let a = GeoPoint {
+                lat: rng.uniform(lat0, lat1),
+                lon: rng.uniform(lon0, lon1),
+            };
+            let b = GeoPoint {
+                lat: rng.uniform(lat0, lat1),
+                lon: rng.uniform(lon0, lon1),
+            };
+            (a, b)
+        })
+        .collect();
+
+    // --- sensor placement along corridors, with jitter ------------------
+    let mut locations = Vec::with_capacity(cfg.n_sensors);
+    let mut corridor_of = Vec::with_capacity(cfg.n_sensors);
+    for i in 0..cfg.n_sensors {
+        let c = i % cfg.n_corridors;
+        let (a, b) = corridors[c];
+        let t = rng.f64();
+        let mut p = a.lerp(b, t);
+        p.lat += rng.normal() * 0.004;
+        p.lon += rng.normal() * 0.004;
+        locations.push(p);
+        corridor_of.push(c);
+    }
+
+    // --- per-sensor profiles ---------------------------------------------
+    let profiles: Vec<SensorProfile> = (0..cfg.n_sensors)
+        .map(|_| SensorProfile {
+            free_flow: rng.uniform(55.0, 70.0),
+            rush_depth_am: rng.uniform(0.25, 0.55),
+            rush_depth_pm: rng.uniform(0.30, 0.60),
+            weekend_lift: rng.uniform(0.5, 0.9),
+            noise_std: rng.uniform(1.5, 4.0),
+            phase_jitter: rng.normal() * 0.4,
+        })
+        .collect();
+
+    // --- corridor-level congestion shocks ---------------------------------
+    // Each corridor gets an AR(1)-smoothed shock process; shared by all its
+    // sensors (correlated congestion waves).
+    let mut shocks = vec![vec![0.0f64; cfg.n_steps]; cfg.n_corridors];
+    for shock in shocks.iter_mut() {
+        let mut s = 0.0f64;
+        let mut shock_rng = rng.fork(0xC0FFEE);
+        for v in shock.iter_mut() {
+            // Occasionally a shock event begins; it decays geometrically.
+            if shock_rng.chance(0.001) {
+                s -= shock_rng.uniform(5.0, 20.0); // mph drop
+            }
+            s *= 0.97;
+            *v = s;
+        }
+    }
+
+    // --- drift: slowly evolving rush-hour intensity ------------------------
+    // A low-frequency sinusoid + linear trend per corridor; makes stale
+    // models go stale (the continual-learning signal).
+    let drift_period = (8 * STEPS_PER_WEEK) as f64;
+
+    let mut series = Vec::with_capacity(cfg.n_sensors);
+    for (i, prof) in profiles.iter().enumerate() {
+        let mut sensor_rng = rng.fork(i as u64 + 1);
+        let corridor = corridor_of[i];
+        let corridor_phase = corridor as f64 * 0.9;
+        let mut xs = Vec::with_capacity(cfg.n_steps);
+        for t in 0..cfg.n_steps {
+            let step_of_day = t % STEPS_PER_DAY;
+            let hour = step_of_day as f64 / 12.0;
+            let day = (t / STEPS_PER_DAY) % 7;
+            let weekend = day >= 5;
+
+            // Drift multiplies rush depth: congestion worsens/lightens over
+            // months.
+            let drift = 1.0
+                + cfg.drift_scale
+                    * (0.35 * ((t as f64 / drift_period) * std::f64::consts::TAU
+                        + corridor_phase)
+                        .sin()
+                        + 0.10 * (t as f64 / cfg.n_steps as f64));
+
+            let am = prof.rush_depth_am
+                * drift
+                * rush_bump(hour, 8.0 + prof.phase_jitter, 1.4);
+            let pm = prof.rush_depth_pm
+                * drift
+                * rush_bump(hour, 17.5 + prof.phase_jitter, 1.8);
+            let mut depth = am + pm;
+            if weekend {
+                depth *= 1.0 - prof.weekend_lift;
+            }
+            depth = depth.clamp(0.0, 0.9);
+
+            let mean = prof.free_flow * (1.0 - depth);
+            let v = mean + shocks[corridor][t] + sensor_rng.normal() * prof.noise_std;
+            xs.push(v.clamp(0.0, 80.0) as f32);
+        }
+        series.push(xs);
+    }
+
+    TrafficDataset { locations, series, corridor_of, n_steps: cfg.n_steps }
+}
+
+impl TrafficDataset {
+    pub fn n_sensors(&self) -> usize {
+        self.series.len()
+    }
+
+    /// Mean speed of sensor `i` over timestep range `[lo, hi)`.
+    pub fn mean_speed(&self, i: usize, lo: usize, hi: usize) -> f64 {
+        let s = &self.series[i][lo..hi];
+        s.iter().map(|&x| x as f64).sum::<f64>() / s.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> TrafficDataset {
+        generate(&SynthConfig::tiny(7))
+    }
+
+    #[test]
+    fn shapes() {
+        let d = tiny();
+        assert_eq!(d.n_sensors(), 12);
+        assert_eq!(d.locations.len(), 12);
+        assert!(d.series.iter().all(|s| s.len() == d.n_steps));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&SynthConfig::tiny(7));
+        let b = generate(&SynthConfig::tiny(7));
+        assert_eq!(a.series, b.series);
+        let c = generate(&SynthConfig::tiny(8));
+        assert_ne!(a.series, c.series);
+    }
+
+    #[test]
+    fn speeds_physical() {
+        let d = tiny();
+        for s in &d.series {
+            assert!(s.iter().all(|&x| (0.0..=80.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn locations_near_bbox() {
+        let d = tiny();
+        let (lat0, lat1, lon0, lon1) = LA_BBOX;
+        for p in &d.locations {
+            // jitter may step slightly outside; allow a small margin
+            assert!(p.lat > lat0 - 0.05 && p.lat < lat1 + 0.05);
+            assert!(p.lon > lon0 - 0.05 && p.lon < lon1 + 0.05);
+        }
+    }
+
+    #[test]
+    fn weekday_rush_slower_than_night() {
+        let d = tiny();
+        // Hour 8 (AM peak) vs hour 3 (night), averaged over weekdays of
+        // week 1 and all sensors.
+        let mut rush = 0.0;
+        let mut night = 0.0;
+        let mut cnt = 0.0;
+        for s in &d.series {
+            for day in 0..5 {
+                let base = day * STEPS_PER_DAY;
+                rush += s[base + 8 * 12] as f64;
+                night += s[base + 3 * 12] as f64;
+                cnt += 1.0;
+            }
+        }
+        assert!(rush / cnt < night / cnt - 5.0, "rush {} night {}", rush / cnt, night / cnt);
+    }
+
+    #[test]
+    fn weekend_faster_than_weekday_rush() {
+        let d = tiny();
+        let mut wd = 0.0;
+        let mut we = 0.0;
+        for s in &d.series {
+            // Monday 8am vs Saturday 8am (day 5).
+            wd += s[8 * 12] as f64;
+            we += s[5 * STEPS_PER_DAY + 8 * 12] as f64;
+        }
+        assert!(we > wd, "weekend {} weekday {}", we, wd);
+    }
+
+    #[test]
+    fn drift_changes_distribution_over_time() {
+        // With drift on, early vs late rush-hour means must differ
+        // noticeably more than with drift off.
+        let mut cfg = SynthConfig::tiny(3);
+        cfg.n_steps = 8 * STEPS_PER_WEEK;
+        let with_drift = generate(&cfg);
+        cfg.drift_scale = 0.0;
+        let without = generate(&cfg);
+
+        let delta = |d: &TrafficDataset| -> f64 {
+            let early = d.mean_speed(0, 0, STEPS_PER_WEEK);
+            let late = d.mean_speed(0, 7 * STEPS_PER_WEEK, 8 * STEPS_PER_WEEK);
+            (early - late).abs()
+        };
+        assert!(delta(&with_drift) > delta(&without));
+    }
+
+    #[test]
+    fn corridor_assignment_round_robin() {
+        let d = tiny();
+        assert_eq!(d.corridor_of[0], 0);
+        assert_eq!(d.corridor_of[1], 1);
+        assert_eq!(d.corridor_of[3], 0);
+        assert!(d.corridor_of.iter().all(|&c| c < 3));
+    }
+
+    #[test]
+    fn default_config_is_metr_la_shaped() {
+        let cfg = SynthConfig::default();
+        assert_eq!(cfg.n_sensors, 207);
+        assert_eq!(cfg.n_steps, 34_272);
+    }
+}

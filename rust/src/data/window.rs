@@ -1,0 +1,287 @@
+//! Sliding-window sample extraction + the continual-learning schedule.
+//!
+//! The paper's continual setup (§V-B2): "we use 3 weeks of training and
+//! 1 week of validation. After each aggregation round, the global time
+//! shifts for some timestamps so that the number of training and test
+//! samples stays the same, but it is shifted to simulate time passing."
+
+use super::{Normalizer, STEPS_PER_WEEK};
+use crate::util::rng::Rng;
+
+/// Shape of supervised samples: `seq_len` past readings -> next reading.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowSpec {
+    pub seq_len: usize,
+    pub horizon: usize, // steps ahead of the window end to predict (>= 1)
+}
+
+impl Default for WindowSpec {
+    fn default() -> Self {
+        WindowSpec { seq_len: 12, horizon: 1 }
+    }
+}
+
+/// Extract (x, y) windows from a normalized series segment.
+/// Returns (xs, ys) where xs is `[n_samples * seq_len]` row-major and ys is
+/// `[n_samples]`.
+pub fn make_windows(series: &[f32], spec: WindowSpec) -> (Vec<f32>, Vec<f32>) {
+    let need = spec.seq_len + spec.horizon;
+    if series.len() < need {
+        return (Vec::new(), Vec::new());
+    }
+    let n = series.len() - need + 1;
+    let mut xs = Vec::with_capacity(n * spec.seq_len);
+    let mut ys = Vec::with_capacity(n);
+    for start in 0..n {
+        xs.extend_from_slice(&series[start..start + spec.seq_len]);
+        ys.push(series[start + spec.seq_len + spec.horizon - 1]);
+    }
+    (xs, ys)
+}
+
+/// The continual-learning window: a training span and a validation span
+/// that both shift forward by `shift` timesteps every aggregation round.
+#[derive(Debug, Clone)]
+pub struct ContinualWindow {
+    pub train_len: usize,
+    pub val_len: usize,
+    pub shift: usize,
+    pub offset: usize,
+    pub total_len: usize,
+}
+
+impl ContinualWindow {
+    /// Paper defaults: 3 weeks train, 1 week validation.
+    pub fn paper(total_len: usize, shift: usize) -> ContinualWindow {
+        ContinualWindow {
+            train_len: 3 * STEPS_PER_WEEK,
+            val_len: STEPS_PER_WEEK,
+            shift,
+            offset: 0,
+            total_len,
+        }
+    }
+
+    pub fn new(train_len: usize, val_len: usize, shift: usize, total_len: usize) -> Self {
+        assert!(train_len + val_len <= total_len, "window longer than series");
+        ContinualWindow { train_len, val_len, shift, offset: 0, total_len }
+    }
+
+    /// Current train span `[lo, hi)`.
+    pub fn train_range(&self) -> (usize, usize) {
+        (self.offset, self.offset + self.train_len)
+    }
+
+    /// Current validation span `[lo, hi)` (immediately after training span).
+    pub fn val_range(&self) -> (usize, usize) {
+        (self.offset + self.train_len, self.offset + self.train_len + self.val_len)
+    }
+
+    /// Whether another shift still fits inside the series.
+    pub fn can_advance(&self) -> bool {
+        self.offset + self.shift + self.train_len + self.val_len <= self.total_len
+    }
+
+    /// Advance one aggregation round ("the global time shifts").
+    /// Returns false (and stays put) when the series is exhausted.
+    pub fn advance(&mut self) -> bool {
+        if !self.can_advance() {
+            return false;
+        }
+        self.offset += self.shift;
+        true
+    }
+
+    /// How many rounds of `advance()` remain.
+    pub fn rounds_remaining(&self) -> usize {
+        if self.shift == 0 {
+            return usize::MAX;
+        }
+        (self.total_len - (self.train_len + self.val_len) - self.offset) / self.shift
+    }
+}
+
+/// A client-side dataset: normalized windows for the current continual
+/// span, batched for the AOT train-step artifact.
+#[derive(Debug, Clone)]
+pub struct ClientData {
+    pub spec: WindowSpec,
+    pub normalizer: Normalizer,
+    /// Full normalized series for this client's sensor.
+    pub series: Vec<f32>,
+}
+
+impl ClientData {
+    /// Normalize with stats fit on the *initial* training span only
+    /// (no leakage from future data).
+    pub fn new(raw: &[f32], spec: WindowSpec, fit_range: (usize, usize)) -> ClientData {
+        let normalizer = Normalizer::fit(&raw[fit_range.0..fit_range.1]);
+        ClientData {
+            spec,
+            normalizer,
+            series: raw.iter().map(|&x| normalizer.transform(x)).collect(),
+        }
+    }
+
+    /// Windows over a span; returns (xs row-major, ys).
+    pub fn windows(&self, range: (usize, usize)) -> (Vec<f32>, Vec<f32>) {
+        make_windows(&self.series[range.0..range.1.min(self.series.len())], self.spec)
+    }
+
+    /// Sample `batch` random windows from a span (for stochastic local
+    /// epochs). Returns row-major xs `[batch * seq_len]` and ys `[batch]`.
+    pub fn sample_batch(
+        &self,
+        range: (usize, usize),
+        batch: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let span = &self.series[range.0..range.1.min(self.series.len())];
+        let need = self.spec.seq_len + self.spec.horizon;
+        assert!(span.len() >= need, "span too short for one window");
+        let n = span.len() - need + 1;
+        let mut xs = Vec::with_capacity(batch * self.spec.seq_len);
+        let mut ys = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let s = rng.below(n);
+            xs.extend_from_slice(&span[s..s + self.spec.seq_len]);
+            ys.push(span[s + self.spec.seq_len + self.spec.horizon - 1]);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_count_and_alignment() {
+        let series: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let (xs, ys) = make_windows(&series, WindowSpec { seq_len: 4, horizon: 1 });
+        // 20 - 5 + 1 = 16 samples
+        assert_eq!(ys.len(), 16);
+        assert_eq!(xs.len(), 16 * 4);
+        // First window [0,1,2,3] -> 4
+        assert_eq!(&xs[..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(ys[0], 4.0);
+        // Last window [15,16,17,18] -> 19
+        assert_eq!(ys[15], 19.0);
+    }
+
+    #[test]
+    fn windows_multi_horizon() {
+        let series: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let (_, ys) = make_windows(&series, WindowSpec { seq_len: 3, horizon: 3 });
+        assert_eq!(ys[0], 5.0); // [0,1,2] -> idx 2+3 = 5
+        assert_eq!(ys.len(), 10 - 6 + 1);
+    }
+
+    #[test]
+    fn windows_short_series_empty() {
+        let (xs, ys) = make_windows(&[1.0, 2.0], WindowSpec { seq_len: 4, horizon: 1 });
+        assert!(xs.is_empty() && ys.is_empty());
+    }
+
+    #[test]
+    fn continual_paper_defaults() {
+        let w = ContinualWindow::paper(17 * STEPS_PER_WEEK, 288);
+        assert_eq!(w.train_len, 3 * STEPS_PER_WEEK);
+        assert_eq!(w.val_len, STEPS_PER_WEEK);
+        let (lo, hi) = w.train_range();
+        assert_eq!((lo, hi), (0, 3 * STEPS_PER_WEEK));
+        let (vlo, vhi) = w.val_range();
+        assert_eq!(vlo, hi);
+        assert_eq!(vhi - vlo, STEPS_PER_WEEK);
+    }
+
+    #[test]
+    fn continual_advance_shifts_and_stops() {
+        let mut w = ContinualWindow::new(100, 20, 10, 200);
+        let mut rounds = 0;
+        while w.advance() {
+            rounds += 1;
+        }
+        // offset can go up to 200-120 = 80 => 8 shifts of 10.
+        assert_eq!(rounds, 8);
+        assert_eq!(w.offset, 80);
+        assert!(!w.can_advance());
+        // advance() past the end must not move the window
+        assert!(!w.advance());
+        assert_eq!(w.offset, 80);
+    }
+
+    #[test]
+    fn rounds_remaining_counts_down() {
+        let mut w = ContinualWindow::new(100, 20, 10, 200);
+        assert_eq!(w.rounds_remaining(), 8);
+        w.advance();
+        assert_eq!(w.rounds_remaining(), 7);
+    }
+
+    #[test]
+    fn sample_sizes_stay_constant_under_shift() {
+        // The paper: "the number of training and test samples stays the
+        // same, but it is shifted".
+        let raw: Vec<f32> = (0..500).map(|i| (i as f32 * 0.1).sin()).collect();
+        let cd = ClientData::new(&raw, WindowSpec { seq_len: 6, horizon: 1 }, (0, 300));
+        let mut w = ContinualWindow::new(300, 100, 25, 500);
+        let (x0, y0) = cd.windows(w.train_range());
+        w.advance();
+        let (x1, y1) = cd.windows(w.train_range());
+        assert_eq!(x0.len(), x1.len());
+        assert_eq!(y0.len(), y1.len());
+        assert_ne!(x0, x1); // but the content shifted
+    }
+
+    #[test]
+    fn client_data_normalized_on_fit_range() {
+        let mut raw: Vec<f32> = vec![10.0; 100];
+        raw.extend(vec![50.0; 100]); // later regime differs
+        let cd = ClientData::new(&raw, WindowSpec::default(), (0, 100));
+        // Fit range mean is 10 -> those normalize to ~0.
+        assert!(cd.series[..100].iter().all(|&z| z.abs() < 1e-2));
+        assert!(cd.series[150] > 1.0); // later data clearly above
+    }
+
+    #[test]
+    fn sample_batch_shapes_and_determinism() {
+        let raw: Vec<f32> = (0..300).map(|i| (i as f32 * 0.05).cos()).collect();
+        let cd = ClientData::new(&raw, WindowSpec { seq_len: 8, horizon: 1 }, (0, 200));
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let (x1, y1) = cd.sample_batch((0, 200), 16, &mut r1);
+        let (x2, y2) = cd.sample_batch((0, 200), 16, &mut r2);
+        assert_eq!(x1.len(), 16 * 8);
+        assert_eq!(y1.len(), 16);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn sample_batch_targets_consistent_with_windows() {
+        let raw: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let cd = ClientData::new(&raw, WindowSpec { seq_len: 4, horizon: 1 }, (0, 100));
+        let mut rng = Rng::new(1);
+        let (xs, ys) = cd.sample_batch((0, 100), 8, &mut rng);
+        for b in 0..8 {
+            let window = &xs[b * 4..(b + 1) * 4];
+            // y must be the normalized value right after the window.
+            let last = window[3];
+            let y = ys[b];
+            // raw series is linear => normalized series is linear with the
+            // same slope everywhere.
+            let step = cd.series[1] - cd.series[0];
+            assert!((y - (last + step)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "span too short")]
+    fn sample_batch_panics_on_short_span() {
+        let raw: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let cd = ClientData::new(&raw, WindowSpec { seq_len: 12, horizon: 1 }, (0, 50));
+        let mut rng = Rng::new(2);
+        cd.sample_batch((0, 10), 4, &mut rng);
+    }
+}

@@ -1,0 +1,87 @@
+//! Fig. 2 — execution time of solving HFLOP optimally, for growing
+//! instance sizes, mean with 95% confidence intervals.
+//!
+//! The paper uses CPLEX branch & cut on an 8-core Ryzen (up to 10,000
+//! devices × 100 edges, hundreds of seconds). Our exact solver is the
+//! in-tree B&B + simplex on one core, so the sweep sizes are scaled down;
+//! the reproduced claim is the *shape*: super-linear growth in n·m and
+//! feasibility for practically-sized instances (§IV-C).
+
+use crate::hflop::InstanceBuilder;
+use crate::solver::{branch_and_bound, BbOptions};
+use crate::util::stats::Summary;
+
+/// One sweep point result.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub n: usize,
+    pub m: usize,
+    pub mean_s: f64,
+    pub ci95_s: f64,
+    pub mean_nodes: f64,
+    pub all_optimal: bool,
+}
+
+/// Default sweep: the paper's 2-D grid shape (devices × edge hosts),
+/// scaled to this solver/core.
+pub fn default_sweep() -> Vec<(usize, usize)> {
+    vec![
+        (25, 4),
+        (50, 4),
+        (100, 6),
+        (200, 8),
+        (400, 10),
+        (800, 12),
+    ]
+}
+
+/// Run the sweep: `reps` random instances per size.
+pub fn run(sweep: &[(usize, usize)], reps: usize, time_limit_s: f64) -> Vec<Fig2Row> {
+    let mut rows = Vec::with_capacity(sweep.len());
+    for &(n, m) in sweep {
+        let mut times = Vec::with_capacity(reps);
+        let mut nodes = Vec::with_capacity(reps);
+        let mut all_optimal = true;
+        for rep in 0..reps {
+            let inst = InstanceBuilder::unit_cost(n, m, 1000 + rep as u64).build();
+            let opts = BbOptions { time_limit_s, ..Default::default() };
+            let out = branch_and_bound(&inst, &opts);
+            all_optimal &= out.proven_optimal;
+            times.push(out.wall_s);
+            nodes.push(out.nodes as f64);
+        }
+        let ts = Summary::of(&times);
+        let ns = Summary::of(&nodes);
+        rows.push(Fig2Row {
+            n,
+            m,
+            mean_s: ts.mean,
+            ci95_s: if ts.ci95.is_finite() { ts.ci95 } else { 0.0 },
+            mean_nodes: ns.mean,
+            all_optimal,
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_runs_and_grows() {
+        let rows = run(&[(10, 3), (40, 5)], 3, 60.0);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.all_optimal));
+        assert!(rows.iter().all(|r| r.mean_s >= 0.0));
+        // Bigger instances must not be (meaningfully) faster.
+        assert!(rows[1].mean_s >= rows[0].mean_s * 0.5);
+    }
+
+    #[test]
+    fn rows_expose_ci() {
+        let rows = run(&[(10, 3)], 4, 60.0);
+        assert!(rows[0].ci95_s >= 0.0);
+        assert!(rows[0].mean_nodes >= 1.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Fig. 6 — per-client MSE over aggregation rounds for (a) flat FL,
+//! (b) location-clustered HFL, (c) HFLOP HFL. 20 clients (5 per
+//! cluster), 5 local epochs, 4 edge servers, l = 2, sliding window per
+//! round. The paper's observations to reproduce: all three setups
+//! converge after ~20 rounds to comparable MSE (hierarchy does not hurt
+//! accuracy), with mild oscillation later as the data drifts.
+
+use super::scenario::Scenario;
+use crate::config::Setup;
+use crate::data::window::{ClientData, ContinualWindow, WindowSpec};
+use crate::fl::{Client, ContinualHfl, FlConfig, Hierarchy, ModelRuntime};
+use crate::metrics::cost::CommLedger;
+use crate::metrics::MseCurves;
+
+/// Outcome of one setup's training run.
+pub struct Fig6Run {
+    pub setup: Setup,
+    pub curves: MseCurves,
+    pub ledger: CommLedger,
+    pub mean_final_mse: f32,
+    pub rounds_to_converge: Option<usize>,
+}
+
+/// Build the per-setup hierarchy from a scenario.
+pub fn hierarchy_for(sc: &Scenario, setup: Setup) -> Hierarchy {
+    match setup {
+        Setup::Flat => Hierarchy::flat(sc.topo.n_devices()),
+        Setup::LocationClustered => Hierarchy::from_assignment(&sc.assign_location),
+        Setup::Hflop | Setup::HflopUncapacitated => Hierarchy::from_assignment(&sc.assign_hflop),
+    }
+}
+
+/// Build FL clients holding each scenario client's sensor data.
+pub fn build_clients(
+    sc: &Scenario,
+    rt: &dyn ModelRuntime,
+    train_span: (usize, usize),
+    seed: u64,
+) -> Vec<Client> {
+    sc.client_sensors
+        .iter()
+        .enumerate()
+        .map(|(id, &sensor)| {
+            let raw = &sc.dataset.series[sensor];
+            let data = ClientData::new(
+                raw,
+                WindowSpec { seq_len: rt.seq_len(), horizon: 1 },
+                train_span,
+            );
+            Client::new(id, data, seed)
+        })
+        .collect()
+}
+
+/// Rounds until the mean curve first comes within 10% of its final
+/// converged level (the paper's "converges after about 20 rounds").
+pub fn rounds_to_converge(curves: &MseCurves) -> Option<usize> {
+    let n = curves.n_rounds();
+    if n < 4 {
+        return None;
+    }
+    let final_level = curves.converged_mean(n / 4);
+    (0..n).find(|&r| curves.mean_at(r) <= final_level * 1.1)
+}
+
+/// Run one setup.
+pub fn run_setup(
+    sc: &Scenario,
+    rt: &dyn ModelRuntime,
+    setup: Setup,
+    fl: FlConfig,
+    window: ContinualWindow,
+    init_params: Vec<f32>,
+    seed: u64,
+) -> anyhow::Result<Fig6Run> {
+    let hierarchy = hierarchy_for(sc, setup);
+    let clients = build_clients(sc, rt, window.train_range(), seed);
+    let mut sys = ContinualHfl::new(
+        rt,
+        hierarchy,
+        clients,
+        window,
+        fl,
+        init_params,
+        Some(&sc.inst),
+    );
+    sys.run()?;
+    let mean_final = sys.curves.converged_mean(5);
+    let conv = rounds_to_converge(&sys.curves);
+    Ok(Fig6Run {
+        setup,
+        curves: sys.curves,
+        ledger: sys.ledger,
+        mean_final_mse: mean_final,
+        rounds_to_converge: conv,
+    })
+}
+
+/// Run all three setups with a shared runtime & schedule.
+pub fn run_all(
+    sc: &Scenario,
+    rt: &dyn ModelRuntime,
+    fl: FlConfig,
+    window: ContinualWindow,
+    init_params: Vec<f32>,
+    seed: u64,
+) -> anyhow::Result<Vec<Fig6Run>> {
+    [Setup::Flat, Setup::LocationClustered, Setup::Hflop]
+        .into_iter()
+        .map(|s| run_setup(sc, rt, s, fl.clone(), window.clone(), init_params.clone(), seed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::scenario::ScenarioConfig;
+    use crate::fl::MockRuntime;
+
+    fn scenario() -> Scenario {
+        Scenario::build(ScenarioConfig {
+            n_clients: 8,
+            n_edges: 2,
+            weeks: 5,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn fl_cfg() -> FlConfig {
+        FlConfig { epochs: 2, batches_per_epoch: 4, l: 2, lr: 0.05, rounds: 15, eval_every: 1 }
+    }
+
+    #[test]
+    fn all_setups_converge_to_similar_mse() {
+        // The paper's core Fig. 6 claim: hierarchy (b/c) does not hurt
+        // accuracy relative to flat FL (a).
+        let sc = scenario();
+        let rt = MockRuntime::new(12, 8);
+        let window = ContinualWindow::new(2000, 800, 50, sc.dataset.n_steps);
+        let runs =
+            run_all(&sc, &rt, fl_cfg(), window, vec![0.0; rt.n_params()], 3).unwrap();
+        assert_eq!(runs.len(), 3);
+        let finals: Vec<f32> = runs.iter().map(|r| r.mean_final_mse).collect();
+        for r in &runs {
+            // Training helped substantially in every setup.
+            let first = r.curves.mean_at(0);
+            assert!(
+                r.mean_final_mse < first * 0.9,
+                "{:?}: {first} -> {}",
+                r.setup,
+                r.mean_final_mse
+            );
+        }
+        // Final MSEs within 2x of each other.
+        let max = finals.iter().cloned().fold(f32::MIN, f32::max);
+        let min = finals.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(max / min < 2.0, "{finals:?}");
+    }
+
+    #[test]
+    fn hierarchical_cheaper_comm_than_flat() {
+        let sc = scenario();
+        let rt = MockRuntime::new(12, 8);
+        let window = ContinualWindow::new(2000, 800, 50, sc.dataset.n_steps);
+        let runs =
+            run_all(&sc, &rt, fl_cfg(), window, vec![0.0; rt.n_params()], 3).unwrap();
+        let flat = &runs[0];
+        let hflop = &runs[2];
+        assert!(
+            hflop.ledger.total_bytes() < flat.ledger.total_bytes(),
+            "hflop {} flat {}",
+            hflop.ledger.total_bytes(),
+            flat.ledger.total_bytes()
+        );
+    }
+
+    #[test]
+    fn convergence_detection_reasonable() {
+        let sc = scenario();
+        let rt = MockRuntime::new(12, 8);
+        let window = ContinualWindow::new(2000, 800, 50, sc.dataset.n_steps);
+        let run = run_setup(
+            &sc,
+            &rt,
+            Setup::Hflop,
+            fl_cfg(),
+            window,
+            vec![0.0; rt.n_params()],
+            3,
+        )
+        .unwrap();
+        let conv = run.rounds_to_converge.unwrap();
+        assert!(conv < 15, "{conv}");
+    }
+}

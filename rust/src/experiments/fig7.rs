@@ -1,0 +1,116 @@
+//! Fig. 7 — inference response-time distributions while clients train,
+//! for the three setups. Paper reference means (ms):
+//! flat 79.07 ± 15.94, hierarchical 17.72 ± 24.26, HFLOP 9.89 ± 4.63.
+//!
+//! The mechanism (per §V-C1): all clients are busy training, so every
+//! request is offloaded (R1). Flat FL pays the cloud RTT; the
+//! hierarchical baselines pay the edge RTT unless the edge is over
+//! capacity and proxies the request to the cloud (R3). HFLOP's
+//! capacity-aware assignment keeps edges under their limits, so its
+//! latency concentrates at the edge RTT.
+
+use super::scenario::Scenario;
+use crate::inference::simulation::{simulate, ServingConfig, ServingOutcome};
+use crate::inference::LatencyModel;
+
+/// Results for the three setups.
+#[derive(Debug)]
+pub struct Fig7Result {
+    pub flat: ServingOutcome,
+    pub location: ServingOutcome,
+    pub hflop: ServingOutcome,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig7Config {
+    pub latency: LatencyModel,
+    pub duration_s: f64,
+    pub queue_window_s: f64,
+    pub seed: u64,
+    /// Scale factor on every λ_i (Fig. 8b uses 10×).
+    pub lambda_scale: f64,
+}
+
+impl Default for Fig7Config {
+    fn default() -> Self {
+        Fig7Config {
+            latency: LatencyModel::default(),
+            duration_s: 120.0,
+            queue_window_s: 0.05,
+            seed: 7,
+            lambda_scale: 1.0,
+        }
+    }
+}
+
+/// Run the three-setup comparison on a built scenario.
+pub fn run(sc: &Scenario, cfg: &Fig7Config) -> Fig7Result {
+    let lambdas: Vec<f64> = sc.lambdas().iter().map(|l| l * cfg.lambda_scale).collect();
+    let caps = sc.capacities();
+
+    let base = |assign: Vec<Option<usize>>, seed_off: u64| ServingConfig {
+        assign,
+        lambda: lambdas.clone(),
+        capacity: caps.clone(),
+        latency: cfg.latency.clone(),
+        duration_s: cfg.duration_s,
+        queue_window_s: cfg.queue_window_s,
+        seed: cfg.seed + seed_off,
+    };
+
+    let flat = simulate(&base(vec![None; sc.topo.n_devices()], 0));
+    let location = simulate(&base(sc.assign_location.assign.clone(), 1));
+    let hflop = simulate(&base(sc.assign_hflop.assign.clone(), 2));
+
+    Fig7Result { flat, location, hflop }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::scenario::ScenarioConfig;
+
+    fn scenario() -> Scenario {
+        Scenario::build(ScenarioConfig {
+            n_clients: 20,
+            n_edges: 4,
+            weeks: 5,
+            balanced_clients: false, // uneven clusters -> location overload
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn reproduces_fig7_ordering_and_scale() {
+        let sc = scenario();
+        let r = run(&sc, &Fig7Config::default());
+        let (f, l, h) = (r.flat.latency.mean(), r.location.latency.mean(), r.hflop.latency.mean());
+        // Ordering: flat >> location-based >= HFLOP (paper: 79 / 18 / 10).
+        assert!(f > l, "flat {f} vs location {l}");
+        assert!(l >= h - 0.5, "location {l} vs hflop {h}");
+        // Scale: flat in the cloud-RTT band, HFLOP near the edge RTT.
+        assert!((70.0..90.0).contains(&f), "{f}");
+        assert!(h < 20.0, "{h}");
+        // HFLOP respects capacities -> essentially no spill.
+        assert!(r.hflop.spill_fraction() < 0.05, "{}", r.hflop.spill_fraction());
+    }
+
+    #[test]
+    fn hflop_latency_std_smallest() {
+        // Paper: HFLOP ±4.63 vs hierarchical ±24.26 — capacity awareness
+        // kills the bimodality.
+        let sc = scenario();
+        let r = run(&sc, &Fig7Config::default());
+        assert!(r.hflop.latency.std() <= r.location.latency.std() + 1.0);
+    }
+
+    #[test]
+    fn lambda_scale_increases_spill() {
+        let sc = scenario();
+        let base = run(&sc, &Fig7Config::default());
+        let heavy = run(&sc, &Fig7Config { lambda_scale: 10.0, ..Default::default() });
+        assert!(heavy.hflop.spill_fraction() >= base.hflop.spill_fraction());
+        assert!(heavy.location.latency.mean() > base.location.latency.mean());
+    }
+}

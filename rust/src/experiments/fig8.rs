@@ -1,0 +1,147 @@
+//! Fig. 8 — end-to-end latency vs edge→cloud compute speedup.
+//!
+//! §V-C3: "we compare the methods, considering a theoretical speedup of
+//! up to 95%" for cloud hardware relative to edge hardware.
+//! (a) baseline rates λ_i: latency is network-dominated, the speedup
+//!     barely moves any curve, hierarchical methods stay far ahead;
+//! (b) rates λ_i × 10: edges saturate; the flat (all-cloud) method
+//!     benefits from the full speedup while the hierarchical ones only
+//!     benefit on their spilled fraction — above a crossover speedup the
+//!     non-hierarchical method wins (paper: 14.25%).
+
+use super::fig7::{run as run_fig7, Fig7Config};
+use super::scenario::Scenario;
+use crate::inference::LatencyModel;
+
+#[derive(Debug, Clone)]
+pub struct Fig8Row {
+    pub speedup: f64,
+    pub flat_ms: f64,
+    pub location_ms: f64,
+    pub hflop_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig8Config {
+    /// Base latency model; `edge_service_ms` here is the *cloud-class
+    /// service time at speedup 0* (§V-C3 makes compute non-negligible).
+    pub latency: LatencyModel,
+    pub duration_s: f64,
+    pub queue_window_s: f64,
+    pub seed: u64,
+    pub lambda_scale: f64,
+    pub speedups: Vec<f64>,
+}
+
+impl Default for Fig8Config {
+    fn default() -> Self {
+        Fig8Config {
+            latency: LatencyModel {
+                // Compute-heavy serving regime of the speedup study.
+                edge_service_ms: 25.0,
+                ..LatencyModel::default()
+            },
+            duration_s: 60.0,
+            queue_window_s: 0.05,
+            seed: 11,
+            lambda_scale: 1.0,
+            speedups: (0..=19).map(|i| i as f64 * 0.05).collect(),
+        }
+    }
+}
+
+/// Sweep the speedup axis.
+pub fn run(sc: &Scenario, cfg: &Fig8Config) -> Vec<Fig8Row> {
+    cfg.speedups
+        .iter()
+        .map(|&sp| {
+            let f7 = Fig7Config {
+                latency: cfg.latency.clone().with_speedup(sp.min(0.95)),
+                duration_s: cfg.duration_s,
+                queue_window_s: cfg.queue_window_s,
+                seed: cfg.seed,
+                lambda_scale: cfg.lambda_scale,
+            };
+            let r = run_fig7(sc, &f7);
+            Fig8Row {
+                speedup: sp,
+                flat_ms: r.flat.latency.mean(),
+                location_ms: r.location.latency.mean(),
+                hflop_ms: r.hflop.latency.mean(),
+            }
+        })
+        .collect()
+}
+
+/// First speedup at which the flat method beats both hierarchical ones
+/// (the paper's 14.25% crossover in Fig. 8b); None if it never does.
+pub fn crossover(rows: &[Fig8Row]) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.flat_ms < r.location_ms && r.flat_ms < r.hflop_ms)
+        .map(|r| r.speedup)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::scenario::ScenarioConfig;
+
+    fn scenario() -> Scenario {
+        Scenario::build(ScenarioConfig {
+            n_clients: 20,
+            n_edges: 4,
+            weeks: 5,
+            balanced_clients: false,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn short(cfg: Fig8Config) -> Fig8Config {
+        Fig8Config {
+            duration_s: 20.0,
+            speedups: vec![0.0, 0.25, 0.5, 0.75, 0.95],
+            ..cfg
+        }
+    }
+
+    #[test]
+    fn fig8a_no_crossover_at_base_rates() {
+        // Network-dominated: hierarchical stays ahead at every speedup.
+        let sc = scenario();
+        let mut cfg = short(Fig8Config::default());
+        cfg.latency.edge_service_ms = 2.0; // light compute, like Fig. 7
+        let rows = run(&sc, &cfg);
+        assert_eq!(crossover(&rows), None);
+        // Speedup barely moves the hierarchical curves.
+        let h0 = rows.first().unwrap().hflop_ms;
+        let h1 = rows.last().unwrap().hflop_ms;
+        assert!((h0 - h1).abs() < 5.0, "{h0} vs {h1}");
+    }
+
+    #[test]
+    fn fig8b_crossover_under_heavy_load() {
+        // λ×10 + compute-heavy: flat must win above some speedup.
+        let sc = scenario();
+        let cfg = Fig8Config {
+            lambda_scale: 10.0,
+            ..short(Fig8Config::default())
+        };
+        let rows = run(&sc, &cfg);
+        let cx = crossover(&rows);
+        assert!(cx.is_some(), "no crossover found: {rows:?}");
+        // Paper: 14.25% — ours must land in a low-to-mid band, not at 0
+        // and not at the very end.
+        let cx = cx.unwrap();
+        assert!((0.0..=0.8).contains(&cx), "{cx}");
+    }
+
+    #[test]
+    fn flat_curve_monotone_decreasing_in_speedup() {
+        let sc = scenario();
+        let rows = run(&sc, &short(Fig8Config::default()));
+        for w in rows.windows(2) {
+            assert!(w[1].flat_ms <= w[0].flat_ms + 2.0, "{w:?}");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Experiment harnesses — one module per paper artifact (DESIGN.md §5):
+//!
+//! | module     | paper artifact |
+//! |------------|----------------|
+//! | [`fig2`]   | HFLOP optimal solve times vs instance size |
+//! | [`fig6`]   | per-client MSE curves, 3 setups, continual HFL |
+//! | [`fig7`]   | inference response-time distributions |
+//! | [`fig8`]   | end-to-end latency vs edge→cloud speedup |
+//! | [`fig9`]   | communication-cost savings vs edge density |
+//! | [`cl_table`] | §V-B1 static vs continually-retrained MSE |
+//!
+//! [`scenario`] builds the shared world (synthetic METR-LA, topology,
+//! assignments). The `examples/` binaries and `rust/benches/` harnesses
+//! are thin drivers over these functions.
+
+pub mod cl_table;
+pub mod fig2;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod scenario;
+
+pub use scenario::{Scenario, ScenarioConfig};

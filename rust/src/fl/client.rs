@@ -1,0 +1,156 @@
+//! FL device client: owns one sensor's data shard and runs local SGD
+//! epochs through a [`ModelRuntime`] (the AOT train-step artifact in
+//! production).
+
+use super::ModelRuntime;
+use crate::data::window::ClientData;
+use crate::util::rng::Rng;
+
+/// Result of one local training phase.
+#[derive(Debug, Clone)]
+pub struct LocalTrainReport {
+    pub params: Vec<f32>,
+    pub mean_loss: f32,
+    /// Samples used (FedAvg weight).
+    pub n_samples: usize,
+}
+
+/// An FL client (the paper's "FL device"/sensor).
+pub struct Client {
+    pub id: usize,
+    pub data: ClientData,
+    rng: Rng,
+}
+
+impl Client {
+    pub fn new(id: usize, data: ClientData, seed: u64) -> Client {
+        Client { id, data, rng: Rng::new(seed ^ (id as u64).wrapping_mul(0x9E37_79B9)) }
+    }
+
+    /// Train `epochs` local epochs of `batches_per_epoch` stochastic
+    /// batches sampled from `range` of this client's series.
+    pub fn local_train(
+        &mut self,
+        rt: &dyn ModelRuntime,
+        mut params: Vec<f32>,
+        range: (usize, usize),
+        epochs: usize,
+        batches_per_epoch: usize,
+        lr: f32,
+    ) -> anyhow::Result<LocalTrainReport> {
+        let b = rt.train_batch_size();
+        let mut loss_acc = 0.0f64;
+        let mut steps = 0usize;
+        for _ in 0..epochs {
+            for _ in 0..batches_per_epoch {
+                let (x, y) = self.data.sample_batch(range, b, &mut self.rng);
+                let (p, loss) = rt.train_batch(&params, &x, &y, lr)?;
+                params = p;
+                loss_acc += loss as f64;
+                steps += 1;
+            }
+        }
+        Ok(LocalTrainReport {
+            params,
+            mean_loss: if steps > 0 { (loss_acc / steps as f64) as f32 } else { f32::NAN },
+            n_samples: steps * b,
+        })
+    }
+
+    /// Evaluate MSE over the windows of `range`, chunked into eval
+    /// batches (tail padded by wrapping so every window counts once in
+    /// expectation; the remainder bias is negligible at our sizes).
+    pub fn evaluate(
+        &self,
+        rt: &dyn ModelRuntime,
+        params: &[f32],
+        range: (usize, usize),
+    ) -> anyhow::Result<f32> {
+        let (xs, ys) = self.data.windows(range);
+        let t = rt.seq_len();
+        let be = rt.eval_batch_size();
+        anyhow::ensure!(!ys.is_empty(), "evaluation span has no windows");
+        let n = ys.len();
+        let mut total = 0.0f64;
+        let mut batches = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            // Build one eval batch, wrapping at the end.
+            let mut bx = Vec::with_capacity(be * t);
+            let mut by = Vec::with_capacity(be);
+            for k in 0..be {
+                let idx = (start + k) % n;
+                bx.extend_from_slice(&xs[idx * t..(idx + 1) * t]);
+                by.push(ys[idx]);
+            }
+            total += rt.eval(params, &bx, &by)? as f64;
+            batches += 1;
+            start += be;
+        }
+        Ok((total / batches as f64) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::window::{ClientData, WindowSpec};
+    use crate::fl::MockRuntime;
+
+    fn make_client(id: usize) -> Client {
+        let raw: Vec<f32> = (0..600)
+            .map(|i| (i as f32 * 0.05).sin() * 10.0 + 30.0)
+            .collect();
+        let data = ClientData::new(&raw, WindowSpec { seq_len: 4, horizon: 1 }, (0, 400));
+        Client::new(id, data, 42)
+    }
+
+    #[test]
+    fn local_train_reduces_loss() {
+        let rt = MockRuntime::new(4, 8);
+        let mut c = make_client(0);
+        let params = vec![0.0f32; 5];
+        let r1 = c.local_train(&rt, params.clone(), (0, 400), 1, 10, 0.05).unwrap();
+        let r2 = c.local_train(&rt, r1.params.clone(), (0, 400), 5, 10, 0.05).unwrap();
+        assert!(r2.mean_loss < r1.mean_loss, "{} -> {}", r1.mean_loss, r2.mean_loss);
+    }
+
+    #[test]
+    fn report_counts_samples() {
+        let rt = MockRuntime::new(4, 8);
+        let mut c = make_client(1);
+        let r = c.local_train(&rt, vec![0.0; 5], (0, 400), 3, 7, 0.01).unwrap();
+        assert_eq!(r.n_samples, 3 * 7 * 8);
+        assert_eq!(r.params.len(), 5);
+    }
+
+    #[test]
+    fn evaluate_smaller_after_training() {
+        let rt = MockRuntime::new(4, 8);
+        let mut c = make_client(2);
+        let before = c.evaluate(&rt, &vec![0.0; 5], (400, 600)).unwrap();
+        let trained = c
+            .local_train(&rt, vec![0.0; 5], (0, 400), 20, 10, 0.05)
+            .unwrap()
+            .params;
+        let after = c.evaluate(&rt, &trained, (400, 600)).unwrap();
+        assert!(after < before, "{before} -> {after}");
+    }
+
+    #[test]
+    fn evaluate_errors_on_empty_span() {
+        let rt = MockRuntime::new(4, 8);
+        let c = make_client(3);
+        assert!(c.evaluate(&rt, &vec![0.0; 5], (0, 3)).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_same_seed() {
+        let rt = MockRuntime::new(4, 8);
+        let mut a = make_client(7);
+        let mut b = make_client(7);
+        let ra = a.local_train(&rt, vec![0.0; 5], (0, 400), 2, 5, 0.05).unwrap();
+        let rb = b.local_train(&rt, vec![0.0; 5], (0, 400), 2, 5, 0.05).unwrap();
+        assert_eq!(ra.params, rb.params);
+    }
+}

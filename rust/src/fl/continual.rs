@@ -1,0 +1,424 @@
+//! The continual hierarchical FL round engine (§III + §V-B2).
+//!
+//! One *aggregation round* (the unit on Fig. 6's x-axis):
+//! 1. every participating client trains `epochs` local epochs on its
+//!    current training window and uploads to its edge aggregator;
+//! 2. the edge aggregator FedAvg-combines its cluster and pushes the
+//!    cluster model back to members (a *local round*);
+//! 3. every `l`-th local round the aggregators upload cluster models to
+//!    the global server, which FedAvg-combines them into the global model
+//!    and broadcasts it back down (a *global round*);
+//! 4. each client evaluates the model it now holds on its validation
+//!    window (Fig. 6 plots this per client);
+//! 5. the data window shifts ("the global time shifts") — continual
+//!    learning.
+//!
+//! Flat FL degenerates to: every round is a global round and the
+//! "aggregator" is the cloud.
+//!
+//! Communication is accounted in a [`CommLedger`] exactly as the paper
+//! meters it (§V-D): device↔edge exchanges are metered iff that link has
+//! positive cost; edge↔cloud always.
+
+use super::client::Client;
+use super::fedavg::fedavg;
+use super::hierarchy::Hierarchy;
+use super::ModelRuntime;
+use crate::data::window::ContinualWindow;
+use crate::hflop::Instance;
+use crate::metrics::cost::CommLedger;
+use crate::metrics::MseCurves;
+
+/// Round-engine configuration.
+#[derive(Debug, Clone)]
+pub struct FlConfig {
+    /// Local epochs per aggregation round (paper: 5).
+    pub epochs: usize,
+    /// Stochastic batches per epoch (scales compute; paper trains full
+    /// epochs — we subsample to fit the testbed, see EXPERIMENTS.md).
+    pub batches_per_epoch: usize,
+    /// Local rounds per global round (paper: l = 2).
+    pub l: usize,
+    pub lr: f32,
+    /// Total aggregation rounds (paper: 100).
+    pub rounds: usize,
+    /// Evaluate every k-th round (1 = every round, Fig. 6 granularity).
+    pub eval_every: usize,
+}
+
+impl Default for FlConfig {
+    fn default() -> Self {
+        FlConfig { epochs: 5, batches_per_epoch: 8, l: 2, lr: 1e-3, rounds: 100, eval_every: 1 }
+    }
+}
+
+/// Per-round record for logs/plots.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub global_round: bool,
+    pub mean_train_loss: f32,
+    pub mean_val_mse: f32,
+}
+
+/// The assembled training system for one experiment setup.
+pub struct ContinualHfl<'a> {
+    pub runtime: &'a dyn ModelRuntime,
+    pub hierarchy: Hierarchy,
+    pub clients: Vec<Client>,
+    pub window: ContinualWindow,
+    pub config: FlConfig,
+    /// Cost context: the HFLOP instance supplies per-link metering. For
+    /// flat FL it is ignored (all exchanges are cloud exchanges).
+    pub instance: Option<&'a Instance>,
+
+    // --- state -----------------------------------------------------------
+    pub global_params: Vec<f32>,
+    cluster_params: Vec<Vec<f32>>,
+    pub ledger: CommLedger,
+    pub curves: MseCurves,
+    pub records: Vec<RoundRecord>,
+}
+
+impl<'a> ContinualHfl<'a> {
+    pub fn new(
+        runtime: &'a dyn ModelRuntime,
+        hierarchy: Hierarchy,
+        clients: Vec<Client>,
+        window: ContinualWindow,
+        config: FlConfig,
+        init_params: Vec<f32>,
+        instance: Option<&'a Instance>,
+    ) -> ContinualHfl<'a> {
+        assert_eq!(init_params.len(), runtime.n_params(), "init params shape");
+        let n_clusters = hierarchy.n_clusters();
+        let n_clients = clients.len();
+        ContinualHfl {
+            runtime,
+            hierarchy,
+            clients,
+            window,
+            config,
+            instance,
+            cluster_params: vec![init_params.clone(); n_clusters],
+            global_params: init_params,
+            ledger: CommLedger::new(),
+            curves: MseCurves::new(n_clients),
+            records: Vec::new(),
+        }
+    }
+
+    /// Is the device↔edge link metered? (flat FL: always a cloud link.)
+    fn device_link_metered(&self, device: usize, edge_id: usize) -> bool {
+        match self.instance {
+            Some(inst) if edge_id < inst.m() => inst.c_d[device][edge_id] > 0.0,
+            _ => true,
+        }
+    }
+
+    /// Run one aggregation round. Returns the record.
+    pub fn step_round(&mut self, round: usize) -> anyhow::Result<RoundRecord> {
+        let cfg = self.config.clone();
+        let model_bytes = self.runtime.model_bytes();
+        let train_range = self.window.train_range();
+        let val_range = self.window.val_range();
+        let is_global = self.hierarchy.flat || (round + 1) % cfg.l == 0;
+
+        let mut loss_acc = 0.0f64;
+        let mut loss_cnt = 0usize;
+
+        // ---- local training + edge aggregation ---------------------------
+        for (ci, cluster) in self.hierarchy.clusters.clone().iter().enumerate() {
+            let mut uploads: Vec<(Vec<f32>, f64)> = Vec::with_capacity(cluster.members.len());
+            for &dev in &cluster.members {
+                let report = self.clients[dev].local_train(
+                    self.runtime,
+                    self.cluster_params[ci].clone(),
+                    train_range,
+                    cfg.epochs,
+                    cfg.batches_per_epoch,
+                    cfg.lr,
+                )?;
+                loss_acc += report.mean_loss as f64;
+                loss_cnt += 1;
+                // Device -> aggregator upload + later download of the
+                // aggregated model: one exchange.
+                if self.hierarchy.flat {
+                    self.ledger.cloud_exchange(model_bytes);
+                } else {
+                    let metered = self.device_link_metered(dev, cluster.edge_id);
+                    self.ledger.device_edge_exchange(metered, model_bytes);
+                }
+                uploads.push((report.params, report.n_samples as f64));
+            }
+            let refs: Vec<(&[f32], f64)> =
+                uploads.iter().map(|(p, w)| (p.as_slice(), *w)).collect();
+            self.cluster_params[ci] = fedavg(&refs);
+        }
+
+        // ---- global aggregation ------------------------------------------
+        if is_global {
+            let weights: Vec<f64> = self
+                .hierarchy
+                .clusters
+                .iter()
+                .map(|c| c.members.len() as f64)
+                .collect();
+            let refs: Vec<(&[f32], f64)> = self
+                .cluster_params
+                .iter()
+                .zip(&weights)
+                .map(|(p, &w)| (p.as_slice(), w))
+                .collect();
+            self.global_params = fedavg(&refs);
+            for params in self.cluster_params.iter_mut() {
+                *params = self.global_params.clone();
+            }
+            if !self.hierarchy.flat {
+                // Each open aggregator exchanges with the cloud.
+                for _ in 0..self.hierarchy.n_clusters() {
+                    self.ledger.cloud_exchange(model_bytes);
+                }
+            }
+        }
+
+        // ---- evaluation (Fig. 6: after receiving the updated model) ------
+        let mut val_acc = 0.0f64;
+        let mut val_cnt = 0usize;
+        if round % cfg.eval_every == 0 {
+            for (ci, cluster) in self.hierarchy.clusters.iter().enumerate() {
+                for &dev in &cluster.members {
+                    let mse = self.clients[dev].evaluate(
+                        self.runtime,
+                        &self.cluster_params[ci],
+                        val_range,
+                    )?;
+                    self.curves.push(dev, mse);
+                    val_acc += mse as f64;
+                    val_cnt += 1;
+                }
+            }
+        }
+
+        // ---- continual shift ---------------------------------------------
+        self.window.advance();
+
+        let rec = RoundRecord {
+            round,
+            global_round: is_global,
+            mean_train_loss: if loss_cnt > 0 { (loss_acc / loss_cnt as f64) as f32 } else { f32::NAN },
+            mean_val_mse: if val_cnt > 0 { (val_acc / val_cnt as f64) as f32 } else { f32::NAN },
+        };
+        self.records.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Run the configured number of rounds.
+    pub fn run(&mut self) -> anyhow::Result<()> {
+        for round in 0..self.config.rounds {
+            let rec = self.step_round(round)?;
+            log::info!(
+                "round {:>3}{} train_loss={:.5} val_mse={:.5} comm={:.3} GB",
+                rec.round,
+                if rec.global_round { " [global]" } else { "        " },
+                rec.mean_train_loss,
+                rec.mean_val_mse,
+                self.ledger.total_gb(),
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::window::{ClientData, WindowSpec};
+    use crate::fl::MockRuntime;
+    use crate::util::rng::Rng;
+
+    const T: usize = 4;
+
+    /// Clients observing noisy versions of the same AR-ish process (so a
+    /// shared model helps) split across two clusters.
+    fn make_clients(n: usize) -> Vec<Client> {
+        let mut rng = Rng::new(1);
+        (0..n)
+            .map(|id| {
+                let raw: Vec<f32> = (0..800)
+                    .map(|i| {
+                        ((i as f32 * 0.05).sin() * 8.0 + 20.0) + rng.normal() as f32 * 0.5
+                    })
+                    .collect();
+                let data = ClientData::new(&raw, WindowSpec { seq_len: T, horizon: 1 }, (0, 500));
+                Client::new(id, data, 77)
+            })
+            .collect()
+    }
+
+    fn base_config() -> FlConfig {
+        FlConfig { epochs: 1, batches_per_epoch: 4, l: 2, lr: 0.05, rounds: 12, eval_every: 1 }
+    }
+
+    fn hierarchical(n: usize) -> Hierarchy {
+        Hierarchy {
+            clusters: vec![
+                super::super::hierarchy::Cluster { edge_id: 0, members: (0..n / 2).collect() },
+                super::super::hierarchy::Cluster { edge_id: 1, members: (n / 2..n).collect() },
+            ],
+            flat: false,
+        }
+    }
+
+    #[test]
+    fn training_reduces_val_mse() {
+        let rt = MockRuntime::new(T, 8);
+        let clients = make_clients(6);
+        let window = ContinualWindow::new(500, 100, 10, 800);
+        let mut sys = ContinualHfl::new(
+            &rt,
+            hierarchical(6),
+            clients,
+            window,
+            base_config(),
+            vec![0.0; T + 1],
+            None,
+        );
+        sys.run().unwrap();
+        let first = sys.curves.mean_at(0);
+        let last = sys.curves.converged_mean(3);
+        assert!(last < first * 0.8, "{first} -> {last}");
+    }
+
+    #[test]
+    fn global_round_syncs_clusters() {
+        let rt = MockRuntime::new(T, 8);
+        let clients = make_clients(4);
+        let window = ContinualWindow::new(500, 100, 0, 800);
+        let mut cfg = base_config();
+        cfg.rounds = 2; // round 1 (index 1) is a global round with l=2
+        let mut sys = ContinualHfl::new(
+            &rt,
+            hierarchical(4),
+            clients,
+            window,
+            cfg,
+            vec![0.0; T + 1],
+            None,
+        );
+        sys.step_round(0).unwrap();
+        assert_ne!(sys.cluster_params[0], sys.cluster_params[1]);
+        sys.step_round(1).unwrap();
+        assert_eq!(sys.cluster_params[0], sys.cluster_params[1]);
+        assert_eq!(sys.cluster_params[0], sys.global_params);
+    }
+
+    #[test]
+    fn flat_fl_comm_matches_closed_form() {
+        let rt = MockRuntime::new(T, 8);
+        let n = 5;
+        let clients = make_clients(n);
+        let window = ContinualWindow::new(500, 100, 0, 800);
+        let mut cfg = base_config();
+        cfg.rounds = 10;
+        let mut sys = ContinualHfl::new(
+            &rt,
+            Hierarchy::flat(n),
+            clients,
+            window,
+            cfg,
+            vec![0.0; T + 1],
+            None,
+        );
+        sys.run().unwrap();
+        let expect = crate::metrics::cost::flat_fl_bytes(n, 10, rt.model_bytes());
+        assert_eq!(sys.ledger.total_bytes(), expect);
+    }
+
+    #[test]
+    fn hierarchical_comm_cheaper_than_flat_with_free_links() {
+        let rt = MockRuntime::new(T, 8);
+        let n = 6;
+        // Instance where every device's assigned edge is free.
+        let inst = crate::hflop::Instance {
+            c_d: vec![vec![0.0, 0.0]; n],
+            c_e: vec![1.0, 1.0],
+            lambda: vec![1.0; n],
+            r: vec![100.0, 100.0],
+            l: 2.0,
+            t_min: n,
+        };
+        let window = ContinualWindow::new(500, 100, 0, 800);
+        let mut cfg = base_config();
+        cfg.rounds = 8;
+        let mut hier_sys = ContinualHfl::new(
+            &rt,
+            hierarchical(n),
+            make_clients(n),
+            window.clone(),
+            cfg.clone(),
+            vec![0.0; T + 1],
+            Some(&inst),
+        );
+        hier_sys.run().unwrap();
+        let mut flat_sys = ContinualHfl::new(
+            &rt,
+            Hierarchy::flat(n),
+            make_clients(n),
+            window,
+            cfg,
+            vec![0.0; T + 1],
+            None,
+        );
+        flat_sys.run().unwrap();
+        assert!(hier_sys.ledger.total_bytes() < flat_sys.ledger.total_bytes());
+        // Hier: only cluster<->cloud exchanges are metered: 2 clusters * 4
+        // global rounds * 2 * bytes.
+        assert_eq!(
+            hier_sys.ledger.total_bytes(),
+            2 * 2 * 4 * rt.model_bytes() as u64
+        );
+    }
+
+    #[test]
+    fn window_advances_each_round() {
+        let rt = MockRuntime::new(T, 8);
+        let clients = make_clients(2);
+        let window = ContinualWindow::new(500, 100, 20, 800);
+        let mut cfg = base_config();
+        cfg.rounds = 5;
+        let mut sys = ContinualHfl::new(
+            &rt,
+            Hierarchy::flat(2),
+            clients,
+            window,
+            cfg,
+            vec![0.0; T + 1],
+            None,
+        );
+        sys.run().unwrap();
+        assert_eq!(sys.window.offset, 100); // 5 rounds * shift 20
+    }
+
+    #[test]
+    fn records_and_curves_populated() {
+        let rt = MockRuntime::new(T, 8);
+        let clients = make_clients(3);
+        let window = ContinualWindow::new(500, 100, 0, 800);
+        let mut cfg = base_config();
+        cfg.rounds = 4;
+        let mut sys = ContinualHfl::new(
+            &rt,
+            Hierarchy::flat(3),
+            clients,
+            window,
+            cfg,
+            vec![0.0; T + 1],
+            None,
+        );
+        sys.run().unwrap();
+        assert_eq!(sys.records.len(), 4);
+        assert_eq!(sys.curves.n_rounds(), 4);
+        assert!(sys.records.iter().all(|r| r.mean_val_mse.is_finite()));
+    }
+}

@@ -1,0 +1,104 @@
+//! Federated averaging over flat f32 parameter blocks.
+//!
+//! Both aggregation levels of the paper's HFL use the same operator: edge
+//! aggregators average their cluster's client models, the global server
+//! averages the cluster models. Weighting is by sample count (standard
+//! FedAvg); uniform weighting is available as an ablation.
+
+/// Weighted average of parameter blocks: `Σ w_k p_k / Σ w_k`.
+///
+/// Panics on empty input or mismatched lengths (programming errors in the
+/// round engine, not runtime conditions).
+pub fn fedavg(blocks: &[(&[f32], f64)]) -> Vec<f32> {
+    assert!(!blocks.is_empty(), "fedavg over no models");
+    let len = blocks[0].0.len();
+    let total_w: f64 = blocks.iter().map(|(_, w)| *w).sum();
+    assert!(total_w > 0.0, "fedavg with zero total weight");
+    let mut acc = vec![0.0f64; len];
+    for (params, w) in blocks {
+        assert_eq!(params.len(), len, "fedavg: parameter length mismatch");
+        let wn = *w / total_w;
+        for (a, &p) in acc.iter_mut().zip(*params) {
+            *a += wn * p as f64;
+        }
+    }
+    acc.into_iter().map(|v| v as f32).collect()
+}
+
+/// Uniform-weight variant (ablation).
+pub fn fedavg_uniform(blocks: &[&[f32]]) -> Vec<f32> {
+    let weighted: Vec<(&[f32], f64)> = blocks.iter().map(|&b| (b, 1.0)).collect();
+    fedavg(&weighted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_block_identity() {
+        let p = vec![1.0f32, -2.0, 3.5];
+        let out = fedavg(&[(&p, 7.0)]);
+        assert_eq!(out, p);
+    }
+
+    #[test]
+    fn equal_weights_mean() {
+        let a = vec![0.0f32, 2.0];
+        let b = vec![4.0f32, 6.0];
+        let out = fedavg(&[(&a, 1.0), (&b, 1.0)]);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn weights_proportional() {
+        let a = vec![0.0f32];
+        let b = vec![10.0f32];
+        let out = fedavg(&[(&a, 3.0), (&b, 1.0)]);
+        assert!((out[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_scale_invariance() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let o1 = fedavg(&[(&a, 1.0), (&b, 2.0)]);
+        let o2 = fedavg(&[(&a, 10.0), (&b, 20.0)]);
+        for (x, y) in o1.iter().zip(&o2) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn uniform_matches_equal_weights() {
+        let a = vec![1.0f32, 5.0];
+        let b = vec![3.0f32, 7.0];
+        let c = vec![5.0f32, 0.0];
+        let u = fedavg_uniform(&[&a, &b, &c]);
+        let w = fedavg(&[(&a, 2.0), (&b, 2.0), (&c, 2.0)]);
+        assert_eq!(u, w);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        let a = vec![1.0f32];
+        let b = vec![1.0f32, 2.0];
+        fedavg(&[(&a, 1.0), (&b, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no models")]
+    fn empty_panics() {
+        fedavg(&[]);
+    }
+
+    #[test]
+    fn idempotent_on_identical_blocks() {
+        let p = vec![0.25f32; 64];
+        let out = fedavg(&[(&p, 1.0), (&p, 5.0), (&p, 0.5)]);
+        for (a, b) in out.iter().zip(&p) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+}

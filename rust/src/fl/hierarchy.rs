@@ -1,0 +1,150 @@
+//! FL hierarchy: which devices report to which edge aggregator.
+//!
+//! Three construction paths matching the paper's three evaluated setups:
+//! * [`Hierarchy::flat`] — vanilla centralized FL (every device talks to
+//!   the cloud; modeled as a single virtual aggregator co-located with
+//!   the global server).
+//! * [`Hierarchy::from_location_clusters`] — the location-based baseline
+//!   (§V-B2 / Fig. 5): k-means clusters, one edge server per cluster.
+//! * [`Hierarchy::from_assignment`] — the HFLOP solution (§IV): clusters
+//!   follow the cost-optimal, capacity-feasible assignment.
+
+use crate::solver::Assignment;
+use crate::topology::{kmeans, GeoPoint};
+use crate::util::rng::Rng;
+
+/// One cluster: an edge aggregator and its member devices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    /// Edge host id (usize::MAX for the virtual cloud aggregator in flat FL).
+    pub edge_id: usize,
+    pub members: Vec<usize>,
+}
+
+/// The full hierarchy.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub clusters: Vec<Cluster>,
+    /// True when the "aggregator" actually is the cloud (flat FL): every
+    /// local round is a global round and device↔aggregator traffic is
+    /// metered at cloud rates.
+    pub flat: bool,
+}
+
+pub const CLOUD_EDGE_ID: usize = usize::MAX;
+
+impl Hierarchy {
+    /// Vanilla FL: one virtual cluster at the cloud.
+    pub fn flat(n_devices: usize) -> Hierarchy {
+        Hierarchy {
+            clusters: vec![Cluster { edge_id: CLOUD_EDGE_ID, members: (0..n_devices).collect() }],
+            flat: true,
+        }
+    }
+
+    /// Location-based clustering baseline: k-means over device locations.
+    pub fn from_location_clusters(
+        locations: &[GeoPoint],
+        n_clusters: usize,
+        seed: u64,
+    ) -> Hierarchy {
+        let mut rng = Rng::new(seed);
+        let km = kmeans(locations, n_clusters, 100, &mut rng);
+        let k = km.centroids.len();
+        let mut clusters: Vec<Cluster> =
+            (0..k).map(|j| Cluster { edge_id: j, members: Vec::new() }).collect();
+        for (i, &c) in km.assignment.iter().enumerate() {
+            clusters[c].members.push(i);
+        }
+        clusters.retain(|c| !c.members.is_empty());
+        Hierarchy { clusters, flat: false }
+    }
+
+    /// From an HFLOP solution. Unassigned devices (allowed when T < n) are
+    /// left out of the hierarchy — they do not participate this task.
+    pub fn from_assignment(sol: &Assignment) -> Hierarchy {
+        let m = sol.open.len();
+        let mut clusters: Vec<Cluster> =
+            (0..m).map(|j| Cluster { edge_id: j, members: Vec::new() }).collect();
+        for (i, &a) in sol.assign.iter().enumerate() {
+            if let Some(j) = a {
+                clusters[j].members.push(i);
+            }
+        }
+        clusters.retain(|c| !c.members.is_empty());
+        Hierarchy { clusters, flat: false }
+    }
+
+    pub fn n_participants(&self) -> usize {
+        self.clusters.iter().map(|c| c.members.len()).sum()
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Cluster index serving device `i`, if any.
+    pub fn cluster_of(&self, device: usize) -> Option<usize> {
+        self.clusters.iter().position(|c| c.members.contains(&device))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hflop::InstanceBuilder;
+    use crate::solver::{solve, SolveOptions};
+
+    #[test]
+    fn flat_single_cluster() {
+        let h = Hierarchy::flat(10);
+        assert!(h.flat);
+        assert_eq!(h.n_clusters(), 1);
+        assert_eq!(h.n_participants(), 10);
+        assert_eq!(h.clusters[0].edge_id, CLOUD_EDGE_ID);
+    }
+
+    #[test]
+    fn from_assignment_groups_members() {
+        let inst = InstanceBuilder::unit_cost(20, 4, 3).build();
+        let sol = solve(&inst, &SolveOptions::exact()).unwrap();
+        let h = Hierarchy::from_assignment(&sol.assignment);
+        assert!(!h.flat);
+        assert_eq!(h.n_participants(), 20);
+        // Each member's assignment matches its cluster's edge.
+        for c in &h.clusters {
+            for &i in &c.members {
+                assert_eq!(sol.assignment.assign[i], Some(c.edge_id));
+            }
+        }
+    }
+
+    #[test]
+    fn from_assignment_skips_unassigned() {
+        use crate::solver::Assignment;
+        let sol = Assignment {
+            assign: vec![Some(0), None, Some(0)],
+            open: vec![true, false],
+        };
+        let h = Hierarchy::from_assignment(&sol);
+        assert_eq!(h.n_participants(), 2);
+        assert_eq!(h.cluster_of(1), None);
+        assert_eq!(h.cluster_of(0), Some(0));
+    }
+
+    #[test]
+    fn location_clusters_cover_all_devices() {
+        let locs: Vec<GeoPoint> = (0..40)
+            .map(|i| GeoPoint {
+                lat: 34.0 + 0.17 * ((i % 4) as f64 / 4.0),
+                lon: -118.45 + 0.2 * ((i / 4) as f64 / 10.0),
+            })
+            .collect();
+        let h = Hierarchy::from_location_clusters(&locs, 4, 1);
+        assert_eq!(h.n_participants(), 40);
+        assert!(h.n_clusters() <= 4 && h.n_clusters() >= 1);
+        for i in 0..40 {
+            assert!(h.cluster_of(i).is_some());
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Hierarchical federated learning runtime (L3).
+//!
+//! The module tree mirrors the paper's §III architecture:
+//! * [`client`] — FL device: local SGD epochs through the AOT train-step
+//!   artifact, local evaluation.
+//! * [`fedavg`] — weighted federated averaging of flat parameter blocks.
+//! * [`hierarchy`] — cluster structure (device ↔ edge aggregator ↔ cloud)
+//!   built from an HFLOP solution, a location clustering, or flat FL.
+//! * [`continual`] — the continual-learning round engine: local rounds,
+//!   global rounds every `l` locals, sliding data window per round
+//!   (§V-B2), per-client MSE tracking (Fig. 6) and communication-cost
+//!   accounting (Fig. 9).
+//!
+//! Model execution is abstracted behind [`ModelRuntime`] so the FL logic
+//! is testable without artifacts ([`MockRuntime`]) and runs the real
+//! PJRT engine in production ([`crate::runtime::Engine`] implements the
+//! trait).
+
+pub mod client;
+pub mod continual;
+pub mod fedavg;
+pub mod hierarchy;
+
+pub use client::{Client, LocalTrainReport};
+pub use continual::{ContinualHfl, FlConfig, RoundRecord};
+pub use fedavg::fedavg;
+pub use hierarchy::{Cluster, Hierarchy};
+
+use crate::runtime::Engine;
+
+/// Minimal interface the FL round engine needs from a model runtime.
+pub trait ModelRuntime {
+    /// One SGD step. `x: [B*T*in]`, `y: [B*out]` -> (new params, loss).
+    fn train_batch(&self, params: &[f32], x: &[f32], y: &[f32], lr: f32)
+        -> anyhow::Result<(Vec<f32>, f32)>;
+    /// Mean squared error over one eval batch.
+    fn eval(&self, params: &[f32], x: &[f32], y: &[f32]) -> anyhow::Result<f32>;
+
+    fn train_batch_size(&self) -> usize;
+    fn eval_batch_size(&self) -> usize;
+    fn seq_len(&self) -> usize;
+    fn n_params(&self) -> usize;
+    /// Serialized model size (bytes) for communication accounting.
+    fn model_bytes(&self) -> usize;
+}
+
+impl ModelRuntime for Engine {
+    fn train_batch(&self, params: &[f32], x: &[f32], y: &[f32], lr: f32)
+        -> anyhow::Result<(Vec<f32>, f32)> {
+        self.train_step(params, x, y, lr)
+    }
+
+    fn eval(&self, params: &[f32], x: &[f32], y: &[f32]) -> anyhow::Result<f32> {
+        self.eval_mse(params, x, y)
+    }
+
+    fn train_batch_size(&self) -> usize {
+        self.variant().train_batch
+    }
+    fn eval_batch_size(&self) -> usize {
+        self.variant().eval_batch
+    }
+    fn seq_len(&self) -> usize {
+        self.variant().seq_len
+    }
+    fn n_params(&self) -> usize {
+        self.variant().param_count
+    }
+    fn model_bytes(&self) -> usize {
+        self.variant().model_bytes
+    }
+}
+
+/// An artifact-free runtime for tests: a linear model
+/// `y = w · x_window + b` trained by exact gradient descent. Keeps the FL
+/// logic fully testable (loss must decrease, FedAvg must mix parameters)
+/// without the PJRT engine.
+#[derive(Debug, Clone)]
+pub struct MockRuntime {
+    pub seq_len: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+}
+
+impl MockRuntime {
+    pub fn new(seq_len: usize, batch: usize) -> MockRuntime {
+        MockRuntime { seq_len, batch, eval_batch: batch }
+    }
+
+    fn forward(&self, params: &[f32], window: &[f32]) -> f32 {
+        let w = &params[..self.seq_len];
+        let b = params[self.seq_len];
+        w.iter().zip(window).map(|(a, b)| a * b).sum::<f32>() + b
+    }
+}
+
+impl ModelRuntime for MockRuntime {
+    fn train_batch(&self, params: &[f32], x: &[f32], y: &[f32], lr: f32)
+        -> anyhow::Result<(Vec<f32>, f32)> {
+        anyhow::ensure!(params.len() == self.seq_len + 1, "mock param len");
+        let b = self.batch;
+        let t = self.seq_len;
+        anyhow::ensure!(x.len() == b * t && y.len() == b, "mock batch shapes");
+        let mut grad = vec![0.0f32; t + 1];
+        let mut loss = 0.0f32;
+        for i in 0..b {
+            let win = &x[i * t..(i + 1) * t];
+            let pred = self.forward(params, win);
+            let err = pred - y[i];
+            loss += err * err;
+            for (g, &xv) in grad.iter_mut().zip(win) {
+                *g += 2.0 * err * xv / b as f32;
+            }
+            grad[t] += 2.0 * err / b as f32;
+        }
+        loss /= b as f32;
+        let new: Vec<f32> = params.iter().zip(&grad).map(|(p, g)| p - lr * g).collect();
+        Ok((new, loss))
+    }
+
+    fn eval(&self, params: &[f32], x: &[f32], y: &[f32]) -> anyhow::Result<f32> {
+        let t = self.seq_len;
+        let n = y.len();
+        anyhow::ensure!(x.len() == n * t, "mock eval shapes");
+        let mut loss = 0.0f32;
+        for i in 0..n {
+            let pred = self.forward(params, &x[i * t..(i + 1) * t]);
+            loss += (pred - y[i]).powi(2);
+        }
+        Ok(loss / n as f32)
+    }
+
+    fn train_batch_size(&self) -> usize {
+        self.batch
+    }
+    fn eval_batch_size(&self) -> usize {
+        self.eval_batch
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn n_params(&self) -> usize {
+        self.seq_len + 1
+    }
+    fn model_bytes(&self) -> usize {
+        4 * (self.seq_len + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_runtime_learns_linear_target() {
+        let rt = MockRuntime::new(4, 8);
+        let mut params = vec![0.0f32; 5];
+        let mut rng = crate::util::rng::Rng::new(3);
+        let true_w = [0.5f32, -0.25, 0.1, 0.7];
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+            let y: Vec<f32> = (0..8)
+                .map(|i| {
+                    x[i * 4..(i + 1) * 4]
+                        .iter()
+                        .zip(&true_w)
+                        .map(|(a, b)| a * b)
+                        .sum::<f32>()
+                        + 0.3
+                })
+                .collect();
+            let (p, loss) = rt.train_batch(&params, &x, &y, 0.1).unwrap();
+            params = p;
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < first.unwrap() * 0.01, "{first:?} -> {last}");
+        for (w, t) in params[..4].iter().zip(&true_w) {
+            assert!((w - t).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn mock_eval_zero_for_perfect_model() {
+        let rt = MockRuntime::new(3, 2);
+        let params = vec![1.0, 0.0, 0.0, 0.0]; // y = first element
+        let x = vec![5.0, 1.0, 2.0, 7.0, 3.0, 4.0];
+        let y = vec![5.0, 7.0];
+        assert!(rt.eval(&params, &x, &y).unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn mock_rejects_bad_shapes() {
+        let rt = MockRuntime::new(3, 2);
+        assert!(rt.train_batch(&[0.0; 4], &[0.0; 5], &[0.0; 2], 0.1).is_err());
+        assert!(rt.train_batch(&[0.0; 3], &[0.0; 6], &[0.0; 2], 0.1).is_err());
+    }
+}

@@ -1,0 +1,275 @@
+//! The HFL Orchestration Problem (HFLOP) — §IV of the paper.
+//!
+//! An instance captures the joint training/inference orchestration input:
+//! n FL devices, m candidate edge-aggregator locations, communication
+//! costs (`c_d[i][j]` device↔edge, `c_e[j]` edge↔cloud), the number of
+//! local aggregation rounds per global round `l`, per-device inference
+//! request rates `lambda[i]`, per-edge inference processing capacities
+//! `r[j]`, and the minimum FL participation `t_min` (constraint 6).
+//!
+//! The objective (Eq. 1) minimizes
+//! `Σ_ij x_ij · c_d[i][j] · l + Σ_j y_j · c_e[j]`
+//! subject to linking (2,3), capacity (4), single-assignment (5),
+//! participation (6) and integrality (7).
+//!
+//! HFLOP generalizes the capacitated facility location problem with
+//! unsplittable flows (NP-hard); see [`crate::solver`] for the exact
+//! branch & bound and the heuristics.
+
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// One HFLOP instance. Immutable once built; solvers borrow it.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    /// Device-to-edge communication cost, `n x m`.
+    pub c_d: Vec<Vec<f64>>,
+    /// Edge-to-cloud communication cost, `m`.
+    pub c_e: Vec<f64>,
+    /// Per-device inference request rate λ_i, `n`.
+    pub lambda: Vec<f64>,
+    /// Per-edge inference processing capacity r_j, `m`.
+    pub r: Vec<f64>,
+    /// Local aggregation rounds per global round (the `l` in Eq. 1).
+    pub l: f64,
+    /// Minimum number of participating devices (constraint 6).
+    pub t_min: usize,
+}
+
+impl Instance {
+    pub fn n(&self) -> usize {
+        self.c_d.len()
+    }
+
+    pub fn m(&self) -> usize {
+        self.c_e.len()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let (n, m) = (self.n(), self.m());
+        anyhow::ensure!(n > 0 && m > 0, "empty instance");
+        anyhow::ensure!(self.t_min <= n, "t_min {} > n {}", self.t_min, n);
+        anyhow::ensure!(self.l > 0.0, "l must be positive");
+        anyhow::ensure!(self.lambda.len() == n, "lambda len mismatch");
+        anyhow::ensure!(self.r.len() == m, "r len mismatch");
+        for row in &self.c_d {
+            anyhow::ensure!(row.len() == m, "c_d row len mismatch");
+            anyhow::ensure!(row.iter().all(|&c| c >= 0.0 && c.is_finite()), "bad c_d");
+        }
+        anyhow::ensure!(self.c_e.iter().all(|&c| c >= 0.0 && c.is_finite()), "bad c_e");
+        anyhow::ensure!(self.lambda.iter().all(|&v| v >= 0.0 && v.is_finite()), "bad lambda");
+        anyhow::ensure!(self.r.iter().all(|&v| v >= 0.0), "bad r");
+        Ok(())
+    }
+
+    /// Quick necessary feasibility check: can `t_min` devices fit at all?
+    /// (Sufficient only when every device can reach every edge, which holds
+    /// for all our generators; the solvers detect residual infeasibility.)
+    pub fn capacity_feasible(&self) -> bool {
+        let total: f64 = self.r.iter().sum();
+        if total.is_infinite() {
+            return true;
+        }
+        // Greedy: smallest lambdas packed into total capacity.
+        let mut lam = self.lambda.clone();
+        lam.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut used = 0.0;
+        let mut fit = 0usize;
+        for v in lam {
+            if used + v <= total + 1e-9 {
+                used += v;
+                fit += 1;
+            } else {
+                break;
+            }
+        }
+        fit >= self.t_min
+    }
+}
+
+/// Builders for the instance families used across the experiments.
+pub struct InstanceBuilder {
+    inst: Instance,
+}
+
+impl InstanceBuilder {
+    /// From an explicit topology (geo or unit-cost).
+    pub fn from_topology(topo: &Topology, l: f64, t_min: usize) -> InstanceBuilder {
+        InstanceBuilder {
+            inst: Instance {
+                c_d: topo.c_d.clone(),
+                c_e: topo.c_e.clone(),
+                lambda: topo.devices.iter().map(|d| d.lambda).collect(),
+                r: topo.edges.iter().map(|e| e.capacity).collect(),
+                l,
+                t_min,
+            },
+        }
+    }
+
+    /// The paper's §V-D cost-savings setup: one zero-cost edge per device,
+    /// unit cost elsewhere, unit edge-cloud cost, uniform random workloads
+    /// and capacities, all devices forced to participate (T = n).
+    pub fn unit_cost(n: usize, m: usize, seed: u64) -> InstanceBuilder {
+        // Default headroom 2.0: aggregate capacity comfortably above
+        // aggregate load (the paper notes its configurations "favor the
+        // uncapacitated version").
+        Self::unit_cost_with_headroom(n, m, seed, 2.0)
+    }
+
+    /// Like [`unit_cost`](Self::unit_cost) with explicit capacity
+    /// headroom: `r_j ~ U(0.5, 1.5) · headroom · Σλ / m`. Headroom near
+    /// 1.0 makes capacity genuinely binding (forces devices off their
+    /// zero-cost edges, separating HFLOP from its uncapacitated bound).
+    pub fn unit_cost_with_headroom(
+        n: usize,
+        m: usize,
+        seed: u64,
+        headroom: f64,
+    ) -> InstanceBuilder {
+        let mut rng = Rng::new(seed);
+        let c_d = (0..n)
+            .map(|_| {
+                let free = rng.below(m);
+                (0..m).map(|j| if j == free { 0.0 } else { 1.0 }).collect()
+            })
+            .collect();
+        // Uniform random workloads and capacities (§V-D). Capacity draws
+        // are normalized so the aggregate is exactly `headroom · Σλ`,
+        // keeping every generated instance feasible while preserving the
+        // per-edge spread.
+        let lambda: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+        let total_lambda: f64 = lambda.iter().sum();
+        let draws: Vec<f64> = (0..m).map(|_| rng.uniform(0.5, 1.5)).collect();
+        let draw_sum: f64 = draws.iter().sum();
+        let r = draws
+            .iter()
+            .map(|u| u * headroom * total_lambda / draw_sum)
+            .collect();
+        InstanceBuilder {
+            inst: Instance {
+                c_d,
+                c_e: vec![1.0; m],
+                lambda,
+                r,
+                l: 2.0, // paper: one global round every two local rounds
+                t_min: n,
+            },
+        }
+    }
+
+    /// Fully random instance (Fig. 2 solver-scaling benchmarks).
+    pub fn random(n: usize, m: usize, seed: u64) -> InstanceBuilder {
+        let mut rng = Rng::new(seed);
+        let c_d = (0..n)
+            .map(|_| (0..m).map(|_| rng.uniform(0.0, 10.0)).collect())
+            .collect();
+        let c_e = (0..m).map(|_| rng.uniform(5.0, 50.0)).collect();
+        let lambda: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+        let total: f64 = lambda.iter().sum();
+        let r = (0..m)
+            .map(|_| rng.uniform(0.8, 1.6) * 1.5 * total / m as f64)
+            .collect();
+        InstanceBuilder {
+            inst: Instance { c_d, c_e, lambda, r, l: 2.0, t_min: n },
+        }
+    }
+
+    pub fn l(mut self, l: f64) -> Self {
+        self.inst.l = l;
+        self
+    }
+
+    pub fn t_min(mut self, t: usize) -> Self {
+        self.inst.t_min = t;
+        self
+    }
+
+    /// Replace capacities with `+inf` — the *uncapacitated* HFLOP variant
+    /// used as the communication-cost lower bound in Fig. 9.
+    pub fn uncapacitated(mut self) -> Self {
+        for r in self.inst.r.iter_mut() {
+            *r = f64::INFINITY;
+        }
+        self
+    }
+
+    pub fn build(self) -> Instance {
+        self.inst.validate().expect("invalid instance");
+        self.inst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::unit_cost_topology;
+
+    #[test]
+    fn unit_cost_builder_shapes() {
+        let inst = InstanceBuilder::unit_cost(30, 5, 1).build();
+        assert_eq!(inst.n(), 30);
+        assert_eq!(inst.m(), 5);
+        assert_eq!(inst.t_min, 30);
+        assert_eq!(inst.l, 2.0);
+        for row in &inst.c_d {
+            assert_eq!(row.iter().filter(|&&c| c == 0.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn unit_cost_capacity_exceeds_load() {
+        let inst = InstanceBuilder::unit_cost(100, 10, 2).build();
+        let load: f64 = inst.lambda.iter().sum();
+        let cap: f64 = inst.r.iter().sum();
+        assert!(cap > load, "cap {cap} load {load}");
+        assert!(inst.capacity_feasible());
+    }
+
+    #[test]
+    fn from_topology_copies_fields() {
+        let topo = unit_cost_topology(10, 3, (0.5, 2.0), (5.0, 15.0), 3);
+        let inst = InstanceBuilder::from_topology(&topo, 4.0, 8).build();
+        assert_eq!(inst.l, 4.0);
+        assert_eq!(inst.t_min, 8);
+        assert_eq!(inst.c_d, topo.c_d);
+    }
+
+    #[test]
+    fn uncapacitated_sets_infinite_r() {
+        let inst = InstanceBuilder::unit_cost(10, 3, 4).uncapacitated().build();
+        assert!(inst.r.iter().all(|r| r.is_infinite()));
+        assert!(inst.capacity_feasible());
+    }
+
+    #[test]
+    fn validate_rejects_bad_t_min() {
+        let mut inst = InstanceBuilder::unit_cost(5, 2, 5).build();
+        inst.t_min = 6;
+        assert!(inst.validate().is_err());
+    }
+
+    #[test]
+    fn capacity_feasible_detects_overload() {
+        let mut inst = InstanceBuilder::unit_cost(10, 2, 6).build();
+        for r in inst.r.iter_mut() {
+            *r = 0.1;
+        }
+        assert!(!inst.capacity_feasible());
+    }
+
+    #[test]
+    fn random_builder_valid() {
+        let inst = InstanceBuilder::random(25, 4, 7).t_min(20).build();
+        inst.validate().unwrap();
+        assert_eq!(inst.t_min, 20);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = InstanceBuilder::unit_cost(20, 4, 9).build();
+        let b = InstanceBuilder::unit_cost(20, 4, 9).build();
+        assert_eq!(a.c_d, b.c_d);
+        assert_eq!(a.lambda, b.lambda);
+    }
+}

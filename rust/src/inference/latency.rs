@@ -1,0 +1,129 @@
+//! Latency model — the paper's measured assumptions (§V-C1):
+//! "the latency for sending requests to the global server/cloud is
+//! between 50 and 100 ms ... the latency cost to the local/edge servers
+//! is much lower and estimated between 8 and 10 ms."
+//!
+//! Service times derive from per-node inference capacity (`r_j` req/s →
+//! mean service 1/r_j) with an edge→cloud *speedup* knob for Fig. 8
+//! ("a theoretical speedup of up to 95%"): cloud hardware completes an
+//! inference `(1 - speedup)`× the edge service time.
+
+use crate::util::rng::Rng;
+
+/// All latency parameters, in milliseconds / requests-per-second.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// Device→edge network RTT range (ms).
+    pub edge_rtt_ms: (f64, f64),
+    /// Any-node→cloud network RTT range (ms).
+    pub cloud_rtt_ms: (f64, f64),
+    /// Mean edge service time (ms) for one inference at a reference-
+    /// capacity edge; actual edges scale by their capacity.
+    pub edge_service_ms: f64,
+    /// Cloud speedup fraction in [0, 0.95]: cloud service time =
+    /// `edge_service_ms * (1 - speedup)`.
+    pub speedup: f64,
+    /// If true, service times are exponential (M/M/1-style); if false,
+    /// deterministic. The paper's testbed serves a fixed GRU, so
+    /// deterministic is the default; exponential is an ablation.
+    pub stochastic_service: bool,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel {
+            edge_rtt_ms: (8.0, 10.0),
+            cloud_rtt_ms: (50.0, 100.0),
+            edge_service_ms: 4.0,
+            speedup: 0.0,
+            stochastic_service: false,
+        }
+    }
+}
+
+impl LatencyModel {
+    pub fn with_speedup(mut self, speedup: f64) -> Self {
+        assert!((0.0..=0.95).contains(&speedup), "speedup out of range");
+        self.speedup = speedup;
+        self
+    }
+
+    /// One sampled device↔edge network round trip (ms).
+    pub fn edge_rtt(&self, rng: &mut Rng) -> f64 {
+        rng.uniform(self.edge_rtt_ms.0, self.edge_rtt_ms.1)
+    }
+
+    /// One sampled ↔cloud network round trip (ms).
+    pub fn cloud_rtt(&self, rng: &mut Rng) -> f64 {
+        rng.uniform(self.cloud_rtt_ms.0, self.cloud_rtt_ms.1)
+    }
+
+    /// Edge service time (ms). `capacity_scale` is
+    /// `reference_capacity / r_j` so low-capacity edges serve slower.
+    pub fn edge_service(&self, capacity_scale: f64, rng: &mut Rng) -> f64 {
+        let mean = self.edge_service_ms * capacity_scale;
+        if self.stochastic_service {
+            rng.exponential(1.0 / mean.max(1e-9))
+        } else {
+            mean
+        }
+    }
+
+    /// Cloud service time (ms) after applying the speedup.
+    pub fn cloud_service(&self, rng: &mut Rng) -> f64 {
+        let mean = self.edge_service_ms * (1.0 - self.speedup);
+        if self.stochastic_service {
+            rng.exponential(1.0 / mean.max(1e-9))
+        } else {
+            mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtt_ranges_match_paper() {
+        let m = LatencyModel::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let e = m.edge_rtt(&mut rng);
+            assert!((8.0..10.0).contains(&e));
+            let c = m.cloud_rtt(&mut rng);
+            assert!((50.0..100.0).contains(&c));
+        }
+    }
+
+    #[test]
+    fn speedup_scales_cloud_service() {
+        let mut rng = Rng::new(2);
+        let base = LatencyModel::default().cloud_service(&mut rng);
+        let fast = LatencyModel::default().with_speedup(0.95).cloud_service(&mut rng);
+        assert!((base - 4.0).abs() < 1e-12);
+        assert!((fast - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_scale_slows_weak_edges() {
+        let m = LatencyModel::default();
+        let mut rng = Rng::new(3);
+        assert!(m.edge_service(2.0, &mut rng) > m.edge_service(1.0, &mut rng));
+    }
+
+    #[test]
+    fn stochastic_service_mean() {
+        let m = LatencyModel { stochastic_service: true, ..Default::default() };
+        let mut rng = Rng::new(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| m.edge_service(1.0, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 4.0).abs() < 0.1, "{mean}");
+    }
+
+    #[test]
+    #[should_panic(expected = "speedup out of range")]
+    fn speedup_validated() {
+        LatencyModel::default().with_speedup(0.99);
+    }
+}

@@ -1,0 +1,14 @@
+//! Inference-serving plane: request routing (R1–R3), the latency model
+//! (§V-C1 assumptions), the serving discrete-event simulation behind
+//! Fig. 7/8, and a real-execution serving loop that drives the PJRT
+//! `predict` artifact through a dynamic batcher.
+
+pub mod latency;
+pub mod routing;
+pub mod serving;
+pub mod simulation;
+
+pub use latency::LatencyModel;
+pub use routing::{DeviceCtx, EdgeCtx, Route, RoutingPolicy};
+pub use serving::{BatchingServer, ServeStats};
+pub use simulation::{simulate, ServingConfig, ServingOutcome};

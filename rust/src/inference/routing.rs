@@ -1,0 +1,178 @@
+//! Inference request routing — the paper's rules R1–R3 (§IV-A).
+//!
+//! * **R1**: a device busy training always offloads to its associated
+//!   aggregator.
+//! * **R2**: a device not participating in the current FL round decides
+//!   independently to serve locally or offload to the closest aggregator.
+//! * **R3**: the aggregator serves its busy devices' requests with
+//!   priority; external/idle-device requests are admitted only if busy
+//!   load stays sufficiently below capacity; excess spills to the cloud
+//!   (the aggregator acts as a *proxy*).
+//!
+//! This module holds the pure decision logic; the DES in
+//! [`super::simulation`] wires it to queues and clocks. §VI's
+//! "lower-complexity local model" alternative is implemented as an
+//! optional extension ([`RoutingPolicy::quantized_fallback`]).
+
+/// Where a request goes next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Serve on the device itself (full-quality model).
+    Local,
+    /// Serve on the device with the degraded/quantized CPU model (§VI
+    /// extension; only when `quantized_fallback` is enabled).
+    LocalDegraded,
+    /// Forward to edge aggregator `j`.
+    Edge(usize),
+    /// Forward to the cloud / global server.
+    Cloud,
+}
+
+/// Static device-side routing state.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceCtx {
+    /// Busy with local FL training right now (R1)?
+    pub busy_training: bool,
+    /// Participating in the current FL round at all (R2)?
+    pub participant_this_round: bool,
+    /// The device's associated (or closest) aggregator, if any.
+    pub aggregator: Option<usize>,
+    /// Probability-threshold sample for the R2 "independent decision":
+    /// true = prefers local execution.
+    pub prefers_local: bool,
+}
+
+/// Aggregator-side admission state (R3).
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeCtx {
+    /// Instantaneous load from busy/priority devices (req/s).
+    pub busy_load: f64,
+    /// Additional admitted external load (req/s).
+    pub external_load: f64,
+    /// Capacity r_j (req/s).
+    pub capacity: f64,
+    /// Headroom factor: external requests admitted only while
+    /// `busy_load + external_load < headroom * capacity` (R3's
+    /// "sufficiently below its capacity").
+    pub headroom: f64,
+}
+
+/// Device-side routing policy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoutingPolicy {
+    /// §VI extension: a busy device may serve on-CPU with a quantized
+    /// model instead of offloading.
+    pub quantized_fallback: bool,
+}
+
+impl RoutingPolicy {
+    /// Apply R1/R2 at the device.
+    pub fn route_at_device(&self, d: &DeviceCtx) -> Route {
+        if d.busy_training {
+            // R1 — always offload while training (or §VI fallback).
+            if self.quantized_fallback {
+                return Route::LocalDegraded;
+            }
+            return match d.aggregator {
+                Some(j) => Route::Edge(j),
+                None => Route::Cloud,
+            };
+        }
+        if !d.participant_this_round {
+            // R2 — independent decision.
+            if d.prefers_local {
+                return Route::Local;
+            }
+            return match d.aggregator {
+                Some(j) => Route::Edge(j),
+                None => Route::Cloud,
+            };
+        }
+        // Participating but not actively busy (e.g. between epochs):
+        // serve locally — the model replica is on-device.
+        Route::Local
+    }
+
+    /// Apply R3 at the aggregator for a request from a *busy* device.
+    /// Priority class: admitted while there is any capacity; else cloud.
+    pub fn admit_priority(&self, e: &EdgeCtx) -> Route {
+        if e.busy_load < e.capacity {
+            Route::Edge(usize::MAX) // marker: admitted here
+        } else {
+            Route::Cloud
+        }
+    }
+
+    /// Apply R3 for an external / idle-device request: admitted only with
+    /// headroom to spare.
+    pub fn admit_external(&self, e: &EdgeCtx) -> Route {
+        if e.busy_load + e.external_load < e.headroom * e.capacity {
+            Route::Edge(usize::MAX)
+        } else {
+            Route::Cloud
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev(busy: bool, part: bool, agg: Option<usize>, local: bool) -> DeviceCtx {
+        DeviceCtx {
+            busy_training: busy,
+            participant_this_round: part,
+            aggregator: agg,
+            prefers_local: local,
+        }
+    }
+
+    #[test]
+    fn r1_busy_device_offloads_to_aggregator() {
+        let p = RoutingPolicy::default();
+        assert_eq!(p.route_at_device(&dev(true, true, Some(3), true)), Route::Edge(3));
+    }
+
+    #[test]
+    fn r1_busy_device_without_aggregator_goes_cloud() {
+        let p = RoutingPolicy::default();
+        assert_eq!(p.route_at_device(&dev(true, true, None, false)), Route::Cloud);
+    }
+
+    #[test]
+    fn r2_idle_nonparticipant_choice() {
+        let p = RoutingPolicy::default();
+        assert_eq!(p.route_at_device(&dev(false, false, Some(1), true)), Route::Local);
+        assert_eq!(p.route_at_device(&dev(false, false, Some(1), false)), Route::Edge(1));
+    }
+
+    #[test]
+    fn participant_between_epochs_serves_locally() {
+        let p = RoutingPolicy::default();
+        assert_eq!(p.route_at_device(&dev(false, true, Some(1), false)), Route::Local);
+    }
+
+    #[test]
+    fn quantized_fallback_serves_degraded() {
+        let p = RoutingPolicy { quantized_fallback: true };
+        assert_eq!(p.route_at_device(&dev(true, true, Some(1), false)), Route::LocalDegraded);
+    }
+
+    #[test]
+    fn r3_priority_admitted_until_capacity() {
+        let p = RoutingPolicy::default();
+        let mut e = EdgeCtx { busy_load: 5.0, external_load: 0.0, capacity: 10.0, headroom: 0.8 };
+        assert!(matches!(p.admit_priority(&e), Route::Edge(_)));
+        e.busy_load = 10.0;
+        assert_eq!(p.admit_priority(&e), Route::Cloud);
+    }
+
+    #[test]
+    fn r3_external_needs_headroom() {
+        let p = RoutingPolicy::default();
+        let e = EdgeCtx { busy_load: 7.0, external_load: 0.5, capacity: 10.0, headroom: 0.8 };
+        assert!(matches!(p.admit_external(&e), Route::Edge(_)));
+        let full = EdgeCtx { busy_load: 7.9, external_load: 0.2, capacity: 10.0, headroom: 0.8 };
+        assert_eq!(p.admit_external(&full), Route::Cloud);
+    }
+}

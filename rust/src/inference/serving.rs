@@ -1,0 +1,184 @@
+//! Real-execution serving path: a dynamic batcher in front of the PJRT
+//! `predict` artifacts.
+//!
+//! This is the L3 *hot path*: when an edge aggregator (or the cloud
+//! server) serves inference requests while training runs, requests are
+//! coalesced into batches of up to `serve_batch` and executed through the
+//! `predict_b8` artifact; singletons fall back to the B=1 `predict`
+//! artifact. Padding rows reuse the first request's window (their outputs
+//! are discarded).
+//!
+//! The batcher is deliberately synchronous and allocation-light: on this
+//! class of model (GRU-128, ~0.15 ms/inference) the scheduling overhead
+//! must stay well under the model execution time — measured in
+//! `benches/bench_runtime.rs` and tracked in EXPERIMENTS.md §Perf.
+
+use crate::fl::ModelRuntime;
+use crate::runtime::Engine;
+use crate::util::stats::OnlineStats;
+
+/// One pending request: a normalized input window.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub window: Vec<f32>,
+}
+
+/// Serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Model-execution wall time per *batch* (ms).
+    pub batch_exec_ms: OnlineStats,
+    /// End-to-end per-request latency (ms), incl. queueing inside the
+    /// batcher window.
+    pub request_ms: OnlineStats,
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+}
+
+impl ServeStats {
+    /// Requests per second of model-execution time (upper-bound
+    /// throughput of the serving hot path).
+    pub fn exec_throughput_rps(&self) -> f64 {
+        let total_ms = self.batch_exec_ms.mean() * self.batches as f64;
+        if total_ms <= 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / (total_ms / 1000.0)
+    }
+}
+
+/// Dynamic batcher over a compiled engine.
+pub struct BatchingServer<'a> {
+    engine: &'a Engine,
+    params: Vec<f32>,
+    queue: Vec<(InferenceRequest, std::time::Instant)>,
+    pub max_batch: usize,
+    pub stats: ServeStats,
+    /// Reusable input buffer (perf: avoids per-batch allocation).
+    scratch: Vec<f32>,
+}
+
+impl<'a> BatchingServer<'a> {
+    pub fn new(engine: &'a Engine, params: Vec<f32>) -> BatchingServer<'a> {
+        let v = engine.variant();
+        let max_batch = v.serve_batch;
+        let scratch = Vec::with_capacity(max_batch * v.seq_len * v.in_dim);
+        BatchingServer { engine, params, queue: Vec::new(), max_batch, stats: ServeStats::default(), scratch }
+    }
+
+    /// Swap in a new model version (e.g. after a global aggregation
+    /// round) without tearing down the compiled executable.
+    pub fn update_params(&mut self, params: Vec<f32>) {
+        assert_eq!(params.len(), self.params.len(), "param block size change");
+        self.params = params;
+    }
+
+    /// Enqueue a request. Flushes automatically at `max_batch`.
+    pub fn submit(&mut self, req: InferenceRequest) -> anyhow::Result<Vec<(u64, f32)>> {
+        let t = self.engine.variant().seq_len * self.engine.variant().in_dim;
+        anyhow::ensure!(req.window.len() == t, "window len {} != {}", req.window.len(), t);
+        self.queue.push((req, std::time::Instant::now()));
+        if self.queue.len() >= self.max_batch {
+            self.flush()
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    /// Execute everything queued; returns (request id, prediction).
+    pub fn flush(&mut self) -> anyhow::Result<Vec<(u64, f32)>> {
+        if self.queue.is_empty() {
+            return Ok(Vec::new());
+        }
+        let v = self.engine.variant().clone();
+        let t = v.seq_len * v.in_dim;
+        let n = self.queue.len();
+        let t_exec = std::time::Instant::now();
+
+        let preds: Vec<f32> = if n == 1 {
+            self.engine.predict(&self.params, &self.queue[0].0.window)?
+        } else {
+            // Pad to serve_batch with copies of the first row.
+            self.scratch.clear();
+            for (req, _) in &self.queue {
+                self.scratch.extend_from_slice(&req.window);
+            }
+            self.stats.padded_rows += (self.max_batch - n) as u64;
+            for _ in n..self.max_batch {
+                let first: Vec<f32> = self.scratch[..t].to_vec();
+                self.scratch.extend_from_slice(&first);
+            }
+            self.engine.predict_batch(&self.params, &self.scratch)?
+        };
+
+        let exec_ms = t_exec.elapsed().as_secs_f64() * 1000.0;
+        self.stats.batch_exec_ms.push(exec_ms);
+        self.stats.batches += 1;
+
+        let mut out = Vec::with_capacity(n);
+        for (i, (req, t_in)) in self.queue.drain(..).enumerate() {
+            let pred = preds[i * v.out_dim];
+            self.stats.request_ms.push(t_in.elapsed().as_secs_f64() * 1000.0);
+            self.stats.requests += 1;
+            out.push((req.id, pred));
+        }
+        Ok(out)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Predict through the runtime trait (used by tests with MockRuntime
+    /// via free function below).
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+}
+
+/// Trait-level single prediction helper used where an [`Engine`] is not
+/// available (tests, simulations needing a real forward pass).
+pub fn predict_one(rt: &dyn ModelRuntime, params: &[f32], window: &[f32]) -> anyhow::Result<f32> {
+    // Evaluate via a size-1 "eval" trick is not available on the trait, so
+    // we run one train step with lr = 0 and read the loss against y = 0 to
+    // recover the squared prediction; instead, prefer the direct engine
+    // path. Here we only validate shapes and defer to eval-based probing.
+    anyhow::ensure!(window.len() == rt.seq_len(), "window length");
+    anyhow::ensure!(!params.is_empty(), "params");
+    // loss = mean((pred - 0)^2) = pred^2 -> |pred|; sign probe with y = 1:
+    // loss1 = (pred - 1)^2. pred = (1 + pred^2 - loss1) / 2.
+    let b = rt.eval_batch_size();
+    let xs: Vec<f32> = window.iter().cycle().take(b * rt.seq_len()).cloned().collect();
+    let y0 = vec![0.0f32; b];
+    let y1 = vec![1.0f32; b];
+    let l0 = rt.eval(params, &xs, &y0)?;
+    let l1 = rt.eval(params, &xs, &y1)?;
+    Ok((1.0 + l0 - l1) / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::MockRuntime;
+
+    #[test]
+    fn predict_one_recovers_linear_model() {
+        let rt = MockRuntime::new(3, 4);
+        let params = vec![0.5f32, -1.0, 2.0, 0.25]; // w, b
+        let window = vec![1.0f32, 2.0, 3.0];
+        let want = 0.5 - 2.0 + 6.0 + 0.25;
+        let got = predict_one(&rt, &params, &window).unwrap();
+        assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+    }
+
+    #[test]
+    fn predict_one_validates_window() {
+        let rt = MockRuntime::new(3, 4);
+        assert!(predict_one(&rt, &[0.0; 4], &[0.0; 2]).is_err());
+    }
+
+    // BatchingServer end-to-end tests live in
+    // rust/tests/serving_integration.rs (they need artifacts).
+}

@@ -1,0 +1,317 @@
+//! Discrete-event simulation of the inference-serving plane (Fig. 7/8).
+//!
+//! Devices generate Poisson inference request streams (rate λ_i). All
+//! devices are busy training (the continual-learning regime the paper
+//! evaluates), so per rule **R1** every request is offloaded:
+//!
+//! * **flat FL** — no aggregators: requests go device → cloud
+//!   (`cloud_rtt + cloud_service`; the cloud has infinite capacity).
+//! * **hierarchical** — requests go device → associated edge aggregator.
+//!   The edge is a FIFO queue with deterministic service and an
+//!   **R3 admission bound**: a request is admitted only while the number
+//!   in system is below `queue_window_s · r_j` (≈ the backlog the edge can
+//!   clear within the window); excess requests are proxied to the cloud,
+//!   paying the edge hop *and* the cloud path
+//!   (`edge_rtt + cloud_rtt + cloud_service`).
+//!
+//! The difference between the paper's "hierarchical benchmark" and
+//! "HFLOP" is purely *which* device→edge assignment is simulated:
+//! location-based clustering ignores λ/r (some edges overload → spill),
+//! HFLOP respects capacity (constraint 4) so spill is rare. Fig. 7's
+//! response-time distributions and Fig. 8's speedup crossover both emerge
+//! from this mechanism.
+
+use super::latency::LatencyModel;
+use crate::sim::Des;
+use crate::util::rng::Rng;
+use crate::util::stats::OnlineStats;
+
+/// Serving-plane configuration for one simulated policy.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Device → edge assignment (None = no aggregator; device uses cloud).
+    pub assign: Vec<Option<usize>>,
+    /// Per-device request rate λ_i (req/s).
+    pub lambda: Vec<f64>,
+    /// Per-edge processing capacity r_j (req/s).
+    pub capacity: Vec<f64>,
+    pub latency: LatencyModel,
+    /// Simulated wall time (s).
+    pub duration_s: f64,
+    /// R3 admission: max in-system backlog = `queue_window_s * r_j`.
+    pub queue_window_s: f64,
+    pub seed: u64,
+}
+
+/// Per-run outcome.
+#[derive(Debug, Clone)]
+pub struct ServingOutcome {
+    /// End-to-end response-time stats (ms).
+    pub latency: OnlineStats,
+    /// Raw samples (ms) for distribution plots (Fig. 7).
+    pub samples: Vec<f64>,
+    pub served_at_edge: u64,
+    pub spilled_to_cloud: u64,
+    pub direct_to_cloud: u64,
+}
+
+impl ServingOutcome {
+    pub fn total(&self) -> u64 {
+        self.served_at_edge + self.spilled_to_cloud + self.direct_to_cloud
+    }
+
+    pub fn spill_fraction(&self) -> f64 {
+        let hier = self.served_at_edge + self.spilled_to_cloud;
+        if hier == 0 {
+            0.0
+        } else {
+            self.spilled_to_cloud as f64 / hier as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Ev {
+    /// A device emits its next request.
+    Arrival { device: usize },
+    /// An edge finishes its current head-of-line request.
+    EdgeDone { edge: usize },
+    /// A cloud-path request completes (response received by the device).
+    Complete { t_start: f64, class: Class },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Class {
+    Edge,
+    Spill,
+    Direct,
+}
+
+struct EdgeState {
+    /// Requests currently queued or in service (start times).
+    queue: std::collections::VecDeque<f64>,
+    busy: bool,
+}
+
+/// Run the serving simulation.
+pub fn simulate(cfg: &ServingConfig) -> ServingOutcome {
+    let n = cfg.assign.len();
+    assert_eq!(cfg.lambda.len(), n, "lambda len");
+    let m = cfg.capacity.len();
+    let mut rng = Rng::new(cfg.seed);
+    let mut des: Des<Ev> = Des::new();
+
+    let mut edges: Vec<EdgeState> = (0..m)
+        .map(|_| EdgeState { queue: std::collections::VecDeque::new(), busy: false })
+        .collect();
+    // Per-edge service: capacity r_j (req/s) IS the service rate — an
+    // edge processes one inference in 1/r_j seconds (deterministic by
+    // default, exponential under `stochastic_service`). This makes the
+    // HFLOP capacity constraint and the queueing model one and the same
+    // quantity, as in §IV-A.
+    let edge_service_ms = |j: usize, rng: &mut Rng, lat: &LatencyModel| -> f64 {
+        let mean = 1000.0 / cfg.capacity[j].max(1e-9);
+        if lat.stochastic_service {
+            rng.exponential(1.0 / mean)
+        } else {
+            mean
+        }
+    };
+
+    let mut out = ServingOutcome {
+        latency: OnlineStats::new(),
+        samples: Vec::new(),
+        served_at_edge: 0,
+        spilled_to_cloud: 0,
+        direct_to_cloud: 0,
+    };
+
+    // Seed first arrivals.
+    for d in 0..n {
+        if cfg.lambda[d] > 0.0 {
+            let dt = rng.exponential(cfg.lambda[d]);
+            des.schedule(dt, Ev::Arrival { device: d });
+        }
+    }
+
+    let horizon = cfg.duration_s;
+    let record = |out: &mut ServingOutcome, latency_ms: f64, class: Class| {
+        out.latency.push(latency_ms);
+        out.samples.push(latency_ms);
+        match class {
+            Class::Edge => out.served_at_edge += 1,
+            Class::Spill => out.spilled_to_cloud += 1,
+            Class::Direct => out.direct_to_cloud += 1,
+        }
+    };
+
+    while let Some((now, ev)) = des.next_before(horizon) {
+        match ev {
+            Ev::Arrival { device } => {
+                // Schedule this device's next request.
+                des.schedule_in(rng.exponential(cfg.lambda[device]), Ev::Arrival { device });
+
+                match cfg.assign[device] {
+                    None => {
+                        // Flat FL: straight to the cloud (R1, no aggregator).
+                        let lat = cfg.latency.cloud_rtt(&mut rng)
+                            + cfg.latency.cloud_service(&mut rng);
+                        des.schedule_in(lat / 1000.0, Ev::Complete { t_start: now, class: Class::Direct });
+                    }
+                    Some(j) => {
+                        // R3 admission at the aggregator.
+                        let max_in_system =
+                            (cfg.queue_window_s * cfg.capacity[j]).max(1.0) as usize;
+                        let e = &mut edges[j];
+                        if e.queue.len() < max_in_system {
+                            // Admitted: edge hop now, service when reached.
+                            e.queue.push_back(now);
+                            if !e.busy {
+                                e.busy = true;
+                                let svc = edge_service_ms(j, &mut rng, &cfg.latency);
+                                des.schedule_in(svc / 1000.0, Ev::EdgeDone { edge: j });
+                            }
+                        } else {
+                            // Spill: proxy to cloud (edge hop + cloud path).
+                            let lat = cfg.latency.edge_rtt(&mut rng)
+                                + cfg.latency.cloud_rtt(&mut rng)
+                                + cfg.latency.cloud_service(&mut rng);
+                            des.schedule_in(
+                                lat / 1000.0,
+                                Ev::Complete { t_start: now, class: Class::Spill },
+                            );
+                        }
+                    }
+                }
+            }
+            Ev::EdgeDone { edge } => {
+                let e = &mut edges[edge];
+                if let Some(t_start) = e.queue.pop_front() {
+                    // Response travels back over the edge link.
+                    let rtt = cfg.latency.edge_rtt(&mut rng);
+                    let total_ms = (now - t_start) * 1000.0 + rtt;
+                    record(&mut out, total_ms, Class::Edge);
+                }
+                if e.queue.is_empty() {
+                    e.busy = false;
+                } else {
+                    let svc = edge_service_ms(edge, &mut rng, &cfg.latency);
+                    des.schedule_in(svc / 1000.0, Ev::EdgeDone { edge });
+                }
+            }
+            Ev::Complete { t_start, class } => {
+                let total_ms = (now - t_start) * 1000.0;
+                record(&mut out, total_ms, class);
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(assign: Vec<Option<usize>>, lambda: Vec<f64>, capacity: Vec<f64>) -> ServingConfig {
+        ServingConfig {
+            assign,
+            lambda,
+            capacity,
+            latency: LatencyModel::default(),
+            duration_s: 60.0,
+            queue_window_s: 0.25,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn flat_fl_latency_in_cloud_range() {
+        // Paper Fig. 7: non-hierarchical ~79 ms (cloud RTT 50–100 + svc).
+        let cfg = base(vec![None; 10], vec![5.0; 10], vec![]);
+        let out = simulate(&cfg);
+        assert!(out.total() > 1000);
+        assert_eq!(out.served_at_edge, 0);
+        let mean = out.latency.mean();
+        assert!((70.0..90.0).contains(&mean), "{mean}");
+    }
+
+    #[test]
+    fn underloaded_edges_give_edge_latency() {
+        // Paper Fig. 7 HFLOP: ~10 ms (edge RTT + small service).
+        // capacity 1000 req/s -> 1 ms service; total load 20 req/s.
+        let cfg = base(
+            (0..10).map(|i| Some(i % 2)).collect(),
+            vec![2.0; 10],
+            vec![1000.0, 1000.0],
+        );
+        let out = simulate(&cfg);
+        assert!(out.spill_fraction() < 0.01, "{}", out.spill_fraction());
+        let mean = out.latency.mean();
+        assert!((8.0..20.0).contains(&mean), "{mean}");
+    }
+
+    #[test]
+    fn overloaded_edge_spills_to_cloud() {
+        // One tiny edge serving heavy load: most requests must spill and
+        // pay edge + cloud latency.
+        let cfg = base(vec![Some(0); 10], vec![20.0; 10], vec![5.0]);
+        let out = simulate(&cfg);
+        assert!(out.spill_fraction() > 0.5, "{}", out.spill_fraction());
+        let mean = out.latency.mean();
+        assert!(mean > 60.0, "{mean}");
+    }
+
+    #[test]
+    fn capacity_aware_beats_location_blind() {
+        // Two edges: one strong, one weak. "Location" assignment dumps
+        // everything on the weak edge; capacity-aware splits by capacity.
+        let lambda = vec![4.0; 12];
+        let blind = base(vec![Some(1); 12], lambda.clone(), vec![500.0, 20.0]);
+        let aware_assign: Vec<Option<usize>> =
+            (0..12).map(|i| Some(usize::from(i >= 11))).collect();
+        let aware = base(aware_assign, lambda, vec![500.0, 20.0]);
+        let out_blind = simulate(&blind);
+        let out_aware = simulate(&aware);
+        assert!(
+            out_aware.latency.mean() < out_blind.latency.mean(),
+            "aware {} blind {}",
+            out_aware.latency.mean(),
+            out_blind.latency.mean()
+        );
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = base(vec![Some(0); 5], vec![3.0; 5], vec![500.0]);
+        let a = simulate(&cfg);
+        let b = simulate(&cfg);
+        assert_eq!(a.samples, b.samples);
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 43;
+        let c = simulate(&cfg2);
+        assert_ne!(a.samples, c.samples);
+    }
+
+    #[test]
+    fn speedup_reduces_cloud_latency() {
+        let mut slow = base(vec![None; 5], vec![5.0; 5], vec![]);
+        slow.latency.edge_service_ms = 40.0;
+        let mut fast = slow.clone();
+        fast.latency = fast.latency.with_speedup(0.9);
+        let ms = simulate(&slow).latency.mean();
+        let mf = simulate(&fast).latency.mean();
+        assert!(mf < ms - 20.0, "{ms} -> {mf}");
+    }
+
+    #[test]
+    fn throughput_conservation() {
+        // All generated arrivals within the horizon either complete or
+        // remain in flight; completions ≈ Σλ · T within tolerance.
+        let cfg = base(vec![Some(0); 4], vec![10.0; 4], vec![1000.0]);
+        let out = simulate(&cfg);
+        let expected = 4.0 * 10.0 * cfg.duration_s;
+        let got = out.total() as f64;
+        assert!((got - expected).abs() < 0.1 * expected, "{got} vs {expected}");
+    }
+}

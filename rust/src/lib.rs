@@ -1,0 +1,45 @@
+//! # hflop — Inference Load-Aware Orchestration for Hierarchical FL
+//!
+//! Rust implementation of the system described in *"Inference Load-Aware
+//! Orchestration for Hierarchical Federated Learning"* (Lackinger et al.,
+//! 2024): the HFLOP optimization problem and solvers, a hierarchical
+//! federated-learning runtime whose model compute executes AOT-compiled
+//! JAX/Pallas artifacts through PJRT, an inference-serving path with the
+//! paper's R1–R3 routing rules, a discrete-event simulator for the
+//! latency/cost experiments, and the orchestration layer tying them
+//! together.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): coordination — solving HFLOP, running HFL rounds,
+//!   routing inference requests, accounting communication costs.
+//! * L2/L1 (python, build time only): the GRU model and its fused Pallas
+//!   cell, lowered to `artifacts/*.hlo.txt` which [`runtime`] executes.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hflop::hflop::InstanceBuilder;
+//! use hflop::solver::{self, SolveOptions};
+//!
+//! // 20 devices, 4 candidate edge hosts, the paper's unit-cost topology.
+//! let inst = InstanceBuilder::unit_cost(20, 4, 42).build();
+//! let sol = solver::solve(&inst, &SolveOptions::exact()).unwrap();
+//! println!("optimal HFL communication cost: {}", sol.cost);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod fl;
+pub mod hflop;
+pub mod inference;
+pub mod metrics;
+pub mod orchestrator;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod topology;
+pub mod util;
+
+pub use util::logging::init as init_logging;

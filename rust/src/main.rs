@@ -1,0 +1,419 @@
+//! `hflop` — CLI launcher for the HFLOP orchestration framework.
+//!
+//! Subcommands:
+//!   solve       solve one HFLOP instance (synthetic generators or sweep)
+//!   train       run continual hierarchical FL on the PJRT runtime
+//!   serve       run the real batched-serving hot path (PJRT predict)
+//!   experiment  regenerate a paper artifact: fig2|fig6|fig7|fig8|fig9|cl
+//!   info        print artifact manifest / environment info
+//!
+//! Flags go last (schema-light parser): `hflop solve --n 100 --m 8 --exact`.
+
+use hflop::cli::Args;
+use hflop::config::Setup;
+use hflop::data::window::ContinualWindow;
+use hflop::experiments::{self, Scenario, ScenarioConfig};
+use hflop::fl::{FlConfig, ModelRuntime};
+use hflop::hflop::InstanceBuilder;
+use hflop::inference::serving::{BatchingServer, InferenceRequest};
+use hflop::metrics::export::{ascii_table, ResultsWriter};
+use hflop::runtime::{Engine, Manifest, Preload};
+use hflop::solver::{self, SolveOptions};
+use hflop::util::json::Json;
+use hflop::util::rng::Rng;
+
+const USAGE: &str = "\
+hflop — inference load-aware orchestration for hierarchical FL
+
+USAGE: hflop <subcommand> [options] [--flags]
+
+  solve       --n <devices> --m <edges> [--seed S] [--exact|--heuristic] [--uncap]
+  train       --setup flat|hier|hflop --rounds R [--variant small|paper]
+              [--clients N] [--edges M] [--epochs E] [--batches B] [--lr LR]
+  serve       --requests N [--variant small|paper]
+  experiment  fig2|fig6|fig7|fig8|fig9|cl [--out results/]
+  info
+";
+
+fn main() {
+    hflop::init_logging();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("solve") => run_solve(&args),
+        Some("train") => run_train(&args),
+        Some("serve") => run_serve(&args),
+        Some("experiment") => run_experiment(&args),
+        Some("info") => run_info(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn run_solve(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize_or("n", 100)?;
+    let m = args.usize_or("m", 8)?;
+    let seed = args.u64_or("seed", 42)?;
+    let builder = InstanceBuilder::unit_cost(n, m, seed);
+    let inst =
+        if args.has_flag("uncap") { builder.uncapacitated().build() } else { builder.build() };
+    let opts = if args.has_flag("exact") {
+        SolveOptions::exact()
+    } else if args.has_flag("heuristic") {
+        SolveOptions::heuristic()
+    } else {
+        SolveOptions::auto()
+    };
+    let sol = solver::solve(&inst, &opts)?;
+    println!(
+        "instance n={n} m={m} seed={seed}: cost={:.3} open_edges={} assigned={} optimal={} nodes={} wall={:.3}s",
+        sol.cost,
+        sol.assignment.n_open(),
+        sol.assignment.n_assigned(),
+        sol.proven_optimal,
+        sol.nodes,
+        sol.wall_s
+    );
+    Ok(())
+}
+
+fn run_train(args: &Args) -> anyhow::Result<()> {
+    let setup = Setup::parse(&args.str_or("setup", "hflop"))?;
+    let variant = args.str_or("variant", "small");
+    let rounds = args.usize_or("rounds", 20)?;
+    let sc = Scenario::build(ScenarioConfig {
+        n_clients: args.usize_or("clients", 20)?,
+        n_edges: args.usize_or("edges", 4)?,
+        weeks: args.usize_or("weeks", 6)?,
+        seed: args.u64_or("seed", 42)?,
+        ..Default::default()
+    })?;
+    let manifest = Manifest::load_default()?;
+    let engine = Engine::new(&manifest, &variant, Preload::Training)?;
+    let init = manifest.load_init_params(engine.variant())?;
+    let fl = FlConfig {
+        epochs: args.usize_or("epochs", 1)?,
+        batches_per_epoch: args.usize_or("batches", 4)?,
+        l: args.usize_or("l", 2)?,
+        lr: args.f64_or("lr", 1e-3)? as f32,
+        rounds,
+        eval_every: 1,
+    };
+    let window = ContinualWindow::paper(sc.dataset.n_steps, args.usize_or("shift", 288)?);
+    let run = experiments::fig6::run_setup(&sc, &engine, setup, fl, window, init, 7)?;
+    println!(
+        "setup={} rounds={} final_mse={:.5} comm={:.3} GB converged_at={:?}",
+        setup.name(),
+        rounds,
+        run.mean_final_mse,
+        run.ledger.total_gb(),
+        run.rounds_to_converge
+    );
+    Ok(())
+}
+
+fn run_serve(args: &Args) -> anyhow::Result<()> {
+    let variant = args.str_or("variant", "paper");
+    let n_requests = args.usize_or("requests", 1000)?;
+    let manifest = Manifest::load_default()?;
+    let engine = Engine::new(&manifest, &variant, Preload::Serving)?;
+    let params = manifest.load_init_params(engine.variant())?;
+    let seq = engine.variant().seq_len;
+    let mut server = BatchingServer::new(&engine, params);
+    let mut rng = Rng::new(args.u64_or("seed", 1)?);
+    let mut served = 0usize;
+    for id in 0..n_requests as u64 {
+        let window: Vec<f32> = (0..seq).map(|_| rng.normal() as f32).collect();
+        served += server.submit(InferenceRequest { id, window })?.len();
+    }
+    served += server.flush()?.len();
+    let s = &server.stats;
+    println!(
+        "served {served} requests in {} batches: mean_batch_exec={:.3} ms exec_throughput={:.0} req/s mean_request_latency={:.3} ms",
+        s.batches,
+        s.batch_exec_ms.mean(),
+        s.exec_throughput_rps(),
+        s.request_ms.mean()
+    );
+    Ok(())
+}
+
+fn run_experiment(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("experiment name required: fig2|fig6|fig7|fig8|fig9|cl"))?;
+    let out = ResultsWriter::new(args.str_or("out", "results"))?;
+    match which {
+        "fig2" => experiment_fig2(args, &out),
+        "fig6" => experiment_fig6(args, &out),
+        "fig7" => experiment_fig7(args, &out),
+        "fig8" => experiment_fig8(args, &out),
+        "fig9" => experiment_fig9(args, &out),
+        "cl" => experiment_cl(args, &out),
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+}
+
+fn experiment_fig2(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
+    let reps = args.usize_or("reps", 5)?;
+    let rows = experiments::fig2::run(&experiments::fig2::default_sweep(), reps, 60.0);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.n),
+                format!("{}", r.m),
+                format!("{:.4}", r.mean_s),
+                format!("{:.4}", r.ci95_s),
+                format!("{:.0}", r.mean_nodes),
+                format!("{}", r.all_optimal),
+            ]
+        })
+        .collect();
+    println!("{}", ascii_table(&["n", "m", "mean_s", "ci95", "nodes", "optimal"], &table));
+    out.write_csv(
+        "fig2.csv",
+        &["n", "m", "mean_s", "ci95_s", "mean_nodes"],
+        &rows
+            .iter()
+            .map(|r| vec![r.n as f64, r.m as f64, r.mean_s, r.ci95_s, r.mean_nodes])
+            .collect::<Vec<_>>(),
+    )?;
+    Ok(())
+}
+
+fn experiment_fig6(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
+    // The end-to-end PJRT driver lives in examples/continual_traffic.rs;
+    // this regenerates the figure quickly with the mock runtime.
+    let sc = Scenario::build(ScenarioConfig {
+        weeks: args.usize_or("weeks", 6)?,
+        ..Default::default()
+    })?;
+    let rt = hflop::fl::MockRuntime::new(12, 16);
+    let fl = FlConfig {
+        epochs: 2,
+        batches_per_epoch: 4,
+        l: 2,
+        lr: 0.05,
+        rounds: args.usize_or("rounds", 40)?,
+        eval_every: 1,
+    };
+    let window = ContinualWindow::paper(sc.dataset.n_steps, 288);
+    let runs = experiments::fig6::run_all(&sc, &rt, fl, window, vec![0.0; rt.n_params()], 3)?;
+    let mut rows = Vec::new();
+    for r in &runs {
+        println!(
+            "{:<10} final_mse={:.5} converged_at={:?} comm={:.4} GB",
+            r.setup.name(),
+            r.mean_final_mse,
+            r.rounds_to_converge,
+            r.ledger.total_gb()
+        );
+        for round in 0..r.curves.n_rounds() {
+            rows.push(vec![
+                match r.setup {
+                    Setup::Flat => 0.0,
+                    Setup::LocationClustered => 1.0,
+                    _ => 2.0,
+                },
+                round as f64,
+                r.curves.mean_at(round) as f64,
+            ]);
+        }
+    }
+    out.write_csv("fig6_mock.csv", &["setup", "round", "mean_mse"], &rows)?;
+    Ok(())
+}
+
+fn experiment_fig7(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
+    // The paper reports one testbed run; we aggregate over several random
+    // scenario draws (client placement + workloads + capacities) — the
+    // location-blind baseline's heavy tail comes from the draws whose
+    // geographic clusters overload a weak edge.
+    use hflop::util::stats::OnlineStats;
+    let base_seed = args.u64_or("seed", 40)?;
+    let reps = args.u64_or("reps", 6)?;
+    let mut agg = [OnlineStats::new(), OnlineStats::new(), OnlineStats::new()];
+    let mut spills = [0.0f64; 3];
+    let mut requests = [0u64; 3];
+    for s in 0..reps {
+        let sc = Scenario::build(ScenarioConfig {
+            weeks: 5,
+            balanced_clients: false,
+            seed: base_seed + s,
+            ..Default::default()
+        })?;
+        let r = experiments::fig7::run(&sc, &experiments::fig7::Fig7Config::default());
+        for (k, o) in [&r.flat, &r.location, &r.hflop].iter().enumerate() {
+            agg[k].merge(&o.latency);
+            spills[k] += o.spill_fraction();
+            requests[k] += o.total();
+        }
+    }
+    let names = ["flat", "hier", "hflop"];
+    let table: Vec<Vec<String>> = (0..3)
+        .map(|k| {
+            vec![
+                names[k].to_string(),
+                format!("{:.2}", agg[k].mean()),
+                format!("{:.2}", agg[k].std()),
+                format!("{}", requests[k]),
+                format!("{:.3}", spills[k] / reps as f64),
+            ]
+        })
+        .collect();
+    println!("paper:  flat 79.07±15.94   hier 17.72±24.26   hflop 9.89±4.63 (ms)");
+    println!("{}", ascii_table(&["setup", "mean_ms", "std_ms", "requests", "spill"], &table));
+    out.write_json(
+        "fig7.json",
+        &Json::obj(vec![
+            ("flat_mean_ms", Json::Num(agg[0].mean())),
+            ("flat_std_ms", Json::Num(agg[0].std())),
+            ("hier_mean_ms", Json::Num(agg[1].mean())),
+            ("hier_std_ms", Json::Num(agg[1].std())),
+            ("hflop_mean_ms", Json::Num(agg[2].mean())),
+            ("hflop_std_ms", Json::Num(agg[2].std())),
+        ]),
+    )?;
+    Ok(())
+}
+
+fn experiment_fig8(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
+    let sc = Scenario::build(ScenarioConfig {
+        weeks: 5,
+        balanced_clients: false,
+        seed: args.u64_or("seed", 42)?,
+        ..Default::default()
+    })?;
+    for (name, scale) in [("a", 1.0), ("b", 10.0)] {
+        let cfg = experiments::fig8::Fig8Config { lambda_scale: scale, ..Default::default() };
+        let rows = experiments::fig8::run(&sc, &cfg);
+        let cx = experiments::fig8::crossover(&rows);
+        println!("fig8{name} (lambda x{scale}): crossover={cx:?} (paper 8b: 0.1425)");
+        out.write_csv(
+            &format!("fig8{name}.csv"),
+            &["speedup", "flat_ms", "location_ms", "hflop_ms"],
+            &rows
+                .iter()
+                .map(|r| vec![r.speedup, r.flat_ms, r.location_ms, r.hflop_ms])
+                .collect::<Vec<_>>(),
+        )?;
+    }
+    Ok(())
+}
+
+fn experiment_fig9(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
+    let cfg = experiments::fig9::Fig9Config {
+        n_devices: args.usize_or("n", 200)?,
+        reps: args.usize_or("reps", 10)?,
+        ..Default::default()
+    };
+    let rows = experiments::fig9::run(&cfg)?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.m),
+                format!("{:.2}", r.hflop_savings_pct),
+                format!("{:.2}", r.hflop_ci95),
+                format!("{:.2}", r.uncap_savings_pct),
+                format!("{:.2}", r.uncap_ci95),
+            ]
+        })
+        .collect();
+    println!("{}", ascii_table(&["edges", "hflop_sav_%", "±", "uncap_sav_%", "±"], &table));
+    let (flat, hflop, uncap) = experiments::fig9::absolute_reference(5)?;
+    println!("absolute (20 dev, 4 edges, 100 rounds): flat={flat:.2} GB hflop={hflop:.2} GB uncap={uncap:.2} GB");
+    println!("paper:                                  flat=2.37 GB hflop=0.53 GB uncap=0.24 GB");
+    out.write_csv(
+        "fig9.csv",
+        &["m", "hflop_savings_pct", "hflop_ci95", "uncap_savings_pct", "uncap_ci95"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![r.m as f64, r.hflop_savings_pct, r.hflop_ci95, r.uncap_savings_pct, r.uncap_ci95]
+            })
+            .collect::<Vec<_>>(),
+    )?;
+    Ok(())
+}
+
+fn experiment_cl(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
+    use hflop::data::synth::{generate, SynthConfig};
+    use hflop::data::STEPS_PER_WEEK;
+    let synth = SynthConfig {
+        n_steps: args.usize_or("weeks", 10)? * STEPS_PER_WEEK,
+        drift_scale: 2.5,
+        ..Default::default()
+    };
+    let ds = generate(&synth);
+    // The real GRU through PJRT (the paper's §V-B1 is a centralized GRU
+    // run); a linear mock cannot see the drift — next-step traffic
+    // prediction is nearly level-invariant for a linear AR model.
+    let manifest = Manifest::load_default()?;
+    let variant = args.str_or("variant", "small");
+    let engine = Engine::new(&manifest, &variant, Preload::Training)?;
+    let init = manifest.load_init_params(engine.variant())?;
+    let window =
+        ContinualWindow::new(3 * STEPS_PER_WEEK, STEPS_PER_WEEK, STEPS_PER_WEEK / 2, ds.n_steps);
+    let r = experiments::cl_table::run(
+        &engine,
+        &ds.series[0],
+        init,
+        window,
+        args.usize_or("initial_steps", 1500)?,
+        args.usize_or("steps_per_shift", 300)?,
+        args.f64_or("lr", 0.01)? as f32,
+        7,
+    )?;
+    println!(
+        "static MSE = {:.5}   retrained MSE = {:.5}   improvement = {:.2}% (paper: 0.04470 -> 0.04284, 4.2%)",
+        r.static_mse,
+        r.retrained_mse,
+        r.improvement_pct()
+    );
+    out.write_json(
+        "cl_table.json",
+        &Json::obj(vec![
+            ("static_mse", Json::Num(r.static_mse as f64)),
+            ("retrained_mse", Json::Num(r.retrained_mse as f64)),
+        ]),
+    )?;
+    Ok(())
+}
+
+fn run_info() -> anyhow::Result<()> {
+    match Manifest::load_default() {
+        Ok(m) => {
+            println!("artifacts: {}", m.dir.display());
+            for (name, v) in &m.variants {
+                println!(
+                    "  {name}: GRU hidden={} layers={} seq={} params={} ({} bytes) artifacts={:?}",
+                    v.hidden,
+                    v.layers,
+                    v.seq_len,
+                    v.param_count,
+                    v.model_bytes,
+                    v.artifacts.keys().collect::<Vec<_>>()
+                );
+            }
+        }
+        Err(e) => println!("artifacts not built: {e}"),
+    }
+    Ok(())
+}

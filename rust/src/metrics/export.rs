@@ -1,0 +1,133 @@
+//! Result export: CSV and JSON writers for experiment outputs.
+//!
+//! Every experiment harness writes machine-readable results under
+//! `results/` so EXPERIMENTS.md numbers are regenerable and diffable.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Writes experiment results into a directory (creating it).
+pub struct ResultsWriter {
+    dir: PathBuf,
+}
+
+impl ResultsWriter {
+    pub fn new(dir: impl AsRef<Path>) -> anyhow::Result<ResultsWriter> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)?;
+        Ok(ResultsWriter { dir })
+    }
+
+    pub fn default_dir() -> anyhow::Result<ResultsWriter> {
+        let dir = std::env::var("HFLOP_RESULTS").unwrap_or_else(|_| "results".into());
+        Self::new(dir)
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Write a CSV file: header row + rows of f64 cells.
+    pub fn write_csv(
+        &self,
+        name: &str,
+        header: &[&str],
+        rows: &[Vec<f64>],
+    ) -> anyhow::Result<PathBuf> {
+        let path = self.path(name);
+        let mut f = fs::File::create(&path)?;
+        writeln!(f, "{}", header.join(","))?;
+        for row in rows {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            writeln!(f, "{}", cells.join(","))?;
+        }
+        Ok(path)
+    }
+
+    /// Write pretty JSON.
+    pub fn write_json(&self, name: &str, value: &Json) -> anyhow::Result<PathBuf> {
+        let path = self.path(name);
+        fs::write(&path, value.to_pretty())?;
+        Ok(path)
+    }
+}
+
+/// Render an ASCII table (for terminal experiment reports).
+pub fn ascii_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (c, cell) in row.iter().enumerate().take(ncol) {
+            widths[c] = widths[c].max(cell.len());
+        }
+    }
+    let sep: String = widths.iter().map(|w| format!("+{}", "-".repeat(w + 2))).collect::<String>() + "+";
+    let fmt_row = |cells: &[String]| -> String {
+        let mut s = String::new();
+        for (c, w) in widths.iter().enumerate() {
+            let empty = String::new();
+            let cell = cells.get(c).unwrap_or(&empty);
+            s.push_str(&format!("| {cell:>w$} "));
+        }
+        s + "|"
+    };
+    let mut out = String::new();
+    out.push_str(&sep);
+    out.push('\n');
+    out.push_str(&fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    out.push('\n');
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out.push_str(&sep);
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let tmp = std::env::temp_dir().join("hflop_test_results");
+        let w = ResultsWriter::new(&tmp).unwrap();
+        let p = w
+            .write_csv("t.csv", &["a", "b"], &[vec![1.0, 2.5], vec![3.0, 4.0]])
+            .unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n3,4\n");
+    }
+
+    #[test]
+    fn json_write() {
+        let tmp = std::env::temp_dir().join("hflop_test_results");
+        let w = ResultsWriter::new(&tmp).unwrap();
+        let p = w
+            .write_json("t.json", &Json::obj(vec![("x", Json::Num(1.0))]))
+            .unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn ascii_table_renders() {
+        let t = ascii_table(
+            &["setup", "ms"],
+            &[
+                vec!["flat".into(), "79.07".into()],
+                vec!["hflop".into(), "9.89".into()],
+            ],
+        );
+        assert!(t.contains("flat"));
+        assert!(t.contains("9.89"));
+        // sep, header, sep, 2 data rows, sep
+        assert_eq!(t.lines().count(), 6);
+    }
+}

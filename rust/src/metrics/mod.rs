@@ -1,0 +1,79 @@
+//! Metrics: communication-cost accounting (Fig. 9), MSE curves (Fig. 6),
+//! latency recording (Fig. 7/8), and result export.
+
+pub mod cost;
+pub mod export;
+
+pub use cost::CommLedger;
+pub use export::ResultsWriter;
+
+/// Per-(round, client) MSE curve storage for Fig. 6-style plots.
+#[derive(Debug, Clone, Default)]
+pub struct MseCurves {
+    /// `curves[client]` = per-round MSE of that client.
+    pub curves: Vec<Vec<f32>>,
+}
+
+impl MseCurves {
+    pub fn new(n_clients: usize) -> MseCurves {
+        MseCurves { curves: vec![Vec::new(); n_clients] }
+    }
+
+    pub fn push(&mut self, client: usize, mse: f32) {
+        self.curves[client].push(mse);
+    }
+
+    pub fn n_rounds(&self) -> usize {
+        self.curves.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Mean MSE across clients at a round.
+    pub fn mean_at(&self, round: usize) -> f32 {
+        let vals: Vec<f32> = self
+            .curves
+            .iter()
+            .filter_map(|c| c.get(round).copied())
+            .collect();
+        if vals.is_empty() {
+            return f32::NAN;
+        }
+        vals.iter().sum::<f32>() / vals.len() as f32
+    }
+
+    /// Mean MSE over the final `k` rounds (convergence-level metric).
+    pub fn converged_mean(&self, k: usize) -> f32 {
+        let n = self.n_rounds();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let lo = n.saturating_sub(k);
+        let vals: Vec<f32> = (lo..n).map(|r| self.mean_at(r)).collect();
+        vals.iter().sum::<f32>() / vals.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_curves_mean() {
+        let mut c = MseCurves::new(2);
+        c.push(0, 1.0);
+        c.push(1, 3.0);
+        c.push(0, 0.5);
+        c.push(1, 1.5);
+        assert_eq!(c.n_rounds(), 2);
+        assert!((c.mean_at(0) - 2.0).abs() < 1e-6);
+        assert!((c.mean_at(1) - 1.0).abs() < 1e-6);
+        assert!((c.converged_mean(1) - 1.0).abs() < 1e-6);
+        assert!((c.converged_mean(2) - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_curves_nan() {
+        let c = MseCurves::new(3);
+        assert!(c.mean_at(0).is_nan());
+        assert!(c.converged_mean(5).is_nan());
+    }
+}

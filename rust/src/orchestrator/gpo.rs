@@ -1,0 +1,171 @@
+//! General-purpose orchestrator (GPO) mock — the Kubernetes stand-in.
+//!
+//! The paper's HFL-specific orchestrator treats the GPO as (i) a source of
+//! infrastructure truth (which nodes exist, their resource state) and
+//! (ii) the executor of containerized deployments. This mock provides the
+//! same interface in-process, plus fault injection for re-clustering
+//! tests.
+
+use std::collections::BTreeMap;
+
+use crate::topology::GeoPoint;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    Device,
+    EdgeHost,
+    Cloud,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    Ready,
+    Failed,
+}
+
+/// One registered node.
+#[derive(Debug, Clone)]
+pub struct NodeInfo {
+    pub id: usize,
+    pub kind: NodeKind,
+    pub location: GeoPoint,
+    /// Inference processing capacity (req/s); devices: own λ context.
+    pub capacity: f64,
+    pub state: NodeState,
+}
+
+/// A deployment the GPO has been instructed to realize.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Deployment {
+    Aggregator { edge_id: usize },
+    FlClient { device_id: usize, aggregator_edge: Option<usize> },
+    InferenceAgent { node_id: usize, kind: NodeKind },
+}
+
+/// The GPO mock: inventory + deployment ledger + event log.
+#[derive(Debug, Default)]
+pub struct Gpo {
+    devices: BTreeMap<usize, NodeInfo>,
+    edges: BTreeMap<usize, NodeInfo>,
+    deployments: Vec<Deployment>,
+    pub events: Vec<String>,
+}
+
+impl Gpo {
+    pub fn new() -> Gpo {
+        Gpo::default()
+    }
+
+    pub fn register_device(&mut self, id: usize, location: GeoPoint) {
+        self.devices.insert(
+            id,
+            NodeInfo { id, kind: NodeKind::Device, location, capacity: 0.0, state: NodeState::Ready },
+        );
+    }
+
+    pub fn register_edge(&mut self, id: usize, location: GeoPoint, capacity: f64) {
+        self.edges.insert(
+            id,
+            NodeInfo { id, kind: NodeKind::EdgeHost, location, capacity, state: NodeState::Ready },
+        );
+    }
+
+    /// Fault injection: mark a node failed and log the event.
+    pub fn fail_edge(&mut self, id: usize) {
+        if let Some(n) = self.edges.get_mut(&id) {
+            n.state = NodeState::Failed;
+            self.events.push(format!("edge {id} failed"));
+        }
+    }
+
+    pub fn recover_edge(&mut self, id: usize) {
+        if let Some(n) = self.edges.get_mut(&id) {
+            n.state = NodeState::Ready;
+            self.events.push(format!("edge {id} recovered"));
+        }
+    }
+
+    /// Update an edge host's available inference capacity (e.g. another
+    /// workload landed on the node) — §VI "environment dynamics".
+    pub fn set_edge_capacity(&mut self, id: usize, capacity: f64) {
+        if let Some(n) = self.edges.get_mut(&id) {
+            n.capacity = capacity;
+            self.events.push(format!("edge {id} capacity -> {capacity}"));
+        }
+    }
+
+    /// Ready edge hosts (what the learning controller may place on).
+    pub fn ready_edges(&self) -> Vec<&NodeInfo> {
+        self.edges.values().filter(|n| n.state == NodeState::Ready).collect()
+    }
+
+    pub fn ready_devices(&self) -> Vec<&NodeInfo> {
+        self.devices.values().filter(|n| n.state == NodeState::Ready).collect()
+    }
+
+    pub fn edge(&self, id: usize) -> Option<&NodeInfo> {
+        self.edges.get(&id)
+    }
+
+    /// Realize a deployment plan (records it; in a real system this would
+    /// drive the container orchestrator).
+    pub fn apply_deployments(&mut self, deps: Vec<Deployment>) {
+        self.events.push(format!("applied {} deployments", deps.len()));
+        self.deployments = deps;
+    }
+
+    pub fn deployments(&self) -> &[Deployment] {
+        &self.deployments
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> GeoPoint {
+        GeoPoint { lat: 34.1, lon: -118.3 }
+    }
+
+    #[test]
+    fn register_and_query() {
+        let mut g = Gpo::new();
+        g.register_device(0, p());
+        g.register_edge(0, p(), 10.0);
+        g.register_edge(1, p(), 20.0);
+        assert_eq!(g.ready_devices().len(), 1);
+        assert_eq!(g.ready_edges().len(), 2);
+    }
+
+    #[test]
+    fn failure_removes_from_ready_set() {
+        let mut g = Gpo::new();
+        g.register_edge(0, p(), 10.0);
+        g.register_edge(1, p(), 10.0);
+        g.fail_edge(0);
+        let ready: Vec<usize> = g.ready_edges().iter().map(|n| n.id).collect();
+        assert_eq!(ready, vec![1]);
+        g.recover_edge(0);
+        assert_eq!(g.ready_edges().len(), 2);
+        assert_eq!(g.events.len(), 2);
+    }
+
+    #[test]
+    fn capacity_update_logged() {
+        let mut g = Gpo::new();
+        g.register_edge(3, p(), 10.0);
+        g.set_edge_capacity(3, 4.0);
+        assert_eq!(g.edge(3).unwrap().capacity, 4.0);
+        assert!(g.events[0].contains("capacity"));
+    }
+
+    #[test]
+    fn deployments_recorded() {
+        let mut g = Gpo::new();
+        g.apply_deployments(vec![
+            Deployment::Aggregator { edge_id: 1 },
+            Deployment::FlClient { device_id: 0, aggregator_edge: Some(1) },
+        ]);
+        assert_eq!(g.deployments().len(), 2);
+    }
+}

@@ -1,0 +1,162 @@
+//! Inference controller (§III): deploys/monitors inference services and
+//! triggers new HFL tasks when served-model accuracy degrades — the
+//! continual-learning control loop ("a task of the inference controller
+//! is to monitor inference services and trigger a new HFL task if
+//! inference accuracy is below a specific threshold").
+
+/// Controller configuration.
+#[derive(Debug, Clone)]
+pub struct InferenceCtlConfig {
+    /// Trigger retraining when the exponentially-weighted MSE exceeds
+    /// this threshold.
+    pub mse_threshold: f32,
+    /// EWMA smoothing factor in (0, 1]; higher = more reactive.
+    pub alpha: f32,
+    /// Minimum observations before triggering (debounce).
+    pub min_observations: usize,
+    /// Cooldown (observations) after a trigger before the next one.
+    pub cooldown: usize,
+}
+
+impl Default for InferenceCtlConfig {
+    fn default() -> Self {
+        InferenceCtlConfig {
+            mse_threshold: 0.1,
+            alpha: 0.2,
+            min_observations: 10,
+            cooldown: 20,
+        }
+    }
+}
+
+/// Accuracy-triggered retraining monitor.
+#[derive(Debug, Clone)]
+pub struct InferenceController {
+    pub config: InferenceCtlConfig,
+    ewma_mse: Option<f32>,
+    observations: usize,
+    since_trigger: usize,
+    pub triggers: usize,
+}
+
+impl InferenceController {
+    pub fn new(config: InferenceCtlConfig) -> InferenceController {
+        InferenceController {
+            config,
+            ewma_mse: None,
+            observations: 0,
+            since_trigger: usize::MAX / 2,
+            triggers: 0,
+        }
+    }
+
+    pub fn ewma(&self) -> Option<f32> {
+        self.ewma_mse
+    }
+
+    /// Feed one observed serving-accuracy sample (per-request or batched
+    /// MSE). Returns true when a new HFL task should be triggered.
+    pub fn observe_mse(&mut self, mse: f32) -> bool {
+        let a = self.config.alpha;
+        self.ewma_mse = Some(match self.ewma_mse {
+            None => mse,
+            Some(prev) => a * mse + (1.0 - a) * prev,
+        });
+        self.observations += 1;
+        self.since_trigger = self.since_trigger.saturating_add(1);
+
+        let degraded = self.ewma_mse.unwrap() > self.config.mse_threshold;
+        if degraded
+            && self.observations >= self.config.min_observations
+            && self.since_trigger >= self.config.cooldown
+        {
+            self.triggers += 1;
+            self.since_trigger = 0;
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(threshold: f32) -> InferenceController {
+        InferenceController::new(InferenceCtlConfig {
+            mse_threshold: threshold,
+            alpha: 0.5,
+            min_observations: 3,
+            cooldown: 5,
+        })
+    }
+
+    #[test]
+    fn healthy_model_never_triggers() {
+        let mut c = ctl(0.1);
+        for _ in 0..100 {
+            assert!(!c.observe_mse(0.01));
+        }
+        assert_eq!(c.triggers, 0);
+    }
+
+    #[test]
+    fn degradation_triggers_after_min_observations() {
+        let mut c = ctl(0.1);
+        let mut fired_at = None;
+        for i in 0..10 {
+            if c.observe_mse(0.5) {
+                fired_at = Some(i);
+                break;
+            }
+        }
+        assert_eq!(fired_at, Some(2)); // 3rd observation (min_observations)
+    }
+
+    #[test]
+    fn cooldown_debounces_repeated_triggers() {
+        let mut c = ctl(0.1);
+        let mut fires = 0;
+        for _ in 0..20 {
+            if c.observe_mse(1.0) {
+                fires += 1;
+            }
+        }
+        // First at obs 3, then every 5 observations (cooldown).
+        assert!(fires >= 3 && fires <= 5, "{fires}");
+        assert_eq!(c.triggers, fires);
+    }
+
+    #[test]
+    fn ewma_smooths_spikes() {
+        let mut c = ctl(0.5);
+        for _ in 0..10 {
+            c.observe_mse(0.1);
+        }
+        // One spike must not immediately trigger with alpha=0.5 and
+        // threshold 0.5: ewma = 0.5*0.8 + 0.5*0.1 = 0.45.
+        assert!(!c.observe_mse(0.8));
+        assert!(c.ewma().unwrap() < 0.5);
+    }
+
+    #[test]
+    fn recovery_resets_behaviour() {
+        let mut c = ctl(0.1);
+        for _ in 0..10 {
+            c.observe_mse(1.0);
+        }
+        // During EWMA decay a trailing trigger may still fire; once the
+        // smoothed MSE is back under threshold, no more triggers ever.
+        let mut decay_fires = 0;
+        for _ in 0..10 {
+            if c.observe_mse(0.001) {
+                decay_fires += 1;
+            }
+        }
+        assert!(decay_fires <= 2, "{decay_fires}");
+        assert!(c.ewma().unwrap() < 0.1);
+        for _ in 0..50 {
+            assert!(!c.observe_mse(0.001));
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Learning controller: the HFL-specific orchestrator component that owns
+//! the clustering mechanism (§III).
+//!
+//! Responsibilities implemented here:
+//! * pull node inventory + inference workload info from the [`Gpo`];
+//! * build the HFLOP instance and solve it (the clustering mechanism);
+//! * translate the solution into a deployment plan (aggregator
+//!   placements, client associations, inference agents per node);
+//! * re-cluster on environmental events: edge failure or capacity change
+//!   invalidates the current plan (§VI "dealing with environment
+//!   dynamics").
+
+use super::gpo::{Deployment, Gpo, NodeKind};
+use crate::hflop::Instance;
+use crate::solver::{self, Assignment, SolveOptions};
+use crate::topology::haversine_km;
+
+/// Controller configuration.
+#[derive(Debug, Clone)]
+pub struct LearningCtlConfig {
+    /// Local rounds per global round (HFLOP's `l`).
+    pub l: f64,
+    /// Minimum participating devices (HFLOP's T).
+    pub t_min: usize,
+    /// Device→edge cost: km beyond which distance is metered.
+    pub free_radius_km: f64,
+    /// Edge↔cloud cost per exchange.
+    pub cloud_cost: f64,
+    pub solve: SolveOptions,
+}
+
+impl Default for LearningCtlConfig {
+    fn default() -> Self {
+        LearningCtlConfig {
+            l: 2.0,
+            t_min: 0,
+            free_radius_km: 3.0,
+            cloud_cost: 25.0,
+            solve: SolveOptions::auto(),
+        }
+    }
+}
+
+/// The realized HFL configuration.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    /// Device id (GPO numbering) → edge id, in instance-local indices
+    /// mapped back to GPO ids.
+    pub assignment: Assignment,
+    /// GPO edge ids corresponding to instance columns.
+    pub edge_ids: Vec<usize>,
+    /// GPO device ids corresponding to instance rows.
+    pub device_ids: Vec<usize>,
+    pub cost: f64,
+    pub proven_optimal: bool,
+}
+
+impl DeploymentPlan {
+    /// Expand to GPO deployment records.
+    pub fn deployments(&self) -> Vec<Deployment> {
+        let mut out = Vec::new();
+        for (col, &edge_id) in self.edge_ids.iter().enumerate() {
+            if self.assignment.open[col] {
+                out.push(Deployment::Aggregator { edge_id });
+                out.push(Deployment::InferenceAgent { node_id: edge_id, kind: NodeKind::EdgeHost });
+            }
+        }
+        for (row, &dev_id) in self.device_ids.iter().enumerate() {
+            let agg = self.assignment.assign[row].map(|c| self.edge_ids[c]);
+            out.push(Deployment::FlClient { device_id: dev_id, aggregator_edge: agg });
+            out.push(Deployment::InferenceAgent { node_id: dev_id, kind: NodeKind::Device });
+        }
+        out
+    }
+
+    /// GPO edge id serving a GPO device id, if assigned.
+    pub fn aggregator_of(&self, device_id: usize) -> Option<usize> {
+        let row = self.device_ids.iter().position(|&d| d == device_id)?;
+        self.assignment.assign[row].map(|c| self.edge_ids[c])
+    }
+}
+
+/// The learning controller.
+pub struct LearningController {
+    pub config: LearningCtlConfig,
+    /// Per-device inference rates λ_i, keyed by GPO device id.
+    pub lambda: std::collections::BTreeMap<usize, f64>,
+    pub current_plan: Option<DeploymentPlan>,
+    /// Count of re-clustering runs (observability).
+    pub reclusters: usize,
+}
+
+impl LearningController {
+    pub fn new(config: LearningCtlConfig) -> LearningController {
+        LearningController {
+            config,
+            lambda: Default::default(),
+            current_plan: None,
+            reclusters: 0,
+        }
+    }
+
+    pub fn set_lambda(&mut self, device_id: usize, rate: f64) {
+        self.lambda.insert(device_id, rate);
+    }
+
+    /// Build the HFLOP instance from current GPO state.
+    pub fn build_instance(&self, gpo: &Gpo) -> anyhow::Result<(Instance, Vec<usize>, Vec<usize>)> {
+        let devices = gpo.ready_devices();
+        let edges = gpo.ready_edges();
+        anyhow::ensure!(!devices.is_empty(), "no ready devices");
+        anyhow::ensure!(!edges.is_empty(), "no ready edge hosts");
+
+        let device_ids: Vec<usize> = devices.iter().map(|n| n.id).collect();
+        let edge_ids: Vec<usize> = edges.iter().map(|n| n.id).collect();
+
+        let c_d = devices
+            .iter()
+            .map(|d| {
+                edges
+                    .iter()
+                    .map(|e| {
+                        let km = haversine_km(d.location, e.location);
+                        if km <= self.config.free_radius_km {
+                            0.0
+                        } else {
+                            km
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let t_min = if self.config.t_min == 0 { devices.len() } else { self.config.t_min };
+        let inst = Instance {
+            c_d,
+            c_e: vec![self.config.cloud_cost; edges.len()],
+            lambda: device_ids
+                .iter()
+                .map(|id| self.lambda.get(id).copied().unwrap_or(1.0))
+                .collect(),
+            r: edges.iter().map(|e| e.capacity).collect(),
+            l: self.config.l,
+            t_min: t_min.min(devices.len()),
+        };
+        Ok((inst, device_ids, edge_ids))
+    }
+
+    /// Run the clustering mechanism and install the plan into the GPO.
+    pub fn cluster(&mut self, gpo: &mut Gpo) -> anyhow::Result<&DeploymentPlan> {
+        let (inst, device_ids, edge_ids) = self.build_instance(gpo)?;
+        let sol = solver::solve(&inst, &self.config.solve)
+            .map_err(|e| anyhow::anyhow!("clustering failed: {e}"))?;
+        let plan = DeploymentPlan {
+            assignment: sol.assignment,
+            edge_ids,
+            device_ids,
+            cost: sol.cost,
+            proven_optimal: sol.proven_optimal,
+        };
+        gpo.apply_deployments(plan.deployments());
+        self.current_plan = Some(plan);
+        self.reclusters += 1;
+        Ok(self.current_plan.as_ref().unwrap())
+    }
+
+    /// React to an environmental event: if the current plan references a
+    /// failed edge or stale capacity, re-cluster. Returns true if a new
+    /// plan was produced.
+    pub fn on_environment_change(&mut self, gpo: &mut Gpo) -> anyhow::Result<bool> {
+        let plan_invalid = match &self.current_plan {
+            None => true,
+            Some(plan) => {
+                // Any open aggregator on a non-ready or capacity-reduced edge?
+                plan.edge_ids.iter().enumerate().any(|(col, &eid)| {
+                    plan.assignment.open[col]
+                        && match gpo.edge(eid) {
+                            None => true,
+                            Some(n) => {
+                                n.state != super::gpo::NodeState::Ready || {
+                                    // Capacity below the load we routed to it.
+                                    let load: f64 = plan
+                                        .device_ids
+                                        .iter()
+                                        .enumerate()
+                                        .filter(|(row, _)| plan.assignment.assign[*row] == Some(col))
+                                        .map(|(row, _)| {
+                                            self.lambda
+                                                .get(&plan.device_ids[row])
+                                                .copied()
+                                                .unwrap_or(1.0)
+                                        })
+                                        .sum();
+                                    load > n.capacity + 1e-9
+                                }
+                            }
+                        }
+                })
+            }
+        };
+        if plan_invalid {
+            self.cluster(gpo)?;
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::GeoPoint;
+
+    fn setup(n_dev: usize, n_edge: usize) -> (Gpo, LearningController) {
+        let mut gpo = Gpo::new();
+        for i in 0..n_dev {
+            gpo.register_device(
+                i,
+                GeoPoint { lat: 34.0 + 0.01 * (i % 5) as f64, lon: -118.4 + 0.02 * (i / 5) as f64 },
+            );
+        }
+        for j in 0..n_edge {
+            gpo.register_edge(
+                100 + j,
+                GeoPoint { lat: 34.0 + 0.02 * j as f64, lon: -118.4 + 0.03 * j as f64 },
+                8.0,
+            );
+        }
+        let mut ctl = LearningController::new(LearningCtlConfig::default());
+        for i in 0..n_dev {
+            ctl.set_lambda(i, 1.0);
+        }
+        (gpo, ctl)
+    }
+
+    #[test]
+    fn clustering_produces_feasible_plan() {
+        let (mut gpo, mut ctl) = setup(12, 3);
+        let plan = ctl.cluster(&mut gpo).unwrap().clone();
+        let (inst, _, _) = ctl.build_instance(&gpo).unwrap();
+        plan.assignment.check_feasible(&inst).unwrap();
+        assert!(!gpo.deployments().is_empty());
+    }
+
+    #[test]
+    fn plan_maps_gpo_ids() {
+        let (mut gpo, mut ctl) = setup(6, 2);
+        let plan = ctl.cluster(&mut gpo).unwrap();
+        for dev in 0..6 {
+            let agg = plan.aggregator_of(dev);
+            assert!(agg.map(|e| e >= 100).unwrap_or(false), "device {dev} -> {agg:?}");
+        }
+    }
+
+    #[test]
+    fn edge_failure_triggers_recluster() {
+        let (mut gpo, mut ctl) = setup(10, 3);
+        ctl.cluster(&mut gpo).unwrap();
+        assert_eq!(ctl.reclusters, 1);
+        // Fail an edge actually used by the plan.
+        let used = ctl
+            .current_plan
+            .as_ref()
+            .unwrap()
+            .edge_ids
+            .iter()
+            .enumerate()
+            .find(|(c, _)| ctl.current_plan.as_ref().unwrap().assignment.open[*c])
+            .map(|(_, &e)| e)
+            .unwrap();
+        gpo.fail_edge(used);
+        let changed = ctl.on_environment_change(&mut gpo).unwrap();
+        assert!(changed);
+        assert_eq!(ctl.reclusters, 2);
+        // New plan uses only ready edges.
+        let plan = ctl.current_plan.as_ref().unwrap();
+        assert!(!plan.edge_ids.contains(&used));
+    }
+
+    #[test]
+    fn no_recluster_when_plan_still_valid() {
+        let (mut gpo, mut ctl) = setup(10, 3);
+        ctl.cluster(&mut gpo).unwrap();
+        let changed = ctl.on_environment_change(&mut gpo).unwrap();
+        assert!(!changed);
+        assert_eq!(ctl.reclusters, 1);
+    }
+
+    #[test]
+    fn capacity_drop_below_load_triggers_recluster() {
+        let (mut gpo, mut ctl) = setup(10, 2);
+        ctl.cluster(&mut gpo).unwrap();
+        let plan = ctl.current_plan.as_ref().unwrap();
+        let (col, &eid) = plan
+            .edge_ids
+            .iter()
+            .enumerate()
+            .find(|(c, _)| plan.assignment.open[*c])
+            .unwrap();
+        let load = plan
+            .assignment
+            .devices_of(col)
+            .len() as f64;
+        gpo.set_edge_capacity(eid, load - 0.5);
+        assert!(ctl.on_environment_change(&mut gpo).unwrap());
+    }
+
+    #[test]
+    fn errors_without_infrastructure() {
+        let mut gpo = Gpo::new();
+        let mut ctl = LearningController::new(LearningCtlConfig::default());
+        assert!(ctl.cluster(&mut gpo).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! HFL orchestration layer — the paper's §III architecture.
+//!
+//! * [`gpo`] — the general-purpose-orchestrator mock (Kubernetes stand-in):
+//!   node inventory, resource states, deployment plans, fault injection.
+//! * [`learning`] — the learning controller: pulls inventory + workload
+//!   info from the GPO, builds the HFLOP instance, invokes the clustering
+//!   mechanism (the solver), emits a deployment plan, and re-clusters on
+//!   environmental events (node failure, capacity change).
+//! * [`inference_ctl`] — the inference controller: deploys serving agents
+//!   per node, monitors accuracy, and triggers a new HFL task when
+//!   inference accuracy degrades below threshold (continual learning).
+
+pub mod gpo;
+pub mod inference_ctl;
+pub mod learning;
+
+pub use gpo::{Gpo, NodeKind, NodeState};
+pub use inference_ctl::{InferenceController, InferenceCtlConfig};
+pub use learning::{DeploymentPlan, LearningController, LearningCtlConfig};

@@ -1,0 +1,292 @@
+//! Artifact manifest: the contract between the python AOT pipeline
+//! (`python/compile/aot.py`) and this runtime.
+//!
+//! `artifacts/manifest.json` records, per model variant, the parameter
+//! ABI (array names + shapes, flat order), tensor shapes for each
+//! artifact entry point, and the artifact file names. The rust side never
+//! hard-codes shapes: everything flows from here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One parameter array in the flat ABI.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model variant (e.g. "paper", "small").
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub seq_len: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub serve_batch: usize,
+    pub param_count: usize,
+    /// Serialized f32 model size in bytes — the paper's cost payload.
+    pub model_bytes: usize,
+    pub params: Vec<ParamSpec>,
+    /// artifact name ("train_step", "predict", ...) -> file name.
+    pub artifacts: BTreeMap<String, String>,
+    pub params_init_file: String,
+    pub oracle_file: Option<String>,
+}
+
+impl Variant {
+    /// Byte offsets of each parameter array in the flat f32 block.
+    pub fn offsets(&self) -> Vec<usize> {
+        let mut offs = Vec::with_capacity(self.params.len());
+        let mut acc = 0usize;
+        for p in &self.params {
+            offs.push(acc);
+            acc += p.numel();
+        }
+        offs
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+/// The parsed manifest + its directory (for resolving artifact files).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+impl Manifest {
+    /// Default artifact location: `$HFLOP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HFLOP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> anyhow::Result<Manifest> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let root = Json::parse(text)?;
+        let models = root
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'models'"))?;
+
+        let mut variants = BTreeMap::new();
+        for (name, v) in models {
+            let num = |k: &str| -> anyhow::Result<usize> {
+                v.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("variant {name}: missing {k}"))
+            };
+            let params = v
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("variant {name}: missing params"))?
+                .iter()
+                .map(|p| -> anyhow::Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow::anyhow!("param missing name"))?
+                            .to_string(),
+                        shape: p
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow::anyhow!("param missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+
+            let artifacts = v
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow::anyhow!("variant {name}: missing artifacts"))?
+                .iter()
+                .filter_map(|(k, a)| {
+                    a.get("file").and_then(Json::as_str).map(|f| (k.clone(), f.to_string()))
+                })
+                .collect();
+
+            let variant = Variant {
+                name: name.clone(),
+                hidden: num("hidden")?,
+                layers: num("layers")?,
+                in_dim: num("in_dim")?,
+                out_dim: num("out_dim")?,
+                seq_len: num("seq_len")?,
+                train_batch: num("train_batch")?,
+                eval_batch: num("eval_batch")?,
+                serve_batch: num("serve_batch")?,
+                param_count: num("param_count")?,
+                model_bytes: num("model_bytes")?,
+                params,
+                artifacts,
+                params_init_file: v
+                    .get("params_init")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("variant {name}: missing params_init"))?
+                    .to_string(),
+                oracle_file: v
+                    .path(&["oracle", "file"])
+                    .and_then(Json::as_str)
+                    .map(String::from),
+            };
+            anyhow::ensure!(
+                variant.total_elems() == variant.param_count,
+                "variant {name}: declared param_count {} != shape sum {}",
+                variant.param_count,
+                variant.total_elems()
+            );
+            variants.insert(name.clone(), variant);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn variant(&self, name: &str) -> anyhow::Result<&Variant> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model variant '{name}'"))
+    }
+
+    pub fn artifact_path(&self, variant: &Variant, artifact: &str) -> anyhow::Result<PathBuf> {
+        let file = variant
+            .artifacts
+            .get(artifact)
+            .ok_or_else(|| anyhow::anyhow!("variant {} has no artifact '{artifact}'", variant.name))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// Load the initial parameter block (little-endian f32 file).
+    pub fn load_init_params(&self, variant: &Variant) -> anyhow::Result<Vec<f32>> {
+        let path = self.dir.join(&variant.params_init_file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == 4 * variant.total_elems(),
+            "params file size {} != expected {}",
+            bytes.len(),
+            4 * variant.total_elems()
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": 1,
+        "models": {
+            "toy": {
+                "hidden": 8, "layers": 1, "in_dim": 1, "out_dim": 1,
+                "seq_len": 6, "train_batch": 4, "eval_batch": 8,
+                "serve_batch": 8, "param_count": 273, "model_bytes": 1092,
+                "params": [
+                    {"name": "wi_0", "shape": [3, 1, 8]},
+                    {"name": "wh_0", "shape": [3, 8, 8]},
+                    {"name": "bi_0", "shape": [3, 8]},
+                    {"name": "bh_0", "shape": [3, 8]},
+                    {"name": "w_out", "shape": [8, 1]},
+                    {"name": "b_out", "shape": [1]}
+                ],
+                "params_init": "params_init_toy.bin",
+                "oracle": {"file": "oracle_toy.json"},
+                "artifacts": {
+                    "train_step": {"file": "train_step_toy.hlo.txt", "sha256_16": "x"},
+                    "predict": {"file": "predict_toy.hlo.txt", "sha256_16": "y"}
+                }
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let v = m.variant("toy").unwrap();
+        assert_eq!(v.hidden, 8);
+        assert_eq!(v.params.len(), 6);
+        assert_eq!(v.total_elems(), 24 + 192 + 24 + 24 + 8 + 1);
+        assert_eq!(v.param_count, 273);
+        assert_eq!(v.oracle_file.as_deref(), Some("oracle_toy.json"));
+    }
+
+    #[test]
+    fn offsets_are_cumulative() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let v = m.variant("toy").unwrap();
+        let offs = v.offsets();
+        assert_eq!(offs[0], 0);
+        assert_eq!(offs[1], 24);
+        assert_eq!(offs[2], 24 + 192);
+        assert_eq!(*offs.last().unwrap() + 1, v.total_elems());
+    }
+
+    #[test]
+    fn artifact_path_resolution() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x/y")).unwrap();
+        let v = m.variant("toy").unwrap();
+        let p = m.artifact_path(v, "predict").unwrap();
+        assert_eq!(p, PathBuf::from("/x/y/predict_toy.hlo.txt"));
+        assert!(m.artifact_path(v, "nope").is_err());
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.variant("missing").is_err());
+    }
+
+    #[test]
+    fn param_count_mismatch_rejected() {
+        let bad = SAMPLE.replace("\"param_count\": 273", "\"param_count\": 999");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let v = m.variant("paper").unwrap();
+            assert_eq!(v.hidden, 128);
+            assert_eq!(v.layers, 2);
+            // §V-D: 594 KB serialized model (ours: 598,020 bytes).
+            assert!((v.model_bytes as i64 - 594 * 1024).abs() < 16 * 1024);
+            let params = m.load_init_params(v).unwrap();
+            assert_eq!(params.len(), v.param_count);
+        }
+    }
+}

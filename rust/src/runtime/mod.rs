@@ -1,0 +1,16 @@
+//! Model-execution runtime: the bridge from the rust coordinator (L3) to
+//! the AOT-compiled JAX/Pallas artifacts (L2/L1).
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (the python↔rust ABI).
+//! * [`engine`] — PJRT CPU client; compiles HLO text once, executes
+//!   `train_step` / `predict` / `eval` with flat f32 parameter blocks.
+//!
+//! The `xla` FFI types are not `Send`; systems that need cross-thread
+//! access construct the [`engine::Engine`] inside a dedicated runtime
+//! thread (see `fl::runtime_actor`).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Preload};
+pub use manifest::{Manifest, ParamSpec, Variant};

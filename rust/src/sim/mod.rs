@@ -1,0 +1,165 @@
+//! Discrete-event simulation substrate.
+//!
+//! A minimal, deterministic event queue: events of user type `E` are
+//! scheduled at f64 times; ties break by insertion sequence so runs are
+//! reproducible. The inference-serving simulations (Fig. 7/8) and the
+//! cost sweeps are built on this.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled entry.
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap on (time, seq).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event scheduler.
+pub struct Des<E> {
+    heap: BinaryHeap<Entry<E>>,
+    now: f64,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for Des<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Des<E> {
+    pub fn new() -> Des<E> {
+        Des { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `event` at absolute time `time` (must be >= now).
+    pub fn schedule(&mut self, time: f64, event: E) {
+        debug_assert!(time >= self.now - 1e-12, "scheduling into the past");
+        self.heap.push(Entry { time: time.max(self.now), seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` `delay` after now.
+    pub fn schedule_in(&mut self, delay: f64, event: E) {
+        self.schedule(self.now + delay.max(0.0), event);
+    }
+
+    /// Pop the next event, advancing the clock.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<(f64, E)> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        self.processed += 1;
+        Some((e.time, e.event))
+    }
+
+    /// Pop the next event only if it occurs before `horizon`.
+    pub fn next_before(&mut self, horizon: f64) -> Option<(f64, E)> {
+        match self.heap.peek() {
+            Some(e) if e.time < horizon => self.next(),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time() {
+        let mut des = Des::new();
+        des.schedule(3.0, "c");
+        des.schedule(1.0, "a");
+        des.schedule(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| des.next().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion() {
+        let mut des = Des::new();
+        des.schedule(1.0, 1);
+        des.schedule(1.0, 2);
+        des.schedule(1.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| des.next().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut des = Des::new();
+        des.schedule(5.0, ());
+        des.schedule(2.0, ());
+        des.schedule(9.0, ());
+        let mut last = 0.0;
+        while let Some((t, _)) = des.next() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(des.now(), 9.0);
+        assert_eq!(des.processed(), 3);
+    }
+
+    #[test]
+    fn schedule_in_relative() {
+        let mut des = Des::new();
+        des.schedule(1.0, "first");
+        des.next();
+        des.schedule_in(0.5, "second");
+        let (t, e) = des.next().unwrap();
+        assert_eq!(e, "second");
+        assert!((t - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn next_before_horizon() {
+        let mut des = Des::new();
+        des.schedule(1.0, "a");
+        des.schedule(5.0, "b");
+        assert!(des.next_before(2.0).is_some());
+        assert!(des.next_before(2.0).is_none());
+        assert_eq!(des.len(), 1);
+    }
+}

@@ -1,0 +1,324 @@
+//! Exact branch & bound for HFLOP (the role CPLEX plays in the paper).
+//!
+//! Best-first search over binary fixings with LP-relaxation lower bounds
+//! (`milp.rs` + the in-tree simplex). Branching prefers the most
+//! fractional `y_j` (facility decisions dominate the structure); when all
+//! `y` are integral it branches on the most fractional `x_ij`. Incumbents
+//! come from rounding each node's LP (open `y_j ≥ 0.5`, complete with the
+//! capacity-aware greedy) so good feasible solutions appear early and the
+//! search prunes aggressively.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use super::milp::{build_relaxation, n_vars, xv, yv, Fixing};
+use super::lp::LpResult;
+use super::solution::{complete_assignment, Assignment};
+use crate::hflop::Instance;
+
+/// Branch & bound configuration.
+#[derive(Debug, Clone)]
+pub struct BbOptions {
+    /// Use `x_ij ≤ y_j` (tight) linking while `n·m ≤` this threshold.
+    pub disaggregate_below: usize,
+    /// Give up after this many explored nodes (returns best-so-far,
+    /// `proven_optimal = false`).
+    pub node_limit: usize,
+    /// Wall-clock budget in seconds.
+    pub time_limit_s: f64,
+    /// Absolute optimality gap below which a node is pruned.
+    pub abs_gap: f64,
+}
+
+impl Default for BbOptions {
+    fn default() -> Self {
+        BbOptions {
+            // The dense tableau makes the disaggregated linking (n·m rows)
+            // expensive well before its tighter bound pays off; measured
+            // crossover on this box is a few hundred x-vars (§Perf).
+            disaggregate_below: 400,
+            node_limit: 200_000,
+            time_limit_s: 60.0,
+            abs_gap: 1e-6,
+        }
+    }
+}
+
+/// Result of an exact solve.
+#[derive(Debug, Clone)]
+pub struct BbOutcome {
+    pub best: Option<Assignment>,
+    pub cost: f64,
+    pub proven_optimal: bool,
+    pub nodes: usize,
+    pub lp_solves: usize,
+    pub wall_s: f64,
+}
+
+struct Node {
+    bound: f64,
+    fixings: Vec<Fixing>,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; we want the smallest bound first.
+        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+const INT_TOL: f64 = 1e-6;
+
+fn is_integral(v: f64) -> bool {
+    (v - v.round()).abs() < INT_TOL
+}
+
+/// Round an LP point to a feasible assignment (may fail).
+fn round_lp(inst: &Instance, x: &[f64]) -> Option<Assignment> {
+    let (n, m) = (inst.n(), inst.m());
+    let mut open: Vec<bool> = (0..m).map(|j| x[yv(j, n, m)] >= 0.5).collect();
+    if !open.iter().any(|&o| o) {
+        // Open the single most-loaded fractional y.
+        if let Some(j) = (0..m).max_by(|&a, &b| {
+            x[yv(a, n, m)].partial_cmp(&x[yv(b, n, m)]).unwrap()
+        }) {
+            open[j] = true;
+        }
+    }
+    // Try progressively opening more edges if completion fails.
+    loop {
+        if let Some(sol) = complete_assignment(inst, &open) {
+            return Some(sol);
+        }
+        // Open the best closed edge by fractional value; stop when none.
+        let next = (0..m)
+            .filter(|&j| !open[j])
+            .max_by(|&a, &b| x[yv(a, n, m)].partial_cmp(&x[yv(b, n, m)]).unwrap());
+        match next {
+            Some(j) => open[j] = true,
+            None => return None,
+        }
+    }
+}
+
+/// Pick the branching variable: most fractional y first, else most
+/// fractional x.
+fn pick_branch_var(inst: &Instance, x: &[f64]) -> Option<usize> {
+    let (n, m) = (inst.n(), inst.m());
+    let frac = |v: f64| (v - v.round()).abs();
+    let ybest = (0..m)
+        .map(|j| yv(j, n, m))
+        .filter(|&v| !is_integral(x[v]))
+        .max_by(|&a, &b| frac(x[a]).partial_cmp(&frac(x[b])).unwrap());
+    if ybest.is_some() {
+        return ybest;
+    }
+    (0..n * m)
+        .filter(|&v| !is_integral(x[v]))
+        .max_by(|&a, &b| frac(x[a]).partial_cmp(&frac(x[b])).unwrap())
+}
+
+/// Extract an integral LP point as an Assignment.
+fn extract_integral(inst: &Instance, x: &[f64]) -> Assignment {
+    let (n, m) = (inst.n(), inst.m());
+    let open = (0..m).map(|j| x[yv(j, n, m)] > 0.5).collect();
+    let assign = (0..n)
+        .map(|i| (0..m).find(|&j| x[xv(i, j, m)] > 0.5))
+        .collect();
+    Assignment { assign, open }
+}
+
+/// Solve HFLOP exactly by branch & bound.
+pub fn branch_and_bound(inst: &Instance, opts: &BbOptions) -> BbOutcome {
+    let t0 = Instant::now();
+    let disagg = n_vars(inst) <= opts.disaggregate_below;
+
+    let mut lp_solves = 0usize;
+    let mut nodes = 0usize;
+    let mut incumbent: Option<Assignment> = None;
+    let mut incumbent_cost = f64::INFINITY;
+
+    // Root incumbent: local search (greedy + open/close/swap). A strong
+    // initial upper bound is what keeps the search tree small on
+    // high-density instances (§Perf).
+    let ls = crate::solver::local_search::local_search(
+        inst,
+        &crate::solver::local_search::LocalSearchOptions::default(),
+    );
+    if let Some(sol) = ls.best {
+        incumbent_cost = ls.cost;
+        incumbent = Some(sol);
+    } else if let Some(sol) = complete_assignment(inst, &vec![true; inst.m()]) {
+        incumbent_cost = sol.cost(inst);
+        incumbent = Some(sol);
+    }
+
+    let mut heap = BinaryHeap::new();
+    heap.push(Node { bound: f64::NEG_INFINITY, fixings: Vec::new() });
+
+    let mut proven = true;
+    while let Some(node) = heap.pop() {
+        if node.bound >= incumbent_cost - opts.abs_gap {
+            continue; // pruned by bound (heap is bound-ordered: all done)
+        }
+        if nodes >= opts.node_limit || t0.elapsed().as_secs_f64() > opts.time_limit_s {
+            proven = false;
+            break;
+        }
+        nodes += 1;
+
+        let lp = build_relaxation(inst, &node.fixings, disagg);
+        lp_solves += 1;
+        let (x, bound) = match lp.solve() {
+            LpResult::Optimal { x, obj } => (x, obj),
+            LpResult::Infeasible => continue,
+            LpResult::Unbounded => {
+                // Cannot happen: objective is non-negative. Treat as prune.
+                continue;
+            }
+        };
+        if bound >= incumbent_cost - opts.abs_gap {
+            continue;
+        }
+
+        match pick_branch_var(inst, &x) {
+            None => {
+                // Integral LP point: candidate optimal for this subtree.
+                let sol = extract_integral(inst, &x);
+                if sol.check_feasible(inst).is_ok() {
+                    let c = sol.cost(inst);
+                    if c < incumbent_cost {
+                        incumbent_cost = c;
+                        incumbent = Some(sol);
+                    }
+                } else if let Some(sol) = round_lp(inst, &x) {
+                    let c = sol.cost(inst);
+                    if c < incumbent_cost {
+                        incumbent_cost = c;
+                        incumbent = Some(sol);
+                    }
+                }
+            }
+            Some(var) => {
+                // Rounding heuristic for incumbents.
+                if let Some(sol) = round_lp(inst, &x) {
+                    let c = sol.cost(inst);
+                    if c < incumbent_cost && sol.check_feasible(inst).is_ok() {
+                        incumbent_cost = c;
+                        incumbent = Some(sol);
+                    }
+                }
+                for val in [x[var].round().clamp(0.0, 1.0), 1.0 - x[var].round().clamp(0.0, 1.0)]
+                {
+                    let mut fixings = node.fixings.clone();
+                    fixings.push((var, val));
+                    heap.push(Node { bound, fixings });
+                }
+            }
+        }
+    }
+
+    BbOutcome {
+        cost: incumbent_cost,
+        best: incumbent,
+        proven_optimal: proven,
+        nodes,
+        lp_solves,
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hflop::InstanceBuilder;
+    use crate::solver::brute::brute_force;
+
+    #[test]
+    fn matches_brute_force_on_tiny_instances() {
+        for seed in 0..8 {
+            let inst = InstanceBuilder::random(6, 3, seed).t_min(5).build();
+            let bf = brute_force(&inst);
+            let bb = branch_and_bound(&inst, &BbOptions::default());
+            assert!(bb.proven_optimal);
+            match (bf, bb.best) {
+                (Some((_, bf_cost)), Some(sol)) => {
+                    sol.check_feasible(&inst).unwrap();
+                    assert!(
+                        (bb.cost - bf_cost).abs() < 1e-6,
+                        "seed {seed}: bb {} brute {}",
+                        bb.cost,
+                        bf_cost
+                    );
+                }
+                (None, None) => {}
+                (bf, bb) => panic!("seed {seed}: brute {bf:?} vs bb {bb:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_unit_cost() {
+        for seed in 0..5 {
+            let inst = InstanceBuilder::unit_cost(8, 3, seed).build();
+            let bf = brute_force(&inst).expect("feasible");
+            let bb = branch_and_bound(&inst, &BbOptions::default());
+            assert!(bb.proven_optimal);
+            assert!((bb.cost - bf.1).abs() < 1e-6, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn solution_is_feasible_and_bounded_by_greedy() {
+        let inst = InstanceBuilder::unit_cost(30, 5, 11).build();
+        let bb = branch_and_bound(&inst, &BbOptions::default());
+        let sol = bb.best.unwrap();
+        sol.check_feasible(&inst).unwrap();
+        let greedy = complete_assignment(&inst, &vec![true; 5]).unwrap();
+        assert!(bb.cost <= greedy.cost(&inst) + 1e-9);
+    }
+
+    #[test]
+    fn infeasible_instance_returns_none() {
+        let mut inst = InstanceBuilder::unit_cost(5, 2, 12).build();
+        for r in inst.r.iter_mut() {
+            *r = 0.1; // nobody fits, t_min = 5
+        }
+        let bb = branch_and_bound(&inst, &BbOptions::default());
+        assert!(bb.best.is_none());
+        assert!(bb.cost.is_infinite());
+    }
+
+    #[test]
+    fn node_limit_degrades_gracefully() {
+        let inst = InstanceBuilder::random(20, 5, 13).t_min(18).build();
+        let opts = BbOptions { node_limit: 3, ..Default::default() };
+        let bb = branch_and_bound(&inst, &opts);
+        // With a tiny node budget we still get the greedy incumbent.
+        assert!(bb.best.is_some());
+    }
+
+    #[test]
+    fn uncapacitated_never_costlier_than_capacitated() {
+        for seed in [1, 7, 21] {
+            let capped = InstanceBuilder::unit_cost(12, 4, seed).build();
+            let uncap = InstanceBuilder::unit_cost(12, 4, seed).uncapacitated().build();
+            let c = branch_and_bound(&capped, &BbOptions::default());
+            let u = branch_and_bound(&uncap, &BbOptions::default());
+            assert!(c.proven_optimal && u.proven_optimal);
+            assert!(u.cost <= c.cost + 1e-9, "seed {seed}: u {} c {}", u.cost, c.cost);
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Exhaustive HFLOP solver — the test oracle for tiny instances.
+//!
+//! Enumerates every open-edge subset (2^m) and, per subset, every feasible
+//! device assignment by depth-first search with cost pruning. Exponential
+//! in both n and m; use only where n ≤ ~10 and m ≤ ~4 (tests compare the
+//! branch & bound against this).
+
+use super::solution::Assignment;
+use crate::hflop::Instance;
+
+/// Exact optimum by exhaustive search. Returns `(assignment, cost)` or
+/// None if infeasible.
+pub fn brute_force(inst: &Instance) -> Option<(Assignment, f64)> {
+    let (n, m) = (inst.n(), inst.m());
+    assert!(m < 16, "brute_force: m too large");
+    let mut best: Option<(Assignment, f64)> = None;
+
+    for mask in 0u32..(1 << m) {
+        let open: Vec<bool> = (0..m).map(|j| mask & (1 << j) != 0).collect();
+        let open_cost: f64 = (0..m).filter(|&j| open[j]).map(|j| inst.c_e[j]).sum();
+        let best_cost = best.as_ref().map(|b| b.1).unwrap_or(f64::INFINITY);
+        if open_cost >= best_cost {
+            continue;
+        }
+        let open_list: Vec<usize> = (0..m).filter(|&j| open[j]).collect();
+        // DFS over devices: assign to an open edge or leave unassigned.
+        let mut assign = vec![None; n];
+        let mut residual: Vec<f64> = inst.r.clone();
+        let mut found: Option<(Vec<Option<usize>>, f64)> = None;
+        dfs(
+            inst,
+            &open_list,
+            0,
+            0,
+            open_cost,
+            &mut assign,
+            &mut residual,
+            &mut found,
+            best_cost,
+        );
+        if let Some((assignment, cost)) = found {
+            // Empty open edges make the solution formally infeasible
+            // (constraint 3); skip those (the equivalent closed-subset
+            // mask covers the same assignment).
+            let ok = open_list
+                .iter()
+                .all(|&j| assignment.iter().any(|&a| a == Some(j)));
+            if ok && cost < best_cost {
+                let sol = Assignment { assign: assignment, open: open.clone() };
+                debug_assert!(sol.check_feasible(inst).is_ok(), "{:?}", sol.check_feasible(inst));
+                best = Some((sol, cost));
+            }
+        }
+    }
+    best
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dfs(
+    inst: &Instance,
+    open: &[usize],
+    i: usize,
+    assigned: usize,
+    cost: f64,
+    assign: &mut Vec<Option<usize>>,
+    residual: &mut Vec<f64>,
+    best: &mut Option<(Vec<Option<usize>>, f64)>,
+    global_best: f64,
+) {
+    let n = inst.n();
+    let cutoff = best.as_ref().map(|b| b.1).unwrap_or(global_best);
+    if cost >= cutoff {
+        return;
+    }
+    if i == n {
+        if assigned >= inst.t_min {
+            *best = Some((assign.clone(), cost));
+        }
+        return;
+    }
+    // Prune: even assigning every remaining device can't reach t_min.
+    if assigned + (n - i) < inst.t_min {
+        return;
+    }
+    // Try each open edge.
+    for &j in open {
+        if residual[j] + 1e-9 >= inst.lambda[i] {
+            residual[j] -= inst.lambda[i];
+            assign[i] = Some(j);
+            dfs(
+                inst,
+                open,
+                i + 1,
+                assigned + 1,
+                cost + inst.l * inst.c_d[i][j],
+                assign,
+                residual,
+                best,
+                global_best,
+            );
+            assign[i] = None;
+            residual[j] += inst.lambda[i];
+        }
+    }
+    // Leave unassigned (allowed if t_min still reachable — checked above).
+    dfs(inst, open, i + 1, assigned, cost, assign, residual, best, global_best);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hflop::{Instance, InstanceBuilder};
+
+    #[test]
+    fn hand_solvable_instance() {
+        // 2 devices, 2 edges. Device i free at edge i, expensive across.
+        // Opening both: cost c_e = 2, local 0. Opening one: c_e 1 + one
+        // remote assignment l*1 = 2 -> total 3. Optimal: open both = 2.
+        let inst = Instance {
+            c_d: vec![vec![0.0, 1.0], vec![1.0, 0.0]],
+            c_e: vec![1.0, 1.0],
+            lambda: vec![1.0, 1.0],
+            r: vec![10.0, 10.0],
+            l: 2.0,
+            t_min: 2,
+        };
+        let (sol, cost) = brute_force(&inst).unwrap();
+        assert!((cost - 2.0).abs() < 1e-9);
+        assert_eq!(sol.assign, vec![Some(0), Some(1)]);
+    }
+
+    #[test]
+    fn prefers_single_edge_when_global_links_costly() {
+        // Same but edge-cloud cost 10: open one edge (10) + remote (2)
+        // = 12 vs both open = 20.
+        let inst = Instance {
+            c_d: vec![vec![0.0, 1.0], vec![1.0, 0.0]],
+            c_e: vec![10.0, 10.0],
+            lambda: vec![1.0, 1.0],
+            r: vec![10.0, 10.0],
+            l: 2.0,
+            t_min: 2,
+        };
+        let (sol, cost) = brute_force(&inst).unwrap();
+        assert!((cost - 12.0).abs() < 1e-9);
+        assert_eq!(sol.n_open(), 1);
+    }
+
+    #[test]
+    fn capacity_forces_spread() {
+        // One edge free for both, but capacity 1 forces the second device
+        // to the other (expensive) edge.
+        let inst = Instance {
+            c_d: vec![vec![0.0, 5.0], vec![0.0, 5.0]],
+            c_e: vec![1.0, 1.0],
+            lambda: vec![1.0, 1.0],
+            r: vec![1.0, 10.0],
+            l: 1.0,
+            t_min: 2,
+        };
+        let (sol, cost) = brute_force(&inst).unwrap();
+        sol.check_feasible(&inst).unwrap();
+        assert!((cost - (1.0 + 1.0 + 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn t_min_allows_dropping_expensive_devices() {
+        // Device 1 is expensive everywhere; with t_min = 1 it is dropped.
+        let inst = Instance {
+            c_d: vec![vec![0.0, 0.0], vec![100.0, 100.0]],
+            c_e: vec![1.0, 1.0],
+            lambda: vec![1.0, 1.0],
+            r: vec![10.0, 10.0],
+            l: 1.0,
+            t_min: 1,
+        };
+        let (sol, cost) = brute_force(&inst).unwrap();
+        assert_eq!(sol.assign[1], None);
+        assert!((cost - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let inst = Instance {
+            c_d: vec![vec![0.0], vec![0.0]],
+            c_e: vec![1.0],
+            lambda: vec![5.0, 5.0],
+            r: vec![1.0],
+            l: 1.0,
+            t_min: 1,
+        };
+        assert!(brute_force(&inst).is_none());
+    }
+
+    #[test]
+    fn solution_always_feasible() {
+        for seed in 0..10 {
+            let inst = InstanceBuilder::random(7, 3, seed).t_min(6).build();
+            if let Some((sol, cost)) = brute_force(&inst) {
+                sol.check_feasible(&inst).unwrap();
+                assert!((sol.cost(&inst) - cost).abs() < 1e-9);
+            }
+        }
+    }
+}

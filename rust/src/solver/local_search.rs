@@ -1,0 +1,159 @@
+//! Local search for HFLOP in the style of Arya et al. (STOC'01) facility
+//! location local search — the large-instance heuristic path the paper's
+//! §IV-C points to.
+//!
+//! Moves over the open-edge set: **open** a closed edge, **close** an open
+//! edge, **swap** an open edge for a closed one. After each candidate move
+//! the assignment is re-completed with the shared capacity-aware greedy;
+//! the move is kept iff total cost strictly improves. Terminates at a
+//! local optimum or after `max_rounds` sweeps.
+
+use super::greedy::greedy;
+use super::solution::{complete_assignment, Assignment};
+use crate::hflop::Instance;
+
+#[derive(Debug, Clone)]
+pub struct LocalSearchOptions {
+    pub max_rounds: usize,
+}
+
+impl Default for LocalSearchOptions {
+    fn default() -> Self {
+        LocalSearchOptions { max_rounds: 50 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LocalSearchOutcome {
+    pub best: Option<Assignment>,
+    pub cost: f64,
+    pub rounds: usize,
+    pub moves: usize,
+}
+
+/// Run local search starting from the greedy solution (or all-open if
+/// greedy fails).
+pub fn local_search(inst: &Instance, opts: &LocalSearchOptions) -> LocalSearchOutcome {
+    let m = inst.m();
+    let start = greedy(inst);
+    let (mut open, mut best_cost, mut best) = match start.best {
+        Some(sol) => (sol.open.clone(), start.cost, Some(sol)),
+        None => match complete_assignment(inst, &vec![true; m]) {
+            Some(sol) => (sol.open.clone(), sol.cost(inst), Some(sol)),
+            None => {
+                return LocalSearchOutcome { best: None, cost: f64::INFINITY, rounds: 0, moves: 0 }
+            }
+        },
+    };
+
+    let mut moves = 0usize;
+    let mut rounds = 0usize;
+    for round in 0..opts.max_rounds {
+        rounds = round + 1;
+        let mut improved = false;
+
+        // Candidate move generator: open / close / swap.
+        let mut candidates: Vec<Vec<bool>> = Vec::new();
+        for j in 0..m {
+            let mut s = open.clone();
+            s[j] = !s[j];
+            candidates.push(s); // open or close j
+        }
+        for a in 0..m {
+            if !open[a] {
+                continue;
+            }
+            for b in 0..m {
+                if open[b] {
+                    continue;
+                }
+                let mut s = open.clone();
+                s[a] = false;
+                s[b] = true;
+                candidates.push(s); // swap a -> b
+            }
+        }
+
+        for cand in candidates {
+            if !cand.iter().any(|&o| o) {
+                continue; // all-closed can never serve t_min > 0
+            }
+            if let Some(sol) = complete_assignment(inst, &cand) {
+                let c = sol.cost(inst);
+                if c < best_cost - 1e-12 {
+                    best_cost = c;
+                    open = sol.open.clone();
+                    best = Some(sol);
+                    improved = true;
+                    moves += 1;
+                    break; // first-improvement; restart sweep
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    LocalSearchOutcome { best, cost: best_cost, rounds, moves }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hflop::InstanceBuilder;
+    use crate::solver::brute::brute_force;
+    use crate::solver::greedy::greedy;
+
+    #[test]
+    fn improves_or_matches_greedy() {
+        for seed in 0..6 {
+            let inst = InstanceBuilder::random(12, 4, seed).t_min(10).build();
+            let g = greedy(&inst);
+            let ls = local_search(&inst, &LocalSearchOptions::default());
+            if g.cost.is_finite() {
+                assert!(ls.cost <= g.cost + 1e-9, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn close_to_optimal_on_small_instances() {
+        let mut total_gap = 0.0;
+        let mut cnt = 0;
+        for seed in 0..8 {
+            let inst = InstanceBuilder::unit_cost(9, 3, seed).build();
+            let ls = local_search(&inst, &LocalSearchOptions::default());
+            let (_, opt) = brute_force(&inst).unwrap();
+            assert!(ls.cost >= opt - 1e-9);
+            total_gap += (ls.cost - opt) / opt.max(1e-9);
+            cnt += 1;
+        }
+        // Average optimality gap on this family must be small.
+        assert!(total_gap / cnt as f64 <= 0.15, "avg gap {}", total_gap / cnt as f64);
+    }
+
+    #[test]
+    fn result_feasible() {
+        let inst = InstanceBuilder::unit_cost(60, 8, 3).build();
+        let ls = local_search(&inst, &LocalSearchOptions::default());
+        ls.best.unwrap().check_feasible(&inst).unwrap();
+    }
+
+    #[test]
+    fn handles_infeasible() {
+        let mut inst = InstanceBuilder::unit_cost(5, 2, 4).build();
+        for r in inst.r.iter_mut() {
+            *r = 0.0;
+        }
+        let ls = local_search(&inst, &LocalSearchOptions::default());
+        assert!(ls.best.is_none());
+    }
+
+    #[test]
+    fn round_limit_respected() {
+        let inst = InstanceBuilder::random(30, 6, 5).t_min(28).build();
+        let ls = local_search(&inst, &LocalSearchOptions { max_rounds: 2 });
+        assert!(ls.rounds <= 2);
+    }
+}

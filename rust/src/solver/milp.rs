@@ -1,0 +1,204 @@
+//! HFLOP → LP-relaxation encoder (Eq. 1–7 with integrality relaxed).
+//!
+//! Variable layout: `x_ij ↦ i*m + j` for i<n, j<m; `y_j ↦ n*m + j`.
+//! Branch & bound passes down variable fixings which are encoded as
+//! equality rows. Two linking styles:
+//!
+//! * **disaggregated** — `x_ij ≤ y_j` for every pair (tight bound, n·m
+//!   rows); used while `n·m` stays small.
+//! * **aggregated** — `Σ_i x_ij ≤ n·y_j` plus the capacity row
+//!   `Σ_i λ_i x_ij ≤ r_j y_j` (weaker but only 2m rows).
+
+use super::lp::{Cmp, Lp};
+use crate::hflop::Instance;
+
+/// Index of x_ij in the LP variable vector.
+#[inline]
+pub fn xv(i: usize, j: usize, m: usize) -> usize {
+    i * m + j
+}
+
+/// Index of y_j in the LP variable vector.
+#[inline]
+pub fn yv(j: usize, n: usize, m: usize) -> usize {
+    n * m + j
+}
+
+/// Total LP variables.
+pub fn n_vars(inst: &Instance) -> usize {
+    inst.n() * inst.m() + inst.m()
+}
+
+/// A variable fixing (from branching): var index → 0.0 or 1.0.
+pub type Fixing = (usize, f64);
+
+/// Build the LP relaxation. `disaggregate` picks the linking style.
+pub fn build_relaxation(inst: &Instance, fixings: &[Fixing], disaggregate: bool) -> Lp {
+    let (n, m) = (inst.n(), inst.m());
+    let mut lp = Lp::new(n_vars(inst));
+
+    // Objective (Eq. 1).
+    for i in 0..n {
+        for j in 0..m {
+            lp.set_obj(xv(i, j, m), inst.l * inst.c_d[i][j]);
+        }
+    }
+    for j in 0..m {
+        lp.set_obj(yv(j, n, m), inst.c_e[j]);
+    }
+
+    // (5) each device with at most one aggregator.
+    for i in 0..n {
+        lp.add_row((0..m).map(|j| (xv(i, j, m), 1.0)).collect(), Cmp::Le, 1.0);
+    }
+
+    // (2)/(3) linking + (4) capacity.
+    for j in 0..m {
+        if disaggregate {
+            for i in 0..n {
+                lp.add_row(
+                    vec![(xv(i, j, m), 1.0), (yv(j, n, m), -1.0)],
+                    Cmp::Le,
+                    0.0,
+                );
+            }
+        } else {
+            lp.add_row(
+                (0..n)
+                    .map(|i| (xv(i, j, m), 1.0))
+                    .chain([(yv(j, n, m), -(n as f64))])
+                    .collect(),
+                Cmp::Le,
+                0.0,
+            );
+        }
+        // Capacity, tightened with the y linking (valid since x_ij ≤ y_j).
+        if inst.r[j].is_finite() {
+            lp.add_row(
+                (0..n)
+                    .map(|i| (xv(i, j, m), inst.lambda[i]))
+                    .chain([(yv(j, n, m), -inst.r[j])])
+                    .collect(),
+                Cmp::Le,
+                0.0,
+            );
+        }
+    }
+
+    // (6) minimum participation.
+    if inst.t_min > 0 {
+        lp.add_row(
+            (0..n)
+                .flat_map(|i| (0..m).map(move |j| (xv(i, j, m), 1.0)))
+                .collect(),
+            Cmp::Ge,
+            inst.t_min as f64,
+        );
+    }
+
+    // y_j <= 1 (x_ij <= 1 follows from (5)).
+    for j in 0..m {
+        lp.add_row(vec![(yv(j, n, m), 1.0)], Cmp::Le, 1.0);
+    }
+
+    // Branching fixings.
+    for &(var, val) in fixings {
+        lp.add_row(vec![(var, 1.0)], Cmp::Eq, val);
+    }
+
+    lp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hflop::InstanceBuilder;
+    use crate::solver::lp::LpResult;
+
+    #[test]
+    fn index_layout_bijective() {
+        let (n, m) = (5, 3);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..n {
+            for j in 0..m {
+                assert!(seen.insert(xv(i, j, m)));
+            }
+        }
+        for j in 0..m {
+            assert!(seen.insert(yv(j, n, m)));
+        }
+        assert_eq!(seen.len(), n * m + m);
+        assert_eq!(*seen.iter().max().unwrap(), n * m + m - 1);
+    }
+
+    #[test]
+    fn relaxation_solves_and_lower_bounds() {
+        let inst = InstanceBuilder::unit_cost(8, 3, 1).build();
+        for disagg in [true, false] {
+            let lp = build_relaxation(&inst, &[], disagg);
+            match lp.solve() {
+                LpResult::Optimal { obj, x } => {
+                    assert!(obj >= -1e-9);
+                    // All y <= 1.
+                    for j in 0..3 {
+                        assert!(x[yv(j, 8, 3)] <= 1.0 + 1e-6);
+                    }
+                    // Participation satisfied.
+                    let total: f64 = (0..8)
+                        .flat_map(|i| (0..3).map(move |j| (i, j)))
+                        .map(|(i, j)| x[xv(i, j, 3)])
+                        .sum();
+                    assert!(total >= 8.0 - 1e-6);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn disaggregated_bound_at_least_aggregated() {
+        let inst = InstanceBuilder::random(10, 3, 2).t_min(8).build();
+        let oa = match build_relaxation(&inst, &[], false).solve() {
+            LpResult::Optimal { obj, .. } => obj,
+            o => panic!("{o:?}"),
+        };
+        let od = match build_relaxation(&inst, &[], true).solve() {
+            LpResult::Optimal { obj, .. } => obj,
+            o => panic!("{o:?}"),
+        };
+        assert!(od >= oa - 1e-6, "disagg {od} agg {oa}");
+    }
+
+    #[test]
+    fn fixing_y_zero_forces_x_zero() {
+        // Uncapacitated so closing edge 0 stays feasible with t_min = n.
+        let inst = InstanceBuilder::unit_cost(6, 2, 3).uncapacitated().build();
+        let (n, m) = (6, 2);
+        let lp = build_relaxation(&inst, &[(yv(0, n, m), 0.0)], true);
+        match lp.solve() {
+            LpResult::Optimal { x, .. } => {
+                for i in 0..n {
+                    assert!(x[xv(i, 0, m)] < 1e-6);
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_when_all_edges_closed() {
+        let inst = InstanceBuilder::unit_cost(4, 2, 4).build();
+        let fixings = vec![(yv(0, 4, 2), 0.0), (yv(1, 4, 2), 0.0)];
+        let lp = build_relaxation(&inst, &fixings, true);
+        assert_eq!(lp.solve(), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn uncapacitated_skips_capacity_rows() {
+        let inst = InstanceBuilder::unit_cost(4, 2, 5).uncapacitated().build();
+        let lp_u = build_relaxation(&inst, &[], true);
+        let capped = InstanceBuilder::unit_cost(4, 2, 5).build();
+        let lp_c = build_relaxation(&capped, &[], true);
+        assert!(lp_u.rows.len() < lp_c.rows.len());
+    }
+}

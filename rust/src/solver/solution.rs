@@ -1,0 +1,296 @@
+//! Solution representation, feasibility checking, cost evaluation, and the
+//! capacity-aware assignment-completion heuristic shared by the greedy,
+//! local-search and branch & bound incumbent rounding.
+
+use crate::hflop::Instance;
+
+/// A (candidate) HFLOP solution: device→edge assignment + open aggregators.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    /// `assign[i] = Some(j)` if device i is served by edge j (x_ij = 1).
+    pub assign: Vec<Option<usize>>,
+    /// `open[j] = true` if an aggregator is placed at edge j (y_j = 1).
+    pub open: Vec<bool>,
+}
+
+impl Assignment {
+    pub fn empty(n: usize, m: usize) -> Assignment {
+        Assignment { assign: vec![None; n], open: vec![false; m] }
+    }
+
+    pub fn n_assigned(&self) -> usize {
+        self.assign.iter().filter(|a| a.is_some()).count()
+    }
+
+    pub fn n_open(&self) -> usize {
+        self.open.iter().filter(|&&o| o).count()
+    }
+
+    /// Devices served by edge `j`.
+    pub fn devices_of(&self, j: usize) -> Vec<usize> {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &a)| (a == Some(j)).then_some(i))
+            .collect()
+    }
+
+    /// Objective value (Eq. 1): `Σ x_ij c_d[i][j] l + Σ y_j c_e[j]`.
+    pub fn cost(&self, inst: &Instance) -> f64 {
+        let local: f64 = self
+            .assign
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &a)| a.map(|j| inst.c_d[i][j]))
+            .sum();
+        let global: f64 = self
+            .open
+            .iter()
+            .enumerate()
+            .filter_map(|(j, &o)| o.then_some(inst.c_e[j]))
+            .sum();
+        local * inst.l + global
+    }
+
+    /// Load (Σ λ_i of assigned devices) per edge.
+    pub fn loads(&self, inst: &Instance) -> Vec<f64> {
+        let mut loads = vec![0.0; inst.m()];
+        for (i, &a) in self.assign.iter().enumerate() {
+            if let Some(j) = a {
+                loads[j] += inst.lambda[i];
+            }
+        }
+        loads
+    }
+
+    /// Check all HFLOP constraints (2)–(6). Returns a violation message.
+    pub fn check_feasible(&self, inst: &Instance) -> Result<(), String> {
+        let (n, m) = (inst.n(), inst.m());
+        if self.assign.len() != n || self.open.len() != m {
+            return Err("dimension mismatch".into());
+        }
+        // (2) x_ij <= y_j: assigned edge must be open.
+        for (i, &a) in self.assign.iter().enumerate() {
+            if let Some(j) = a {
+                if j >= m {
+                    return Err(format!("device {i} assigned to invalid edge {j}"));
+                }
+                if !self.open[j] {
+                    return Err(format!("device {i} assigned to closed edge {j}"));
+                }
+            }
+        }
+        // (3) y_j <= sum_i x_ij: no empty open aggregator.
+        for j in 0..m {
+            if self.open[j] && !self.assign.iter().any(|&a| a == Some(j)) {
+                return Err(format!("edge {j} open but serves no device"));
+            }
+        }
+        // (4) capacity.
+        for (j, load) in self.loads(inst).iter().enumerate() {
+            if *load > inst.r[j] + 1e-9 {
+                return Err(format!(
+                    "edge {j} overloaded: load {load:.3} > capacity {:.3}",
+                    inst.r[j]
+                ));
+            }
+        }
+        // (6) minimum participation.
+        if self.n_assigned() < inst.t_min {
+            return Err(format!(
+                "participation {} < T {}",
+                self.n_assigned(),
+                inst.t_min
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Given a fixed set of open edges, greedily complete a device assignment:
+/// devices in decreasing-λ order (first-fit-decreasing flavor), each to its
+/// cheapest open edge with residual capacity (ties: larger residual).
+///
+/// Returns None if fewer than `t_min` devices could be assigned.
+/// Closes any edge that ends up unused (constraint 3).
+pub fn complete_assignment(inst: &Instance, open: &[bool]) -> Option<Assignment> {
+    let (n, m) = (inst.n(), inst.m());
+    debug_assert_eq!(open.len(), m);
+    let mut residual: Vec<f64> = (0..m)
+        .map(|j| if open[j] { inst.r[j] } else { 0.0 })
+        .collect();
+
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| inst.lambda[b].partial_cmp(&inst.lambda[a]).unwrap());
+
+    let mut assign = vec![None; n];
+    let mut assigned = 0usize;
+    for &i in &order {
+        let mut best: Option<usize> = None;
+        for j in 0..m {
+            if !open[j] || residual[j] + 1e-9 < inst.lambda[i] {
+                continue;
+            }
+            best = match best {
+                None => Some(j),
+                Some(b) => {
+                    let (cb, cj) = (inst.c_d[i][b], inst.c_d[i][j]);
+                    if cj < cb - 1e-12 || (cj < cb + 1e-12 && residual[j] > residual[b]) {
+                        Some(j)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        if let Some(j) = best {
+            assign[i] = Some(j);
+            residual[j] -= inst.lambda[i];
+            assigned += 1;
+        }
+    }
+    if assigned < inst.t_min {
+        return None;
+    }
+    // Close unused edges (constraint 3) — cost never increases.
+    let mut open = open.to_vec();
+    for j in 0..m {
+        if open[j] && !assign.iter().any(|&a| a == Some(j)) {
+            open[j] = false;
+        }
+    }
+    Some(Assignment { assign, open })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hflop::InstanceBuilder;
+
+    fn tiny() -> Instance {
+        // 3 devices, 2 edges; device costs chosen by hand.
+        Instance {
+            c_d: vec![
+                vec![0.0, 1.0],
+                vec![1.0, 0.0],
+                vec![1.0, 1.0],
+            ],
+            c_e: vec![5.0, 4.0],
+            lambda: vec![1.0, 1.0, 1.0],
+            r: vec![2.0, 2.0],
+            l: 2.0,
+            t_min: 3,
+        }
+    }
+
+    #[test]
+    fn cost_formula() {
+        let inst = tiny();
+        let a = Assignment {
+            assign: vec![Some(0), Some(1), Some(0)],
+            open: vec![true, true],
+        };
+        // local: (0 + 0 + 1) * l=2 -> 2 ; global: 5 + 4 = 9 -> total 11.
+        assert!((a.cost(&inst) - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feasible_solution_passes() {
+        let inst = tiny();
+        let a = Assignment {
+            assign: vec![Some(0), Some(1), Some(1)],
+            open: vec![true, true],
+        };
+        a.check_feasible(&inst).unwrap();
+    }
+
+    #[test]
+    fn detects_closed_edge_assignment() {
+        let inst = tiny();
+        let a = Assignment {
+            assign: vec![Some(0), Some(0), None],
+            open: vec![true, false],
+        };
+        let err = a.check_feasible(&inst).unwrap_err();
+        assert!(err.contains("participation") || err.contains("closed"));
+    }
+
+    #[test]
+    fn detects_empty_open_edge() {
+        let mut inst = tiny();
+        inst.t_min = 2;
+        inst.r = vec![3.0, 3.0];
+        let a = Assignment {
+            assign: vec![Some(0), Some(0), Some(0)],
+            open: vec![true, true], // edge 1 open but unused
+        };
+        let err = a.check_feasible(&inst).unwrap_err();
+        assert!(err.contains("serves no device"), "{err}");
+    }
+
+    #[test]
+    fn detects_overload() {
+        let inst = tiny(); // capacity 2.0 each
+        let a = Assignment {
+            assign: vec![Some(0), Some(0), Some(0)],
+            open: vec![true, false],
+        };
+        let err = a.check_feasible(&inst).unwrap_err();
+        assert!(err.contains("overloaded"), "{err}");
+    }
+
+    #[test]
+    fn detects_low_participation() {
+        let inst = tiny();
+        let a = Assignment {
+            assign: vec![Some(0), Some(0), None],
+            open: vec![true, false],
+        };
+        assert!(a.check_feasible(&inst).is_err());
+    }
+
+    #[test]
+    fn complete_assignment_respects_capacity() {
+        let inst = tiny();
+        let sol = complete_assignment(&inst, &[true, true]).unwrap();
+        sol.check_feasible(&inst).unwrap();
+        let loads = sol.loads(&inst);
+        assert!(loads.iter().zip(&inst.r).all(|(l, r)| l <= r));
+    }
+
+    #[test]
+    fn complete_assignment_prefers_cheap_edges() {
+        let mut inst = tiny();
+        inst.r = vec![10.0, 10.0]; // no capacity pressure
+        let sol = complete_assignment(&inst, &[true, true]).unwrap();
+        assert_eq!(sol.assign[0], Some(0)); // device 0 free at edge 0
+        assert_eq!(sol.assign[1], Some(1)); // device 1 free at edge 1
+    }
+
+    #[test]
+    fn complete_assignment_fails_when_capacity_short() {
+        let mut inst = tiny();
+        inst.r = vec![1.0, 1.0]; // only two devices fit, t_min = 3
+        assert!(complete_assignment(&inst, &[true, true]).is_none());
+    }
+
+    #[test]
+    fn complete_assignment_closes_unused() {
+        let mut inst = tiny();
+        inst.t_min = 2;
+        inst.r = vec![5.0, 5.0];
+        inst.c_d = vec![vec![0.0, 9.0], vec![0.0, 9.0], vec![0.0, 9.0]];
+        let sol = complete_assignment(&inst, &[true, true]).unwrap();
+        assert!(sol.open[0]);
+        assert!(!sol.open[1], "unused edge should be closed");
+        sol.check_feasible(&inst).unwrap();
+    }
+
+    #[test]
+    fn complete_on_unit_cost_instance() {
+        let inst = InstanceBuilder::unit_cost(50, 5, 3).build();
+        let sol = complete_assignment(&inst, &[true; 5]).unwrap();
+        sol.check_feasible(&inst).unwrap();
+        assert_eq!(sol.n_assigned(), 50);
+    }
+}

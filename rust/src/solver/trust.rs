@@ -1,0 +1,123 @@
+//! §VI extension — privacy-constrained HFLOP: "enforcing privacy-related
+//! constraints, where a device is allowed to associate only with edge
+//! nodes that it trusts ... implemented with modified or additional HFLOP
+//! constraints."
+//!
+//! Implementation: forbidden (device, edge) pairs get a prohibitive
+//! communication cost, which drives `x_ij = 0` in any optimal solution;
+//! the result is then verified to use no forbidden pair (if the instance
+//! is only feasible *through* a forbidden pair, that is reported as
+//! infeasibility rather than silently violating trust).
+
+use super::{solve, Solution, SolveError, SolveOptions};
+use crate::hflop::Instance;
+
+/// Per-pair trust matrix: `allowed[i][j] = false` forbids assigning
+/// device i to edge j.
+pub type TrustMatrix = Vec<Vec<bool>>;
+
+/// Cost surrogate for a forbidden link. Large enough to dominate any
+/// realistic cost sum, small enough to keep the simplex well-conditioned.
+const FORBIDDEN_COST: f64 = 1e7;
+
+/// Build the trust-penalized instance.
+pub fn apply_trust(inst: &Instance, allowed: &TrustMatrix) -> anyhow::Result<Instance> {
+    anyhow::ensure!(allowed.len() == inst.n(), "trust matrix rows != n");
+    let mut out = inst.clone();
+    for (i, row) in allowed.iter().enumerate() {
+        anyhow::ensure!(row.len() == inst.m(), "trust matrix cols != m");
+        for (j, &ok) in row.iter().enumerate() {
+            if !ok {
+                out.c_d[i][j] = FORBIDDEN_COST;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Solve HFLOP under trust constraints.
+pub fn solve_with_trust(
+    inst: &Instance,
+    allowed: &TrustMatrix,
+    opts: &SolveOptions,
+) -> Result<Solution, SolveError> {
+    let penalized = apply_trust(inst, allowed)
+        .map_err(|e| SolveError::Invalid(e.to_string()))?;
+    let sol = solve(&penalized, opts)?;
+    // Verify: no forbidden pair in the solution.
+    for (i, &a) in sol.assignment.assign.iter().enumerate() {
+        if let Some(j) = a {
+            if !allowed[i][j] {
+                return Err(SolveError::Infeasible(format!(
+                    "device {i} can only be served by untrusted edge {j}"
+                )));
+            }
+        }
+    }
+    // Report the true (unpenalized) cost.
+    let cost = sol.assignment.cost(inst);
+    Ok(Solution { cost, ..sol })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hflop::InstanceBuilder;
+
+    fn all_allowed(n: usize, m: usize) -> TrustMatrix {
+        vec![vec![true; m]; n]
+    }
+
+    #[test]
+    fn no_restrictions_matches_plain_solve() {
+        let inst = InstanceBuilder::unit_cost(12, 3, 1).build();
+        let plain = solve(&inst, &SolveOptions::exact()).unwrap();
+        let trusted = solve_with_trust(&inst, &all_allowed(12, 3), &SolveOptions::exact()).unwrap();
+        assert!((plain.cost - trusted.cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn forbidden_pair_avoided() {
+        let inst = InstanceBuilder::unit_cost(12, 3, 2).build();
+        let plain = solve(&inst, &SolveOptions::exact()).unwrap();
+        // Forbid every device's currently-assigned edge for device 0.
+        let j0 = plain.assignment.assign[0].unwrap();
+        let mut allowed = all_allowed(12, 3);
+        allowed[0][j0] = false;
+        let trusted = solve_with_trust(&inst, &allowed, &SolveOptions::exact()).unwrap();
+        assert_ne!(trusted.assignment.assign[0], Some(j0));
+        trusted.assignment.check_feasible(&inst).unwrap();
+        // Trust can only cost more (or equal).
+        assert!(trusted.cost >= plain.cost - 1e-9);
+    }
+
+    #[test]
+    fn cost_reported_without_penalty() {
+        let inst = InstanceBuilder::unit_cost(8, 2, 3).build();
+        let mut allowed = all_allowed(8, 2);
+        allowed[0][0] = false;
+        let trusted = solve_with_trust(&inst, &allowed, &SolveOptions::exact()).unwrap();
+        assert!(trusted.cost < 1e6, "penalty leaked into cost: {}", trusted.cost);
+    }
+
+    #[test]
+    fn infeasible_when_only_untrusted_capacity_remains() {
+        // Two edges; device 0 trusts neither -> with T = n this must fail.
+        let inst = InstanceBuilder::unit_cost(6, 2, 4).build();
+        let mut allowed = all_allowed(6, 2);
+        allowed[0][0] = false;
+        allowed[0][1] = false;
+        let r = solve_with_trust(&inst, &allowed, &SolveOptions::exact());
+        assert!(matches!(r, Err(SolveError::Infeasible(_))), "{r:?}");
+    }
+
+    #[test]
+    fn trust_matrix_shape_validated() {
+        let inst = InstanceBuilder::unit_cost(4, 2, 5).build();
+        let bad = vec![vec![true; 2]; 3];
+        assert!(matches!(
+            solve_with_trust(&inst, &bad, &SolveOptions::exact()),
+            Err(SolveError::Invalid(_))
+        ));
+    }
+}

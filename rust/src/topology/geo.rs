@@ -1,0 +1,95 @@
+//! Geographic primitives: points, great-circle distance, bounding boxes.
+//!
+//! The synthetic METR-LA substitute places sensors inside the Los Angeles
+//! County bounding box the real dataset covers (Fig. 4 in the paper).
+
+/// A WGS-84 latitude/longitude point (degrees).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeoPoint {
+    pub lat: f64,
+    pub lon: f64,
+}
+
+/// Bounding box: (lat_min, lat_max, lon_min, lon_max).
+pub type BBox = (f64, f64, f64, f64);
+
+/// The METR-LA sensor region (LA County highways, cf. paper Fig. 4).
+pub const LA_BBOX: BBox = (34.0, 34.2, -118.5, -118.2);
+
+/// Great-circle distance between two points in km (haversine formula).
+pub fn haversine_km(a: GeoPoint, b: GeoPoint) -> f64 {
+    const R_EARTH_KM: f64 = 6371.0;
+    let (lat1, lon1) = (a.lat.to_radians(), a.lon.to_radians());
+    let (lat2, lon2) = (b.lat.to_radians(), b.lon.to_radians());
+    let dlat = lat2 - lat1;
+    let dlon = lon2 - lon1;
+    let h = (dlat / 2.0).sin().powi(2) + lat1.cos() * lat2.cos() * (dlon / 2.0).sin().powi(2);
+    2.0 * R_EARTH_KM * h.sqrt().asin()
+}
+
+impl GeoPoint {
+    /// Linear interpolation between two points (for corridor layouts).
+    pub fn lerp(self, other: GeoPoint, t: f64) -> GeoPoint {
+        GeoPoint {
+            lat: self.lat + (other.lat - self.lat) * t,
+            lon: self.lon + (other.lon - self.lon) * t,
+        }
+    }
+
+    pub fn in_bbox(self, bbox: BBox) -> bool {
+        (bbox.0..=bbox.1).contains(&self.lat) && (bbox.2..=bbox.3).contains(&self.lon)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_distance() {
+        let p = GeoPoint { lat: 34.05, lon: -118.25 };
+        assert!(haversine_km(p, p) < 1e-9);
+    }
+
+    #[test]
+    fn known_distance_la_to_sf() {
+        // LA (34.05, -118.24) to SF (37.77, -122.42) ≈ 559 km.
+        let la = GeoPoint { lat: 34.05, lon: -118.24 };
+        let sf = GeoPoint { lat: 37.77, lon: -122.42 };
+        let d = haversine_km(la, sf);
+        assert!((d - 559.0).abs() < 5.0, "{d}");
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = GeoPoint { lat: 34.0, lon: -118.3 };
+        let b = GeoPoint { lat: 34.1, lon: -118.5 };
+        assert!((haversine_km(a, b) - haversine_km(b, a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangle_inequality() {
+        let a = GeoPoint { lat: 34.00, lon: -118.40 };
+        let b = GeoPoint { lat: 34.10, lon: -118.30 };
+        let c = GeoPoint { lat: 34.05, lon: -118.20 };
+        assert!(haversine_km(a, c) <= haversine_km(a, b) + haversine_km(b, c) + 1e-9);
+    }
+
+    #[test]
+    fn lerp_endpoints_and_midpoint() {
+        let a = GeoPoint { lat: 34.0, lon: -118.4 };
+        let b = GeoPoint { lat: 34.2, lon: -118.2 };
+        assert_eq!(a.lerp(b, 0.0), a);
+        assert_eq!(a.lerp(b, 1.0), b);
+        let m = a.lerp(b, 0.5);
+        assert!((m.lat - 34.1).abs() < 1e-12);
+        assert!((m.lon + 118.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bbox_containment() {
+        assert!(GeoPoint { lat: 34.1, lon: -118.3 }.in_bbox(LA_BBOX));
+        assert!(!GeoPoint { lat: 35.0, lon: -118.3 }.in_bbox(LA_BBOX));
+        assert!(!GeoPoint { lat: 34.1, lon: -117.0 }.in_bbox(LA_BBOX));
+    }
+}

@@ -1,0 +1,206 @@
+//! Lloyd's k-means over geographic points.
+//!
+//! Used for (a) the paper's location-based clustering baseline (§V-B2,
+//! Fig. 5: sensors clustered by location, one edge server per cluster) and
+//! (b) edge-host placement at cluster centroids in the geo topology
+//! builder. k-means++ seeding for stable quality.
+
+use super::geo::{haversine_km, GeoPoint};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    pub centroids: Vec<GeoPoint>,
+    /// assignment[i] = cluster index of point i.
+    pub assignment: Vec<usize>,
+    /// Sum of squared distances (km^2) to assigned centroids.
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// Run k-means++ / Lloyd. `k` is clamped to the number of points.
+pub fn kmeans(points: &[GeoPoint], k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
+    assert!(!points.is_empty(), "kmeans over empty points");
+    let k = k.clamp(1, points.len());
+
+    // --- k-means++ seeding -------------------------------------------------
+    let mut centroids: Vec<GeoPoint> = Vec::with_capacity(k);
+    centroids.push(points[rng.below(points.len())]);
+    let mut d2: Vec<f64> = points
+        .iter()
+        .map(|&p| haversine_km(p, centroids[0]).powi(2))
+        .collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 1e-12 {
+            // All points coincide with existing centroids; pick any.
+            points[rng.below(points.len())]
+        } else {
+            let mut target = rng.f64() * total;
+            let mut idx = 0;
+            for (i, &w) in d2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+                idx = i;
+            }
+            points[idx]
+        };
+        centroids.push(next);
+        for (i, &p) in points.iter().enumerate() {
+            d2[i] = d2[i].min(haversine_km(p, next).powi(2));
+        }
+    }
+
+    // --- Lloyd iterations --------------------------------------------------
+    let mut assignment = vec![0usize; points.len()];
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // Assign.
+        let mut changed = false;
+        for (i, &p) in points.iter().enumerate() {
+            let best = (0..centroids.len())
+                .min_by(|&a, &b| {
+                    haversine_km(p, centroids[a])
+                        .partial_cmp(&haversine_km(p, centroids[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        // Update (mean in lat/lon space is fine at city scale).
+        let mut sums = vec![(0.0f64, 0.0f64, 0usize); centroids.len()];
+        for (i, &p) in points.iter().enumerate() {
+            let s = &mut sums[assignment[i]];
+            s.0 += p.lat;
+            s.1 += p.lon;
+            s.2 += 1;
+        }
+        for (c, s) in centroids.iter_mut().zip(&sums) {
+            if s.2 > 0 {
+                *c = GeoPoint { lat: s.0 / s.2 as f64, lon: s.1 / s.2 as f64 };
+            } else {
+                // Re-seed an empty cluster at the farthest point.
+                let far = points
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        haversine_km(a, *c).partial_cmp(&haversine_km(b, *c)).unwrap()
+                    })
+                    .unwrap();
+                *c = *far;
+            }
+        }
+    }
+
+    let inertia = points
+        .iter()
+        .zip(&assignment)
+        .map(|(&p, &a)| haversine_km(p, centroids[a]).powi(2))
+        .sum();
+
+    KMeansResult { centroids, assignment, inertia, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two tight blobs 20km apart must be split into their natural clusters.
+    fn blobs(rng: &mut Rng) -> (Vec<GeoPoint>, usize) {
+        let mut pts = Vec::new();
+        for _ in 0..30 {
+            pts.push(GeoPoint {
+                lat: 34.00 + rng.normal() * 0.002,
+                lon: -118.40 + rng.normal() * 0.002,
+            });
+        }
+        for _ in 0..30 {
+            pts.push(GeoPoint {
+                lat: 34.18 + rng.normal() * 0.002,
+                lon: -118.22 + rng.normal() * 0.002,
+            });
+        }
+        (pts, 30)
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let mut rng = Rng::new(1);
+        let (pts, split) = blobs(&mut rng);
+        let r = kmeans(&pts, 2, 100, &mut rng);
+        // All of blob A in one cluster, all of blob B in the other.
+        let a0 = r.assignment[0];
+        assert!(r.assignment[..split].iter().all(|&a| a == a0));
+        assert!(r.assignment[split..].iter().all(|&a| a != a0));
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_clusters() {
+        let mut rng = Rng::new(2);
+        let pts: Vec<GeoPoint> = (0..100)
+            .map(|_| GeoPoint {
+                lat: rng.uniform(34.0, 34.2),
+                lon: rng.uniform(-118.5, -118.2),
+            })
+            .collect();
+        let i2 = kmeans(&pts, 2, 100, &mut Rng::new(3)).inertia;
+        let i8 = kmeans(&pts, 8, 100, &mut Rng::new(3)).inertia;
+        assert!(i8 < i2);
+    }
+
+    #[test]
+    fn k_clamped_to_point_count() {
+        let pts = vec![GeoPoint { lat: 34.0, lon: -118.3 }; 3];
+        let mut rng = Rng::new(4);
+        let r = kmeans(&pts, 10, 50, &mut rng);
+        assert_eq!(r.centroids.len(), 3);
+        assert!(r.assignment.iter().all(|&a| a < 3));
+    }
+
+    #[test]
+    fn k_one_centroid_is_mean() {
+        let pts = vec![
+            GeoPoint { lat: 34.0, lon: -118.4 },
+            GeoPoint { lat: 34.2, lon: -118.2 },
+        ];
+        let mut rng = Rng::new(5);
+        let r = kmeans(&pts, 1, 50, &mut rng);
+        assert!((r.centroids[0].lat - 34.1).abs() < 1e-9);
+        assert!((r.centroids[0].lon + 118.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn assignment_is_nearest_centroid() {
+        let mut rng = Rng::new(6);
+        let pts: Vec<GeoPoint> = (0..60)
+            .map(|_| GeoPoint {
+                lat: rng.uniform(34.0, 34.2),
+                lon: rng.uniform(-118.5, -118.2),
+            })
+            .collect();
+        let r = kmeans(&pts, 4, 100, &mut rng);
+        for (i, &p) in pts.iter().enumerate() {
+            let d_assigned = haversine_km(p, r.centroids[r.assignment[i]]);
+            for &c in &r.centroids {
+                assert!(d_assigned <= haversine_km(p, c) + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn identical_points_do_not_crash() {
+        let pts = vec![GeoPoint { lat: 34.1, lon: -118.3 }; 20];
+        let mut rng = Rng::new(7);
+        let r = kmeans(&pts, 4, 50, &mut rng);
+        assert!(r.inertia < 1e-9);
+    }
+}

@@ -1,0 +1,286 @@
+//! Physical topology model: devices (FL clients / sensors), candidate edge
+//! hosts, the cloud, geographic placement, communication-cost matrices,
+//! and the location-based clustering baseline the paper compares against
+//! (§V-B2: "we first clustered the clients ... based on their location").
+
+pub mod geo;
+pub mod kmeans;
+
+pub use geo::{haversine_km, GeoPoint, LA_BBOX};
+pub use kmeans::{kmeans, KMeansResult};
+
+use crate::util::rng::Rng;
+
+/// An FL device (in the use case: a traffic sensor with compute).
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    pub location: GeoPoint,
+    /// Inference request rate λ_i (requests/s) — §IV-A.
+    pub lambda: f64,
+}
+
+/// A candidate edge host location where an aggregator may be placed.
+#[derive(Debug, Clone)]
+pub struct EdgeHost {
+    pub id: usize,
+    pub location: GeoPoint,
+    /// Inference request processing capacity r_j (requests/s) — §IV-A.
+    pub capacity: f64,
+}
+
+/// A topology instance: devices + edge hosts + cost structure.
+///
+/// Costs follow the paper's model: `c_d[i][j]` is the communication cost
+/// between device i and edge host j (per model exchange), `c_e[j]` between
+/// edge host j and the global server. The cloud has infinite inference
+/// capacity (§IV-A).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub devices: Vec<Device>,
+    pub edges: Vec<EdgeHost>,
+    /// Device-to-edge communication cost matrix, n x m.
+    pub c_d: Vec<Vec<f64>>,
+    /// Edge-to-cloud communication cost vector, m.
+    pub c_e: Vec<f64>,
+}
+
+impl Topology {
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Index of the cheapest edge host for device `i`.
+    pub fn cheapest_edge(&self, i: usize) -> usize {
+        let row = &self.c_d[i];
+        (0..row.len())
+            .min_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+            .expect("topology has no edge hosts")
+    }
+
+    /// Sanity-check matrix dimensions and value ranges.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let (n, m) = (self.n_devices(), self.n_edges());
+        anyhow::ensure!(self.c_d.len() == n, "c_d rows {} != n {}", self.c_d.len(), n);
+        for (i, row) in self.c_d.iter().enumerate() {
+            anyhow::ensure!(row.len() == m, "c_d[{i}] len {} != m {}", row.len(), m);
+            anyhow::ensure!(
+                row.iter().all(|&c| c >= 0.0 && c.is_finite()),
+                "c_d[{i}] negative/NaN"
+            );
+        }
+        anyhow::ensure!(self.c_e.len() == m, "c_e len {} != m {}", self.c_e.len(), m);
+        anyhow::ensure!(self.c_e.iter().all(|&c| c >= 0.0 && c.is_finite()), "c_e negative/NaN");
+        anyhow::ensure!(self.devices.iter().all(|d| d.lambda >= 0.0), "negative lambda");
+        anyhow::ensure!(self.edges.iter().all(|e| e.capacity >= 0.0), "negative capacity");
+        Ok(())
+    }
+}
+
+/// Builder for the geographic topology used in the use-case experiments
+/// (Fig. 5–8): devices at sensor locations, edge hosts at cluster
+/// centroids, costs proportional to distance.
+pub struct GeoTopologyBuilder {
+    pub device_locations: Vec<GeoPoint>,
+    pub n_edges: usize,
+    pub lambda_range: (f64, f64),
+    pub capacity_range: (f64, f64),
+    pub seed: u64,
+}
+
+impl GeoTopologyBuilder {
+    pub fn new(device_locations: Vec<GeoPoint>, n_edges: usize, seed: u64) -> Self {
+        GeoTopologyBuilder {
+            device_locations,
+            n_edges,
+            // Paper §V-C1: each FL device is assigned a rate λ_i; workloads
+            // and capacities are drawn uniformly at random (§V-D).
+            lambda_range: (0.5, 2.0),
+            capacity_range: (5.0, 15.0),
+            seed,
+        }
+    }
+
+    pub fn lambda_range(mut self, lo: f64, hi: f64) -> Self {
+        self.lambda_range = (lo, hi);
+        self
+    }
+
+    pub fn capacity_range(mut self, lo: f64, hi: f64) -> Self {
+        self.capacity_range = (lo, hi);
+        self
+    }
+
+    /// Build: k-means the device locations into `n_edges` clusters, place
+    /// one edge host at each centroid, and derive distance-proportional
+    /// costs (unit cost per km, zero below `FREE_RADIUS_KM`).
+    pub fn build(self) -> Topology {
+        let mut rng = Rng::new(self.seed);
+        let km = kmeans(&self.device_locations, self.n_edges, 50, &mut rng);
+
+        let devices: Vec<Device> = self
+            .device_locations
+            .iter()
+            .enumerate()
+            .map(|(id, &location)| Device {
+                id,
+                location,
+                lambda: rng.uniform(self.lambda_range.0, self.lambda_range.1),
+            })
+            .collect();
+
+        let edges: Vec<EdgeHost> = km
+            .centroids
+            .iter()
+            .enumerate()
+            .map(|(id, &location)| EdgeHost {
+                id,
+                location,
+                capacity: rng.uniform(self.capacity_range.0, self.capacity_range.1),
+            })
+            .collect();
+
+        // Cost: proportional to distance; an edge host within a small
+        // radius is effectively "same LAN" => 0 (paper: "an aggregator
+        // placed inside a device's local area network").
+        const FREE_RADIUS_KM: f64 = 3.0;
+        let c_d = devices
+            .iter()
+            .map(|d| {
+                edges
+                    .iter()
+                    .map(|e| {
+                        let dist = haversine_km(d.location, e.location);
+                        if dist <= FREE_RADIUS_KM {
+                            0.0
+                        } else {
+                            dist
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        // Edge-to-cloud links are metered uniformly; scaled so one global
+        // exchange costs about one moderately-remote local exchange.
+        let c_e = edges.iter().map(|_| 25.0).collect();
+
+        Topology { devices, edges, c_d, c_e }
+    }
+}
+
+/// The paper's §V-D synthetic cost topology: for each device exactly one
+/// edge host is reachable at zero cost (same LAN), every other at unit
+/// cost; all edge-cloud links at unit cost. Workloads/capacities uniform.
+pub fn unit_cost_topology(
+    n_devices: usize,
+    n_edges: usize,
+    lambda_range: (f64, f64),
+    capacity_range: (f64, f64),
+    seed: u64,
+) -> Topology {
+    let mut rng = Rng::new(seed);
+    let devices: Vec<Device> = (0..n_devices)
+        .map(|id| Device {
+            id,
+            location: GeoPoint { lat: 0.0, lon: 0.0 },
+            lambda: rng.uniform(lambda_range.0, lambda_range.1),
+        })
+        .collect();
+    let edges: Vec<EdgeHost> = (0..n_edges)
+        .map(|id| EdgeHost {
+            id,
+            location: GeoPoint { lat: 0.0, lon: 0.0 },
+            capacity: rng.uniform(capacity_range.0, capacity_range.1),
+        })
+        .collect();
+    let c_d = (0..n_devices)
+        .map(|_| {
+            let free = rng.below(n_edges);
+            (0..n_edges).map(|j| if j == free { 0.0 } else { 1.0 }).collect()
+        })
+        .collect();
+    let c_e = vec![1.0; n_edges];
+    Topology { devices, edges, c_d, c_e }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_locations(n: usize) -> Vec<GeoPoint> {
+        (0..n)
+            .map(|i| GeoPoint {
+                lat: 34.0 + 0.01 * (i % 10) as f64,
+                lon: -118.4 + 0.01 * (i / 10) as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn geo_builder_shapes() {
+        let t = GeoTopologyBuilder::new(grid_locations(40), 4, 1).build();
+        assert_eq!(t.n_devices(), 40);
+        assert_eq!(t.n_edges(), 4);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn geo_builder_deterministic() {
+        let a = GeoTopologyBuilder::new(grid_locations(30), 3, 9).build();
+        let b = GeoTopologyBuilder::new(grid_locations(30), 3, 9).build();
+        assert_eq!(a.c_d, b.c_d);
+        for (x, y) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(x.lambda, y.lambda);
+        }
+    }
+
+    #[test]
+    fn geo_builder_lambda_in_range() {
+        let t = GeoTopologyBuilder::new(grid_locations(50), 5, 2)
+            .lambda_range(1.0, 3.0)
+            .capacity_range(10.0, 20.0)
+            .build();
+        assert!(t.devices.iter().all(|d| (1.0..3.0).contains(&d.lambda)));
+        assert!(t.edges.iter().all(|e| (10.0..20.0).contains(&e.capacity)));
+    }
+
+    #[test]
+    fn unit_cost_has_one_free_edge_per_device() {
+        let t = unit_cost_topology(100, 8, (0.5, 2.0), (5.0, 15.0), 3);
+        t.validate().unwrap();
+        for row in &t.c_d {
+            let zeros = row.iter().filter(|&&c| c == 0.0).count();
+            let ones = row.iter().filter(|&&c| c == 1.0).count();
+            assert_eq!(zeros, 1);
+            assert_eq!(ones, 7);
+        }
+        assert!(t.c_e.iter().all(|&c| c == 1.0));
+    }
+
+    #[test]
+    fn cheapest_edge_finds_zero_cost() {
+        let t = unit_cost_topology(20, 5, (0.5, 2.0), (5.0, 15.0), 4);
+        for i in 0..20 {
+            let j = t.cheapest_edge(i);
+            assert_eq!(t.c_d[i][j], 0.0);
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_shapes() {
+        let mut t = unit_cost_topology(5, 2, (0.5, 1.0), (1.0, 2.0), 5);
+        t.c_e.pop();
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_negative_lambda() {
+        let mut t = unit_cost_topology(5, 2, (0.5, 1.0), (1.0, 2.0), 6);
+        t.devices[0].lambda = -1.0;
+        assert!(t.validate().is_err());
+    }
+}

@@ -1,0 +1,72 @@
+//! Leveled stderr logger implementing the `log` facade.
+//!
+//! `HFLOP_LOG=debug|info|warn|error` controls verbosity (default info).
+//! Timestamps are seconds since logger init — wall-clock formatting is
+//! irrelevant for experiment logs, monotonic offsets are what you diff.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+static START: OnceCell<Instant> = OnceCell::new();
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:10.3}] {lvl} {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the logger (idempotent). Level from `HFLOP_LOG` env var.
+pub fn init() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    START.get_or_init(Instant::now);
+    let level = match std::env::var("HFLOP_LOG").as_deref() {
+        Ok("trace") => LevelFilter::Trace,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("error") => LevelFilter::Error,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        log::info!("logging smoke test");
+        assert!(INSTALLED.load(Ordering::SeqCst));
+    }
+}

@@ -1,0 +1,28 @@
+//! Utility substrates built in-tree (the offline environment provides no
+//! serde / rand / clap / criterion): JSON, PRNG + distributions,
+//! statistics, TOML-subset configs, logging, and a tiny bench timer.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod tomlmini;
+
+use std::time::Instant;
+
+/// Measure wall time of `f` in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn time_it_returns_value_and_positive_time() {
+        let (v, t) = super::time_it(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,332 @@
+//! Statistics substrate: summary statistics, confidence intervals,
+//! percentiles, histograms, and online (streaming) accumulators.
+//!
+//! Every figure in the paper reports either a mean with a 95% confidence
+//! interval (Fig. 2, Fig. 9) or a distribution summary (Fig. 7, Fig. 8);
+//! this module is the single implementation both the experiment harnesses
+//! and the bench runner use.
+
+/// Summary of a sample: n, mean, std (sample), min/max, 95% CI half-width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Half-width of the 95% confidence interval on the mean.
+    pub ci95: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of(empty)");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let std = var.sqrt();
+        let ci95 = if n < 2 {
+            f64::INFINITY // t(0) * 0/1 would be NaN; a single sample pins nothing
+        } else {
+            t_critical_975(n - 1) * std / (n as f64).sqrt()
+        };
+        Summary {
+            n,
+            mean,
+            std,
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            ci95,
+        }
+    }
+}
+
+/// Two-sided 97.5% Student-t critical value (for 95% CIs), by degrees of
+/// freedom. Table for small df, normal limit beyond.
+pub fn t_critical_975(df: usize) -> f64 {
+    const TABLE: [f64; 31] = [
+        f64::INFINITY, // df = 0 (degenerate)
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262,
+        2.228, 2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101,
+        2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052,
+        2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        return f64::INFINITY;
+    }
+    if df < TABLE.len() {
+        TABLE[df]
+    } else if df < 60 {
+        2.02
+    } else if df < 120 {
+        2.00
+    } else {
+        1.96
+    }
+}
+
+/// Percentile with linear interpolation (p in [0, 100]). Sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, p)
+}
+
+/// Percentile on pre-sorted data.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Streaming accumulator (Welford). Constant memory; used by the DES to
+/// track per-class latency without storing every sample.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n > 1 {
+            self.m2 / (self.n - 1) as f64
+        } else {
+            0.0
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return f64::INFINITY;
+        }
+        t_critical_975((self.n - 1) as usize) * self.std() / (self.n as f64).sqrt()
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi); out-of-range samples clamp to the
+/// edge bins. Used for latency distribution reporting (Fig. 7).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], total: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let nb = self.bins.len();
+        let idx = if x <= self.lo {
+            0
+        } else if x >= self.hi {
+            nb - 1
+        } else {
+            (((x - self.lo) / (self.hi - self.lo)) * nb as f64) as usize
+        };
+        self.bins[idx.min(nb - 1)] += 1;
+        self.total += 1;
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Bin center for index i.
+    pub fn center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// ASCII rendering for terminal reports.
+    pub fn render(&self, width: usize) -> String {
+        let maxc = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.bins.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width / maxc as usize).max(usize::from(c > 0)));
+            out.push_str(&format!("{:>10.2} | {:<width$} {}\n", self.center(i), bar, c));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        // t(4) = 2.776, sem = sqrt(2.5)/sqrt(5)
+        let expect = 2.776 * (2.5f64).sqrt() / (5f64).sqrt();
+        assert!((s.ci95 - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.std, 0.0);
+        assert!(s.ci95.is_infinite());
+    }
+
+    #[test]
+    fn t_table_monotone_decreasing() {
+        let mut prev = f64::INFINITY;
+        for df in 1..200 {
+            let t = t_critical_975(df);
+            assert!(t <= prev + 1e-9, "df={df}");
+            prev = t;
+        }
+        assert!((t_critical_975(1000) - 1.96).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64).collect();
+        let mut o = OnlineStats::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        let s = Summary::of(&xs);
+        assert!((o.mean() - s.mean).abs() < 1e-9);
+        assert!((o.std() - s.std).abs() < 1e-9);
+        assert_eq!(o.min(), s.min);
+        assert_eq!(o.max(), s.max);
+        assert!((o.ci95() - s.ci95).abs() < 1e-9);
+    }
+
+    #[test]
+    fn online_merge_equals_concat() {
+        let a: Vec<f64> = (0..500).map(|i| (i as f64).sin() * 10.0).collect();
+        let b: Vec<f64> = (0..300).map(|i| (i as f64).cos() * 5.0 + 2.0).collect();
+        let mut oa = OnlineStats::new();
+        let mut ob = OnlineStats::new();
+        a.iter().for_each(|&x| oa.push(x));
+        b.iter().for_each(|&x| ob.push(x));
+        oa.merge(&ob);
+        let all: Vec<f64> = a.iter().chain(b.iter()).cloned().collect();
+        let s = Summary::of(&all);
+        assert!((oa.mean() - s.mean).abs() < 1e-9);
+        assert!((oa.std() - s.std).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let mut a = OnlineStats::new();
+        a.push(1.0);
+        a.push(2.0);
+        let before = a.clone();
+        a.merge(&OnlineStats::new());
+        assert_eq!(a.count(), before.count());
+        let mut e = OnlineStats::new();
+        e.merge(&a);
+        assert_eq!(e.count(), 2);
+        assert!((e.mean() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamping() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-5.0); // clamps to bin 0
+        h.push(0.5);
+        h.push(9.99);
+        h.push(50.0); // clamps to last bin
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.bins()[0], 2);
+        assert_eq!(h.bins()[9], 2);
+        assert!((h.center(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_render_nonempty() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(0.1);
+        h.push(0.9);
+        let r = h.render(20);
+        assert_eq!(r.lines().count(), 4);
+        assert!(r.contains('#'));
+    }
+}

@@ -1,0 +1,288 @@
+//! TOML-subset parser for experiment configuration files.
+//!
+//! Supports the subset the launcher needs: `[section]` and
+//! `[section.subsection]` headers, `key = value` with string / integer /
+//! float / bool / homogeneous-array values, `#` comments, and blank lines.
+//! No multi-line strings, datetimes, or table arrays — configs stay simple
+//! by design (see `configs/*.toml`).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config: flat map from "section.key" (or "key" at top level)
+/// to value.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error on line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(ConfigError {
+                    line: ln + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(ConfigError { line: ln + 1, msg: "empty section".into() });
+                }
+                continue;
+            }
+            let eq = line.find('=').ok_or(ConfigError {
+                line: ln + 1,
+                msg: "expected key = value".into(),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ConfigError { line: ln + 1, msg: "empty key".into() });
+            }
+            let value = parse_value(line[eq + 1..].trim()).map_err(|msg| ConfigError {
+                line: ln + 1,
+                msg,
+            })?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, value);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Ok(Config::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.i64_or(key, default as i64).max(0) as usize
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// All keys under a section prefix ("fl." -> "fl.epochs", ...).
+    pub fn section(&self, prefix: &str) -> impl Iterator<Item = (&String, &Value)> {
+        let want = format!("{prefix}.");
+        self.entries.iter().filter(move |(k, _)| k.starts_with(&want))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let vals: Result<Vec<Value>, String> =
+            inner.split(',').map(|part| parse_value(part.trim())).collect();
+        return Ok(Value::Arr(vals?));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    s.parse::<f64>().map(Value::Float).map_err(|_| format!("bad value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig6"          # inline comment
+seed = 42
+
+[fl]
+clients = 20
+epochs = 5
+lr = 0.0001
+hierarchical = true
+
+[fl.window]
+train_weeks = 3.0
+
+[edges]
+capacities = [10, 20, 30]
+labels = ["a", "b"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "fig6");
+        assert_eq!(c.i64_or("seed", 0), 42);
+        assert_eq!(c.i64_or("fl.clients", 0), 20);
+        assert!((c.f64_or("fl.lr", 0.0) - 1e-4).abs() < 1e-12);
+        assert!(c.bool_or("fl.hierarchical", false));
+        assert!((c.f64_or("fl.window.train_weeks", 0.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arrays() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let caps = c.get("edges.capacities").unwrap().as_arr().unwrap();
+        assert_eq!(caps.len(), 3);
+        assert_eq!(caps[1].as_i64(), Some(20));
+        let labels = c.get("edges.labels").unwrap().as_arr().unwrap();
+        assert_eq!(labels[0].as_str(), Some("a"));
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.i64_or("nope", 7), 7);
+        assert_eq!(c.str_or("fl.nothing", "d"), "d");
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let c = Config::parse("a = 3\nb = 3.0\n").unwrap();
+        assert_eq!(c.get("a").unwrap().as_i64(), Some(3));
+        assert_eq!(c.get("b").unwrap().as_i64(), None);
+        assert_eq!(c.f64_or("a", 0.0), 3.0);
+        assert_eq!(c.f64_or("b", 0.0), 3.0);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let c = Config::parse("tag = \"a#b\"\n").unwrap();
+        assert_eq!(c.str_or("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn section_iteration() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let keys: Vec<_> = c.section("fl").map(|(k, _)| k.clone()).collect();
+        assert!(keys.contains(&"fl.clients".to_string()));
+        assert!(keys.contains(&"fl.window.train_weeks".to_string()));
+        assert!(!keys.contains(&"name".to_string()));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("x = \n").is_err());
+        assert!(Config::parse("x = [1, 2\n").is_err());
+        assert!(Config::parse("x = \"open\n").is_err());
+        let e = Config::parse("ok = 1\nbad\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let c = Config::parse("a = -5\nb = 1e-4\nc = -2.5\n").unwrap();
+        assert_eq!(c.i64_or("a", 0), -5);
+        assert!((c.f64_or("b", 0.0) - 1e-4).abs() < 1e-18);
+        assert!((c.f64_or("c", 0.0) + 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,195 @@
+//! Integration: load the AOT artifacts through PJRT and check numerics
+//! against the jax oracle (`artifacts/oracle_small.json`, produced by
+//! `make artifacts`). This is the cross-language contract test: if it
+//! passes, the rust coordinator is executing exactly the computation the
+//! python/Pallas stack defined.
+
+use std::path::PathBuf;
+
+use hflop::runtime::{Engine, Manifest, Preload};
+use hflop::util::json::Json;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+struct Oracle {
+    lr: f32,
+    x_train: Vec<f32>,
+    y_train: Vec<f32>,
+    x_pred: Vec<f32>,
+    pred: Vec<f32>,
+    x_eval: Vec<f32>,
+    y_eval: Vec<f32>,
+    mse: f32,
+    train_loss: f32,
+    new_params_first: Vec<f32>,
+    new_params_last: Vec<f32>,
+}
+
+fn load_oracle(dir: &PathBuf, file: &str) -> Oracle {
+    let text = std::fs::read_to_string(dir.join(file)).expect("oracle file");
+    let j = Json::parse(&text).expect("oracle json");
+    let vecf = |k: &str| j.get(k).and_then(Json::as_f32_vec).expect(k);
+    let num = |k: &str| j.get(k).and_then(Json::as_f64).expect(k) as f32;
+    Oracle {
+        lr: num("lr"),
+        x_train: vecf("x_train"),
+        y_train: vecf("y_train"),
+        x_pred: vecf("x_pred"),
+        pred: vecf("pred"),
+        x_eval: vecf("x_eval"),
+        y_eval: vecf("y_eval"),
+        mse: num("mse"),
+        train_loss: num("train_loss"),
+        new_params_first: vecf("new_params_first"),
+        new_params_last: vecf("new_params_last"),
+    }
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "{what}[{i}]: got {g}, want {w}"
+        );
+    }
+}
+
+#[test]
+fn predict_matches_jax_oracle() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let variant = manifest.variant("small").unwrap();
+    let oracle = load_oracle(&dir, variant.oracle_file.as_ref().unwrap());
+    let params = manifest.load_init_params(variant).unwrap();
+
+    let engine = Engine::new(&manifest, "small", Preload::All).unwrap();
+    let got = engine.predict(&params, &oracle.x_pred).unwrap();
+    assert_close(&got, &oracle.pred, 1e-4, "predict");
+}
+
+#[test]
+fn train_step_matches_jax_oracle() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let variant = manifest.variant("small").unwrap();
+    let oracle = load_oracle(&dir, variant.oracle_file.as_ref().unwrap());
+    let params = manifest.load_init_params(variant).unwrap();
+
+    let engine = Engine::new(&manifest, "small", Preload::Training).unwrap();
+    let (new_params, loss) = engine
+        .train_step(&params, &oracle.x_train, &oracle.y_train, oracle.lr)
+        .unwrap();
+    assert!((loss - oracle.train_loss).abs() < 1e-4, "loss {loss} vs {}", oracle.train_loss);
+
+    // First and last parameter arrays pinned by the oracle.
+    let first_len = oracle.new_params_first.len();
+    assert_close(&new_params[..first_len], &oracle.new_params_first, 1e-4, "params[0]");
+    let offsets = variant.offsets();
+    let last_off = *offsets.last().unwrap();
+    assert_close(&new_params[last_off..], &oracle.new_params_last, 1e-4, "params[-1]");
+}
+
+#[test]
+fn eval_matches_jax_oracle() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let variant = manifest.variant("small").unwrap();
+    let oracle = load_oracle(&dir, variant.oracle_file.as_ref().unwrap());
+    let params = manifest.load_init_params(variant).unwrap();
+
+    let engine = Engine::new(&manifest, "small", Preload::Training).unwrap();
+    let mse = engine.eval_mse(&params, &oracle.x_eval, &oracle.y_eval).unwrap();
+    assert!((mse - oracle.mse).abs() < 1e-4, "mse {mse} vs {}", oracle.mse);
+}
+
+#[test]
+fn repeated_train_steps_reduce_loss_on_learnable_task() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let variant = manifest.variant("small").unwrap().clone();
+    let mut params = manifest.load_init_params(&variant).unwrap();
+    let engine = Engine::new(&manifest, "small", Preload::Training).unwrap();
+
+    // Learnable toy task: y = mean of last 3 inputs.
+    use hflop::util::rng::Rng;
+    let mut rng = Rng::new(99);
+    let (b, t) = (variant.train_batch, variant.seq_len);
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..60 {
+        let x: Vec<f32> = (0..b * t).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..b)
+            .map(|i| {
+                let w = &x[i * t..(i + 1) * t];
+                (w[t - 3] + w[t - 2] + w[t - 1]) / 3.0
+            })
+            .collect();
+        let (p, loss) = engine.train_step(&params, &x, &y, 0.05).unwrap();
+        params = p;
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(last < first * 0.7, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn batch_predict_consistent_with_single() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let variant = manifest.variant("small").unwrap().clone();
+    let params = manifest.load_init_params(&variant).unwrap();
+    let engine = Engine::new(&manifest, "small", Preload::Serving).unwrap();
+
+    use hflop::util::rng::Rng;
+    let mut rng = Rng::new(5);
+    let t = variant.seq_len;
+    let sb = variant.serve_batch;
+    let xb: Vec<f32> = (0..sb * t).map(|_| rng.normal() as f32).collect();
+    let batch = engine.predict_batch(&params, &xb).unwrap();
+    assert_eq!(batch.len(), sb * variant.out_dim);
+    for i in 0..sb {
+        let single = engine.predict(&params, &xb[i * t..(i + 1) * t]).unwrap();
+        for (a, b) in single.iter().zip(&batch[i * variant.out_dim..(i + 1) * variant.out_dim]) {
+            assert!((a - b).abs() < 1e-5, "row {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn paper_variant_loads_and_predicts() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let variant = manifest.variant("paper").unwrap().clone();
+    let params = manifest.load_init_params(&variant).unwrap();
+    assert_eq!(params.len(), 149_505); // 2-layer GRU(128) + head
+    let engine = Engine::new(&manifest, "paper", Preload::Serving).unwrap();
+    let x = vec![0.1f32; variant.seq_len];
+    let out = engine.predict(&params, &x).unwrap();
+    assert_eq!(out.len(), 1);
+    assert!(out[0].is_finite());
+}

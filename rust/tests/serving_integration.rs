@@ -1,0 +1,131 @@
+//! Integration: the real serving hot path (dynamic batcher over PJRT
+//! predict artifacts) and the orchestration loop end-to-end.
+
+use hflop::inference::serving::{BatchingServer, InferenceRequest};
+use hflop::orchestrator::{Gpo, InferenceController, InferenceCtlConfig, LearningController, LearningCtlConfig};
+use hflop::runtime::{Engine, Manifest, Preload};
+use hflop::topology::GeoPoint;
+use hflop::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+}
+
+#[test]
+fn batcher_results_match_direct_predict() {
+    let Some(manifest) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let engine = Engine::new(&manifest, "small", Preload::Serving).unwrap();
+    let params = manifest.load_init_params(engine.variant()).unwrap();
+    let seq = engine.variant().seq_len;
+    let mut server = BatchingServer::new(&engine, params.clone());
+    let mut rng = Rng::new(3);
+
+    let windows: Vec<Vec<f32>> = (0..13)
+        .map(|_| (0..seq).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let mut results = Vec::new();
+    for (i, w) in windows.iter().enumerate() {
+        results.extend(server.submit(InferenceRequest { id: i as u64, window: w.clone() }).unwrap());
+    }
+    results.extend(server.flush().unwrap());
+    assert_eq!(results.len(), 13);
+
+    for (id, pred) in results {
+        let direct = engine.predict(&params, &windows[id as usize]).unwrap();
+        assert!(
+            (pred - direct[0]).abs() < 1e-5,
+            "req {id}: batched {pred} vs direct {}",
+            direct[0]
+        );
+    }
+    assert!(server.stats.batches >= 2);
+    assert_eq!(server.stats.requests, 13);
+}
+
+#[test]
+fn batcher_param_update_changes_predictions() {
+    let Some(manifest) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let engine = Engine::new(&manifest, "small", Preload::Serving).unwrap();
+    let params = manifest.load_init_params(engine.variant()).unwrap();
+    let seq = engine.variant().seq_len;
+    let mut server = BatchingServer::new(&engine, params.clone());
+    let window: Vec<f32> = (0..seq).map(|i| i as f32 * 0.1).collect();
+
+    server.submit(InferenceRequest { id: 0, window: window.clone() }).unwrap();
+    let before = server.flush().unwrap()[0].1;
+
+    // New model version (e.g. after a global round): all-zero params.
+    server.update_params(vec![0.0; params.len()]);
+    server.submit(InferenceRequest { id: 1, window }).unwrap();
+    let after = server.flush().unwrap()[0].1;
+    assert_ne!(before, after);
+    assert!(after.abs() < 1e-6, "zero model must predict 0, got {after}");
+}
+
+#[test]
+fn orchestration_loop_end_to_end() {
+    // GPO inventory -> learning controller clusters (HFLOP) -> inference
+    // controller monitors accuracy -> degradation triggers a re-task ->
+    // edge failure triggers re-clustering. No artifacts needed.
+    let mut gpo = Gpo::new();
+    for i in 0..12 {
+        gpo.register_device(
+            i,
+            GeoPoint { lat: 34.02 + 0.01 * (i % 4) as f64, lon: -118.42 + 0.02 * (i / 4) as f64 },
+        );
+    }
+    for j in 0..3 {
+        gpo.register_edge(
+            100 + j,
+            GeoPoint { lat: 34.03 + 0.03 * j as f64, lon: -118.40 + 0.03 * j as f64 },
+            10.0,
+        );
+    }
+    let mut lc = LearningController::new(LearningCtlConfig::default());
+    for i in 0..12 {
+        lc.set_lambda(i, 1.5);
+    }
+    let plan = lc.cluster(&mut gpo).unwrap().clone();
+    assert_eq!(plan.device_ids.len(), 12);
+    assert!(plan.assignment.n_open() >= 1);
+
+    // Inference controller: healthy -> degraded -> trigger.
+    let mut ic = InferenceController::new(InferenceCtlConfig {
+        mse_threshold: 0.2,
+        alpha: 0.5,
+        min_observations: 3,
+        cooldown: 10,
+    });
+    for _ in 0..5 {
+        assert!(!ic.observe_mse(0.05));
+    }
+    let mut triggered = false;
+    for _ in 0..6 {
+        triggered |= ic.observe_mse(0.9);
+    }
+    assert!(triggered, "accuracy degradation must trigger a new HFL task");
+
+    // Environmental event: kill an edge used by the plan -> re-cluster.
+    let used_edge = plan
+        .edge_ids
+        .iter()
+        .enumerate()
+        .find(|(c, _)| plan.assignment.open[*c])
+        .map(|(_, &e)| e)
+        .unwrap();
+    gpo.fail_edge(used_edge);
+    assert!(lc.on_environment_change(&mut gpo).unwrap());
+    let new_plan = lc.current_plan.as_ref().unwrap();
+    assert!(!new_plan.edge_ids.contains(&used_edge));
+    for dev in 0..12 {
+        // Everyone still served by a live aggregator.
+        assert!(new_plan.aggregator_of(dev).is_some());
+    }
+}
