@@ -7,7 +7,7 @@ use bench_common::{bench, bench_auto, header};
 
 use hflop::hflop::InstanceBuilder;
 use hflop::solver::greedy::greedy;
-use hflop::solver::local_search::{local_search, LocalSearchOptions};
+use hflop::solver::local_search::{local_search, LocalSearchOptions, LsMode};
 use hflop::solver::milp::build_relaxation;
 use hflop::solver::{branch_and_bound, BbOptions};
 
@@ -41,4 +41,26 @@ fn main() {
             local_search(&inst, &LocalSearchOptions::default())
         });
     }
+
+    // Flat-core scaling point: the incremental O(1)-delta engine against
+    // the pre-refactor completion baseline (full re-complete + re-score
+    // per candidate) on the same n=500/m=20 instance. The two local
+    // optima may differ slightly; both costs are printed so quality and
+    // speed are judged together. Record the numbers in CHANGES.md.
+    header("core refactor: completion baseline vs incremental (n=500, m=20)");
+    let inst = InstanceBuilder::unit_cost(500, 20, 17).build();
+    let completion = LocalSearchOptions { mode: LsMode::Completion, ..Default::default() };
+    let incremental = LocalSearchOptions { mode: LsMode::Incremental, ..Default::default() };
+    bench("ls/completion(full-rescore) n=500 m=20", 3, || {
+        local_search(&inst, &completion)
+    });
+    bench("ls/incremental(delta-eval) n=500 m=20", 3, || {
+        local_search(&inst, &incremental)
+    });
+    let c = local_search(&inst, &completion);
+    let i = local_search(&inst, &incremental);
+    println!(
+        "ls quality: completion cost {:.3} ({} moves) | incremental cost {:.3} ({} moves)",
+        c.cost, c.moves, i.cost, i.moves
+    );
 }

@@ -1,0 +1,224 @@
+//! Contiguous row-major dense matrix.
+//!
+//! The seed implementation carried `Vec<Vec<f64>>` in every layer
+//! (topology cost matrix, HFLOP instance, the simplex tableau); each row
+//! was its own heap allocation, so row sweeps paid a pointer chase per
+//! row. `DenseMatrix` stores one flat buffer and hands out row slices:
+//! solver hot paths (pivot, candidate scoring) stay cache-friendly, and
+//! whole-matrix clone/compare are single linear passes.
+//!
+//! `m[i]` indexes a row slice, so existing `m[i][j]` call sites read the
+//! same as with nested vectors.
+
+use std::ops::{Index, IndexMut};
+
+/// A dense row-major `rows x cols` matrix of `f64`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Wrap an existing flat row-major buffer. Panics on length mismatch.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> DenseMatrix {
+        assert_eq!(data.len(), rows * cols, "flat buffer len != rows*cols");
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Build by evaluating `f(i, j)`. `f` is called in row-major order, so
+    /// stateful closures (e.g. one RNG draw per row) see a deterministic
+    /// visit order.
+    pub fn from_fn(
+        rows: usize,
+        cols: usize,
+        mut f: impl FnMut(usize, usize) -> f64,
+    ) -> DenseMatrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Build from nested rows. Panics if rows are ragged.
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> DenseMatrix {
+        let n = rows.len();
+        let m = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(n * m);
+        for (i, row) in rows.into_iter().enumerate() {
+            assert_eq!(row.len(), m, "ragged row {i}: len {} != {m}", row.len());
+            data.extend(row);
+        }
+        DenseMatrix { rows: n, cols: m, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The flat row-major buffer.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Iterate rows as slices.
+    pub fn row_iter(&self) -> std::slice::ChunksExact<'_, f64> {
+        // `max(1)` keeps the degenerate 0-column matrix iterable (yields
+        // no rows) instead of panicking inside chunks_exact.
+        self.data.chunks_exact(self.cols.max(1))
+    }
+
+    /// Multiply row `i` by `factor` (simplex pivot normalization).
+    pub fn scale_row(&mut self, i: usize, factor: f64) {
+        for v in self.row_mut(i) {
+            *v *= factor;
+        }
+    }
+
+    /// Disjoint mutable views of rows `a` and `b` (`a != b`), for in-place
+    /// row updates like the pivot's `row_a -= f * row_b`.
+    pub fn row_pair_mut(&mut self, a: usize, b: usize) -> (&mut [f64], &mut [f64]) {
+        assert_ne!(a, b, "row_pair_mut needs distinct rows");
+        let c = self.cols;
+        if a < b {
+            let (lo, hi) = self.data.split_at_mut(b * c);
+            (&mut lo[a * c..(a + 1) * c], &mut hi[..c])
+        } else {
+            let (lo, hi) = self.data.split_at_mut(a * c);
+            (&mut hi[..c], &mut lo[b * c..(b + 1) * c])
+        }
+    }
+}
+
+/// `dst[k] += factor * src[k]` over the common prefix — the simplex pivot
+/// inner loop.
+#[inline]
+pub fn axpy(dst: &mut [f64], src: &[f64], factor: f64) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += factor * s;
+    }
+}
+
+impl Index<usize> for DenseMatrix {
+    type Output = [f64];
+
+    #[inline]
+    fn index(&self, i: usize) -> &[f64] {
+        self.row(i)
+    }
+}
+
+impl IndexMut<usize> for DenseMatrix {
+    #[inline]
+    fn index_mut(&mut self, i: usize) -> &mut [f64] {
+        self.row_mut(i)
+    }
+}
+
+impl From<Vec<Vec<f64>>> for DenseMatrix {
+    fn from(rows: Vec<Vec<f64>>) -> DenseMatrix {
+        DenseMatrix::from_rows(rows)
+    }
+}
+
+impl<'a> IntoIterator for &'a DenseMatrix {
+    type Item = &'a [f64];
+    type IntoIter = std::slice::ChunksExact<'a, f64>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.row_iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_rows_round_trips() {
+        let m = DenseMatrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m[0], [1.0, 2.0]);
+        assert_eq!(m[1][0], 3.0);
+        assert_eq!(m.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn from_rows_rejects_ragged() {
+        DenseMatrix::from_rows(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn from_fn_row_major_order() {
+        let mut calls = Vec::new();
+        let m = DenseMatrix::from_fn(2, 3, |i, j| {
+            calls.push((i, j));
+            (i * 3 + j) as f64
+        });
+        assert_eq!(calls, vec![(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]);
+        assert_eq!(m[1], [3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn row_iter_matches_rows() {
+        let m = DenseMatrix::from_fn(3, 2, |i, j| (10 * i + j) as f64);
+        let rows: Vec<&[f64]> = m.row_iter().collect();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[2], &[20.0, 21.0]);
+        let via_ref: Vec<&[f64]> = (&m).into_iter().collect();
+        assert_eq!(rows, via_ref);
+    }
+
+    #[test]
+    fn empty_matrix_is_harmless() {
+        let m = DenseMatrix::default();
+        assert_eq!(m.rows(), 0);
+        assert_eq!(m.row_iter().count(), 0);
+    }
+
+    #[test]
+    fn scale_and_row_pair() {
+        let mut m = DenseMatrix::from_rows(vec![vec![2.0, 4.0], vec![1.0, 1.0]]);
+        m.scale_row(0, 0.5);
+        assert_eq!(m[0], [1.0, 2.0]);
+        let (a, b) = m.row_pair_mut(1, 0);
+        axpy(a, b, -1.0);
+        assert_eq!(m[1], [0.0, -1.0]);
+        // Order-agnostic: (hi, lo) view works too.
+        let (r0, r1) = m.row_pair_mut(0, 1);
+        r0[0] += r1[0];
+        assert_eq!(m[0][0], 1.0);
+    }
+
+    #[test]
+    fn index_mut_writes_through() {
+        let mut m = DenseMatrix::zeros(2, 2);
+        m[1][1] = 7.0;
+        assert_eq!(m.row(1), &[0.0, 7.0]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared numeric core under topology → hflop → solvers → sim (DESIGN.md
+//! §2): contiguous dense matrices and the workload/capacity vector
+//! newtypes every layer above stores instead of carrying its own
+//! `Vec<Vec<f64>>`.
+//!
+//! The types here are deliberately small: flat storage, row-slice
+//! accessors, and the two pivot/axpy helpers the simplex hot path needs.
+//! Anything problem-specific (costs, constraints, deltas) lives with the
+//! problem, not here.
+
+mod matrix;
+mod vectors;
+
+pub use matrix::{axpy, DenseMatrix};
+pub use vectors::{Capacity, Workload};

@@ -1,0 +1,96 @@
+//! Workload / capacity vector newtypes.
+//!
+//! Thin wrappers over `Vec<f64>` that deref to `[f64]`, so call sites keep
+//! slice ergonomics (`iter`, `len`, indexing, `to_vec`) while signatures
+//! say which HFLOP quantity they carry — the two are summed against each
+//! other in every feasibility check, and mixing them up type-checks fine
+//! with bare vectors.
+
+macro_rules! f64_vector {
+    ($(#[$meta:meta])* $name:ident) => {
+        $(#[$meta])*
+        #[derive(Debug, Clone, PartialEq, Default)]
+        pub struct $name(Vec<f64>);
+
+        impl $name {
+            pub fn new(values: Vec<f64>) -> $name {
+                $name(values)
+            }
+
+            /// Sum of all entries.
+            pub fn total(&self) -> f64 {
+                self.0.iter().sum()
+            }
+
+            pub fn into_inner(self) -> Vec<f64> {
+                self.0
+            }
+        }
+
+        impl From<Vec<f64>> for $name {
+            fn from(values: Vec<f64>) -> $name {
+                $name(values)
+            }
+        }
+
+        impl FromIterator<f64> for $name {
+            fn from_iter<I: IntoIterator<Item = f64>>(iter: I) -> $name {
+                $name(iter.into_iter().collect())
+            }
+        }
+
+        impl std::ops::Deref for $name {
+            type Target = [f64];
+
+            fn deref(&self) -> &[f64] {
+                &self.0
+            }
+        }
+
+        impl std::ops::DerefMut for $name {
+            fn deref_mut(&mut self) -> &mut [f64] {
+                &mut self.0
+            }
+        }
+    };
+}
+
+f64_vector!(
+    /// Per-device inference request rates λ_i (requests/s) — §IV-A.
+    Workload
+);
+
+f64_vector!(
+    /// Per-edge inference processing capacities r_j (requests/s) — §IV-A.
+    Capacity
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deref_gives_slice_api() {
+        let w: Workload = vec![1.0, 2.0, 3.0].into();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[1], 2.0);
+        assert_eq!(w.iter().sum::<f64>(), w.total());
+        assert_eq!(w.to_vec(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn deref_mut_allows_in_place_edits() {
+        let mut r: Capacity = vec![1.0, 1.0].into();
+        for v in r.iter_mut() {
+            *v = 5.0;
+        }
+        r[0] = 2.0;
+        assert_eq!(r.into_inner(), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn collects_from_iterator() {
+        let r: Capacity = (0..4).map(|i| i as f64).collect();
+        assert_eq!(r.total(), 6.0);
+    }
+}

@@ -341,10 +341,10 @@ mod tests {
         let n = 6;
         // Instance where every device's assigned edge is free.
         let inst = crate::hflop::Instance {
-            c_d: vec![vec![0.0, 0.0]; n],
+            c_d: vec![vec![0.0, 0.0]; n].into(),
             c_e: vec![1.0, 1.0],
-            lambda: vec![1.0; n],
-            r: vec![100.0, 100.0],
+            lambda: vec![1.0; n].into(),
+            r: vec![100.0, 100.0].into(),
             l: 2.0,
             t_min: n,
         };

@@ -16,20 +16,21 @@
 //! unsplittable flows (NP-hard); see [`crate::solver`] for the exact
 //! branch & bound and the heuristics.
 
+use crate::core::{Capacity, DenseMatrix, Workload};
 use crate::topology::Topology;
 use crate::util::rng::Rng;
 
 /// One HFLOP instance. Immutable once built; solvers borrow it.
 #[derive(Debug, Clone)]
 pub struct Instance {
-    /// Device-to-edge communication cost, `n x m`.
-    pub c_d: Vec<Vec<f64>>,
+    /// Device-to-edge communication cost, `n x m` (row-major).
+    pub c_d: DenseMatrix,
     /// Edge-to-cloud communication cost, `m`.
     pub c_e: Vec<f64>,
     /// Per-device inference request rate λ_i, `n`.
-    pub lambda: Vec<f64>,
+    pub lambda: Workload,
     /// Per-edge inference processing capacity r_j, `m`.
-    pub r: Vec<f64>,
+    pub r: Capacity,
     /// Local aggregation rounds per global round (the `l` in Eq. 1).
     pub l: f64,
     /// Minimum number of participating devices (constraint 6).
@@ -38,7 +39,7 @@ pub struct Instance {
 
 impl Instance {
     pub fn n(&self) -> usize {
-        self.c_d.len()
+        self.c_d.rows()
     }
 
     pub fn m(&self) -> usize {
@@ -49,16 +50,19 @@ impl Instance {
         let (n, m) = (self.n(), self.m());
         anyhow::ensure!(n > 0 && m > 0, "empty instance");
         anyhow::ensure!(self.t_min <= n, "t_min {} > n {}", self.t_min, n);
-        anyhow::ensure!(self.l > 0.0, "l must be positive");
+        anyhow::ensure!(self.l.is_finite() && self.l > 0.0, "l must be positive and finite");
         anyhow::ensure!(self.lambda.len() == n, "lambda len mismatch");
         anyhow::ensure!(self.r.len() == m, "r len mismatch");
+        anyhow::ensure!(self.c_d.cols() == m, "c_d cols != m");
         for row in &self.c_d {
-            anyhow::ensure!(row.len() == m, "c_d row len mismatch");
             anyhow::ensure!(row.iter().all(|&c| c >= 0.0 && c.is_finite()), "bad c_d");
         }
         anyhow::ensure!(self.c_e.iter().all(|&c| c >= 0.0 && c.is_finite()), "bad c_e");
         anyhow::ensure!(self.lambda.iter().all(|&v| v >= 0.0 && v.is_finite()), "bad lambda");
-        anyhow::ensure!(self.r.iter().all(|&v| v >= 0.0), "bad r");
+        // NaN must be rejected explicitly: capacities may legitimately be
+        // +inf (uncapacitated variant), so `is_finite` is too strict, but
+        // a NaN capacity would poison every residual comparison.
+        anyhow::ensure!(self.r.iter().all(|&v| !v.is_nan() && v >= 0.0), "bad r");
         Ok(())
     }
 
@@ -70,9 +74,10 @@ impl Instance {
         if total.is_infinite() {
             return true;
         }
-        // Greedy: smallest lambdas packed into total capacity.
-        let mut lam = self.lambda.clone();
-        lam.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Greedy: smallest lambdas packed into total capacity. NaN-safe
+        // total order (validate rejects NaN, but never trust a sort to it).
+        let mut lam = self.lambda.to_vec();
+        lam.sort_by(f64::total_cmp);
         let mut used = 0.0;
         let mut fit = 0usize;
         for v in lam {
@@ -128,18 +133,19 @@ impl InstanceBuilder {
         headroom: f64,
     ) -> InstanceBuilder {
         let mut rng = Rng::new(seed);
-        let c_d = (0..n)
-            .map(|_| {
-                let free = rng.below(m);
-                (0..m).map(|j| if j == free { 0.0 } else { 1.0 }).collect()
-            })
-            .collect();
+        let mut c_d = DenseMatrix::zeros(n, m);
+        for i in 0..n {
+            let free = rng.below(m);
+            for (j, c) in c_d.row_mut(i).iter_mut().enumerate() {
+                *c = if j == free { 0.0 } else { 1.0 };
+            }
+        }
         // Uniform random workloads and capacities (§V-D). Capacity draws
         // are normalized so the aggregate is exactly `headroom · Σλ`,
         // keeping every generated instance feasible while preserving the
         // per-edge spread.
-        let lambda: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
-        let total_lambda: f64 = lambda.iter().sum();
+        let lambda: Workload = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+        let total_lambda = lambda.total();
         let draws: Vec<f64> = (0..m).map(|_| rng.uniform(0.5, 1.5)).collect();
         let draw_sum: f64 = draws.iter().sum();
         let r = draws
@@ -161,12 +167,10 @@ impl InstanceBuilder {
     /// Fully random instance (Fig. 2 solver-scaling benchmarks).
     pub fn random(n: usize, m: usize, seed: u64) -> InstanceBuilder {
         let mut rng = Rng::new(seed);
-        let c_d = (0..n)
-            .map(|_| (0..m).map(|_| rng.uniform(0.0, 10.0)).collect())
-            .collect();
+        let c_d = DenseMatrix::from_fn(n, m, |_, _| rng.uniform(0.0, 10.0));
         let c_e = (0..m).map(|_| rng.uniform(5.0, 50.0)).collect();
-        let lambda: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
-        let total: f64 = lambda.iter().sum();
+        let lambda: Workload = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+        let total = lambda.total();
         let r = (0..m)
             .map(|_| rng.uniform(0.8, 1.6) * 1.5 * total / m as f64)
             .collect();

@@ -11,7 +11,9 @@
 //!
 //! Layer map (see DESIGN.md):
 //! * L3 (this crate): coordination — solving HFLOP, running HFL rounds,
-//!   routing inference requests, accounting communication costs.
+//!   routing inference requests, accounting communication costs. Its
+//!   numeric substrate is [`core`]: flat dense matrices and
+//!   workload/capacity vectors shared by topology, hflop and the solvers.
 //! * L2/L1 (python, build time only): the GRU model and its fused Pallas
 //!   cell, lowered to `artifacts/*.hlo.txt` which [`runtime`] executes.
 //!
@@ -29,6 +31,7 @@
 
 pub mod cli;
 pub mod config;
+pub mod core;
 pub mod data;
 pub mod experiments;
 pub mod fl;

@@ -11,6 +11,7 @@
 //!   dynamics").
 
 use super::gpo::{Deployment, Gpo, NodeKind};
+use crate::core::DenseMatrix;
 use crate::hflop::Instance;
 use crate::solver::{self, Assignment, SolveOptions};
 use crate::topology::haversine_km;
@@ -114,22 +115,14 @@ impl LearningController {
         let device_ids: Vec<usize> = devices.iter().map(|n| n.id).collect();
         let edge_ids: Vec<usize> = edges.iter().map(|n| n.id).collect();
 
-        let c_d = devices
-            .iter()
-            .map(|d| {
-                edges
-                    .iter()
-                    .map(|e| {
-                        let km = haversine_km(d.location, e.location);
-                        if km <= self.config.free_radius_km {
-                            0.0
-                        } else {
-                            km
-                        }
-                    })
-                    .collect()
-            })
-            .collect();
+        let c_d = DenseMatrix::from_fn(devices.len(), edges.len(), |i, j| {
+            let km = haversine_km(devices[i].location, edges[j].location);
+            if km <= self.config.free_radius_km {
+                0.0
+            } else {
+                km
+            }
+        });
 
         let t_min = if self.config.t_min == 0 { devices.len() } else { self.config.t_min };
         let inst = Instance {

@@ -2,27 +2,22 @@
 //! once on the CPU PJRT client, and exposes typed entry points
 //! (`train_step`, `predict`, `eval_mse`) over flat f32 parameter blocks.
 //!
-//! This is the only place the `xla` crate is touched. Python never runs at
-//! request time: the artifacts were lowered by `make artifacts` and the
-//! engine executes them natively.
+//! This is the only place the `xla` crate is touched, and only when the
+//! `pjrt` cargo feature is on. The offline image carries no vendored
+//! xla-rs, so the default build compiles a stub [`Engine`] with the same
+//! surface that errors at construction — the solver/simulation stack (and
+//! everything driven by [`crate::fl::MockRuntime`]) stays fully buildable
+//! and testable without the native toolchain. `--features pjrt` alone
+//! does not compile: vendor xla-rs and add `xla = { path = ... }` to
+//! rust/Cargo.toml first (the feature deliberately declares no optional
+//! dependency because none is resolvable offline).
 //!
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
 //! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
 
-use std::collections::BTreeMap;
-use std::path::Path;
-
-use anyhow::{Context, Result};
-
 use super::manifest::{Manifest, Variant};
-
-/// Compiled executables for one model variant.
-pub struct Engine {
-    client: xla::PjRtClient,
-    variant: Variant,
-    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
-}
+use anyhow::Result;
 
 /// Which artifacts to compile at engine construction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,174 +30,269 @@ pub enum Preload {
     Training,
 }
 
-impl Engine {
-    /// Build an engine for `variant_name`, compiling the selected
-    /// artifacts. Compilation happens once; execution reuses executables.
-    pub fn new(manifest: &Manifest, variant_name: &str, preload: Preload) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let variant = manifest.variant(variant_name)?.clone();
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::BTreeMap;
+    use std::path::Path;
 
-        let wanted: Vec<&str> = match preload {
-            Preload::All => vec!["train_step", "predict", "predict_b8", "eval"],
-            Preload::Serving => vec!["predict", "predict_b8"],
-            Preload::Training => vec!["train_step", "eval"],
-        };
+    use anyhow::{Context, Result};
 
-        let mut executables = BTreeMap::new();
-        for name in wanted {
-            let path = manifest.artifact_path(&variant, name)?;
-            let exe = Self::compile_artifact(&client, &path)
-                .with_context(|| format!("compiling artifact '{name}'"))?;
-            executables.insert(name.to_string(), exe);
+    use super::super::manifest::{Manifest, Variant};
+    use super::Preload;
+
+    /// Compiled executables for one model variant.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        variant: Variant,
+        executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Engine {
+        /// Build an engine for `variant_name`, compiling the selected
+        /// artifacts. Compilation happens once; execution reuses executables.
+        pub fn new(manifest: &Manifest, variant_name: &str, preload: Preload) -> Result<Engine> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let variant = manifest.variant(variant_name)?.clone();
+
+            let wanted: Vec<&str> = match preload {
+                Preload::All => vec!["train_step", "predict", "predict_b8", "eval"],
+                Preload::Serving => vec!["predict", "predict_b8"],
+                Preload::Training => vec!["train_step", "eval"],
+            };
+
+            let mut executables = BTreeMap::new();
+            for name in wanted {
+                let path = manifest.artifact_path(&variant, name)?;
+                let exe = Self::compile_artifact(&client, &path)
+                    .with_context(|| format!("compiling artifact '{name}'"))?;
+                executables.insert(name.to_string(), exe);
+            }
+            Ok(Engine { client, variant, executables })
         }
-        Ok(Engine { client, variant, executables })
-    }
 
-    fn compile_artifact(
-        client: &xla::PjRtClient,
-        path: &Path,
-    ) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
-    }
-
-    pub fn variant(&self) -> &Variant {
-        &self.variant
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Split a flat parameter block into per-array literals (ABI order).
-    fn param_literals(&self, flat: &[f32]) -> Result<Vec<xla::Literal>> {
-        anyhow::ensure!(
-            flat.len() == self.variant.total_elems(),
-            "param block len {} != expected {}",
-            flat.len(),
-            self.variant.total_elems()
-        );
-        let offsets = self.variant.offsets();
-        let mut lits = Vec::with_capacity(self.variant.params.len());
-        for (spec, &off) in self.variant.params.iter().zip(&offsets) {
-            let chunk = &flat[off..off + spec.numel()];
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(chunk)
-                .reshape(&dims)
-                .map_err(|e| anyhow::anyhow!("reshaping {}: {e:?}", spec.name))?;
-            lits.push(lit);
+        fn compile_artifact(
+            client: &xla::PjRtClient,
+            path: &Path,
+        ) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
         }
-        Ok(lits)
-    }
 
-    fn tensor_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-        let expect: i64 = dims.iter().product();
-        anyhow::ensure!(
-            data.len() as i64 == expect,
-            "tensor data len {} != shape {:?}",
-            data.len(),
-            dims
-        );
-        xla::Literal::vec1(data)
-            .reshape(dims)
-            .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
-    }
-
-    /// Execute an artifact with the given inputs; decompose the result
-    /// tuple (all artifacts are lowered with `return_tuple=True`).
-    fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .executables
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not preloaded"))?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))
-    }
-
-    /// One SGD step on a batch. `x` is `[B*T*in_dim]` row-major,
-    /// `y` is `[B*out_dim]`. Returns (new params, loss).
-    pub fn train_step(&self, params: &[f32], x: &[f32], y: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
-        let v = &self.variant;
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(Self::tensor_literal(
-            x,
-            &[v.train_batch as i64, v.seq_len as i64, v.in_dim as i64],
-        )?);
-        inputs.push(Self::tensor_literal(y, &[v.train_batch as i64, v.out_dim as i64])?);
-        inputs.push(xla::Literal::scalar(lr));
-
-        let outs = self.execute("train_step", &inputs)?;
-        anyhow::ensure!(
-            outs.len() == v.params.len() + 1,
-            "train_step returned {} outputs, expected {}",
-            outs.len(),
-            v.params.len() + 1
-        );
-        let mut flat = Vec::with_capacity(v.total_elems());
-        for lit in &outs[..v.params.len()] {
-            flat.extend(lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?);
+        pub fn variant(&self) -> &Variant {
+            &self.variant
         }
-        let loss = outs[v.params.len()]
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        Ok((flat, loss))
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Split a flat parameter block into per-array literals (ABI order).
+        fn param_literals(&self, flat: &[f32]) -> Result<Vec<xla::Literal>> {
+            anyhow::ensure!(
+                flat.len() == self.variant.total_elems(),
+                "param block len {} != expected {}",
+                flat.len(),
+                self.variant.total_elems()
+            );
+            let offsets = self.variant.offsets();
+            let mut lits = Vec::with_capacity(self.variant.params.len());
+            for (spec, &off) in self.variant.params.iter().zip(&offsets) {
+                let chunk = &flat[off..off + spec.numel()];
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(chunk)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshaping {}: {e:?}", spec.name))?;
+                lits.push(lit);
+            }
+            Ok(lits)
+        }
+
+        fn tensor_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+            let expect: i64 = dims.iter().product();
+            anyhow::ensure!(
+                data.len() as i64 == expect,
+                "tensor data len {} != shape {:?}",
+                data.len(),
+                dims
+            );
+            xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+        }
+
+        /// Execute an artifact with the given inputs; decompose the result
+        /// tuple (all artifacts are lowered with `return_tuple=True`).
+        fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let exe = self
+                .executables
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not preloaded"))?;
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+            lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))
+        }
+
+        /// One SGD step on a batch. `x` is `[B*T*in_dim]` row-major,
+        /// `y` is `[B*out_dim]`. Returns (new params, loss).
+        pub fn train_step(
+            &self,
+            params: &[f32],
+            x: &[f32],
+            y: &[f32],
+            lr: f32,
+        ) -> Result<(Vec<f32>, f32)> {
+            let v = &self.variant;
+            let mut inputs = self.param_literals(params)?;
+            inputs.push(Self::tensor_literal(
+                x,
+                &[v.train_batch as i64, v.seq_len as i64, v.in_dim as i64],
+            )?);
+            inputs.push(Self::tensor_literal(y, &[v.train_batch as i64, v.out_dim as i64])?);
+            inputs.push(xla::Literal::scalar(lr));
+
+            let outs = self.execute("train_step", &inputs)?;
+            anyhow::ensure!(
+                outs.len() == v.params.len() + 1,
+                "train_step returned {} outputs, expected {}",
+                outs.len(),
+                v.params.len() + 1
+            );
+            let mut flat = Vec::with_capacity(v.total_elems());
+            for lit in &outs[..v.params.len()] {
+                flat.extend(lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?);
+            }
+            let loss = outs[v.params.len()]
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            Ok((flat, loss))
+        }
+
+        /// Single-request prediction: `x` is `[T*in_dim]`. Returns `[out_dim]`.
+        pub fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+            let v = &self.variant;
+            let mut inputs = self.param_literals(params)?;
+            inputs.push(Self::tensor_literal(x, &[1, v.seq_len as i64, v.in_dim as i64])?);
+            let outs = self.execute("predict", &inputs)?;
+            outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+        }
+
+        /// Batched prediction for the dynamic batcher: `x` is
+        /// `[serve_batch*T*in_dim]`. Returns `[serve_batch*out_dim]`.
+        pub fn predict_batch(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+            let v = &self.variant;
+            let mut inputs = self.param_literals(params)?;
+            inputs.push(Self::tensor_literal(
+                x,
+                &[v.serve_batch as i64, v.seq_len as i64, v.in_dim as i64],
+            )?);
+            let outs = self.execute("predict_b8", &inputs)?;
+            outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+        }
+
+        /// Evaluation MSE over one eval batch. `x` `[Be*T*in_dim]`, `y` `[Be*out_dim]`.
+        pub fn eval_mse(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+            let v = &self.variant;
+            let mut inputs = self.param_literals(params)?;
+            inputs.push(Self::tensor_literal(
+                x,
+                &[v.eval_batch as i64, v.seq_len as i64, v.in_dim as i64],
+            )?);
+            inputs.push(Self::tensor_literal(y, &[v.eval_batch as i64, v.out_dim as i64])?);
+            let outs = self.execute("eval", &inputs)?;
+            outs[0].get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+        }
     }
 
-    /// Single-request prediction: `x` is `[T*in_dim]`. Returns `[out_dim]`.
-    pub fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
-        let v = &self.variant;
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(Self::tensor_literal(x, &[1, v.seq_len as i64, v.in_dim as i64])?);
-        let outs = self.execute("predict", &inputs)?;
-        outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
-    }
+    #[cfg(test)]
+    mod tests {
+        use super::*;
 
-    /// Batched prediction for the dynamic batcher: `x` is
-    /// `[serve_batch*T*in_dim]`. Returns `[serve_batch*out_dim]`.
-    pub fn predict_batch(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
-        let v = &self.variant;
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(Self::tensor_literal(
-            x,
-            &[v.serve_batch as i64, v.seq_len as i64, v.in_dim as i64],
-        )?);
-        let outs = self.execute("predict_b8", &inputs)?;
-        outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
-    }
-
-    /// Evaluation MSE over one eval batch. `x` `[Be*T*in_dim]`, `y` `[Be*out_dim]`.
-    pub fn eval_mse(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
-        let v = &self.variant;
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(Self::tensor_literal(
-            x,
-            &[v.eval_batch as i64, v.seq_len as i64, v.in_dim as i64],
-        )?);
-        inputs.push(Self::tensor_literal(y, &[v.eval_batch as i64, v.out_dim as i64])?);
-        let outs = self.execute("eval", &inputs)?;
-        outs[0].get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+        #[test]
+        fn tensor_literal_validates_length() {
+            assert!(Engine::tensor_literal(&[1.0, 2.0], &[3]).is_err());
+            assert!(Engine::tensor_literal(&[1.0, 2.0, 3.0], &[3]).is_ok());
+            assert!(Engine::tensor_literal(&[1.0; 6], &[2, 3]).is_ok());
+        }
     }
 }
 
-#[cfg(test)]
-mod tests {
-    // Engine tests live in rust/tests/runtime_roundtrip.rs (they need the
-    // artifacts directory); here we only test pure helpers.
-    use super::*;
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use anyhow::Result;
 
-    #[test]
-    fn tensor_literal_validates_length() {
-        assert!(Engine::tensor_literal(&[1.0, 2.0], &[3]).is_err());
-        assert!(Engine::tensor_literal(&[1.0, 2.0, 3.0], &[3]).is_ok());
-        assert!(Engine::tensor_literal(&[1.0; 6], &[2, 3]).is_ok());
+    use super::super::manifest::{Manifest, Variant};
+    use super::Preload;
+
+    const UNAVAILABLE: &str = "PJRT/XLA execution is unavailable in this build: the crate was \
+         compiled with the stub engine. Enabling it needs both a vendored xla-rs (add \
+         `xla = { path = ... }` to rust/Cargo.toml [dependencies]) and `--features pjrt` — \
+         the feature flag alone will not compile";
+
+    /// Stub engine: same surface as the PJRT engine, errors at
+    /// construction. Keeps every consumer (FL round engine, batching
+    /// server, CLI) compiling in artifact-less environments; the
+    /// `MockRuntime` path covers their tests.
+    pub struct Engine {
+        variant: Variant,
     }
+
+    impl Engine {
+        pub fn new(_manifest: &Manifest, _variant_name: &str, _preload: Preload) -> Result<Engine> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn variant(&self) -> &Variant {
+            &self.variant
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (no pjrt feature)".to_string()
+        }
+
+        pub fn train_step(
+            &self,
+            _params: &[f32],
+            _x: &[f32],
+            _y: &[f32],
+            _lr: f32,
+        ) -> Result<(Vec<f32>, f32)> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn predict(&self, _params: &[f32], _x: &[f32]) -> Result<Vec<f32>> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn predict_batch(&self, _params: &[f32], _x: &[f32]) -> Result<Vec<f32>> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn eval_mse(&self, _params: &[f32], _x: &[f32], _y: &[f32]) -> Result<f32> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+    }
+}
+
+pub use imp::Engine;
+
+// Compile-surface check: the stub and the real engine expose the same
+// entry points, so downstream code can't drift onto one of them.
+#[allow(dead_code)]
+fn _surface_check(manifest: &Manifest, name: &str) -> Result<()> {
+    let e = Engine::new(manifest, name, Preload::Serving)?;
+    let _: &Variant = e.variant();
+    let _: String = e.platform();
+    let _ = e.predict(&[], &[])?;
+    let _ = e.predict_batch(&[], &[])?;
+    let _ = e.train_step(&[], &[], &[], 0.0)?;
+    let _ = e.eval_mse(&[], &[], &[])?;
+    Ok(())
 }

@@ -28,11 +28,13 @@ impl<E> PartialOrd for Entry<E> {
 }
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap on (time, seq).
+        // Reverse for min-heap on (time, seq). `total_cmp` keeps the heap
+        // ordering a lawful total order even if a NaN time ever slips in
+        // (partial_cmp would silently collapse it to Equal and corrupt
+        // the queue's tie-breaking).
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }

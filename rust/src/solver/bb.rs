@@ -14,7 +14,7 @@ use std::time::Instant;
 
 use super::milp::{build_relaxation, n_vars, xv, yv, Fixing};
 use super::lp::LpResult;
-use super::solution::{complete_assignment, Assignment};
+use super::solution::{complete_assignment, refine_assignment, Assignment};
 use crate::hflop::Instance;
 
 /// Branch & bound configuration.
@@ -75,7 +75,8 @@ impl PartialOrd for Node {
 impl Ord for Node {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; we want the smallest bound first.
-        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+        // total_cmp: bounds include ±inf sentinels and must order totally.
+        other.bound.total_cmp(&self.bound)
     }
 }
 
@@ -92,7 +93,7 @@ fn round_lp(inst: &Instance, x: &[f64]) -> Option<Assignment> {
     if !open.iter().any(|&o| o) {
         // Open the single most-loaded fractional y.
         if let Some(j) = (0..m).max_by(|&a, &b| {
-            x[yv(a, n, m)].partial_cmp(&x[yv(b, n, m)]).unwrap()
+            x[yv(a, n, m)].total_cmp(&x[yv(b, n, m)])
         }) {
             open[j] = true;
         }
@@ -100,12 +101,14 @@ fn round_lp(inst: &Instance, x: &[f64]) -> Option<Assignment> {
     // Try progressively opening more edges if completion fails.
     loop {
         if let Some(sol) = complete_assignment(inst, &open) {
-            return Some(sol);
+            // Polish with the O(1)-delta device sweeps before handing the
+            // incumbent up — tighter upper bounds prune harder.
+            return Some(refine_assignment(inst, &sol));
         }
         // Open the best closed edge by fractional value; stop when none.
         let next = (0..m)
             .filter(|&j| !open[j])
-            .max_by(|&a, &b| x[yv(a, n, m)].partial_cmp(&x[yv(b, n, m)]).unwrap());
+            .max_by(|&a, &b| x[yv(a, n, m)].total_cmp(&x[yv(b, n, m)]));
         match next {
             Some(j) => open[j] = true,
             None => return None,
@@ -121,13 +124,13 @@ fn pick_branch_var(inst: &Instance, x: &[f64]) -> Option<usize> {
     let ybest = (0..m)
         .map(|j| yv(j, n, m))
         .filter(|&v| !is_integral(x[v]))
-        .max_by(|&a, &b| frac(x[a]).partial_cmp(&frac(x[b])).unwrap());
+        .max_by(|&a, &b| frac(x[a]).total_cmp(&frac(x[b])));
     if ybest.is_some() {
         return ybest;
     }
     (0..n * m)
         .filter(|&v| !is_integral(x[v]))
-        .max_by(|&a, &b| frac(x[a]).partial_cmp(&frac(x[b])).unwrap())
+        .max_by(|&a, &b| frac(x[a]).total_cmp(&frac(x[b])))
 }
 
 /// Extract an integral LP point as an Assignment.

@@ -25,7 +25,7 @@ pub fn brute_force(inst: &Instance) -> Option<(Assignment, f64)> {
         let open_list: Vec<usize> = (0..m).filter(|&j| open[j]).collect();
         // DFS over devices: assign to an open edge or leave unassigned.
         let mut assign = vec![None; n];
-        let mut residual: Vec<f64> = inst.r.clone();
+        let mut residual: Vec<f64> = inst.r.to_vec();
         let mut found: Option<(Vec<Option<usize>>, f64)> = None;
         dfs(
             inst,
@@ -117,10 +117,10 @@ mod tests {
         // Opening both: cost c_e = 2, local 0. Opening one: c_e 1 + one
         // remote assignment l*1 = 2 -> total 3. Optimal: open both = 2.
         let inst = Instance {
-            c_d: vec![vec![0.0, 1.0], vec![1.0, 0.0]],
+            c_d: vec![vec![0.0, 1.0], vec![1.0, 0.0]].into(),
             c_e: vec![1.0, 1.0],
-            lambda: vec![1.0, 1.0],
-            r: vec![10.0, 10.0],
+            lambda: vec![1.0, 1.0].into(),
+            r: vec![10.0, 10.0].into(),
             l: 2.0,
             t_min: 2,
         };
@@ -134,10 +134,10 @@ mod tests {
         // Same but edge-cloud cost 10: open one edge (10) + remote (2)
         // = 12 vs both open = 20.
         let inst = Instance {
-            c_d: vec![vec![0.0, 1.0], vec![1.0, 0.0]],
+            c_d: vec![vec![0.0, 1.0], vec![1.0, 0.0]].into(),
             c_e: vec![10.0, 10.0],
-            lambda: vec![1.0, 1.0],
-            r: vec![10.0, 10.0],
+            lambda: vec![1.0, 1.0].into(),
+            r: vec![10.0, 10.0].into(),
             l: 2.0,
             t_min: 2,
         };
@@ -151,10 +151,10 @@ mod tests {
         // One edge free for both, but capacity 1 forces the second device
         // to the other (expensive) edge.
         let inst = Instance {
-            c_d: vec![vec![0.0, 5.0], vec![0.0, 5.0]],
+            c_d: vec![vec![0.0, 5.0], vec![0.0, 5.0]].into(),
             c_e: vec![1.0, 1.0],
-            lambda: vec![1.0, 1.0],
-            r: vec![1.0, 10.0],
+            lambda: vec![1.0, 1.0].into(),
+            r: vec![1.0, 10.0].into(),
             l: 1.0,
             t_min: 2,
         };
@@ -167,10 +167,10 @@ mod tests {
     fn t_min_allows_dropping_expensive_devices() {
         // Device 1 is expensive everywhere; with t_min = 1 it is dropped.
         let inst = Instance {
-            c_d: vec![vec![0.0, 0.0], vec![100.0, 100.0]],
+            c_d: vec![vec![0.0, 0.0], vec![100.0, 100.0]].into(),
             c_e: vec![1.0, 1.0],
-            lambda: vec![1.0, 1.0],
-            r: vec![10.0, 10.0],
+            lambda: vec![1.0, 1.0].into(),
+            r: vec![10.0, 10.0].into(),
             l: 1.0,
             t_min: 1,
         };
@@ -182,10 +182,10 @@ mod tests {
     #[test]
     fn infeasible_returns_none() {
         let inst = Instance {
-            c_d: vec![vec![0.0], vec![0.0]],
+            c_d: vec![vec![0.0], vec![0.0]].into(),
             c_e: vec![1.0],
-            lambda: vec![5.0, 5.0],
-            r: vec![1.0],
+            lambda: vec![5.0, 5.0].into(),
+            r: vec![1.0].into(),
             l: 1.0,
             t_min: 1,
         };

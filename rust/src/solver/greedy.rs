@@ -40,7 +40,7 @@ pub fn greedy(inst: &Instance) -> GreedyOutcome {
             None => {
                 let next = (0..m)
                     .filter(|&j| !open[j])
-                    .max_by(|&a, &b| inst.r[a].partial_cmp(&inst.r[b]).unwrap());
+                    .max_by(|&a, &b| inst.r[a].total_cmp(&inst.r[b]));
                 match next {
                     Some(j) => {
                         open[j] = true;

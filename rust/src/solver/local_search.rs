@@ -3,23 +3,54 @@
 //! §IV-C points to.
 //!
 //! Moves over the open-edge set: **open** a closed edge, **close** an open
-//! edge, **swap** an open edge for a closed one. After each candidate move
-//! the assignment is re-completed with the shared capacity-aware greedy;
-//! the move is kept iff total cost strictly improves. Terminates at a
-//! local optimum or after `max_rounds` sweeps.
+//! edge, **swap** an open edge for a closed one, interleaved with
+//! per-device reassignment sweeps. Two engines share the move structure:
+//!
+//! * **Completion** (the seed algorithm): every facility candidate
+//!   re-completes the whole assignment with the shared capacity-aware
+//!   greedy and re-scores it from scratch — O(n·m) per candidate. Richer
+//!   per-candidate reshuffling, affordable only on small instances.
+//! * **Incremental**: an [`IncrementalEvaluator`] carries residual
+//!   capacities and the running cost, so each candidate is a transaction
+//!   of O(1)-scored device moves that is kept if the accumulated delta
+//!   improves and rolled back otherwise. No completion re-runs on the hot
+//!   path — this is what lets local search scale to thousands of devices.
+//!
+//! `LsMode::Auto` (the default) picks Completion below
+//! [`INCREMENTAL_ABOVE`] x-variables and Incremental beyond. Both engines
+//! only ever accept strictly improving moves, so `cost ≤ greedy cost`
+//! holds for each.
 
 use super::greedy::greedy;
-use super::solution::{complete_assignment, Assignment};
+use super::solution::{
+    close_empty_edges, complete_assignment, refine_in_place, Assignment, IncrementalEvaluator,
+};
 use crate::hflop::Instance;
+
+/// `n·m` above which `LsMode::Auto` switches to the incremental engine.
+pub const INCREMENTAL_ABOVE: usize = 512;
+
+/// Which move-scoring engine to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LsMode {
+    /// Completion below [`INCREMENTAL_ABOVE`] x-variables, incremental
+    /// beyond.
+    Auto,
+    /// Full re-completion + re-score per candidate (the seed behavior).
+    Completion,
+    /// O(1) delta scoring via [`IncrementalEvaluator`].
+    Incremental,
+}
 
 #[derive(Debug, Clone)]
 pub struct LocalSearchOptions {
     pub max_rounds: usize,
+    pub mode: LsMode,
 }
 
 impl Default for LocalSearchOptions {
     fn default() -> Self {
-        LocalSearchOptions { max_rounds: 50 }
+        LocalSearchOptions { max_rounds: 50, mode: LsMode::Auto }
     }
 }
 
@@ -34,6 +65,20 @@ pub struct LocalSearchOutcome {
 /// Run local search starting from the greedy solution (or all-open if
 /// greedy fails).
 pub fn local_search(inst: &Instance, opts: &LocalSearchOptions) -> LocalSearchOutcome {
+    let incremental = match opts.mode {
+        LsMode::Completion => false,
+        LsMode::Incremental => true,
+        LsMode::Auto => inst.n() * inst.m() > INCREMENTAL_ABOVE,
+    };
+    if incremental {
+        incremental::run(inst, opts)
+    } else {
+        completion_run(inst, opts)
+    }
+}
+
+/// The seed engine: re-complete + full re-score per candidate.
+fn completion_run(inst: &Instance, opts: &LocalSearchOptions) -> LocalSearchOutcome {
     let m = inst.m();
     let start = greedy(inst);
     let (mut open, mut best_cost, mut best) = match start.best {
@@ -98,6 +143,199 @@ pub fn local_search(inst: &Instance, opts: &LocalSearchOptions) -> LocalSearchOu
     LocalSearchOutcome { best, cost: best_cost, rounds, moves }
 }
 
+/// The O(1)-delta engine.
+mod incremental {
+    use super::*;
+
+    pub(super) fn run(inst: &Instance, opts: &LocalSearchOptions) -> LocalSearchOutcome {
+        let m = inst.m();
+        let start = greedy(inst);
+        let start_sol = match start.best {
+            Some(sol) => sol,
+            None => match complete_assignment(inst, &vec![true; m]) {
+                Some(sol) => sol,
+                None => {
+                    return LocalSearchOutcome {
+                        best: None,
+                        cost: f64::INFINITY,
+                        rounds: 0,
+                        moves: 0,
+                    }
+                }
+            },
+        };
+
+        let mut ev = IncrementalEvaluator::new(inst, &start_sol);
+        let mut moves = refine_in_place(&mut ev);
+        close_empty_edges(&mut ev);
+
+        let mut rounds = 0usize;
+        for round in 0..opts.max_rounds {
+            rounds = round + 1;
+            if !facility_round(&mut ev) {
+                break;
+            }
+            moves += 1;
+            moves += refine_in_place(&mut ev);
+            close_empty_edges(&mut ev);
+        }
+
+        let best = ev.assignment();
+        // Report a drift-free full recompute, not the running delta sum.
+        let cost = best.cost(inst);
+        LocalSearchOutcome { best: Some(best), cost, rounds, moves }
+    }
+
+    /// Try one first-improvement facility move (open, close, then swap).
+    /// Returns true if a move was applied.
+    fn facility_round(ev: &mut IncrementalEvaluator) -> bool {
+        let m = ev.instance().m();
+        for b in 0..m {
+            if !ev.is_open(b) && try_open(ev, b) {
+                return true;
+            }
+        }
+        for a in 0..m {
+            if ev.is_open(a) && try_close(ev, a) {
+                return true;
+            }
+        }
+        for a in 0..m {
+            if !ev.is_open(a) {
+                continue;
+            }
+            for b in 0..m {
+                if !ev.is_open(b) && try_swap(ev, a, b) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Open `b` and pull in every device that strictly prefers it (first
+    /// come, capacity permitting). Keep iff the net delta improves.
+    fn try_open(ev: &mut IncrementalEvaluator, b: usize) -> bool {
+        let inst = ev.instance();
+        let cost0 = ev.cost();
+        ev.open_edge(b);
+        let mut log: Vec<(usize, usize)> = Vec::new();
+        for i in 0..inst.n() {
+            let Some(cur) = ev.assign_of(i) else { continue };
+            if cur == b {
+                continue;
+            }
+            if inst.c_d[i][b] < inst.c_d[i][cur] - 1e-12
+                && ev.residual(b) + 1e-9 >= inst.lambda[i]
+            {
+                ev.apply_reassign(i, b);
+                log.push((i, cur));
+            }
+        }
+        if ev.served(b) > 0 && ev.cost() < cost0 - 1e-12 {
+            return true;
+        }
+        for &(i, old) in log.iter().rev() {
+            ev.apply_reassign(i, old);
+        }
+        ev.close_edge(b);
+        ev.reset_cost(cost0);
+        false
+    }
+
+    /// Migrate every device off `a` and close it. Keep iff improving.
+    fn try_close(ev: &mut IncrementalEvaluator, a: usize) -> bool {
+        let cost0 = ev.cost();
+        let Some(log) = migrate_off(ev, a) else {
+            ev.reset_cost(cost0);
+            return false;
+        };
+        ev.close_edge(a);
+        if ev.cost() < cost0 - 1e-12 {
+            return true;
+        }
+        ev.open_edge(a);
+        undo_migrate(ev, a, &log);
+        ev.reset_cost(cost0);
+        false
+    }
+
+    /// Open `b`, migrate `a`'s devices (cheapest feasible target, which
+    /// now includes `b`), close `a`. Keep iff improving and `b` is used.
+    fn try_swap(ev: &mut IncrementalEvaluator, a: usize, b: usize) -> bool {
+        let cost0 = ev.cost();
+        ev.open_edge(b);
+        let Some(log) = migrate_off(ev, a) else {
+            ev.close_edge(b);
+            ev.reset_cost(cost0);
+            return false;
+        };
+        ev.close_edge(a);
+        if ev.served(b) > 0 && ev.cost() < cost0 - 1e-12 {
+            return true;
+        }
+        ev.open_edge(a);
+        undo_migrate(ev, a, &log);
+        ev.close_edge(b);
+        ev.reset_cost(cost0);
+        false
+    }
+
+    /// Move every device off `a`: cheapest feasible other open edge, or
+    /// unassign when participation allows. On success returns the undo
+    /// log (`(device, dropped)`); on failure rolls its own moves back and
+    /// returns None (cost drift is the caller's `reset_cost` to fix).
+    fn migrate_off(ev: &mut IncrementalEvaluator, a: usize) -> Option<Vec<(usize, bool)>> {
+        let inst = ev.instance();
+        let (n, m) = (inst.n(), inst.m());
+        let mut log: Vec<(usize, bool)> = Vec::new();
+        for i in 0..n {
+            if ev.assign_of(i) != Some(a) {
+                continue;
+            }
+            let row = inst.c_d.row(i);
+            let mut best: Option<usize> = None;
+            for j in 0..m {
+                if j == a || !ev.is_open(j) || ev.residual(j) + 1e-9 < inst.lambda[i] {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => row[j] < row[b],
+                };
+                if better {
+                    best = Some(j);
+                }
+            }
+            match best {
+                Some(j) => {
+                    ev.apply_reassign(i, j);
+                    log.push((i, false));
+                }
+                None if ev.n_assigned() > inst.t_min => {
+                    ev.apply_unassign(i);
+                    log.push((i, true));
+                }
+                None => {
+                    undo_migrate(ev, a, &log);
+                    return None;
+                }
+            }
+        }
+        Some(log)
+    }
+
+    fn undo_migrate(ev: &mut IncrementalEvaluator, a: usize, log: &[(usize, bool)]) {
+        for &(i, dropped) in log.iter().rev() {
+            if dropped {
+                ev.apply_assign(i, a);
+            } else {
+                ev.apply_reassign(i, a);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,7 +391,64 @@ mod tests {
     #[test]
     fn round_limit_respected() {
         let inst = InstanceBuilder::random(30, 6, 5).t_min(28).build();
-        let ls = local_search(&inst, &LocalSearchOptions { max_rounds: 2 });
+        let ls = local_search(&inst, &LocalSearchOptions { max_rounds: 2, ..Default::default() });
         assert!(ls.rounds <= 2);
+    }
+
+    #[test]
+    fn incremental_feasible_and_not_worse_than_greedy() {
+        for seed in [1u64, 5, 9] {
+            let inst = InstanceBuilder::unit_cost(80, 8, seed).build();
+            let g = greedy(&inst);
+            let opts = LocalSearchOptions { mode: LsMode::Incremental, ..Default::default() };
+            let ls = local_search(&inst, &opts);
+            let sol = ls.best.expect("unit-cost instances are feasible");
+            sol.check_feasible(&inst).unwrap();
+            assert!(ls.cost <= g.cost + 1e-9, "seed {seed}: ls {} greedy {}", ls.cost, g.cost);
+            assert!((ls.cost - sol.cost(&inst)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn incremental_never_below_optimal() {
+        for seed in 0..6 {
+            let inst = InstanceBuilder::unit_cost(9, 3, seed).build();
+            let opts = LocalSearchOptions { mode: LsMode::Incremental, ..Default::default() };
+            let ls = local_search(&inst, &opts);
+            let (_, opt) = brute_force(&inst).unwrap();
+            assert!(ls.cost >= opt - 1e-9, "seed {seed}: {} < {opt}", ls.cost);
+        }
+    }
+
+    #[test]
+    fn incremental_handles_infeasible() {
+        let mut inst = InstanceBuilder::unit_cost(5, 2, 4).build();
+        for r in inst.r.iter_mut() {
+            *r = 0.0;
+        }
+        let opts = LocalSearchOptions { mode: LsMode::Incremental, ..Default::default() };
+        let ls = local_search(&inst, &opts);
+        assert!(ls.best.is_none());
+    }
+
+    #[test]
+    fn engines_agree_on_feasibility_and_direction() {
+        // Both engines start from greedy and only accept improvements, so
+        // each must land at or below the greedy cost; neither may violate
+        // feasibility. (Their local optima may differ.)
+        for seed in [2u64, 11, 23] {
+            let inst = InstanceBuilder::random(25, 5, seed).t_min(22).build();
+            let g = greedy(&inst);
+            for mode in [LsMode::Completion, LsMode::Incremental] {
+                let ls =
+                    local_search(&inst, &LocalSearchOptions { mode, ..Default::default() });
+                if let Some(sol) = &ls.best {
+                    sol.check_feasible(&inst).unwrap();
+                    if g.cost.is_finite() {
+                        assert!(ls.cost <= g.cost + 1e-9, "seed {seed} mode {mode:?}");
+                    }
+                }
+            }
+        }
     }
 }

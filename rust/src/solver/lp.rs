@@ -11,7 +11,12 @@
 //!   budget to guarantee termination on degenerate problems.
 //!
 //! Dense is deliberate: B&B nodes solve LPs with a few hundred columns;
-//! a dense tableau is simple, cache-friendly and fast at that scale.
+//! a dense tableau is simple, cache-friendly and fast at that scale. The
+//! tableau is one contiguous [`DenseMatrix`] — pivots are row-slice
+//! scale/axpy passes over a single allocation, not a nested-vec pointer
+//! chase per row.
+
+use crate::core::{axpy, DenseMatrix};
 
 /// Comparison operator of a constraint row.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,7 +74,7 @@ const EPS: f64 = 1e-9;
 
 struct SimplexTableau {
     /// tableau[r][c]; last column is RHS; last row is the objective row.
-    t: Vec<Vec<f64>>,
+    t: DenseMatrix,
     n_rows: usize,
     n_cols: usize, // total columns incl. slacks/artificials, excl. RHS
     n_struct: usize,
@@ -103,7 +108,7 @@ impl SimplexTableau {
         let n_slack = rows.iter().filter(|r| r.cmp != Cmp::Eq).count();
         let n_art = rows.iter().filter(|r| r.cmp != Cmp::Le).count();
         let n_cols = n + n_slack + n_art;
-        let mut t = vec![vec![0.0; n_cols + 1]; m + 1];
+        let mut t = DenseMatrix::zeros(m + 1, n_cols + 1);
         let mut basis = vec![0usize; m];
 
         let mut slack_idx = n;
@@ -148,10 +153,8 @@ impl SimplexTableau {
         // objective row = sum of rows whose basic var is artificial.
         for k in 0..m {
             if s.basis[k] >= artificial_start {
-                for c in 0..=n_cols {
-                    let v = s.t[k][c];
-                    s.t[m][c] += v;
-                }
+                let (obj, src) = s.t.row_pair_mut(m, k);
+                axpy(obj, src, 1.0);
             }
         }
         // Zero out artificial columns in the objective row (they are basic
@@ -166,7 +169,7 @@ impl SimplexTableau {
     /// Pivot column choice: Dantzig (most positive reduced cost in the
     /// max-oriented row form we keep) with Bland fallback.
     fn choose_col(&self, bland: bool, allow: impl Fn(usize) -> bool) -> Option<usize> {
-        let obj = &self.t[self.n_rows];
+        let obj = self.t.row(self.n_rows);
         if bland {
             (0..self.n_cols).find(|&c| allow(c) && obj[c] > EPS)
         } else {
@@ -207,17 +210,13 @@ impl SimplexTableau {
     fn pivot(&mut self, row: usize, col: usize) {
         let piv = self.t[row][col];
         debug_assert!(piv.abs() > EPS);
-        let inv = 1.0 / piv;
-        for c in 0..=self.n_cols {
-            self.t[row][c] *= inv;
-        }
+        self.t.scale_row(row, 1.0 / piv);
         for r in 0..=self.n_rows {
             if r != row {
-                let f = self.t[r][col];
+                let (dst, src) = self.t.row_pair_mut(r, row);
+                let f = dst[col];
                 if f.abs() > EPS {
-                    for c in 0..=self.n_cols {
-                        self.t[r][c] -= f * self.t[row][c];
-                    }
+                    axpy(dst, src, -f);
                 }
             }
         }
@@ -273,9 +272,7 @@ pub fn solve_lp(lp: &Lp) -> LpResult {
     }
 
     // Phase 2 objective row (max `-c^T x` orientation).
-    for c in 0..=s.n_cols {
-        s.t[m][c] = 0.0;
-    }
+    s.t.row_mut(m).fill(0.0);
     for (j, &cost) in lp.objective.iter().enumerate() {
         s.t[m][j] = -cost;
     }
@@ -284,10 +281,8 @@ pub fn solve_lp(lp: &Lp) -> LpResult {
         let b = s.basis[r];
         let v = s.t[m][b];
         if v.abs() > EPS {
-            for c in 0..=s.n_cols {
-                let w = s.t[r][c];
-                s.t[m][c] -= v * w;
-            }
+            let (obj, src) = s.t.row_pair_mut(m, r);
+            axpy(obj, src, -v);
         }
     }
 

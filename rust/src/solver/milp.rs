@@ -37,10 +37,11 @@ pub fn build_relaxation(inst: &Instance, fixings: &[Fixing], disaggregate: bool)
     let (n, m) = (inst.n(), inst.m());
     let mut lp = Lp::new(n_vars(inst));
 
-    // Objective (Eq. 1).
+    // Objective (Eq. 1) — row-slice walk over the flat cost matrix.
     for i in 0..n {
+        let row = inst.c_d.row(i);
         for j in 0..m {
-            lp.set_obj(xv(i, j, m), inst.l * inst.c_d[i][j]);
+            lp.set_obj(xv(i, j, m), inst.l * row[j]);
         }
     }
     for j in 0..m {

@@ -17,7 +17,8 @@ pub mod solution;
 pub mod trust;
 
 pub use bb::{branch_and_bound, BbOptions, BbOutcome};
-pub use solution::{complete_assignment, Assignment};
+pub use local_search::{LocalSearchOptions, LsMode};
+pub use solution::{complete_assignment, refine_assignment, Assignment, IncrementalEvaluator};
 pub use trust::{solve_with_trust, TrustMatrix};
 
 use crate::hflop::Instance;

@@ -1,6 +1,9 @@
-//! Solution representation, feasibility checking, cost evaluation, and the
+//! Solution representation, feasibility checking, cost evaluation, the
 //! capacity-aware assignment-completion heuristic shared by the greedy,
-//! local-search and branch & bound incumbent rounding.
+//! local-search and branch & bound incumbent rounding — and the
+//! [`IncrementalEvaluator`], which maintains per-edge residual capacity
+//! and a running objective so reassign/swap moves are scored in O(1)
+//! delta instead of a full [`Assignment::cost`] recompute.
 
 use crate::hflop::Instance;
 
@@ -121,11 +124,12 @@ pub fn complete_assignment(inst: &Instance, open: &[bool]) -> Option<Assignment>
         .collect();
 
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| inst.lambda[b].partial_cmp(&inst.lambda[a]).unwrap());
+    order.sort_by(|&a, &b| inst.lambda[b].total_cmp(&inst.lambda[a]));
 
     let mut assign = vec![None; n];
     let mut assigned = 0usize;
     for &i in &order {
+        let row = inst.c_d.row(i);
         let mut best: Option<usize> = None;
         for j in 0..m {
             if !open[j] || residual[j] + 1e-9 < inst.lambda[i] {
@@ -134,7 +138,7 @@ pub fn complete_assignment(inst: &Instance, open: &[bool]) -> Option<Assignment>
             best = match best {
                 None => Some(j),
                 Some(b) => {
-                    let (cb, cj) = (inst.c_d[i][b], inst.c_d[i][j]);
+                    let (cb, cj) = (row[b], row[j]);
                     if cj < cb - 1e-12 || (cj < cb + 1e-12 && residual[j] > residual[b]) {
                         Some(j)
                     } else {
@@ -162,6 +166,267 @@ pub fn complete_assignment(inst: &Instance, open: &[bool]) -> Option<Assignment>
     Some(Assignment { assign, open })
 }
 
+/// Incremental cost/feasibility state over one evolving assignment.
+///
+/// Mirrors an [`Assignment`] plus per-edge residual capacity, served-device
+/// counts and the running Eq. 1 objective, so candidate moves are scored
+/// and applied in O(1) instead of re-walking the whole assignment. Local
+/// search and B&B incumbent polishing run on this; every mutation
+/// cross-checks the running cost against a full recompute under
+/// `debug_assertions`.
+///
+/// Invariants the *caller* maintains (the evaluator only tracks state):
+/// open-but-empty edges are allowed mid-transaction — finish with
+/// [`close_empty_edges`] to restore constraint (3) before extracting.
+#[derive(Debug, Clone)]
+pub struct IncrementalEvaluator<'a> {
+    inst: &'a Instance,
+    assign: Vec<Option<usize>>,
+    open: Vec<bool>,
+    residual: Vec<f64>,
+    served: Vec<usize>,
+    n_assigned: usize,
+    cost: f64,
+}
+
+impl<'a> IncrementalEvaluator<'a> {
+    /// Build from an existing assignment. O(n + m); every operation after
+    /// this is O(1).
+    pub fn new(inst: &'a Instance, sol: &Assignment) -> IncrementalEvaluator<'a> {
+        let m = inst.m();
+        debug_assert_eq!(sol.assign.len(), inst.n());
+        debug_assert_eq!(sol.open.len(), m);
+        let mut residual: Vec<f64> = inst.r.to_vec();
+        let mut served = vec![0usize; m];
+        let mut n_assigned = 0usize;
+        for &a in &sol.assign {
+            if let Some(j) = a {
+                served[j] += 1;
+                n_assigned += 1;
+            }
+        }
+        for (i, &a) in sol.assign.iter().enumerate() {
+            if let Some(j) = a {
+                residual[j] -= inst.lambda[i];
+            }
+        }
+        IncrementalEvaluator {
+            inst,
+            assign: sol.assign.clone(),
+            open: sol.open.clone(),
+            residual,
+            served,
+            n_assigned,
+            cost: sol.cost(inst),
+        }
+    }
+
+    /// The instance this evaluator scores against (outlives the borrow of
+    /// `self`, so callers can hold it across mutations).
+    pub fn instance(&self) -> &'a Instance {
+        self.inst
+    }
+
+    /// Running Eq. 1 objective.
+    pub fn cost(&self) -> f64 {
+        self.cost
+    }
+
+    pub fn residual(&self, j: usize) -> f64 {
+        self.residual[j]
+    }
+
+    pub fn served(&self, j: usize) -> usize {
+        self.served[j]
+    }
+
+    pub fn is_open(&self, j: usize) -> bool {
+        self.open[j]
+    }
+
+    pub fn assign_of(&self, i: usize) -> Option<usize> {
+        self.assign[i]
+    }
+
+    pub fn n_assigned(&self) -> usize {
+        self.n_assigned
+    }
+
+    /// Snapshot the current state as a plain [`Assignment`].
+    pub fn assignment(&self) -> Assignment {
+        Assignment { assign: self.assign.clone(), open: self.open.clone() }
+    }
+
+    /// Cost delta of moving assigned device `i` to edge `to`, or None if
+    /// the move is inadmissible (unassigned device, same/closed target,
+    /// no residual capacity). O(1).
+    pub fn reassign_delta(&self, i: usize, to: usize) -> Option<f64> {
+        let from = self.assign[i]?;
+        if to == from || !self.open[to] || self.residual[to] + 1e-9 < self.inst.lambda[i] {
+            return None;
+        }
+        Some(self.inst.l * (self.inst.c_d[i][to] - self.inst.c_d[i][from]))
+    }
+
+    /// Move assigned device `i` to edge `to`; returns the cost delta. O(1).
+    /// The caller has checked admissibility (e.g. via [`Self::reassign_delta`]);
+    /// rollbacks may re-apply moves without re-checking.
+    pub fn apply_reassign(&mut self, i: usize, to: usize) -> f64 {
+        let from = self.assign[i].expect("apply_reassign: device not assigned");
+        debug_assert_ne!(from, to);
+        let lam = self.inst.lambda[i];
+        self.residual[from] += lam;
+        self.served[from] -= 1;
+        self.residual[to] -= lam;
+        self.served[to] += 1;
+        self.assign[i] = Some(to);
+        let delta = self.inst.l * (self.inst.c_d[i][to] - self.inst.c_d[i][from]);
+        self.cost += delta;
+        self.debug_check();
+        delta
+    }
+
+    /// Unassign device `i`; returns the cost delta. The caller is
+    /// responsible for keeping participation ≥ t_min.
+    pub fn apply_unassign(&mut self, i: usize) -> f64 {
+        let from = self.assign[i].expect("apply_unassign: device not assigned");
+        self.residual[from] += self.inst.lambda[i];
+        self.served[from] -= 1;
+        self.assign[i] = None;
+        self.n_assigned -= 1;
+        let delta = -self.inst.l * self.inst.c_d[i][from];
+        self.cost += delta;
+        self.debug_check();
+        delta
+    }
+
+    /// Assign unassigned device `i` to open edge `to`; returns the delta.
+    pub fn apply_assign(&mut self, i: usize, to: usize) -> f64 {
+        debug_assert!(self.assign[i].is_none(), "apply_assign: device already assigned");
+        self.residual[to] -= self.inst.lambda[i];
+        self.served[to] += 1;
+        self.assign[i] = Some(to);
+        self.n_assigned += 1;
+        let delta = self.inst.l * self.inst.c_d[i][to];
+        self.cost += delta;
+        self.debug_check();
+        delta
+    }
+
+    /// Open edge `j` (pays `c_e[j]`); returns the delta.
+    pub fn open_edge(&mut self, j: usize) -> f64 {
+        debug_assert!(!self.open[j], "open_edge: already open");
+        self.open[j] = true;
+        self.cost += self.inst.c_e[j];
+        self.debug_check();
+        self.inst.c_e[j]
+    }
+
+    /// Close *empty* open edge `j` (recovers `c_e[j]`); returns the delta.
+    pub fn close_edge(&mut self, j: usize) -> f64 {
+        debug_assert!(self.open[j], "close_edge: not open");
+        debug_assert_eq!(self.served[j], 0, "close_edge: edge still serves devices");
+        self.open[j] = false;
+        self.cost -= self.inst.c_e[j];
+        self.debug_check();
+        -self.inst.c_e[j]
+    }
+
+    /// Pin the running cost back to a checkpointed value after a rolled
+    /// back transaction, discarding accumulated floating-point drift. The
+    /// checkpoint must describe the state the evaluator is actually in.
+    pub fn reset_cost(&mut self, cost: f64) {
+        debug_assert!(
+            (self.cost - cost).abs() <= 1e-6 * cost.abs().max(1.0),
+            "reset_cost to {} but running cost is {} — rollback incomplete?",
+            cost,
+            self.cost
+        );
+        self.cost = cost;
+    }
+
+    /// Cross-check the running cost against the seed's full recompute.
+    fn debug_check(&self) {
+        #[cfg(debug_assertions)]
+        {
+            let full = self.assignment().cost(self.inst);
+            debug_assert!(
+                (self.cost - full).abs() <= 1e-6 * full.abs().max(1.0),
+                "incremental cost {} diverged from full recompute {}",
+                self.cost,
+                full
+            );
+        }
+    }
+}
+
+/// Close every open-but-empty edge (restores constraint 3; never
+/// increases cost). Returns the total cost delta.
+pub fn close_empty_edges(ev: &mut IncrementalEvaluator) -> f64 {
+    let m = ev.instance().m();
+    let mut delta = 0.0;
+    for j in 0..m {
+        if ev.is_open(j) && ev.served(j) == 0 {
+            delta += ev.close_edge(j);
+        }
+    }
+    delta
+}
+
+/// First-improvement device-reassignment sweeps: move each assigned device
+/// to its cheapest feasible open edge until a sweep applies no move.
+/// Every candidate is scored in O(1) via [`IncrementalEvaluator`]; the
+/// whole pass is O(sweeps · n · m) with no completion re-runs. Returns the
+/// number of applied moves.
+pub fn refine_in_place(ev: &mut IncrementalEvaluator) -> usize {
+    let inst = ev.instance();
+    let (n, m) = (inst.n(), inst.m());
+    let mut moves = 0usize;
+    // Cost strictly decreases per move over a finite state space, so this
+    // terminates; the sweep cap is belt-and-braces.
+    for _sweep in 0..20 {
+        let mut improved = false;
+        for i in 0..n {
+            let Some(cur) = ev.assign_of(i) else { continue };
+            let row = inst.c_d.row(i);
+            let mut best: Option<usize> = None;
+            for j in 0..m {
+                if j == cur || !ev.is_open(j) {
+                    continue;
+                }
+                if row[j] < row[cur] - 1e-12 && ev.residual(j) + 1e-9 >= inst.lambda[i] {
+                    let better = match best {
+                        None => true,
+                        Some(b) => row[j] < row[b],
+                    };
+                    if better {
+                        best = Some(j);
+                    }
+                }
+            }
+            if let Some(j) = best {
+                ev.apply_reassign(i, j);
+                moves += 1;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    moves
+}
+
+/// Polish a feasible assignment with the incremental device sweeps and
+/// close any edges they empty. Used by local search and for B&B incumbent
+/// rounding; output cost ≤ input cost, feasibility preserved.
+pub fn refine_assignment(inst: &Instance, sol: &Assignment) -> Assignment {
+    let mut ev = IncrementalEvaluator::new(inst, sol);
+    refine_in_place(&mut ev);
+    close_empty_edges(&mut ev);
+    ev.assignment()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,10 +439,11 @@ mod tests {
                 vec![0.0, 1.0],
                 vec![1.0, 0.0],
                 vec![1.0, 1.0],
-            ],
+            ]
+            .into(),
             c_e: vec![5.0, 4.0],
-            lambda: vec![1.0, 1.0, 1.0],
-            r: vec![2.0, 2.0],
+            lambda: vec![1.0, 1.0, 1.0].into(),
+            r: vec![2.0, 2.0].into(),
             l: 2.0,
             t_min: 3,
         }
@@ -219,7 +485,7 @@ mod tests {
     fn detects_empty_open_edge() {
         let mut inst = tiny();
         inst.t_min = 2;
-        inst.r = vec![3.0, 3.0];
+        inst.r = vec![3.0, 3.0].into();
         let a = Assignment {
             assign: vec![Some(0), Some(0), Some(0)],
             open: vec![true, true], // edge 1 open but unused
@@ -255,13 +521,13 @@ mod tests {
         let sol = complete_assignment(&inst, &[true, true]).unwrap();
         sol.check_feasible(&inst).unwrap();
         let loads = sol.loads(&inst);
-        assert!(loads.iter().zip(&inst.r).all(|(l, r)| l <= r));
+        assert!(loads.iter().zip(inst.r.iter()).all(|(l, r)| l <= r));
     }
 
     #[test]
     fn complete_assignment_prefers_cheap_edges() {
         let mut inst = tiny();
-        inst.r = vec![10.0, 10.0]; // no capacity pressure
+        inst.r = vec![10.0, 10.0].into(); // no capacity pressure
         let sol = complete_assignment(&inst, &[true, true]).unwrap();
         assert_eq!(sol.assign[0], Some(0)); // device 0 free at edge 0
         assert_eq!(sol.assign[1], Some(1)); // device 1 free at edge 1
@@ -270,7 +536,7 @@ mod tests {
     #[test]
     fn complete_assignment_fails_when_capacity_short() {
         let mut inst = tiny();
-        inst.r = vec![1.0, 1.0]; // only two devices fit, t_min = 3
+        inst.r = vec![1.0, 1.0].into(); // only two devices fit, t_min = 3
         assert!(complete_assignment(&inst, &[true, true]).is_none());
     }
 
@@ -278,8 +544,8 @@ mod tests {
     fn complete_assignment_closes_unused() {
         let mut inst = tiny();
         inst.t_min = 2;
-        inst.r = vec![5.0, 5.0];
-        inst.c_d = vec![vec![0.0, 9.0], vec![0.0, 9.0], vec![0.0, 9.0]];
+        inst.r = vec![5.0, 5.0].into();
+        inst.c_d = vec![vec![0.0, 9.0], vec![0.0, 9.0], vec![0.0, 9.0]].into();
         let sol = complete_assignment(&inst, &[true, true]).unwrap();
         assert!(sol.open[0]);
         assert!(!sol.open[1], "unused edge should be closed");
@@ -292,5 +558,105 @@ mod tests {
         let sol = complete_assignment(&inst, &[true; 5]).unwrap();
         sol.check_feasible(&inst).unwrap();
         assert_eq!(sol.n_assigned(), 50);
+    }
+
+    #[test]
+    fn evaluator_tracks_reassign_and_open_close() {
+        let mut inst = tiny();
+        inst.r = vec![10.0, 10.0].into();
+        let start = Assignment {
+            assign: vec![Some(0), Some(0), Some(0)],
+            open: vec![true, false],
+        };
+        let mut ev = IncrementalEvaluator::new(&inst, &start);
+        let base = start.cost(&inst);
+        assert_eq!(ev.cost(), base);
+        assert_eq!(ev.served(0), 3);
+        assert!((ev.residual(0) - 7.0).abs() < 1e-12);
+
+        // Open edge 1, move device 1 there (cheaper: cost 0 vs 1).
+        assert!((ev.open_edge(1) - 4.0).abs() < 1e-12);
+        let delta = ev.reassign_delta(1, 1).unwrap();
+        assert!((delta - inst.l * (0.0 - 1.0)).abs() < 1e-12);
+        assert!((ev.apply_reassign(1, 1) - delta).abs() < 1e-12);
+        assert_eq!(ev.served(0), 2);
+        assert_eq!(ev.served(1), 1);
+        let sol = ev.assignment();
+        assert!((ev.cost() - sol.cost(&inst)).abs() < 1e-12);
+        sol.check_feasible(&inst).unwrap();
+    }
+
+    #[test]
+    fn evaluator_rejects_inadmissible_moves() {
+        let inst = tiny(); // capacity 2.0 per edge
+        let start = Assignment {
+            assign: vec![Some(0), Some(1), Some(1)],
+            open: vec![true, true],
+        };
+        let ev = IncrementalEvaluator::new(&inst, &start);
+        assert!(ev.reassign_delta(0, 0).is_none(), "same edge");
+        assert!(ev.reassign_delta(0, 1).is_none(), "edge 1 full (2.0/2.0)");
+    }
+
+    #[test]
+    fn evaluator_unassign_assign_round_trip() {
+        let inst = tiny();
+        let start = Assignment {
+            assign: vec![Some(0), Some(1), Some(1)],
+            open: vec![true, true],
+        };
+        let mut ev = IncrementalEvaluator::new(&inst, &start);
+        let c0 = ev.cost();
+        let d1 = ev.apply_unassign(2);
+        assert_eq!(ev.n_assigned(), 2);
+        let d2 = ev.apply_assign(2, 1);
+        assert_eq!(ev.n_assigned(), 3);
+        assert!((d1 + d2).abs() < 1e-12);
+        ev.reset_cost(c0);
+        assert_eq!(ev.cost(), c0);
+    }
+
+    #[test]
+    fn refine_moves_devices_to_cheaper_open_edges() {
+        let mut inst = tiny();
+        inst.r = vec![10.0, 10.0].into();
+        // Everyone parked on edge 0; device 1 is cheaper at edge 1.
+        let start = Assignment {
+            assign: vec![Some(0), Some(0), Some(0)],
+            open: vec![true, true],
+        };
+        let refined = refine_assignment(&inst, &start);
+        assert_eq!(refined.assign[1], Some(1));
+        assert!(refined.cost(&inst) <= start.cost(&inst));
+        refined.check_feasible(&inst).unwrap();
+    }
+
+    #[test]
+    fn refine_closes_emptied_edges() {
+        let mut inst = tiny();
+        inst.t_min = 2;
+        inst.r = vec![10.0, 10.0].into();
+        inst.c_d = vec![vec![0.0, 9.0], vec![0.0, 9.0], vec![0.0, 9.0]].into();
+        // Device 2 sits alone on expensive edge 1; refining moves it to
+        // edge 0 and the emptied edge closes.
+        let start = Assignment {
+            assign: vec![Some(0), Some(0), Some(1)],
+            open: vec![true, true],
+        };
+        let refined = refine_assignment(&inst, &start);
+        assert_eq!(refined.assign[2], Some(0));
+        assert!(!refined.open[1]);
+        refined.check_feasible(&inst).unwrap();
+    }
+
+    #[test]
+    fn refine_never_worsens_random_instances() {
+        for seed in 0..10 {
+            let inst = InstanceBuilder::random(20, 4, seed).t_min(16).build();
+            let Some(start) = complete_assignment(&inst, &[true; 4]) else { continue };
+            let refined = refine_assignment(&inst, &start);
+            assert!(refined.cost(&inst) <= start.cost(&inst) + 1e-9, "seed {seed}");
+            refined.check_feasible(&inst).unwrap();
+        }
     }
 }

@@ -64,9 +64,7 @@ pub fn kmeans(points: &[GeoPoint], k: usize, max_iter: usize, rng: &mut Rng) -> 
         for (i, &p) in points.iter().enumerate() {
             let best = (0..centroids.len())
                 .min_by(|&a, &b| {
-                    haversine_km(p, centroids[a])
-                        .partial_cmp(&haversine_km(p, centroids[b]))
-                        .unwrap()
+                    haversine_km(p, centroids[a]).total_cmp(&haversine_km(p, centroids[b]))
                 })
                 .unwrap();
             if assignment[i] != best {
@@ -93,7 +91,7 @@ pub fn kmeans(points: &[GeoPoint], k: usize, max_iter: usize, rng: &mut Rng) -> 
                 let far = points
                     .iter()
                     .max_by(|&&a, &&b| {
-                        haversine_km(a, *c).partial_cmp(&haversine_km(b, *c)).unwrap()
+                        haversine_km(a, *c).total_cmp(&haversine_km(b, *c))
                     })
                     .unwrap();
                 *c = *far;

@@ -9,6 +9,7 @@ pub mod kmeans;
 pub use geo::{haversine_km, GeoPoint, LA_BBOX};
 pub use kmeans::{kmeans, KMeansResult};
 
+use crate::core::DenseMatrix;
 use crate::util::rng::Rng;
 
 /// An FL device (in the use case: a traffic sensor with compute).
@@ -39,8 +40,8 @@ pub struct EdgeHost {
 pub struct Topology {
     pub devices: Vec<Device>,
     pub edges: Vec<EdgeHost>,
-    /// Device-to-edge communication cost matrix, n x m.
-    pub c_d: Vec<Vec<f64>>,
+    /// Device-to-edge communication cost matrix, n x m (row-major).
+    pub c_d: DenseMatrix,
     /// Edge-to-cloud communication cost vector, m.
     pub c_e: Vec<f64>,
 }
@@ -56,18 +57,18 @@ impl Topology {
 
     /// Index of the cheapest edge host for device `i`.
     pub fn cheapest_edge(&self, i: usize) -> usize {
-        let row = &self.c_d[i];
+        let row = self.c_d.row(i);
         (0..row.len())
-            .min_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+            .min_by(|&a, &b| row[a].total_cmp(&row[b]))
             .expect("topology has no edge hosts")
     }
 
     /// Sanity-check matrix dimensions and value ranges.
     pub fn validate(&self) -> anyhow::Result<()> {
         let (n, m) = (self.n_devices(), self.n_edges());
-        anyhow::ensure!(self.c_d.len() == n, "c_d rows {} != n {}", self.c_d.len(), n);
-        for (i, row) in self.c_d.iter().enumerate() {
-            anyhow::ensure!(row.len() == m, "c_d[{i}] len {} != m {}", row.len(), m);
+        anyhow::ensure!(self.c_d.rows() == n, "c_d rows {} != n {}", self.c_d.rows(), n);
+        anyhow::ensure!(self.c_d.cols() == m, "c_d cols {} != m {}", self.c_d.cols(), m);
+        for (i, row) in self.c_d.row_iter().enumerate() {
             anyhow::ensure!(
                 row.iter().all(|&c| c >= 0.0 && c.is_finite()),
                 "c_d[{i}] negative/NaN"
@@ -148,22 +149,14 @@ impl GeoTopologyBuilder {
         // radius is effectively "same LAN" => 0 (paper: "an aggregator
         // placed inside a device's local area network").
         const FREE_RADIUS_KM: f64 = 3.0;
-        let c_d = devices
-            .iter()
-            .map(|d| {
-                edges
-                    .iter()
-                    .map(|e| {
-                        let dist = haversine_km(d.location, e.location);
-                        if dist <= FREE_RADIUS_KM {
-                            0.0
-                        } else {
-                            dist
-                        }
-                    })
-                    .collect()
-            })
-            .collect();
+        let c_d = DenseMatrix::from_fn(devices.len(), edges.len(), |i, j| {
+            let dist = haversine_km(devices[i].location, edges[j].location);
+            if dist <= FREE_RADIUS_KM {
+                0.0
+            } else {
+                dist
+            }
+        });
         // Edge-to-cloud links are metered uniformly; scaled so one global
         // exchange costs about one moderately-remote local exchange.
         let c_e = edges.iter().map(|_| 25.0).collect();
@@ -197,12 +190,13 @@ pub fn unit_cost_topology(
             capacity: rng.uniform(capacity_range.0, capacity_range.1),
         })
         .collect();
-    let c_d = (0..n_devices)
-        .map(|_| {
-            let free = rng.below(n_edges);
-            (0..n_edges).map(|j| if j == free { 0.0 } else { 1.0 }).collect()
-        })
-        .collect();
+    let mut c_d = DenseMatrix::zeros(n_devices, n_edges);
+    for i in 0..n_devices {
+        let free = rng.below(n_edges);
+        for (j, c) in c_d.row_mut(i).iter_mut().enumerate() {
+            *c = if j == free { 0.0 } else { 1.0 };
+        }
+    }
     let c_e = vec![1.0; n_edges];
     Topology { devices, edges, c_d, c_e }
 }

@@ -73,7 +73,7 @@ pub fn t_critical_975(df: usize) -> f64 {
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     percentile_sorted(&s, p)
 }
 

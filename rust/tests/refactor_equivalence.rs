@@ -1,0 +1,152 @@
+//! Refactor property tests: the flat `core::DenseMatrix` storage and the
+//! incremental evaluator must be behaviourally indistinguishable from the
+//! seed's nested-vec / full-rescore implementations.
+//!
+//! (a) exact-mode solve costs are bit-identical to a nested-`Vec<Vec<f64>>`
+//!     reference evaluation of Eq. 1 (same summation order as the seed);
+//! (b) the incremental evaluator's running cost matches a full
+//!     `Assignment::cost` recompute after every accepted move;
+//! (c) heuristic costs dominate the LP-relaxation lower bound.
+
+use hflop::hflop::{Instance, InstanceBuilder};
+use hflop::solver::local_search::{local_search, LocalSearchOptions, LsMode};
+use hflop::solver::lp::LpResult;
+use hflop::solver::milp::build_relaxation;
+use hflop::solver::{complete_assignment, solve, Assignment, IncrementalEvaluator, SolveOptions};
+
+/// Reference Eq. 1 evaluation over nested rows — the seed's storage
+/// layout and summation order, used to pin bit-identical behaviour of the
+/// flat row-major storage.
+fn nested_cost(inst: &Instance, nested: &[Vec<f64>], sol: &Assignment) -> f64 {
+    let local: f64 = sol
+        .assign
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &a)| a.map(|j| nested[i][j]))
+        .sum();
+    let global: f64 = sol
+        .open
+        .iter()
+        .enumerate()
+        .filter_map(|(j, &o)| o.then_some(inst.c_e[j]))
+        .sum();
+    local * inst.l + global
+}
+
+#[test]
+fn exact_solve_bit_identical_to_nested_vec_reference() {
+    let mut solved = 0usize;
+    for seed in 0..24u64 {
+        let n = 8 + (seed % 5) as usize;
+        let m = 3 + (seed % 2) as usize;
+        let inst = InstanceBuilder::random(n, m, seed).t_min(n - 2).build();
+        let nested: Vec<Vec<f64>> = inst.c_d.row_iter().map(|r| r.to_vec()).collect();
+        let Ok(sol) = solve(&inst, &SolveOptions::exact()) else {
+            continue; // infeasible draws are legitimate; skip
+        };
+        assert!(sol.proven_optimal, "seed {seed}");
+        sol.assignment.check_feasible(&inst).unwrap();
+        let reference = nested_cost(&inst, &nested, &sol.assignment);
+        let flat = sol.assignment.cost(&inst);
+        assert_eq!(
+            reference.to_bits(),
+            flat.to_bits(),
+            "seed {seed}: nested {reference} != flat {flat}"
+        );
+        assert!((sol.cost - flat).abs() < 1e-9, "seed {seed}");
+        solved += 1;
+    }
+    assert!(solved >= 20, "only {solved} instances solved — widen the sweep");
+}
+
+#[test]
+fn incremental_evaluator_matches_full_recompute_after_every_move() {
+    let mut checked = 0usize;
+    for seed in 0..20u64 {
+        let inst = InstanceBuilder::random(16, 5, 400 + seed).t_min(12).build();
+        let Some(start) = complete_assignment(&inst, &[true; 5]) else { continue };
+        let mut ev = IncrementalEvaluator::new(&inst, &start);
+        // First-improvement sweeps; cross-check after each accepted move.
+        for _sweep in 0..4 {
+            for i in 0..inst.n() {
+                let Some(cur) = ev.assign_of(i) else { continue };
+                for j in 0..inst.m() {
+                    if j == cur {
+                        continue;
+                    }
+                    if let Some(delta) = ev.reassign_delta(i, j) {
+                        if delta < -1e-12 {
+                            ev.apply_reassign(i, j);
+                            let full = ev.assignment().cost(&inst);
+                            assert!(
+                                (ev.cost() - full).abs() <= 1e-9 * full.abs().max(1.0),
+                                "seed {seed}: running {} vs full {full}",
+                                ev.cost()
+                            );
+                            checked += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        let end = ev.assignment();
+        assert!(end.cost(&inst) <= start.cost(&inst) + 1e-9, "seed {seed}");
+    }
+    assert!(checked > 0, "sweep exercised no moves — instances too easy");
+}
+
+#[test]
+fn incremental_local_search_cost_is_exact_full_recompute() {
+    for seed in 0..20u64 {
+        let inst = InstanceBuilder::unit_cost(40, 6, 200 + seed).build();
+        let opts = LocalSearchOptions { mode: LsMode::Incremental, ..Default::default() };
+        let ls = local_search(&inst, &opts);
+        let sol = ls.best.expect("unit-cost instances are feasible");
+        sol.check_feasible(&inst).unwrap();
+        assert_eq!(
+            ls.cost.to_bits(),
+            sol.cost(&inst).to_bits(),
+            "seed {seed}: reported cost must be the drift-free recompute"
+        );
+    }
+}
+
+#[test]
+fn heuristic_cost_dominates_lp_lower_bound() {
+    for seed in 0..20u64 {
+        let inst = InstanceBuilder::unit_cost(24, 4, 700 + seed).build();
+        let bound = match build_relaxation(&inst, &[], false).solve() {
+            LpResult::Optimal { obj, .. } => obj,
+            other => panic!("seed {seed}: LP should solve: {other:?}"),
+        };
+        let he = solve(&inst, &SolveOptions::heuristic()).unwrap();
+        assert!(
+            he.cost >= bound - 1e-6,
+            "seed {seed}: heuristic {} below LP bound {bound}",
+            he.cost
+        );
+        for mode in [LsMode::Completion, LsMode::Incremental] {
+            let ls = local_search(&inst, &LocalSearchOptions { mode, ..Default::default() });
+            let cost = ls.cost;
+            assert!(
+                cost >= bound - 1e-6,
+                "seed {seed} mode {mode:?}: {cost} below LP bound {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn core_types_expose_flat_views() {
+    let inst = InstanceBuilder::unit_cost(10, 3, 1).build();
+    assert_eq!(inst.c_d.rows(), 10);
+    assert_eq!(inst.c_d.cols(), 3);
+    assert_eq!(inst.c_d.as_slice().len(), 30);
+    for row in &inst.c_d {
+        assert_eq!(row.len(), 3);
+    }
+    assert_eq!(inst.lambda.len(), 10);
+    assert!(inst.lambda.total() > 0.0);
+    assert!((inst.r.total() - 2.0 * inst.lambda.total()).abs() < 1e-9);
+}
