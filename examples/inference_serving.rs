@@ -46,16 +46,25 @@ fn main() -> anyhow::Result<()> {
                 name.to_string(),
                 format!("{:.2} ± {:.2}", o.latency.mean(), o.latency.std()),
                 paper.to_string(),
+                format!("{:.1} / {:.1}", o.percentiles.p50(), o.percentiles.p99()),
                 format!("{:.1}%", 100.0 * o.spill_fraction()),
                 format!("{}", o.total()),
             ]
         })
         .collect();
-    println!("{}", ascii_table(&["setup", "ours (ms)", "paper (ms)", "spill", "requests"], &table));
+    println!(
+        "{}",
+        ascii_table(
+            &["setup", "ours (ms)", "paper (ms)", "p50/p99", "spill", "requests"],
+            &table
+        )
+    );
 
     for (name, o, _) in &rows {
         let mut h = Histogram::new(0.0, 120.0, 12);
-        for &s in &o.samples {
+        // Reservoir sample (bounded memory) — still renders the Fig. 7
+        // distribution shape.
+        for &s in o.samples.as_slice() {
             h.push(s);
         }
         println!("{name} response-time histogram (ms):\n{}", h.render(40));

@@ -1,0 +1,87 @@
+//! Joint-timeline co-simulation: training, serving and the orchestrator
+//! on one event-driven kernel (`experiments::interference`).
+//!
+//! Runs the four scenario presets — steady load, diurnal surge, edge
+//! failure, retrain burst — and reports per-preset serving quality,
+//! training activity and orchestrator reactions, plus the latency
+//! timeline around the edge-failure event (degradation + recovery after
+//! the mid-run plan swap).
+//!
+//! Run: `cargo run --release --example interference`
+
+use hflop::experiments::interference::{run, InterferenceConfig, Preset};
+use hflop::experiments::{Scenario, ScenarioConfig};
+use hflop::metrics::export::ascii_table;
+
+fn main() -> anyhow::Result<()> {
+    hflop::init_logging();
+
+    let sc = Scenario::build(ScenarioConfig {
+        n_clients: 20,
+        n_edges: 4,
+        weeks: 5,
+        balanced_clients: false,
+        ..Default::default()
+    })?;
+    println!(
+        "scenario: {} devices, {} edges, HFLOP cost {:.1} (optimal = {})",
+        sc.topo.n_devices(),
+        sc.topo.n_edges(),
+        sc.hflop_cost,
+        sc.hflop_optimal
+    );
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut failure_timeline = None;
+    let mut failure_at_s = 0.0;
+    for preset in Preset::ALL {
+        let cfg = InterferenceConfig { preset, ..Default::default() };
+        let out = run(&sc, &cfg)?;
+        rows.push(vec![
+            preset.name().to_string(),
+            format!("{}", out.serving.total()),
+            format!("{:.2}", out.serving.latency.mean()),
+            format!("{:.1}", out.serving.percentiles.p99()),
+            format!("{:.1}%", 100.0 * out.serving.spill_fraction()),
+            format!("{}", out.rounds_completed),
+            format!("{}", out.plan_swaps),
+            format!("{}", out.retrain_triggers),
+            format!("{}", out.events_cancelled),
+        ]);
+        if preset == Preset::EdgeFailure {
+            // Matches experiments::interference::preset_plan's schedule.
+            failure_at_s = 0.4 * cfg.duration_s;
+            failure_timeline = Some(out);
+        }
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &[
+                "preset", "requests", "mean ms", "p99 ms", "spill", "rounds", "swaps",
+                "retrains", "cancelled"
+            ],
+            &rows
+        )
+    );
+
+    if let Some(out) = failure_timeline {
+        println!("edge-failure latency timeline (bucket mean, ms):");
+        let w = out.timeline.width_s();
+        for (i, b) in out.timeline.buckets().iter().enumerate() {
+            if b.count() == 0 {
+                continue;
+            }
+            let bar = "#".repeat((b.mean() / 2.0).min(60.0) as usize);
+            let (t0, t1) = (i as f64 * w, (i + 1) as f64 * w);
+            println!("  [{t0:>5.0}s..{t1:>5.0}s) {:>8.2}  {bar}", b.mean());
+        }
+        println!(
+            "  (failure at {failure_at_s:.0}s; the re-solve installs a new plan: \
+             {} swap(s), {} stale timer(s) cancelled)",
+            out.plan_swaps,
+            out.events_cancelled
+        );
+    }
+    Ok(())
+}

@@ -7,6 +7,16 @@
 
 use std::time::Instant;
 
+/// CI smoke mode: `HFLOP_BENCH_SMOKE=1` clamps every bench to a single
+/// iteration and skips warmup, so workflows can verify the harnesses
+/// still build and run without paying for full sweeps. `0`, empty, or
+/// unset mean full runs.
+fn smoke() -> bool {
+    std::env::var("HFLOP_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0" && v.to_ascii_lowercase() != "false")
+        .unwrap_or(false)
+}
+
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
@@ -43,8 +53,11 @@ pub fn fmt_time(s: f64) -> String {
 /// Run `f` `iters` times, timing each run.
 pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
     assert!(iters > 0);
-    // Warmup.
-    std::hint::black_box(f());
+    let iters = if smoke() { 1 } else { iters };
+    // Warmup (skipped in smoke mode).
+    if !smoke() {
+        std::hint::black_box(f());
+    }
     let mut times = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t0 = Instant::now();
@@ -66,6 +79,9 @@ pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchResu
 
 /// Run `f` repeatedly until ~`budget_s` seconds elapse (at least 3 iters).
 pub fn bench_auto<T>(name: &str, budget_s: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    if smoke() {
+        return bench(name, 1, f);
+    }
     let t0 = Instant::now();
     std::hint::black_box(f());
     let per = t0.elapsed().as_secs_f64().max(1e-9);

@@ -1,0 +1,314 @@
+//! `experiments::interference` — the joint-timeline artifact.
+//!
+//! Training, serving and the orchestrator run on *one* event-driven
+//! kernel (`inference::cosim`), so the paper's coupling claim — training
+//! and inference workloads interfere on shared infrastructure — becomes
+//! a reproducible experiment alongside Figs. 2/6–9. Four scenario
+//! presets:
+//!
+//! * [`Preset::Steady`] — steady request load under the continual
+//!   training cadence: periodic rounds degrade edge serving capacity by
+//!   the interference factor; the latency timeline shows the dips.
+//! * [`Preset::DiurnalSurge`] — a mid-run arrival surge; the learning
+//!   controller's λ view tracks it and may re-place clusters
+//!   (load-aware re-orchestration).
+//! * [`Preset::EdgeFailure`] — the busiest edge fails mid-run: stale
+//!   service timers are cancelled via kernel generation tags, the
+//!   backlog spills to the cloud, the GPO marks the node failed, and the
+//!   learning controller re-solves and installs a new plan.
+//! * [`Preset::RetrainBurst`] — served-model drift trips the inference
+//!   controller's EWMA trigger; the resulting retrain burst occupies
+//!   timeline intervals and degrades serving while it runs — the full
+//!   continual-learning control loop, closed on one clock.
+//!
+//! Driver: `cargo run --release --example interference`.
+
+use crate::experiments::scenario::Scenario;
+use crate::fl::timing::RoundTimeModel;
+use crate::inference::cosim::{
+    ControlConfig, ControlPlane, CoSim, CoSimConfig, CoSimOutcome, DriftModel, FaultEvent,
+    TrainingConfig, TrainingSchedule,
+};
+use crate::inference::simulation::ServingConfig;
+use crate::inference::LatencyModel;
+use crate::orchestrator::{
+    DeploymentPlan, Gpo, InferenceController, InferenceCtlConfig, LearningController,
+    LearningCtlConfig,
+};
+
+/// The four joint-timeline scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    Steady,
+    DiurnalSurge,
+    EdgeFailure,
+    RetrainBurst,
+}
+
+impl Preset {
+    pub const ALL: [Preset; 4] =
+        [Preset::Steady, Preset::DiurnalSurge, Preset::EdgeFailure, Preset::RetrainBurst];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Preset::Steady => "steady",
+            Preset::DiurnalSurge => "diurnal-surge",
+            Preset::EdgeFailure => "edge-failure",
+            Preset::RetrainBurst => "retrain-burst",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct InterferenceConfig {
+    pub preset: Preset,
+    /// Simulated wall time (s).
+    pub duration_s: f64,
+    /// Serving-capacity multiplier while an edge trains (paper coupling).
+    pub interference_factor: f64,
+    /// Scale factor on every λ_i.
+    pub lambda_scale: f64,
+    pub latency: LatencyModel,
+    pub queue_window_s: f64,
+    /// Accuracy-monitor cadence (control plane).
+    pub monitor_period_s: f64,
+    /// Telemetry lag before the GPO sees a capacity change.
+    pub report_delay_s: f64,
+    /// Latency-timeline bucket width (s).
+    pub bucket_s: f64,
+    /// HFL round time model (straggler compute + transfers).
+    pub time_model: RoundTimeModel,
+    pub epochs: usize,
+    pub model_bytes: usize,
+    pub seed: u64,
+    pub record_trace: bool,
+}
+
+impl Default for InterferenceConfig {
+    fn default() -> Self {
+        InterferenceConfig {
+            preset: Preset::Steady,
+            duration_s: 240.0,
+            interference_factor: 0.25,
+            lambda_scale: 1.0,
+            latency: LatencyModel::default(),
+            queue_window_s: 0.05,
+            monitor_period_s: 2.0,
+            report_delay_s: 3.0,
+            bucket_s: 10.0,
+            time_model: RoundTimeModel::default(),
+            epochs: 5,
+            model_bytes: 4 * 65_536,
+            seed: 7,
+            record_trace: false,
+        }
+    }
+}
+
+/// Training cadence + fault schedule for one preset.
+fn preset_plan(
+    cfg: &InterferenceConfig,
+    sc: &Scenario,
+    lambdas: &[f64],
+) -> (TrainingSchedule, Vec<(f64, FaultEvent)>, DriftModel) {
+    let d = cfg.duration_s;
+    let periodic = TrainingSchedule::Periodic { start_s: 0.1 * d, gap_s: (0.05 * d).max(1.0) };
+    let no_drift = DriftModel { fresh_mse: 0.02, drift_per_s: 0.0 };
+    match cfg.preset {
+        Preset::Steady => (periodic, Vec::new(), no_drift),
+        Preset::DiurnalSurge => (
+            periodic,
+            vec![
+                (0.3 * d, FaultEvent::SurgeStart { factor: 3.0 }),
+                (0.6 * d, FaultEvent::SurgeEnd),
+            ],
+            no_drift,
+        ),
+        Preset::EdgeFailure => {
+            // Fail the edge carrying the most load under the HFLOP plan.
+            let m = sc.topo.n_edges();
+            let mut load = vec![0.0f64; m];
+            for (dev, a) in sc.assign_hflop.assign.iter().enumerate() {
+                if let Some(j) = *a {
+                    load[j] += lambdas[dev];
+                }
+            }
+            let victim = (0..m)
+                .max_by(|&a, &b| load[a].total_cmp(&load[b]))
+                .unwrap_or(0);
+            (
+                periodic,
+                vec![
+                    (0.4 * d, FaultEvent::EdgeFail(victim)),
+                    (0.75 * d, FaultEvent::EdgeRecover(victim)),
+                ],
+                no_drift,
+            )
+        }
+        Preset::RetrainBurst => (
+            TrainingSchedule::OnTrigger { rounds_per_task: 3 },
+            Vec::new(),
+            DriftModel { fresh_mse: 0.02, drift_per_s: 0.002 },
+        ),
+    }
+}
+
+/// Run one preset on a built scenario: wires the GPO inventory and the
+/// two controllers from the scenario topology, seeds the controller with
+/// the scenario's HFLOP plan (so the first re-solve is a *swap*, not a
+/// cold start), and runs the co-simulation to the horizon.
+pub fn run(sc: &Scenario, cfg: &InterferenceConfig) -> anyhow::Result<CoSimOutcome> {
+    let n = sc.topo.n_devices();
+    let m = sc.topo.n_edges();
+    let lambdas: Vec<f64> = sc.lambdas().iter().map(|l| l * cfg.lambda_scale).collect();
+    let caps = sc.capacities();
+
+    // GPO inventory mirrors the scenario topology (dense ids 0..n, 0..m).
+    let mut gpo = Gpo::new();
+    for dev in &sc.topo.devices {
+        gpo.register_device(dev.id, dev.location);
+    }
+    for edge in &sc.topo.edges {
+        gpo.register_edge(edge.id, edge.location, edge.capacity);
+    }
+
+    let mut learning = LearningController::new(LearningCtlConfig {
+        l: sc.cfg.l,
+        ..Default::default()
+    });
+    for (dev, &l) in lambdas.iter().enumerate() {
+        learning.set_lambda(dev, l);
+    }
+    learning.current_plan = Some(DeploymentPlan {
+        assignment: sc.assign_hflop.clone(),
+        edge_ids: (0..m).collect(),
+        device_ids: (0..n).collect(),
+        cost: sc.hflop_cost,
+        proven_optimal: sc.hflop_optimal,
+    });
+
+    let (schedule, faults, drift) = preset_plan(cfg, sc, &lambdas);
+    let control = ControlPlane::new(
+        gpo,
+        learning,
+        InferenceController::new(InferenceCtlConfig::default()),
+        ControlConfig {
+            monitor_period_s: cfg.monitor_period_s,
+            report_delay_s: cfg.report_delay_s,
+            drift,
+            resolve_on_recover: true,
+        },
+    );
+
+    let cosim = CoSim::new(
+        CoSimConfig {
+            serving: ServingConfig {
+                assign: sc.assign_hflop.assign.clone(),
+                lambda: lambdas,
+                capacity: caps,
+                latency: cfg.latency.clone(),
+                duration_s: cfg.duration_s,
+                queue_window_s: cfg.queue_window_s,
+                seed: cfg.seed,
+            },
+            interference_factor: cfg.interference_factor,
+            training: TrainingConfig {
+                schedule,
+                time_model: cfg.time_model.clone(),
+                epochs: cfg.epochs,
+                model_bytes: cfg.model_bytes,
+            },
+            faults,
+            bucket_s: cfg.bucket_s,
+            record_trace: cfg.record_trace,
+        },
+        Some(control),
+    );
+    Ok(cosim.run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::scenario::{Scenario, ScenarioConfig};
+
+    fn scenario() -> Scenario {
+        Scenario::build(ScenarioConfig {
+            n_clients: 12,
+            n_edges: 3,
+            weeks: 5,
+            balanced_clients: false,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn quick(preset: Preset) -> InterferenceConfig {
+        InterferenceConfig {
+            preset,
+            duration_s: 120.0,
+            lambda_scale: 0.5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn steady_preset_serves_and_trains_on_one_timeline() {
+        let sc = scenario();
+        let out = run(&sc, &quick(Preset::Steady)).unwrap();
+        assert!(out.serving.total() > 1000, "{}", out.serving.total());
+        assert!(out.rounds_completed >= 1, "{}", out.rounds_completed);
+        assert!(out.retrain_triggers == 0);
+    }
+
+    #[test]
+    fn edge_failure_preset_swaps_plan_mid_run() {
+        let sc = scenario();
+        // Isolate the failure reaction: no training interference, so the
+        // re-solve after the failure is always feasible.
+        let cfg = InterferenceConfig {
+            interference_factor: 1.0,
+            ..quick(Preset::EdgeFailure)
+        };
+        let out = run(&sc, &cfg).unwrap();
+        assert!(out.plan_swaps >= 1, "no swap installed");
+        assert!(out.reclusters >= 1, "{}", out.reclusters);
+    }
+
+    #[test]
+    fn retrain_burst_preset_closes_the_control_loop() {
+        let sc = scenario();
+        let cfg = InterferenceConfig {
+            duration_s: 150.0,
+            ..quick(Preset::RetrainBurst)
+        };
+        let out = run(&sc, &cfg).unwrap();
+        assert!(out.retrain_triggers >= 1, "{}", out.retrain_triggers);
+        assert!(out.rounds_completed >= 3, "{}", out.rounds_completed);
+    }
+
+    #[test]
+    fn surge_preset_increases_request_volume() {
+        let sc = scenario();
+        let steady = run(&sc, &quick(Preset::Steady)).unwrap();
+        let surged = run(&sc, &quick(Preset::DiurnalSurge)).unwrap();
+        assert!(
+            surged.serving.total() > steady.serving.total(),
+            "{} vs {}",
+            surged.serving.total(),
+            steady.serving.total()
+        );
+    }
+
+    #[test]
+    fn presets_are_deterministic() {
+        let sc = scenario();
+        let cfg = InterferenceConfig { record_trace: true, ..quick(Preset::EdgeFailure) };
+        let a = run(&sc, &cfg).unwrap();
+        let b = run(&sc, &cfg).unwrap();
+        assert!(!a.trace.is_empty());
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.serving.latency.mean().to_bits(), b.serving.latency.mean().to_bits());
+        assert_eq!(a.plan_swaps, b.plan_swaps);
+    }
+}

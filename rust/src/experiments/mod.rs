@@ -8,6 +8,7 @@
 //! | [`fig8`]   | end-to-end latency vs edge→cloud speedup |
 //! | [`fig9`]   | communication-cost savings vs edge density |
 //! | [`cl_table`] | §V-B1 static vs continually-retrained MSE |
+//! | [`interference`] | joint training/serving timeline (co-sim presets) |
 //!
 //! [`scenario`] builds the shared world (synthetic METR-LA, topology,
 //! assignments). The `examples/` binaries and `rust/benches/` harnesses
@@ -19,6 +20,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod interference;
 pub mod scenario;
 
 pub use scenario::{Scenario, ScenarioConfig};

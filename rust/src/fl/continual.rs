@@ -23,6 +23,7 @@
 use super::client::Client;
 use super::fedavg::fedavg;
 use super::hierarchy::Hierarchy;
+use super::timing::RoundTimeModel;
 use super::ModelRuntime;
 use crate::data::window::ContinualWindow;
 use crate::hflop::Instance;
@@ -59,6 +60,16 @@ pub struct RoundRecord {
     pub global_round: bool,
     pub mean_train_loss: f32,
     pub mean_val_mse: f32,
+    /// Timeline span the round occupied (both 0 when no time model is
+    /// attached; see [`ContinualHfl::with_timing`]).
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl RoundRecord {
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
 }
 
 /// The assembled training system for one experiment setup.
@@ -71,8 +82,15 @@ pub struct ContinualHfl<'a> {
     /// Cost context: the HFLOP instance supplies per-link metering. For
     /// flat FL it is ignored (all exchanges are cloud exchanges).
     pub instance: Option<&'a Instance>,
+    /// Optional wall-clock time model: when set, every round occupies a
+    /// timeline interval (straggler compute + model transfers) recorded
+    /// in its [`RoundRecord`].
+    pub timing: Option<RoundTimeModel>,
 
     // --- state -----------------------------------------------------------
+    /// Simulated wall clock (s); advances by each round's duration when a
+    /// time model is attached.
+    pub clock_s: f64,
     pub global_params: Vec<f32>,
     cluster_params: Vec<Vec<f32>>,
     pub ledger: CommLedger,
@@ -100,12 +118,21 @@ impl<'a> ContinualHfl<'a> {
             window,
             config,
             instance,
+            timing: None,
+            clock_s: 0.0,
             cluster_params: vec![init_params.clone(); n_clusters],
             global_params: init_params,
             ledger: CommLedger::new(),
             curves: MseCurves::new(n_clients),
             records: Vec::new(),
         }
+    }
+
+    /// Attach a wall-clock time model: rounds then occupy timeline
+    /// intervals instead of executing atemporally.
+    pub fn with_timing(mut self, timing: RoundTimeModel) -> Self {
+        self.timing = Some(timing);
+        self
     }
 
     /// Is the device↔edge link metered? (flat FL: always a cloud link.)
@@ -203,11 +230,29 @@ impl<'a> ContinualHfl<'a> {
         // ---- continual shift ---------------------------------------------
         self.window.advance();
 
+        // ---- timeline accounting -----------------------------------------
+        // Clusters train in parallel; the round lasts as long as the
+        // slowest cluster, plus the edge↔cloud sync when the round is
+        // global (flat FL syncs with the cloud every round).
+        let start_s = self.clock_s;
+        if let Some(tm) = &self.timing {
+            let slowest_cluster = self
+                .hierarchy
+                .clusters
+                .iter()
+                .map(|c| tm.cluster_round_s(&c.members, cfg.epochs, model_bytes))
+                .fold(0.0, f64::max);
+            let sync = if is_global { tm.global_sync_s(model_bytes) } else { 0.0 };
+            self.clock_s += slowest_cluster + sync;
+        }
+
         let rec = RoundRecord {
             round,
             global_round: is_global,
             mean_train_loss: if loss_cnt > 0 { (loss_acc / loss_cnt as f64) as f32 } else { f32::NAN },
             mean_val_mse: if val_cnt > 0 { (val_acc / val_cnt as f64) as f32 } else { f32::NAN },
+            start_s,
+            end_s: self.clock_s,
         };
         self.records.push(rec.clone());
         Ok(rec)
@@ -420,5 +465,88 @@ mod tests {
         assert_eq!(sys.records.len(), 4);
         assert_eq!(sys.curves.n_rounds(), 4);
         assert!(sys.records.iter().all(|r| r.mean_val_mse.is_finite()));
+    }
+
+    #[test]
+    fn rounds_atemporal_without_time_model() {
+        let rt = MockRuntime::new(T, 8);
+        let mut cfg = base_config();
+        cfg.rounds = 3;
+        let mut sys = ContinualHfl::new(
+            &rt,
+            Hierarchy::flat(2),
+            make_clients(2),
+            ContinualWindow::new(500, 100, 0, 800),
+            cfg,
+            vec![0.0; T + 1],
+            None,
+        );
+        sys.run().unwrap();
+        assert_eq!(sys.clock_s, 0.0);
+        assert!(sys.records.iter().all(|r| r.start_s == 0.0 && r.end_s == 0.0));
+    }
+
+    #[test]
+    fn rounds_occupy_contiguous_timeline_intervals() {
+        use crate::fl::timing::RoundTimeModel;
+        let rt = MockRuntime::new(T, 8);
+        let mut cfg = base_config();
+        cfg.rounds = 6;
+        let tm = RoundTimeModel { epoch_compute_s: 3.0, ..Default::default() };
+        let mut sys = ContinualHfl::new(
+            &rt,
+            hierarchical(6),
+            make_clients(6),
+            ContinualWindow::new(500, 100, 0, 800),
+            cfg.clone(),
+            vec![0.0; T + 1],
+            None,
+        )
+        .with_timing(tm.clone());
+        sys.run().unwrap();
+        assert_eq!(sys.records.len(), 6);
+        // Spans are contiguous, ordered, and strictly positive.
+        let mut prev_end = 0.0;
+        for r in &sys.records {
+            assert_eq!(r.start_s, prev_end);
+            assert!(r.duration_s() > 0.0, "round {} has no duration", r.round);
+            prev_end = r.end_s;
+        }
+        assert_eq!(sys.clock_s, prev_end);
+        // A global round costs extra (edge↔cloud sync) relative to a
+        // local round with the same cluster structure.
+        let local = sys.records.iter().find(|r| !r.global_round).unwrap();
+        let global = sys.records.iter().find(|r| r.global_round).unwrap();
+        assert!(
+            global.duration_s() > local.duration_s(),
+            "global {} vs local {}",
+            global.duration_s(),
+            local.duration_s()
+        );
+    }
+
+    #[test]
+    fn straggler_device_stretches_rounds() {
+        use crate::fl::timing::RoundTimeModel;
+        let rt = MockRuntime::new(T, 8);
+        let mut cfg = base_config();
+        cfg.rounds = 2;
+        let fast = RoundTimeModel::default();
+        let slow = RoundTimeModel { device_speed: vec![1.0, 0.1], ..Default::default() };
+        let run_with = |tm: RoundTimeModel| {
+            let mut sys = ContinualHfl::new(
+                &rt,
+                hierarchical(4),
+                make_clients(4),
+                ContinualWindow::new(500, 100, 0, 800),
+                cfg.clone(),
+                vec![0.0; T + 1],
+                None,
+            )
+            .with_timing(tm);
+            sys.run().unwrap();
+            sys.clock_s
+        };
+        assert!(run_with(slow) > run_with(fast) * 2.0);
     }
 }

@@ -20,11 +20,13 @@ pub mod client;
 pub mod continual;
 pub mod fedavg;
 pub mod hierarchy;
+pub mod timing;
 
 pub use client::{Client, LocalTrainReport};
 pub use continual::{ContinualHfl, FlConfig, RoundRecord};
 pub use fedavg::fedavg;
 pub use hierarchy::{Cluster, Hierarchy};
+pub use timing::RoundTimeModel;
 
 use crate::runtime::Engine;
 

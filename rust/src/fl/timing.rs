@@ -1,0 +1,121 @@
+//! Wall-clock time model for HFL rounds.
+//!
+//! The paper couples training and serving on shared infrastructure, so
+//! rounds must *occupy intervals on a timeline* instead of executing
+//! atemporally: a round's duration is the straggler's local compute time
+//! (device capacity) plus model-exchange time (`model_bytes` over the
+//! device↔edge link), plus the edge↔cloud sync on global rounds. The
+//! continual round engine ([`super::continual::ContinualHfl`]) uses this
+//! to stamp `RoundRecord`s with timeline spans, and the co-simulation
+//! kernel (`inference::cosim`) uses the same model to decide how long an
+//! edge's serving capacity is degraded by an in-flight round.
+
+/// Time model mapping one aggregation round to a wall-clock duration.
+#[derive(Debug, Clone)]
+pub struct RoundTimeModel {
+    /// Local compute seconds for one epoch at unit device speed.
+    pub epoch_compute_s: f64,
+    /// Per-device relative compute speed (1.0 = reference). Devices not
+    /// listed default to 1.0; slower devices (< 1.0) become stragglers.
+    pub device_speed: Vec<f64>,
+    /// Device ↔ edge link throughput for model exchanges (bytes/s).
+    pub device_link_bytes_per_s: f64,
+    /// Edge ↔ cloud backhaul throughput (bytes/s).
+    pub backhaul_bytes_per_s: f64,
+    /// One-way device → edge network latency (s).
+    pub device_latency_s: f64,
+    /// One-way edge → cloud network latency (s).
+    pub cloud_latency_s: f64,
+}
+
+impl Default for RoundTimeModel {
+    fn default() -> Self {
+        RoundTimeModel {
+            epoch_compute_s: 2.0,
+            device_speed: Vec::new(),
+            device_link_bytes_per_s: 2.0e6, // ~16 Mbit/s uplink
+            backhaul_bytes_per_s: 20.0e6,
+            device_latency_s: 0.009, // paper §V-C1: edge RTT 8–10 ms
+            cloud_latency_s: 0.075,  // paper §V-C1: cloud RTT 50–100 ms
+        }
+    }
+}
+
+impl RoundTimeModel {
+    /// Relative compute speed of `device` (defaults to 1.0).
+    pub fn speed(&self, device: usize) -> f64 {
+        self.device_speed.get(device).copied().unwrap_or(1.0).max(1e-9)
+    }
+
+    /// One model transfer over the device ↔ edge link (s).
+    pub fn device_transfer_s(&self, model_bytes: usize) -> f64 {
+        model_bytes as f64 / self.device_link_bytes_per_s.max(1e-9) + self.device_latency_s
+    }
+
+    /// Local compute + model upload for one client in one round (s).
+    pub fn client_round_s(&self, device: usize, epochs: usize, model_bytes: usize) -> f64 {
+        epochs as f64 * self.epoch_compute_s / self.speed(device)
+            + self.device_transfer_s(model_bytes)
+    }
+
+    /// One cluster's local round (s): synchronous FedAvg waits for the
+    /// straggler, then broadcasts the aggregate back to members.
+    pub fn cluster_round_s(&self, members: &[usize], epochs: usize, model_bytes: usize) -> f64 {
+        if members.is_empty() {
+            return 0.0;
+        }
+        let slowest = members
+            .iter()
+            .map(|&d| self.client_round_s(d, epochs, model_bytes))
+            .fold(0.0, f64::max);
+        slowest + self.device_transfer_s(model_bytes)
+    }
+
+    /// Edge ↔ cloud sync on a global round: cluster-model upload plus
+    /// global-model broadcast (s).
+    pub fn global_sync_s(&self, model_bytes: usize) -> f64 {
+        2.0 * (model_bytes as f64 / self.backhaul_bytes_per_s.max(1e-9) + self.cloud_latency_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straggler_dominates_cluster_round() {
+        let tm = RoundTimeModel {
+            device_speed: vec![1.0, 0.25, 1.0],
+            ..Default::default()
+        };
+        let fast = tm.client_round_s(0, 5, 40_000);
+        let slow = tm.client_round_s(1, 5, 40_000);
+        assert!(slow > fast * 3.0, "{slow} vs {fast}");
+        let cluster = tm.cluster_round_s(&[0, 1, 2], 5, 40_000);
+        assert!((cluster - (slow + tm.device_transfer_s(40_000))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_cluster_takes_no_time() {
+        assert_eq!(RoundTimeModel::default().cluster_round_s(&[], 5, 40_000), 0.0);
+    }
+
+    #[test]
+    fn more_epochs_take_longer() {
+        let tm = RoundTimeModel::default();
+        assert!(tm.client_round_s(0, 10, 1000) > tm.client_round_s(0, 5, 1000));
+    }
+
+    #[test]
+    fn bigger_model_costs_more_transfer() {
+        let tm = RoundTimeModel::default();
+        assert!(tm.global_sync_s(4_000_000) > tm.global_sync_s(4_000));
+        assert!(tm.cluster_round_s(&[0], 1, 4_000_000) > tm.cluster_round_s(&[0], 1, 4_000));
+    }
+
+    #[test]
+    fn unknown_devices_default_to_unit_speed() {
+        let tm = RoundTimeModel::default();
+        assert_eq!(tm.speed(99), 1.0);
+    }
+}

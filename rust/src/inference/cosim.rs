@@ -1,0 +1,1093 @@
+//! Event-driven co-simulation of the three HFL planes on one clock.
+//!
+//! The paper's core claim is that training and serving *couple* on
+//! shared infrastructure ("training and inference workloads can
+//! interfere with detrimental effects on performance"). This module
+//! makes that coupling executable: the serving plane, the training
+//! plane, and the orchestrator's control loop are [`Component`]s of one
+//! [`Kernel`] timeline.
+//!
+//! * [`ServingPlane`] — the Fig. 7/8 request simulation (R1/R3 routing),
+//!   except each edge's *effective* service rate is shared state: while
+//!   the edge runs a training round it serves at
+//!   `capacity × interference_factor`.
+//! * [`TrainingPlane`] — HFL rounds occupy timeline intervals computed
+//!   by [`RoundTimeModel`] (straggler compute + model transfers); rounds
+//!   run on a periodic cadence (the continual regime) or on retrain
+//!   triggers from the control plane.
+//! * [`ControlPlane`] — the orchestrator in the loop: a [`Gpo`] mirrors
+//!   edge state from kernel events (training load, failures, surges),
+//!   the [`LearningController`] re-solves HFLOP when the live plan goes
+//!   stale, and the [`InferenceController`] fires retrain bursts when
+//!   the served model drifts. Plan swaps install mid-run; a failed
+//!   edge's stale service timers are cancelled via the kernel's
+//!   generation tags.
+//!
+//! With training idle and no control plane attached, the serving plane's
+//! event and RNG streams are *identical* to the pre-kernel simulator —
+//! `inference::simulation::simulate` is that static fast path, and a
+//! regression test holds it bit-for-bit.
+
+use super::latency::LatencyModel;
+use super::simulation::{admission_bound, ServingConfig, ServingOutcome};
+use crate::fl::timing::RoundTimeModel;
+use crate::orchestrator::{Gpo, InferenceController, LearningController};
+use crate::sim::{Component, Kernel};
+use crate::util::rng::Rng;
+use crate::util::stats::OnlineStats;
+
+/// How a completed request was served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    /// Admitted and served at the assigned edge aggregator.
+    Edge,
+    /// Proxied to the cloud by an over-capacity or failing edge (R3).
+    Spill,
+    /// Sent straight to the cloud (no aggregator / edge down).
+    Direct,
+}
+
+/// Environmental fault injections (scheduled via [`CoSimConfig::faults`]).
+#[derive(Debug, Clone, Copy)]
+pub enum FaultEvent {
+    EdgeFail(usize),
+    EdgeRecover(usize),
+    /// Scale every device's arrival rate by `factor` until `SurgeEnd`.
+    SurgeStart { factor: f64 },
+    SurgeEnd,
+}
+
+/// Every event on the co-simulation timeline.
+#[derive(Debug, Clone)]
+pub enum CoEvent {
+    // --- serving plane ---------------------------------------------------
+    Arrival { device: usize },
+    EdgeDone { edge: usize },
+    Complete { t_start: f64, class: Class },
+    /// Drain a failed edge's queue, proxying the backlog to the cloud.
+    FlushEdge { edge: usize },
+
+    // --- training plane --------------------------------------------------
+    RoundBegin { round: usize },
+    EdgeTrainEnd { edge: usize, round: usize },
+    RoundEnd { round: usize },
+    /// The control plane asked for a retrain burst.
+    TrainTask,
+
+    // --- control plane ---------------------------------------------------
+    MonitorTick,
+    /// Training state on `edge` changed; refresh the GPO's capacity view.
+    CapacityReport { edge: usize },
+    Fault(FaultEvent),
+    /// A triggered retrain burst finished; the served model is fresh.
+    TrainDone,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Plane {
+    Serving,
+    Training,
+    Control,
+}
+
+impl CoEvent {
+    fn plane(&self) -> Plane {
+        match self {
+            CoEvent::Arrival { .. }
+            | CoEvent::EdgeDone { .. }
+            | CoEvent::Complete { .. }
+            | CoEvent::FlushEdge { .. } => Plane::Serving,
+            CoEvent::RoundBegin { .. }
+            | CoEvent::EdgeTrainEnd { .. }
+            | CoEvent::RoundEnd { .. }
+            | CoEvent::TrainTask => Plane::Training,
+            CoEvent::MonitorTick
+            | CoEvent::CapacityReport { .. }
+            | CoEvent::Fault(_)
+            | CoEvent::TrainDone => Plane::Control,
+        }
+    }
+}
+
+/// Kernel tag for one edge's service timers: invalidating it on failure
+/// cancels the edge's stale `EdgeDone` events without touching the rest
+/// of the queue.
+fn edge_tag(edge: usize) -> u64 {
+    edge as u64
+}
+
+/// Per-edge state every plane can see.
+#[derive(Debug, Clone)]
+pub struct EdgeShared {
+    pub up: bool,
+    /// True while the edge runs a training round (degraded serving).
+    pub training: bool,
+}
+
+/// State shared by the planes on the same timeline.
+#[derive(Debug)]
+pub struct SharedWorld {
+    /// Live device → edge plan (None = direct to cloud). Swapped in
+    /// place by the control plane on re-solves.
+    pub assign: Vec<Option<usize>>,
+    pub edges: Vec<EdgeShared>,
+    /// Base per-edge serving capacity r_j (req/s).
+    pub capacity: Vec<f64>,
+    /// Serving-capacity multiplier while an edge trains.
+    pub interference_factor: f64,
+    /// Current arrival-rate multiplier (load surges).
+    pub surge: f64,
+    /// Installed plan swaps so far.
+    pub plan_swaps: usize,
+}
+
+impl SharedWorld {
+    /// Effective service rate of edge `j`: degraded while the edge is
+    /// mid-training-round — the paper's coupling, made executable. The
+    /// single source of truth for both the serving plane's queueing and
+    /// the control plane's GPO capacity reports.
+    pub fn effective_rate(&self, j: usize) -> f64 {
+        let base = self.capacity[j];
+        if self.edges[j].training {
+            base * self.interference_factor
+        } else {
+            base
+        }
+    }
+}
+
+/// Mean-latency time series bucketed by completion time — how the
+/// interference experiments show degradation and recovery windows.
+#[derive(Debug, Clone)]
+pub struct TimeBuckets {
+    width_s: f64,
+    buckets: Vec<OnlineStats>,
+}
+
+impl TimeBuckets {
+    pub fn new(width_s: f64) -> TimeBuckets {
+        assert!(width_s > 0.0, "bucket width must be positive");
+        TimeBuckets { width_s, buckets: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: f64, x: f64) {
+        let idx = (t / self.width_s).floor().max(0.0) as usize;
+        while self.buckets.len() <= idx {
+            self.buckets.push(OnlineStats::new());
+        }
+        self.buckets[idx].push(x);
+    }
+
+    pub fn width_s(&self) -> f64 {
+        self.width_s
+    }
+
+    pub fn buckets(&self) -> &[OnlineStats] {
+        &self.buckets
+    }
+
+    /// Mean over all samples completing in buckets overlapping
+    /// `[t0, t1)` (0.0 when empty).
+    pub fn mean_between(&self, t0: f64, t1: f64) -> f64 {
+        let lo = (t0 / self.width_s).floor().max(0.0) as usize;
+        let hi = (((t1 / self.width_s).ceil().max(0.0)) as usize).min(self.buckets.len());
+        let mut acc = OnlineStats::new();
+        for b in self.buckets.iter().take(hi).skip(lo) {
+            acc.merge(b);
+        }
+        acc.mean()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving plane
+// ---------------------------------------------------------------------------
+
+struct EdgeQueue {
+    /// Start times of requests queued or in service.
+    queue: std::collections::VecDeque<f64>,
+    busy: bool,
+}
+
+/// The inference-serving component (R1/R3 routing on shared capacity).
+pub struct ServingPlane {
+    lambda: Vec<f64>,
+    latency: LatencyModel,
+    queue_window_s: f64,
+    rng: Rng,
+    edges: Vec<EdgeQueue>,
+    out: ServingOutcome,
+    timeline: TimeBuckets,
+}
+
+impl ServingPlane {
+    fn edge_service_ms(&mut self, j: usize, shared: &SharedWorld) -> f64 {
+        let mean = 1000.0 / shared.effective_rate(j).max(1e-9);
+        if self.latency.stochastic_service {
+            self.rng.exponential(1.0 / mean)
+        } else {
+            mean
+        }
+    }
+
+    fn record(&mut self, now: f64, latency_ms: f64, class: Class) {
+        self.out.latency.push(latency_ms);
+        self.out.samples.push(latency_ms);
+        self.out.percentiles.push(latency_ms);
+        self.timeline.push(now, latency_ms);
+        match class {
+            Class::Edge => self.out.served_at_edge += 1,
+            Class::Spill => self.out.spilled_to_cloud += 1,
+            Class::Direct => self.out.direct_to_cloud += 1,
+        }
+    }
+}
+
+impl Component<CoEvent, SharedWorld> for ServingPlane {
+    fn name(&self) -> &'static str {
+        "serving"
+    }
+
+    fn handle(
+        &mut self,
+        now: f64,
+        event: CoEvent,
+        kernel: &mut Kernel<CoEvent>,
+        shared: &mut SharedWorld,
+    ) {
+        match event {
+            CoEvent::Arrival { device } => {
+                // Next request from this device (Poisson stream; a load
+                // surge scales the rate of every *future* inter-arrival).
+                let rate = self.lambda[device] * shared.surge;
+                if rate > 0.0 {
+                    kernel.schedule_in(self.rng.exponential(rate), CoEvent::Arrival { device });
+                }
+                match shared.assign[device] {
+                    Some(j) if j < self.edges.len() && shared.edges[j].up => {
+                        // R3 admission against the *effective* rate.
+                        let bound =
+                            admission_bound(self.queue_window_s, shared.effective_rate(j));
+                        if self.edges[j].queue.len() < bound {
+                            self.edges[j].queue.push_back(now);
+                            if !self.edges[j].busy {
+                                self.edges[j].busy = true;
+                                let svc = self.edge_service_ms(j, shared);
+                                kernel.schedule_tagged_in(
+                                    svc / 1000.0,
+                                    edge_tag(j),
+                                    CoEvent::EdgeDone { edge: j },
+                                );
+                            }
+                        } else {
+                            // Spill: proxy to cloud (edge hop + cloud path).
+                            let lat = self.latency.edge_rtt(&mut self.rng)
+                                + self.latency.cloud_rtt(&mut self.rng)
+                                + self.latency.cloud_service(&mut self.rng);
+                            kernel.schedule_in(
+                                lat / 1000.0,
+                                CoEvent::Complete { t_start: now, class: Class::Spill },
+                            );
+                        }
+                    }
+                    _ => {
+                        // No aggregator (flat FL) or edge down: cloud.
+                        let lat = self.latency.cloud_rtt(&mut self.rng)
+                            + self.latency.cloud_service(&mut self.rng);
+                        kernel.schedule_in(
+                            lat / 1000.0,
+                            CoEvent::Complete { t_start: now, class: Class::Direct },
+                        );
+                    }
+                }
+            }
+            CoEvent::EdgeDone { edge } => {
+                // (A failed edge's pending EdgeDone timers were cancelled
+                // at the kernel via the generation tag, so reaching here
+                // means the edge's service stream is live.)
+                if let Some(t_start) = self.edges[edge].queue.pop_front() {
+                    let rtt = self.latency.edge_rtt(&mut self.rng);
+                    let total_ms = (now - t_start) * 1000.0 + rtt;
+                    self.record(now, total_ms, Class::Edge);
+                }
+                if self.edges[edge].queue.is_empty() {
+                    self.edges[edge].busy = false;
+                } else {
+                    let svc = self.edge_service_ms(edge, shared);
+                    kernel.schedule_tagged_in(
+                        svc / 1000.0,
+                        edge_tag(edge),
+                        CoEvent::EdgeDone { edge },
+                    );
+                }
+            }
+            CoEvent::Complete { t_start, class } => {
+                let total_ms = (now - t_start) * 1000.0;
+                self.record(now, total_ms, class);
+            }
+            CoEvent::FlushEdge { edge } => {
+                // The edge went down: its backlog is proxied to the cloud
+                // (edge hop already paid; wait time accrues until the
+                // cloud response lands).
+                let drained: Vec<f64> = self.edges[edge].queue.drain(..).collect();
+                self.edges[edge].busy = false;
+                for t_start in drained {
+                    let lat = self.latency.edge_rtt(&mut self.rng)
+                        + self.latency.cloud_rtt(&mut self.rng)
+                        + self.latency.cloud_service(&mut self.rng);
+                    kernel.schedule_in(
+                        lat / 1000.0,
+                        CoEvent::Complete { t_start, class: Class::Spill },
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Training plane
+// ---------------------------------------------------------------------------
+
+/// When the training plane runs rounds.
+#[derive(Debug, Clone)]
+pub enum TrainingSchedule {
+    /// No training activity on the timeline.
+    Idle,
+    /// Rounds start at `start_s`; each next round begins `gap_s` after
+    /// the previous one ends (the paper's continual regime).
+    Periodic { start_s: f64, gap_s: f64 },
+    /// Rounds run only when the inference controller triggers a task of
+    /// `rounds_per_task` back-to-back rounds.
+    OnTrigger { rounds_per_task: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainingConfig {
+    pub schedule: TrainingSchedule,
+    pub time_model: RoundTimeModel,
+    /// Local epochs per round (paper: 5).
+    pub epochs: usize,
+    /// Serialized model size for transfer-time accounting.
+    pub model_bytes: usize,
+}
+
+impl Default for TrainingConfig {
+    fn default() -> Self {
+        TrainingConfig {
+            schedule: TrainingSchedule::Idle,
+            time_model: RoundTimeModel::default(),
+            epochs: 5,
+            model_bytes: 4 * 65_536,
+        }
+    }
+}
+
+/// The HFL round engine as a timeline component: rounds occupy
+/// intervals, marking their edges as training-busy for the duration.
+pub struct TrainingPlane {
+    cfg: TrainingConfig,
+    active: bool,
+    burst_remaining: usize,
+    next_round: usize,
+    rounds_completed: usize,
+    /// Telemetry lag before the control plane sees a capacity change.
+    report_delay_s: f64,
+    control_enabled: bool,
+}
+
+impl Component<CoEvent, SharedWorld> for TrainingPlane {
+    fn name(&self) -> &'static str {
+        "training"
+    }
+
+    fn handle(
+        &mut self,
+        _now: f64,
+        event: CoEvent,
+        kernel: &mut Kernel<CoEvent>,
+        shared: &mut SharedWorld,
+    ) {
+        match event {
+            CoEvent::RoundBegin { round } => {
+                self.active = true;
+                // Cluster membership comes from the *live* plan.
+                let m = shared.edges.len();
+                let mut members: Vec<Vec<usize>> = vec![Vec::new(); m];
+                for (d, a) in shared.assign.iter().enumerate() {
+                    if let Some(j) = *a {
+                        if j < m && shared.edges[j].up {
+                            members[j].push(d);
+                        }
+                    }
+                }
+                let mut max_dur = 0.0f64;
+                for (j, mem) in members.iter().enumerate() {
+                    if mem.is_empty() {
+                        continue;
+                    }
+                    shared.edges[j].training = true;
+                    let dur = self.cfg.time_model.cluster_round_s(
+                        mem,
+                        self.cfg.epochs,
+                        self.cfg.model_bytes,
+                    );
+                    max_dur = max_dur.max(dur);
+                    kernel.schedule_in(dur, CoEvent::EdgeTrainEnd { edge: j, round });
+                    if self.control_enabled {
+                        kernel
+                            .schedule_in(self.report_delay_s, CoEvent::CapacityReport { edge: j });
+                    }
+                }
+                kernel.schedule_in(max_dur, CoEvent::RoundEnd { round });
+            }
+            CoEvent::EdgeTrainEnd { edge, .. } => {
+                shared.edges[edge].training = false;
+                if self.control_enabled {
+                    kernel.schedule_in(self.report_delay_s, CoEvent::CapacityReport { edge });
+                }
+            }
+            CoEvent::RoundEnd { .. } => {
+                self.active = false;
+                self.rounds_completed += 1;
+                self.next_round += 1;
+                match self.cfg.schedule {
+                    TrainingSchedule::Idle => {}
+                    TrainingSchedule::Periodic { gap_s, .. } => {
+                        // Continual regime: every completed round refreshes
+                        // the served model, so the control plane's drift
+                        // clock resets (otherwise staleness grows forever
+                        // and the monitor fires phantom retrain triggers).
+                        if self.control_enabled {
+                            kernel.schedule_in(0.0, CoEvent::TrainDone);
+                        }
+                        kernel.schedule_in(gap_s, CoEvent::RoundBegin { round: self.next_round });
+                    }
+                    TrainingSchedule::OnTrigger { .. } => {
+                        self.burst_remaining = self.burst_remaining.saturating_sub(1);
+                        if self.burst_remaining > 0 {
+                            kernel
+                                .schedule_in(0.0, CoEvent::RoundBegin { round: self.next_round });
+                        } else if self.control_enabled {
+                            kernel.schedule_in(0.0, CoEvent::TrainDone);
+                        }
+                    }
+                }
+            }
+            CoEvent::TrainTask => {
+                if let TrainingSchedule::OnTrigger { rounds_per_task } = self.cfg.schedule {
+                    if !self.active && self.burst_remaining == 0 {
+                        self.burst_remaining = rounds_per_task.max(1);
+                        kernel.schedule_in(0.0, CoEvent::RoundBegin { round: self.next_round });
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control plane
+// ---------------------------------------------------------------------------
+
+/// Served-model accuracy drift: MSE grows linearly with time since the
+/// last retrain, so the inference controller's EWMA trigger fires when
+/// the model goes stale (continual-learning loop on the timeline).
+#[derive(Debug, Clone)]
+pub struct DriftModel {
+    /// Served-model MSE right after a retrain.
+    pub fresh_mse: f32,
+    /// MSE growth per simulated second since the last retrain.
+    pub drift_per_s: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    /// Accuracy-monitor cadence (one `observe_mse` per tick).
+    pub monitor_period_s: f64,
+    /// Telemetry lag between a plane state change and the GPO seeing it.
+    pub report_delay_s: f64,
+    pub drift: DriftModel,
+    /// Force a re-solve when a failed edge comes back.
+    pub resolve_on_recover: bool,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            monitor_period_s: 2.0,
+            report_delay_s: 3.0,
+            drift: DriftModel { fresh_mse: 0.02, drift_per_s: 0.0 },
+            resolve_on_recover: true,
+        }
+    }
+}
+
+/// The orchestrator in the loop: GPO + learning controller + inference
+/// controller, driven entirely by kernel events.
+pub struct ControlPlane {
+    pub cfg: ControlConfig,
+    pub gpo: Gpo,
+    pub learning: LearningController,
+    pub inference: InferenceController,
+    base_lambda: Vec<f64>,
+    n_devices: usize,
+    /// Whether the training plane accepts TrainTask (OnTrigger schedule).
+    trainable: bool,
+    last_fresh_s: f64,
+    pub retrain_triggers: usize,
+    /// Re-solve attempts that failed (e.g. transiently infeasible while
+    /// every edge is degraded); the old plan stays installed.
+    pub resolve_failures: usize,
+}
+
+impl ControlPlane {
+    pub fn new(
+        gpo: Gpo,
+        learning: LearningController,
+        inference: InferenceController,
+        cfg: ControlConfig,
+    ) -> ControlPlane {
+        ControlPlane {
+            cfg,
+            gpo,
+            learning,
+            inference,
+            base_lambda: Vec::new(),
+            n_devices: 0,
+            trainable: false,
+            last_fresh_s: 0.0,
+            retrain_triggers: 0,
+            resolve_failures: 0,
+        }
+    }
+
+    /// Called by [`CoSim::new`] so the controller sees the same load the
+    /// serving plane simulates and knows whether retrains can be served.
+    fn wire(&mut self, lambda: Vec<f64>, trainable: bool) {
+        self.n_devices = lambda.len();
+        self.base_lambda = lambda;
+        self.trainable = trainable;
+    }
+
+    /// Ask the learning controller whether the live plan survives the
+    /// current environment; install the new plan if it re-solved.
+    fn react(&mut self, shared: &mut SharedWorld) {
+        match self.learning.on_environment_change(&mut self.gpo) {
+            Ok(true) => self.install_plan(shared),
+            Ok(false) => {}
+            Err(_) => self.resolve_failures += 1,
+        }
+    }
+
+    /// Unconditional re-solve (e.g. on edge recovery).
+    fn force_resolve(&mut self, shared: &mut SharedWorld) {
+        // `cluster` returns a borrow of the installed plan; drop it
+        // before touching `self` again.
+        let solved = self.learning.cluster(&mut self.gpo).is_ok();
+        if solved {
+            self.install_plan(shared);
+        } else {
+            self.resolve_failures += 1;
+        }
+    }
+
+    fn install_plan(&mut self, shared: &mut SharedWorld) {
+        if let Some(plan) = &self.learning.current_plan {
+            let assign = plan.assignment_by_device(self.n_devices);
+            if assign != shared.assign {
+                shared.assign = assign;
+                shared.plan_swaps += 1;
+            }
+        }
+    }
+}
+
+/// Fault mutations every run applies, orchestrator or not: edge state,
+/// timer cancellation via generation tags, backlog flush, surge factor.
+fn apply_fault(kernel: &mut Kernel<CoEvent>, shared: &mut SharedWorld, fault: FaultEvent) {
+    match fault {
+        FaultEvent::EdgeFail(j) => {
+            if j < shared.edges.len() && shared.edges[j].up {
+                shared.edges[j].up = false;
+                kernel.invalidate_tag(edge_tag(j));
+                kernel.schedule_in(0.0, CoEvent::FlushEdge { edge: j });
+            }
+        }
+        FaultEvent::EdgeRecover(j) => {
+            if j < shared.edges.len() {
+                shared.edges[j].up = true;
+            }
+        }
+        FaultEvent::SurgeStart { factor } => {
+            shared.surge = factor.max(1e-9);
+        }
+        FaultEvent::SurgeEnd => {
+            shared.surge = 1.0;
+        }
+    }
+}
+
+impl Component<CoEvent, SharedWorld> for ControlPlane {
+    fn name(&self) -> &'static str {
+        "control"
+    }
+
+    fn handle(
+        &mut self,
+        now: f64,
+        event: CoEvent,
+        kernel: &mut Kernel<CoEvent>,
+        shared: &mut SharedWorld,
+    ) {
+        match event {
+            CoEvent::MonitorTick => {
+                let staleness = (now - self.last_fresh_s) as f32;
+                let mse = self.cfg.drift.fresh_mse + self.cfg.drift.drift_per_s * staleness;
+                // Only count (and dispatch) a trigger when the training
+                // plane can actually serve it — otherwise Idle/Periodic
+                // schedules would report phantom retrains forever.
+                if self.inference.observe_mse(mse) && self.trainable {
+                    self.retrain_triggers += 1;
+                    kernel.schedule_in(0.0, CoEvent::TrainTask);
+                }
+                kernel.schedule_in(self.cfg.monitor_period_s, CoEvent::MonitorTick);
+            }
+            CoEvent::CapacityReport { edge } => {
+                if edge < shared.capacity.len() {
+                    // Same formula the serving plane queues by.
+                    self.gpo.set_edge_capacity(edge, shared.effective_rate(edge));
+                    self.react(shared);
+                }
+            }
+            CoEvent::Fault(fault) => {
+                apply_fault(kernel, shared, fault);
+                match fault {
+                    FaultEvent::EdgeFail(j) => {
+                        self.gpo.fail_edge(j);
+                        self.react(shared);
+                    }
+                    FaultEvent::EdgeRecover(j) => {
+                        self.gpo.recover_edge(j);
+                        if self.cfg.resolve_on_recover {
+                            self.force_resolve(shared);
+                        }
+                    }
+                    FaultEvent::SurgeStart { factor } => {
+                        // Load-aware re-orchestration: the controller's λ
+                        // view tracks the surge and may re-place.
+                        for d in 0..self.n_devices {
+                            self.learning.set_lambda(d, self.base_lambda[d] * factor);
+                        }
+                        self.react(shared);
+                    }
+                    FaultEvent::SurgeEnd => {
+                        for d in 0..self.n_devices {
+                            self.learning.set_lambda(d, self.base_lambda[d]);
+                        }
+                        self.react(shared);
+                    }
+                }
+            }
+            CoEvent::TrainDone => {
+                self.last_fresh_s = now;
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The co-simulation driver
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct CoSimConfig {
+    pub serving: ServingConfig,
+    /// Serving-capacity multiplier for an edge mid-training-round
+    /// (1.0 = the planes do not interfere).
+    pub interference_factor: f64,
+    pub training: TrainingConfig,
+    /// Pre-scheduled environmental events `(time_s, fault)`.
+    pub faults: Vec<(f64, FaultEvent)>,
+    /// Latency-timeline bucket width (s).
+    pub bucket_s: f64,
+    /// Record a per-event trace (determinism tests / debugging).
+    pub record_trace: bool,
+}
+
+impl CoSimConfig {
+    /// The static-assignment fast path: serving only, no interference,
+    /// no faults — bit-identical to the pre-kernel simulator.
+    pub fn static_serving(serving: ServingConfig) -> CoSimConfig {
+        CoSimConfig {
+            serving,
+            interference_factor: 1.0,
+            training: TrainingConfig::default(),
+            faults: Vec::new(),
+            bucket_s: 10.0,
+            record_trace: false,
+        }
+    }
+}
+
+/// Outcome of one co-simulation run.
+#[derive(Debug, Clone)]
+pub struct CoSimOutcome {
+    pub serving: ServingOutcome,
+    /// Mean response latency per [`CoSimConfig::bucket_s`] window.
+    pub timeline: TimeBuckets,
+    pub rounds_completed: usize,
+    pub plan_swaps: usize,
+    pub reclusters: usize,
+    pub retrain_triggers: usize,
+    pub resolve_failures: usize,
+    pub events_processed: u64,
+    pub events_cancelled: u64,
+    /// Per-event trace (empty unless `record_trace`).
+    pub trace: Vec<String>,
+}
+
+/// The assembled co-simulation: kernel + planes + shared world.
+pub struct CoSim {
+    kernel: Kernel<CoEvent>,
+    shared: SharedWorld,
+    serving: ServingPlane,
+    training: TrainingPlane,
+    control: Option<ControlPlane>,
+    faults: Vec<(f64, FaultEvent)>,
+    horizon: f64,
+    trace: Option<Vec<String>>,
+}
+
+impl CoSim {
+    pub fn new(cfg: CoSimConfig, control: Option<ControlPlane>) -> CoSim {
+        let n = cfg.serving.assign.len();
+        assert_eq!(cfg.serving.lambda.len(), n, "lambda len");
+        let m = cfg.serving.capacity.len();
+        if let TrainingSchedule::Periodic { gap_s, .. } = cfg.training.schedule {
+            assert!(gap_s > 0.0, "periodic training needs a positive gap");
+        }
+
+        let shared = SharedWorld {
+            assign: cfg.serving.assign.clone(),
+            edges: vec![EdgeShared { up: true, training: false }; m],
+            capacity: cfg.serving.capacity.clone(),
+            interference_factor: cfg.interference_factor,
+            surge: 1.0,
+            plan_swaps: 0,
+        };
+        let serving = ServingPlane {
+            lambda: cfg.serving.lambda.clone(),
+            latency: cfg.serving.latency.clone(),
+            queue_window_s: cfg.serving.queue_window_s,
+            rng: Rng::new(cfg.serving.seed),
+            edges: (0..m)
+                .map(|_| EdgeQueue { queue: std::collections::VecDeque::new(), busy: false })
+                .collect(),
+            out: ServingOutcome::new(cfg.serving.seed),
+            timeline: TimeBuckets::new(cfg.bucket_s),
+        };
+        let control_enabled = control.is_some();
+        let report_delay_s = control.as_ref().map(|c| c.cfg.report_delay_s).unwrap_or(0.0);
+        let mut control = control;
+        if let Some(c) = control.as_mut() {
+            let trainable = matches!(cfg.training.schedule, TrainingSchedule::OnTrigger { .. });
+            c.wire(cfg.serving.lambda.clone(), trainable);
+        }
+        let training = TrainingPlane {
+            cfg: cfg.training,
+            active: false,
+            burst_remaining: 0,
+            next_round: 0,
+            rounds_completed: 0,
+            report_delay_s,
+            control_enabled,
+        };
+        CoSim {
+            kernel: Kernel::new(),
+            shared,
+            serving,
+            training,
+            control,
+            faults: cfg.faults,
+            horizon: cfg.serving.duration_s,
+            trace: if cfg.record_trace { Some(Vec::new()) } else { None },
+        }
+    }
+
+    /// Run to the horizon and assemble the outcome.
+    pub fn run(mut self) -> CoSimOutcome {
+        // Seed arrivals FIRST — bit-for-bit with the pre-kernel simulator
+        // (same RNG draw order, same heap sequence numbers).
+        for d in 0..self.serving.lambda.len() {
+            if self.serving.lambda[d] > 0.0 {
+                let dt = self.serving.rng.exponential(self.serving.lambda[d]);
+                self.kernel.schedule(dt, CoEvent::Arrival { device: d });
+            }
+        }
+        if let TrainingSchedule::Periodic { start_s, .. } = self.training.cfg.schedule {
+            self.kernel.schedule(start_s.max(0.0), CoEvent::RoundBegin { round: 0 });
+        }
+        if self.control.is_some() {
+            self.kernel.schedule(0.0, CoEvent::MonitorTick);
+        }
+        for (t, f) in std::mem::take(&mut self.faults) {
+            self.kernel.schedule(t.max(0.0), CoEvent::Fault(f));
+        }
+
+        while let Some((t, ev)) = self.kernel.next_before(self.horizon) {
+            if let Some(trace) = self.trace.as_mut() {
+                trace.push(format!("{:016x}|{ev:?}", t.to_bits()));
+            }
+            match ev.plane() {
+                Plane::Serving => {
+                    self.serving.handle(t, ev, &mut self.kernel, &mut self.shared)
+                }
+                Plane::Training => {
+                    self.training.handle(t, ev, &mut self.kernel, &mut self.shared)
+                }
+                Plane::Control => match self.control.as_mut() {
+                    Some(c) => c.handle(t, ev, &mut self.kernel, &mut self.shared),
+                    None => {
+                        // No orchestrator attached: faults still hit the
+                        // infrastructure (ablation baseline), everything
+                        // else control-plane is a no-op.
+                        if let CoEvent::Fault(f) = ev {
+                            apply_fault(&mut self.kernel, &mut self.shared, f);
+                        }
+                    }
+                },
+            }
+        }
+
+        CoSimOutcome {
+            serving: self.serving.out,
+            timeline: self.serving.timeline,
+            rounds_completed: self.training.rounds_completed,
+            plan_swaps: self.shared.plan_swaps,
+            reclusters: self.control.as_ref().map(|c| c.learning.reclusters).unwrap_or(0),
+            retrain_triggers: self.control.as_ref().map(|c| c.retrain_triggers).unwrap_or(0),
+            resolve_failures: self.control.as_ref().map(|c| c.resolve_failures).unwrap_or(0),
+            events_processed: self.kernel.processed(),
+            events_cancelled: self.kernel.cancelled_count(),
+            trace: self.trace.unwrap_or_default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::simulation::simulate;
+    use crate::orchestrator::{InferenceCtlConfig, LearningCtlConfig};
+    use crate::topology::GeoPoint;
+
+    fn serving_cfg(
+        assign: Vec<Option<usize>>,
+        lambda: Vec<f64>,
+        capacity: Vec<f64>,
+        duration_s: f64,
+        seed: u64,
+    ) -> ServingConfig {
+        ServingConfig {
+            assign,
+            lambda,
+            capacity,
+            latency: LatencyModel::default(),
+            duration_s,
+            queue_window_s: 0.25,
+            seed,
+        }
+    }
+
+    #[test]
+    fn interference_factor_one_training_is_serving_noop() {
+        // Training rounds on the timeline, but zero interference: the
+        // serving plane's RNG/event streams are untouched, so the
+        // outcome is bit-identical to the static fast path.
+        let scfg = serving_cfg(
+            (0..10).map(|i| Some(i % 2)).collect(),
+            vec![3.0; 10],
+            vec![500.0, 500.0],
+            60.0,
+            9,
+        );
+        let baseline = simulate(&scfg);
+        let cfg = CoSimConfig {
+            serving: scfg,
+            interference_factor: 1.0,
+            training: TrainingConfig {
+                schedule: TrainingSchedule::Periodic { start_s: 5.0, gap_s: 5.0 },
+                ..Default::default()
+            },
+            faults: Vec::new(),
+            bucket_s: 10.0,
+            record_trace: false,
+        };
+        let out = CoSim::new(cfg, None).run();
+        assert!(out.rounds_completed >= 1, "{}", out.rounds_completed);
+        assert_eq!(out.serving.total(), baseline.total());
+        assert_eq!(out.serving.served_at_edge, baseline.served_at_edge);
+        assert_eq!(out.serving.latency.mean().to_bits(), baseline.latency.mean().to_bits());
+        assert_eq!(out.serving.samples, baseline.samples);
+    }
+
+    #[test]
+    fn training_round_degrades_shared_edge_latency() {
+        // One edge, no orchestrator: latency during the round exceeds
+        // the latency before it and recovers after — the paper's
+        // training/serving coupling, isolated.
+        let cfg = CoSimConfig {
+            serving: serving_cfg(vec![Some(0); 8], vec![5.0; 8], vec![400.0], 90.0, 3),
+            interference_factor: 0.05,
+            training: TrainingConfig {
+                schedule: TrainingSchedule::Periodic { start_s: 30.0, gap_s: 1.0e9 },
+                time_model: RoundTimeModel { epoch_compute_s: 4.0, ..Default::default() },
+                epochs: 5,
+                model_bytes: 400_000,
+            },
+            faults: Vec::new(),
+            bucket_s: 5.0,
+            record_trace: false,
+        };
+        let out = CoSim::new(cfg, None).run();
+        assert_eq!(out.rounds_completed, 1);
+        let before = out.timeline.mean_between(10.0, 30.0);
+        let during = out.timeline.mean_between(31.0, 49.0);
+        let after = out.timeline.mean_between(60.0, 85.0);
+        assert!(before < 25.0, "before {before}");
+        assert!(during > 40.0, "during {during}");
+        assert!(after < 25.0, "after {after}");
+        assert!(out.serving.spilled_to_cloud > 0);
+    }
+
+    #[test]
+    fn edge_failure_without_orchestrator_falls_back_to_cloud() {
+        let base = serving_cfg(vec![Some(0); 8], vec![5.0; 8], vec![500.0], 60.0, 5);
+        let healthy = simulate(&base);
+        let cfg = CoSimConfig {
+            serving: base,
+            interference_factor: 1.0,
+            training: TrainingConfig::default(),
+            faults: vec![(30.0, FaultEvent::EdgeFail(0))],
+            bucket_s: 10.0,
+            record_trace: false,
+        };
+        let out = CoSim::new(cfg, None).run();
+        // Post-failure arrivals go straight to the cloud.
+        assert!(out.serving.direct_to_cloud > 500, "{}", out.serving.direct_to_cloud);
+        assert!(out.serving.latency.mean() > healthy.latency.mean() + 10.0);
+        assert_eq!(healthy.direct_to_cloud, 0);
+    }
+
+    #[test]
+    fn load_surge_fault_scales_arrivals() {
+        let base = serving_cfg(vec![Some(0); 6], vec![4.0; 6], vec![2000.0], 60.0, 11);
+        let steady = simulate(&base);
+        let cfg = CoSimConfig {
+            serving: base,
+            interference_factor: 1.0,
+            training: TrainingConfig::default(),
+            faults: vec![
+                (20.0, FaultEvent::SurgeStart { factor: 4.0 }),
+                (40.0, FaultEvent::SurgeEnd),
+            ],
+            bucket_s: 10.0,
+            record_trace: false,
+        };
+        let out = CoSim::new(cfg, None).run();
+        // ~20 s of 4x arrivals: clearly more requests than steady state.
+        assert!(
+            out.serving.total() as f64 > steady.total() as f64 * 1.5,
+            "{} vs {}",
+            out.serving.total(),
+            steady.total()
+        );
+    }
+
+    #[test]
+    fn orchestrator_resolve_recovers_latency_during_training() {
+        // The acceptance scenario: 10 devices on edge 0, edge 1 idle.
+        // A training round degrades edge 0 at t=30; the GPO hears about
+        // the capacity drop 5 s later, the learning controller re-solves
+        // and installs a plan that moves everyone to edge 1 — serving
+        // latency degrades during [30, 35) and recovers after the swap,
+        // while the round keeps running on edge 0 until ~t=60.
+        let p = GeoPoint { lat: 34.05, lon: -118.25 };
+        let mut gpo = Gpo::new();
+        for d in 0..10 {
+            gpo.register_device(d, p);
+        }
+        gpo.register_edge(0, p, 200.0);
+        gpo.register_edge(1, p, 200.0);
+        let mut learning = LearningController::new(LearningCtlConfig::default());
+        for d in 0..10 {
+            learning.set_lambda(d, 5.0);
+        }
+        let control = ControlPlane::new(
+            gpo,
+            learning,
+            InferenceController::new(InferenceCtlConfig::default()),
+            ControlConfig {
+                monitor_period_s: 10.0,
+                report_delay_s: 5.0,
+                drift: DriftModel { fresh_mse: 0.0, drift_per_s: 0.0 },
+                resolve_on_recover: true,
+            },
+        );
+        let cfg = CoSimConfig {
+            serving: serving_cfg(
+                vec![Some(0); 10],
+                vec![5.0; 10],
+                vec![200.0, 200.0],
+                80.0,
+                42,
+            ),
+            interference_factor: 0.05,
+            training: TrainingConfig {
+                schedule: TrainingSchedule::Periodic { start_s: 30.0, gap_s: 1.0e9 },
+                time_model: RoundTimeModel { epoch_compute_s: 6.0, ..Default::default() },
+                epochs: 5,
+                model_bytes: 400_000,
+            },
+            faults: Vec::new(),
+            bucket_s: 5.0,
+            record_trace: false,
+        };
+        let out = CoSim::new(cfg, Some(control)).run();
+        assert!(out.plan_swaps >= 1, "no plan swap installed");
+        assert!(out.reclusters >= 1);
+        assert_eq!(out.rounds_completed, 1);
+        let before = out.timeline.mean_between(10.0, 30.0);
+        let during = out.timeline.mean_between(30.0, 35.0);
+        let after = out.timeline.mean_between(45.0, 60.0);
+        assert!(before < 30.0, "before {before}");
+        assert!(during > 45.0, "during {during}");
+        assert!(after < 30.0, "after {after}");
+    }
+
+    #[test]
+    fn trace_is_deterministic_across_runs() {
+        let mk = || CoSimConfig {
+            serving: serving_cfg(vec![Some(0); 5], vec![3.0; 5], vec![300.0], 40.0, 7),
+            interference_factor: 0.2,
+            training: TrainingConfig {
+                schedule: TrainingSchedule::Periodic { start_s: 10.0, gap_s: 5.0 },
+                ..Default::default()
+            },
+            faults: vec![(20.0, FaultEvent::EdgeFail(0)), (30.0, FaultEvent::EdgeRecover(0))],
+            bucket_s: 10.0,
+            record_trace: true,
+        };
+        let a = CoSim::new(mk(), None).run();
+        let b = CoSim::new(mk(), None).run();
+        assert!(!a.trace.is_empty());
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.serving.latency.mean().to_bits(), b.serving.latency.mean().to_bits());
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.events_cancelled, b.events_cancelled);
+    }
+}

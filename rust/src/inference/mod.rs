@@ -1,14 +1,18 @@
 //! Inference-serving plane: request routing (R1–R3), the latency model
-//! (§V-C1 assumptions), the serving discrete-event simulation behind
-//! Fig. 7/8, and a real-execution serving loop that drives the PJRT
-//! `predict` artifact through a dynamic batcher.
+//! (§V-C1 assumptions), the serving simulation behind Fig. 7/8, the
+//! event-driven co-simulation that couples serving with training and the
+//! orchestrator on one kernel timeline ([`cosim`]), and a real-execution
+//! serving loop that drives the PJRT `predict` artifact through a
+//! dynamic batcher.
 
+pub mod cosim;
 pub mod latency;
 pub mod routing;
 pub mod serving;
 pub mod simulation;
 
+pub use cosim::{CoSim, CoSimConfig, CoSimOutcome, ControlPlane, FaultEvent, TrainingSchedule};
 pub use latency::LatencyModel;
 pub use routing::{DeviceCtx, EdgeCtx, Route, RoutingPolicy};
 pub use serving::{BatchingServer, ServeStats};
-pub use simulation::{simulate, ServingConfig, ServingOutcome};
+pub use simulation::{admission_bound, simulate, ServingConfig, ServingOutcome};

@@ -1,4 +1,4 @@
-//! Discrete-event simulation of the inference-serving plane (Fig. 7/8).
+//! The inference-serving simulation (Fig. 7/8) — static fast path.
 //!
 //! Devices generate Poisson inference request streams (rate λ_i). All
 //! devices are busy training (the continual-learning regime the paper
@@ -9,9 +9,9 @@
 //! * **hierarchical** — requests go device → associated edge aggregator.
 //!   The edge is a FIFO queue with deterministic service and an
 //!   **R3 admission bound**: a request is admitted only while the number
-//!   in system is below `queue_window_s · r_j` (≈ the backlog the edge can
-//!   clear within the window); excess requests are proxied to the cloud,
-//!   paying the edge hop *and* the cloud path
+//!   in system is below `⌊queue_window_s · r_j⌋` (≈ the backlog the edge
+//!   can clear within the window); excess requests are proxied to the
+//!   cloud, paying the edge hop *and* the cloud path
 //!   (`edge_rtt + cloud_rtt + cloud_service`).
 //!
 //! The difference between the paper's "hierarchical benchmark" and
@@ -20,11 +20,24 @@
 //! HFLOP respects capacity (constraint 4) so spill is rare. Fig. 7's
 //! response-time distributions and Fig. 8's speedup crossover both emerge
 //! from this mechanism.
+//!
+//! Since the co-simulation refactor, [`simulate`] is a *fast path* over
+//! the shared kernel serving component (`inference::cosim`): a fixed
+//! assignment, no training plane activity, no orchestrator. A regression
+//! test in this file holds its outcome bit-identical to the pre-kernel
+//! implementation (kept below as the `legacy` test oracle).
 
-use super::latency::LatencyModel;
-use crate::sim::Des;
-use crate::util::rng::Rng;
-use crate::util::stats::OnlineStats;
+use crate::inference::cosim::{CoSim, CoSimConfig};
+use crate::inference::latency::LatencyModel;
+use crate::util::stats::{OnlineStats, Reservoir, StreamingPercentiles};
+
+/// Response-time samples kept for distribution plots: a seeded reservoir
+/// of this many, so million-request runs stay O(1) in memory.
+pub const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+/// Seed salt for the reservoir's own RNG stream (kept separate from the
+/// simulation stream so sampling never perturbs the event sequence).
+pub(crate) const RESERVOIR_SEED_SALT: u64 = 0x5EED_5A17_0D15_7A11;
 
 /// Serving-plane configuration for one simulated policy.
 #[derive(Debug, Clone)]
@@ -38,24 +51,53 @@ pub struct ServingConfig {
     pub latency: LatencyModel,
     /// Simulated wall time (s).
     pub duration_s: f64,
-    /// R3 admission: max in-system backlog = `queue_window_s * r_j`.
+    /// R3 admission: max in-system backlog = `⌊queue_window_s * r_j⌋`.
     pub queue_window_s: f64,
     pub seed: u64,
 }
 
-/// Per-run outcome.
+/// R3 admission bound: the largest in-system backlog an edge with
+/// service rate `service_rate` may hold, `⌊queue_window_s · r⌋` clamped
+/// to at least 1 (an admitting edge can always hold the request in
+/// service). Explicit `.floor()` with a NaN guard — `0 · ∞` and friends
+/// admit a single request instead of whatever a raw cast produced.
+pub fn admission_bound(queue_window_s: f64, service_rate: f64) -> usize {
+    let backlog = queue_window_s * service_rate;
+    if backlog.is_nan() {
+        return 1;
+    }
+    // `as usize` saturates (+∞ → usize::MAX, negatives already clamped).
+    backlog.floor().max(1.0) as usize
+}
+
+/// Per-run outcome. Latency is tracked streaming (Welford + P² + seeded
+/// reservoir), so the outcome is O(1) in request count.
 #[derive(Debug, Clone)]
 pub struct ServingOutcome {
     /// End-to-end response-time stats (ms).
     pub latency: OnlineStats,
-    /// Raw samples (ms) for distribution plots (Fig. 7).
-    pub samples: Vec<f64>,
+    /// Seeded reservoir of response-time samples (ms) for distribution
+    /// plots (Fig. 7); bounded at [`LATENCY_RESERVOIR_CAP`].
+    pub samples: Reservoir,
+    /// Streaming p50/p90/p99 response-time estimates (ms).
+    pub percentiles: StreamingPercentiles,
     pub served_at_edge: u64,
     pub spilled_to_cloud: u64,
     pub direct_to_cloud: u64,
 }
 
 impl ServingOutcome {
+    pub fn new(seed: u64) -> ServingOutcome {
+        ServingOutcome {
+            latency: OnlineStats::new(),
+            samples: Reservoir::new(LATENCY_RESERVOIR_CAP, seed ^ RESERVOIR_SEED_SALT),
+            percentiles: StreamingPercentiles::new(),
+            served_at_edge: 0,
+            spilled_to_cloud: 0,
+            direct_to_cloud: 0,
+        }
+    }
+
     pub fn total(&self) -> u64 {
         self.served_at_edge + self.spilled_to_cloud + self.direct_to_cloud
     }
@@ -70,148 +112,163 @@ impl ServingOutcome {
     }
 }
 
-#[derive(Debug)]
-enum Ev {
-    /// A device emits its next request.
-    Arrival { device: usize },
-    /// An edge finishes its current head-of-line request.
-    EdgeDone { edge: usize },
-    /// A cloud-path request completes (response received by the device).
-    Complete { t_start: f64, class: Class },
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Class {
-    Edge,
-    Spill,
-    Direct,
-}
-
-struct EdgeState {
-    /// Requests currently queued or in service (start times).
-    queue: std::collections::VecDeque<f64>,
-    busy: bool,
-}
-
-/// Run the serving simulation.
+/// Run the serving simulation with a fixed assignment: the co-simulation
+/// kernel's serving component alone, bit-identical to the pre-kernel
+/// simulator for the same config and seed.
 pub fn simulate(cfg: &ServingConfig) -> ServingOutcome {
-    let n = cfg.assign.len();
-    assert_eq!(cfg.lambda.len(), n, "lambda len");
-    let m = cfg.capacity.len();
-    let mut rng = Rng::new(cfg.seed);
-    let mut des: Des<Ev> = Des::new();
+    CoSim::new(CoSimConfig::static_serving(cfg.clone()), None).run().serving
+}
 
-    let mut edges: Vec<EdgeState> = (0..m)
-        .map(|_| EdgeState { queue: std::collections::VecDeque::new(), busy: false })
-        .collect();
-    // Per-edge service: capacity r_j (req/s) IS the service rate — an
-    // edge processes one inference in 1/r_j seconds (deterministic by
-    // default, exponential under `stochastic_service`). This makes the
-    // HFLOP capacity constraint and the queueing model one and the same
-    // quantity, as in §IV-A.
-    let edge_service_ms = |j: usize, rng: &mut Rng, lat: &LatencyModel| -> f64 {
-        let mean = 1000.0 / cfg.capacity[j].max(1e-9);
-        if lat.stochastic_service {
-            rng.exponential(1.0 / mean)
-        } else {
-            mean
-        }
-    };
+#[cfg(test)]
+mod legacy {
+    //! The pre-kernel implementation, verbatim — kept as the bit-for-bit
+    //! oracle for the static fast path. Do not "fix" or modernize this
+    //! code: its entire value is that it still produces exactly the
+    //! Fig. 7/8 event and RNG streams the seed repo produced.
 
-    let mut out = ServingOutcome {
-        latency: OnlineStats::new(),
-        samples: Vec::new(),
-        served_at_edge: 0,
-        spilled_to_cloud: 0,
-        direct_to_cloud: 0,
-    };
+    use super::ServingConfig;
+    use crate::sim::Des;
+    use crate::util::rng::Rng;
+    use crate::util::stats::OnlineStats;
 
-    // Seed first arrivals.
-    for d in 0..n {
-        if cfg.lambda[d] > 0.0 {
-            let dt = rng.exponential(cfg.lambda[d]);
-            des.schedule(dt, Ev::Arrival { device: d });
-        }
+    #[derive(Debug, Clone)]
+    pub struct LegacyOutcome {
+        pub latency: OnlineStats,
+        pub samples: Vec<f64>,
+        pub served_at_edge: u64,
+        pub spilled_to_cloud: u64,
+        pub direct_to_cloud: u64,
     }
 
-    let horizon = cfg.duration_s;
-    let record = |out: &mut ServingOutcome, latency_ms: f64, class: Class| {
-        out.latency.push(latency_ms);
-        out.samples.push(latency_ms);
-        match class {
-            Class::Edge => out.served_at_edge += 1,
-            Class::Spill => out.spilled_to_cloud += 1,
-            Class::Direct => out.direct_to_cloud += 1,
+    #[derive(Debug)]
+    enum Ev {
+        Arrival { device: usize },
+        EdgeDone { edge: usize },
+        Complete { t_start: f64, class: Class },
+    }
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum Class {
+        Edge,
+        Spill,
+        Direct,
+    }
+
+    struct EdgeState {
+        queue: std::collections::VecDeque<f64>,
+        busy: bool,
+    }
+
+    pub fn simulate(cfg: &ServingConfig) -> LegacyOutcome {
+        let n = cfg.assign.len();
+        assert_eq!(cfg.lambda.len(), n, "lambda len");
+        let m = cfg.capacity.len();
+        let mut rng = Rng::new(cfg.seed);
+        let mut des: Des<Ev> = Des::new();
+
+        let mut edges: Vec<EdgeState> = (0..m)
+            .map(|_| EdgeState { queue: std::collections::VecDeque::new(), busy: false })
+            .collect();
+        let edge_service_ms = |j: usize, rng: &mut Rng| -> f64 {
+            let mean = 1000.0 / cfg.capacity[j].max(1e-9);
+            if cfg.latency.stochastic_service {
+                rng.exponential(1.0 / mean)
+            } else {
+                mean
+            }
+        };
+
+        let mut out = LegacyOutcome {
+            latency: OnlineStats::new(),
+            samples: Vec::new(),
+            served_at_edge: 0,
+            spilled_to_cloud: 0,
+            direct_to_cloud: 0,
+        };
+
+        for d in 0..n {
+            if cfg.lambda[d] > 0.0 {
+                let dt = rng.exponential(cfg.lambda[d]);
+                des.schedule(dt, Ev::Arrival { device: d });
+            }
         }
-    };
 
-    while let Some((now, ev)) = des.next_before(horizon) {
-        match ev {
-            Ev::Arrival { device } => {
-                // Schedule this device's next request.
-                des.schedule_in(rng.exponential(cfg.lambda[device]), Ev::Arrival { device });
+        let horizon = cfg.duration_s;
+        let record = |out: &mut LegacyOutcome, latency_ms: f64, class: Class| {
+            out.latency.push(latency_ms);
+            out.samples.push(latency_ms);
+            match class {
+                Class::Edge => out.served_at_edge += 1,
+                Class::Spill => out.spilled_to_cloud += 1,
+                Class::Direct => out.direct_to_cloud += 1,
+            }
+        };
 
-                match cfg.assign[device] {
-                    None => {
-                        // Flat FL: straight to the cloud (R1, no aggregator).
-                        let lat = cfg.latency.cloud_rtt(&mut rng)
-                            + cfg.latency.cloud_service(&mut rng);
-                        des.schedule_in(lat / 1000.0, Ev::Complete { t_start: now, class: Class::Direct });
-                    }
-                    Some(j) => {
-                        // R3 admission at the aggregator.
-                        let max_in_system =
-                            (cfg.queue_window_s * cfg.capacity[j]).max(1.0) as usize;
-                        let e = &mut edges[j];
-                        if e.queue.len() < max_in_system {
-                            // Admitted: edge hop now, service when reached.
-                            e.queue.push_back(now);
-                            if !e.busy {
-                                e.busy = true;
-                                let svc = edge_service_ms(j, &mut rng, &cfg.latency);
-                                des.schedule_in(svc / 1000.0, Ev::EdgeDone { edge: j });
-                            }
-                        } else {
-                            // Spill: proxy to cloud (edge hop + cloud path).
-                            let lat = cfg.latency.edge_rtt(&mut rng)
-                                + cfg.latency.cloud_rtt(&mut rng)
+        while let Some((now, ev)) = des.next_before(horizon) {
+            match ev {
+                Ev::Arrival { device } => {
+                    des.schedule_in(rng.exponential(cfg.lambda[device]), Ev::Arrival { device });
+                    match cfg.assign[device] {
+                        None => {
+                            let lat = cfg.latency.cloud_rtt(&mut rng)
                                 + cfg.latency.cloud_service(&mut rng);
                             des.schedule_in(
                                 lat / 1000.0,
-                                Ev::Complete { t_start: now, class: Class::Spill },
+                                Ev::Complete { t_start: now, class: Class::Direct },
                             );
+                        }
+                        Some(j) => {
+                            let max_in_system =
+                                (cfg.queue_window_s * cfg.capacity[j]).max(1.0) as usize;
+                            let e = &mut edges[j];
+                            if e.queue.len() < max_in_system {
+                                e.queue.push_back(now);
+                                if !e.busy {
+                                    e.busy = true;
+                                    let svc = edge_service_ms(j, &mut rng);
+                                    des.schedule_in(svc / 1000.0, Ev::EdgeDone { edge: j });
+                                }
+                            } else {
+                                let lat = cfg.latency.edge_rtt(&mut rng)
+                                    + cfg.latency.cloud_rtt(&mut rng)
+                                    + cfg.latency.cloud_service(&mut rng);
+                                des.schedule_in(
+                                    lat / 1000.0,
+                                    Ev::Complete { t_start: now, class: Class::Spill },
+                                );
+                            }
                         }
                     }
                 }
-            }
-            Ev::EdgeDone { edge } => {
-                let e = &mut edges[edge];
-                if let Some(t_start) = e.queue.pop_front() {
-                    // Response travels back over the edge link.
-                    let rtt = cfg.latency.edge_rtt(&mut rng);
-                    let total_ms = (now - t_start) * 1000.0 + rtt;
-                    record(&mut out, total_ms, Class::Edge);
+                Ev::EdgeDone { edge } => {
+                    let e = &mut edges[edge];
+                    if let Some(t_start) = e.queue.pop_front() {
+                        let rtt = cfg.latency.edge_rtt(&mut rng);
+                        let total_ms = (now - t_start) * 1000.0 + rtt;
+                        record(&mut out, total_ms, Class::Edge);
+                    }
+                    if e.queue.is_empty() {
+                        e.busy = false;
+                    } else {
+                        let svc = edge_service_ms(edge, &mut rng);
+                        des.schedule_in(svc / 1000.0, Ev::EdgeDone { edge });
+                    }
                 }
-                if e.queue.is_empty() {
-                    e.busy = false;
-                } else {
-                    let svc = edge_service_ms(edge, &mut rng, &cfg.latency);
-                    des.schedule_in(svc / 1000.0, Ev::EdgeDone { edge });
+                Ev::Complete { t_start, class } => {
+                    let total_ms = (now - t_start) * 1000.0;
+                    record(&mut out, total_ms, class);
                 }
-            }
-            Ev::Complete { t_start, class } => {
-                let total_ms = (now - t_start) * 1000.0;
-                record(&mut out, total_ms, class);
             }
         }
-    }
 
-    out
+        out
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::stats::Reservoir;
 
     fn base(assign: Vec<Option<usize>>, lambda: Vec<f64>, capacity: Vec<f64>) -> ServingConfig {
         ServingConfig {
@@ -223,6 +280,82 @@ mod tests {
             queue_window_s: 0.25,
             seed: 42,
         }
+    }
+
+    /// The PR's acceptance gate: the kernel fast path reproduces the
+    /// pre-refactor outcome bit-identically — class counts, every
+    /// latency moment, and the kept sample set.
+    #[test]
+    fn static_path_matches_legacy_bit_for_bit() {
+        let mut configs = vec![
+            base(vec![None; 10], vec![5.0; 10], vec![]),
+            base((0..10).map(|i| Some(i % 2)).collect(), vec![2.0; 10], vec![1000.0, 1000.0]),
+            base(vec![Some(0); 10], vec![20.0; 10], vec![5.0]),
+            base(
+                (0..12).map(|i| Some(usize::from(i >= 11))).collect(),
+                vec![4.0; 12],
+                vec![500.0, 20.0],
+            ),
+        ];
+        // Stochastic service exercises every RNG call site.
+        let mut stoch = base(vec![Some(0), Some(1), None], vec![8.0; 3], vec![30.0, 500.0]);
+        stoch.latency.stochastic_service = true;
+        configs.push(stoch);
+
+        for (i, cfg) in configs.iter().enumerate() {
+            for seed in [1u64, 42, 20_26] {
+                let mut cfg = cfg.clone();
+                cfg.seed = seed;
+                let new = simulate(&cfg);
+                let old = legacy::simulate(&cfg);
+                assert_eq!(new.served_at_edge, old.served_at_edge, "cfg {i} seed {seed}");
+                assert_eq!(new.spilled_to_cloud, old.spilled_to_cloud, "cfg {i} seed {seed}");
+                assert_eq!(new.direct_to_cloud, old.direct_to_cloud, "cfg {i} seed {seed}");
+                assert_eq!(new.latency.count(), old.latency.count());
+                assert_eq!(new.latency.mean().to_bits(), old.latency.mean().to_bits());
+                assert_eq!(new.latency.std().to_bits(), old.latency.std().to_bits());
+                assert_eq!(new.latency.min().to_bits(), old.latency.min().to_bits());
+                assert_eq!(new.latency.max().to_bits(), old.latency.max().to_bits());
+                // The reservoir must equal the legacy sample stream fed
+                // through an identically seeded reservoir.
+                let mut expect =
+                    Reservoir::new(LATENCY_RESERVOIR_CAP, seed ^ RESERVOIR_SEED_SALT);
+                for &s in &old.samples {
+                    expect.push(s);
+                }
+                assert_eq!(new.samples, expect, "cfg {i} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn admission_bound_fractional_and_degenerate() {
+        // Fractional bounds floor explicitly: 2.5 admits 2, not "2-ish".
+        assert_eq!(admission_bound(0.25, 10.0), 2);
+        assert_eq!(admission_bound(0.25, 8.0), 2);
+        assert_eq!(admission_bound(0.05, 30.0), 1); // 1.5 -> 1
+        assert_eq!(admission_bound(0.05, 1000.0), 50);
+        // Below one: clamp to a single in-service request.
+        assert_eq!(admission_bound(0.05, 10.0), 1);
+        assert_eq!(admission_bound(0.0, 500.0), 1);
+        // NaN products (0·∞) admit exactly one instead of cast garbage.
+        assert_eq!(admission_bound(0.0, f64::INFINITY), 1);
+        assert_eq!(admission_bound(f64::INFINITY, 0.0), 1);
+        // Infinite backlog saturates instead of wrapping.
+        assert_eq!(admission_bound(1.0, f64::INFINITY), usize::MAX);
+        assert_eq!(admission_bound(-1.0, 5.0), 1);
+    }
+
+    #[test]
+    fn fractional_bound_limits_in_system_backlog() {
+        // window 0.25 s · r=10 req/s -> bound 2: with service 100 ms and
+        // an overwhelming arrival rate, at most ~duration·r requests can
+        // be served at the edge; everything else must spill.
+        let mut cfg = base(vec![Some(0)], vec![1000.0], vec![10.0]);
+        cfg.duration_s = 1.0;
+        let out = simulate(&cfg);
+        assert!(out.served_at_edge <= 13, "{}", out.served_at_edge);
+        assert!(out.spilled_to_cloud > 500, "{}", out.spilled_to_cloud);
     }
 
     #[test]
@@ -313,5 +446,29 @@ mod tests {
         let expected = 4.0 * 10.0 * cfg.duration_s;
         let got = out.total() as f64;
         assert!((got - expected).abs() < 0.1 * expected, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn percentiles_track_distribution() {
+        let cfg = base(vec![None; 10], vec![5.0; 10], vec![]);
+        let out = simulate(&cfg);
+        // Cloud path: RTT U(50,100) + 4 ms service -> p50 ≈ 79, p99 < 104.
+        assert!((out.percentiles.p50() - 79.0).abs() < 5.0, "{}", out.percentiles.p50());
+        assert!(out.percentiles.p50() < out.percentiles.p90());
+        assert!(out.percentiles.p90() < out.percentiles.p99());
+        assert!(out.percentiles.p99() <= 104.1, "{}", out.percentiles.p99());
+    }
+
+    #[test]
+    fn reservoir_caps_sample_memory() {
+        let mut cfg = base(vec![None; 10], vec![20.0; 10], vec![]);
+        cfg.duration_s = 120.0; // ~24k completions
+        let out = simulate(&cfg);
+        assert!(out.total() > LATENCY_RESERVOIR_CAP as u64 * 2);
+        assert_eq!(out.samples.len(), LATENCY_RESERVOIR_CAP);
+        assert_eq!(out.samples.seen(), out.total());
+        // The kept sample still reflects the distribution for Fig. 7.
+        let kept_mean: f64 = out.samples.iter().sum::<f64>() / out.samples.len() as f64;
+        assert!((kept_mean - out.latency.mean()).abs() < 2.0);
     }
 }

@@ -79,6 +79,19 @@ impl DeploymentPlan {
         let row = self.device_ids.iter().position(|&d| d == device_id)?;
         self.assignment.assign[row].map(|c| self.edge_ids[c])
     }
+
+    /// Dense device-indexed assignment (`out[device_id] = Some(edge_id)`)
+    /// for worlds with dense GPO ids — the form the serving plane routes
+    /// by. Devices the plan does not cover stay `None` (direct-to-cloud).
+    pub fn assignment_by_device(&self, n_devices: usize) -> Vec<Option<usize>> {
+        let mut out = vec![None; n_devices];
+        for (row, &dev) in self.device_ids.iter().enumerate() {
+            if dev < n_devices {
+                out[dev] = self.assignment.assign[row].map(|c| self.edge_ids[c]);
+            }
+        }
+        out
+    }
 }
 
 /// The learning controller.
@@ -297,6 +310,20 @@ mod tests {
             .len() as f64;
         gpo.set_edge_capacity(eid, load - 0.5);
         assert!(ctl.on_environment_change(&mut gpo).unwrap());
+    }
+
+    #[test]
+    fn assignment_by_device_maps_dense_ids() {
+        let (mut gpo, mut ctl) = setup(6, 2);
+        let plan = ctl.cluster(&mut gpo).unwrap().clone();
+        let dense = plan.assignment_by_device(6);
+        assert_eq!(dense.len(), 6);
+        for dev in 0..6 {
+            assert_eq!(dense[dev], plan.aggregator_of(dev));
+            assert!(dense[dev].is_some());
+        }
+        // Truncated view drops out-of-range devices without panicking.
+        assert_eq!(plan.assignment_by_device(3).len(), 3);
     }
 
     #[test]

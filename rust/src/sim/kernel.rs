@@ -1,0 +1,416 @@
+//! Co-simulation kernel: the generalized discrete-event scheduler.
+//!
+//! [`Kernel`] extends the original `Des` event queue with what a joint
+//! training/serving/control co-simulation needs:
+//!
+//! * **cancellable timers** — [`Kernel::schedule`] returns a [`TimerId`]
+//!   that [`Kernel::cancel`] can revoke before it fires (lazy removal,
+//!   O(1) per cancel);
+//! * **generation-tagged timers** — [`Kernel::schedule_tagged`] stamps an
+//!   entry with a `(tag, generation)` pair; [`Kernel::invalidate_tag`]
+//!   bumps the tag's generation so every *older* pending timer with that
+//!   tag is dead, while timers scheduled afterwards live. This is how a
+//!   mid-run deployment-plan swap cancels a failed edge's stale
+//!   service-completion timers without touching the rest of the queue;
+//! * **introspection** — [`Kernel::peek_time`], [`Kernel::clear`], live
+//!   length, processed/cancelled counters.
+//!
+//! Ordering is identical to the original queue: `(time, seq)` min-heap,
+//! so ties at equal timestamps break FIFO by insertion and every run is
+//! reproducible. Cancelled entries never advance the clock and never
+//! count as processed.
+//!
+//! [`Component`] is the plug-in trait for the co-simulation: serving,
+//! training and control logic each handle their own events on the shared
+//! clock, communicating only through scheduled events and a shared world
+//! state (see `inference::cosim`).
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+/// Handle for one scheduled timer, usable to cancel it before it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TimerId(u64);
+
+/// One scheduled entry.
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    /// `(tag, generation at schedule time)`; the entry is dead if the tag
+    /// has been invalidated since.
+    tag: Option<(u64, u64)>,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap on (time, seq). `total_cmp` keeps the heap
+        // ordering a lawful total order even if a NaN time ever slips in.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event kernel with cancellable and
+/// generation-tagged timers.
+///
+/// The hot path (schedule/next with no cancellation — the static Fig. 7/8
+/// simulations) is pure heap operations plus a counter: the cancellation
+/// bookkeeping sets are only consulted when non-empty, and individual
+/// `cancel` pays an O(len) scan instead of taxing every event with
+/// hash-set inserts.
+pub struct Kernel<E> {
+    heap: BinaryHeap<Entry<E>>,
+    now: f64,
+    seq: u64,
+    processed: u64,
+    cancelled_count: u64,
+    /// Live (scheduled, not yet fired or cancelled) timer count.
+    live: usize,
+    /// Individually cancelled ids awaiting lazy removal from the heap.
+    cancelled: HashSet<u64>,
+    /// Current generation per tag; entries stamped with an older
+    /// generation are dead.
+    tag_gen: HashMap<u64, u64>,
+}
+
+impl<E> Default for Kernel<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Kernel<E> {
+    pub fn new() -> Kernel<E> {
+        Kernel {
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+            cancelled_count: 0,
+            live: 0,
+            cancelled: HashSet::new(),
+            tag_gen: HashMap::new(),
+        }
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Events delivered so far (cancelled entries excluded).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Timers revoked so far (individually or via tag invalidation).
+    pub fn cancelled_count(&self) -> u64 {
+        self.cancelled_count
+    }
+
+    /// Number of live (non-cancelled) pending timers.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    fn push(&mut self, time: f64, tag: Option<(u64, u64)>, event: E) -> TimerId {
+        debug_assert!(time >= self.now - 1e-12, "scheduling into the past");
+        let id = self.seq;
+        self.heap.push(Entry { time: time.max(self.now), seq: id, tag, event });
+        self.live += 1;
+        self.seq += 1;
+        TimerId(id)
+    }
+
+    /// Schedule `event` at absolute time `time` (must be >= now).
+    pub fn schedule(&mut self, time: f64, event: E) -> TimerId {
+        self.push(time, None, event)
+    }
+
+    /// Schedule `event` `delay` after now.
+    pub fn schedule_in(&mut self, delay: f64, event: E) -> TimerId {
+        self.push(self.now + delay.max(0.0), None, event)
+    }
+
+    /// Schedule `event` at `time`, stamped with `tag`'s current
+    /// generation: [`Kernel::invalidate_tag`] on that tag kills it.
+    pub fn schedule_tagged(&mut self, time: f64, tag: u64, event: E) -> TimerId {
+        let gen = self.tag_gen.get(&tag).copied().unwrap_or(0);
+        self.push(time, Some((tag, gen)), event)
+    }
+
+    /// Tagged variant of [`Kernel::schedule_in`].
+    pub fn schedule_tagged_in(&mut self, delay: f64, tag: u64, event: E) -> TimerId {
+        self.schedule_tagged(self.now + delay.max(0.0), tag, event)
+    }
+
+    /// Revoke one timer. Returns true if it was still pending.
+    ///
+    /// O(len) scan: individual cancellation is a rare control-plane
+    /// operation; paying here keeps the schedule/next hot path free of
+    /// per-event hash-set bookkeeping.
+    pub fn cancel(&mut self, id: TimerId) -> bool {
+        if self.cancelled.contains(&id.0) {
+            return false;
+        }
+        let alive = self.heap.iter().any(|e| e.seq == id.0 && !self.entry_dead(e));
+        if alive {
+            self.cancelled.insert(id.0);
+            self.cancelled_count += 1;
+            self.live -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Bump `tag`'s generation: every pending timer scheduled under the
+    /// old generation is dead; timers tagged afterwards are unaffected.
+    /// Returns how many live timers this killed.
+    pub fn invalidate_tag(&mut self, tag: u64) -> usize {
+        let gen = self.tag_gen.entry(tag).or_insert(0);
+        let old_gen = *gen;
+        *gen += 1;
+        // Count the victims so len() stays truthful; heap entries are
+        // removed lazily on pop. Entries under generations older than
+        // `old_gen` were already dead (counted at their own
+        // invalidation), as were individually cancelled ones.
+        let mut killed = 0;
+        for e in self.heap.iter() {
+            if let Some((t, g)) = e.tag {
+                if t == tag && g == old_gen && !self.cancelled.contains(&e.seq) {
+                    killed += 1;
+                }
+            }
+        }
+        self.cancelled_count += killed as u64;
+        self.live -= killed;
+        killed
+    }
+
+    /// Current generation of `tag` (0 if never invalidated).
+    pub fn generation(&self, tag: u64) -> u64 {
+        self.tag_gen.get(&tag).copied().unwrap_or(0)
+    }
+
+    fn entry_dead(&self, e: &Entry<E>) -> bool {
+        if !self.cancelled.is_empty() && self.cancelled.contains(&e.seq) {
+            return true;
+        }
+        match e.tag {
+            Some((tag, gen)) => gen < self.generation(tag),
+            None => false,
+        }
+    }
+
+    /// Drop dead entries off the heap front; afterwards the front (if
+    /// any) is live. Dead entries were already counted (and removed from
+    /// the live count) by `cancel`/`invalidate_tag`.
+    fn skim(&mut self) {
+        loop {
+            let dead = match self.heap.peek() {
+                None => return,
+                Some(e) => self.entry_dead(e),
+            };
+            if !dead {
+                return;
+            }
+            let e = self.heap.pop().expect("peeked entry");
+            self.cancelled.remove(&e.seq);
+        }
+    }
+
+    /// Time of the next live event without delivering it.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        self.skim();
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Drop every pending timer without delivering (tag generations and
+    /// the clock are kept).
+    pub fn clear(&mut self) {
+        self.cancelled_count += self.live as u64;
+        self.live = 0;
+        self.heap.clear();
+        self.cancelled.clear();
+    }
+
+    /// Pop the next live event, advancing the clock.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<(f64, E)> {
+        self.skim();
+        let e = self.heap.pop()?;
+        self.live -= 1;
+        self.now = e.time;
+        self.processed += 1;
+        Some((e.time, e.event))
+    }
+
+    /// Pop the next live event only if it occurs before `horizon`.
+    pub fn next_before(&mut self, horizon: f64) -> Option<(f64, E)> {
+        match self.peek_time() {
+            Some(t) if t < horizon => self.next(),
+            _ => None,
+        }
+    }
+}
+
+/// One plane of a co-simulation: handles the events addressed to it,
+/// scheduling follow-ups on the shared kernel and communicating with the
+/// other planes only through events and the shared world state `S`.
+pub trait Component<E, S> {
+    fn name(&self) -> &'static str {
+        "component"
+    }
+
+    fn handle(&mut self, now: f64, event: E, kernel: &mut Kernel<E>, shared: &mut S);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_and_fifo_at_ties() {
+        let mut k = Kernel::new();
+        k.schedule(3.0, "c");
+        k.schedule(1.0, "a1");
+        k.schedule(1.0, "a2");
+        k.schedule(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| k.next().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a1", "a2", "b", "c"]);
+        assert_eq!(k.processed(), 4);
+    }
+
+    #[test]
+    fn cancel_skips_timer() {
+        let mut k = Kernel::new();
+        let a = k.schedule(1.0, "a");
+        k.schedule(2.0, "b");
+        assert_eq!(k.len(), 2);
+        assert!(k.cancel(a));
+        assert!(!k.cancel(a), "double cancel is a no-op");
+        assert_eq!(k.len(), 1);
+        let (t, e) = k.next().unwrap();
+        assert_eq!((t, e), (2.0, "b"));
+        assert!(k.next().is_none());
+        assert_eq!(k.processed(), 1);
+        assert_eq!(k.cancelled_count(), 1);
+    }
+
+    #[test]
+    fn cancel_after_fire_returns_false() {
+        let mut k = Kernel::new();
+        let a = k.schedule(1.0, "a");
+        k.next().unwrap();
+        assert!(!k.cancel(a));
+    }
+
+    #[test]
+    fn invalidate_tag_kills_only_older_generation() {
+        let mut k = Kernel::new();
+        k.schedule_tagged(1.0, 7, "old1");
+        k.schedule_tagged(2.0, 7, "old2");
+        k.schedule_tagged(1.5, 8, "other-tag");
+        assert_eq!(k.invalidate_tag(7), 2);
+        k.schedule_tagged(3.0, 7, "new");
+        let order: Vec<&str> = std::iter::from_fn(|| k.next().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["other-tag", "new"]);
+        assert_eq!(k.cancelled_count(), 2);
+        assert_eq!(k.generation(7), 1);
+        assert_eq!(k.generation(8), 0);
+    }
+
+    #[test]
+    fn peek_time_skips_dead_entries() {
+        let mut k = Kernel::new();
+        let a = k.schedule(1.0, "a");
+        k.schedule(2.0, "b");
+        k.cancel(a);
+        assert_eq!(k.peek_time(), Some(2.0));
+        // Peeking does not advance the clock or deliver.
+        assert_eq!(k.now(), 0.0);
+        assert_eq!(k.next().unwrap().1, "b");
+    }
+
+    #[test]
+    fn clear_empties_queue() {
+        let mut k = Kernel::new();
+        k.schedule(1.0, 1);
+        k.schedule(2.0, 2);
+        k.clear();
+        assert!(k.is_empty());
+        assert!(k.next().is_none());
+        assert_eq!(k.cancelled_count(), 2);
+        // Still usable afterwards.
+        k.schedule(5.0, 3);
+        assert_eq!(k.next().unwrap(), (5.0, 3));
+    }
+
+    #[test]
+    fn next_before_horizon() {
+        let mut k = Kernel::new();
+        k.schedule(1.0, "a");
+        k.schedule(5.0, "b");
+        assert!(k.next_before(2.0).is_some());
+        assert!(k.next_before(2.0).is_none());
+        assert_eq!(k.len(), 1);
+    }
+
+    #[test]
+    fn fifo_property_at_equal_timestamps() {
+        // Property: at any fixed timestamp, live events pop in insertion
+        // order, regardless of interleaved cancels at the same time.
+        let mut rng = crate::util::rng::Rng::new(99);
+        let mut k = Kernel::new();
+        let mut expect: Vec<(u64, usize)> = Vec::new(); // (time-as-int, payload)
+        let mut cancels = Vec::new();
+        for i in 0..500 {
+            let t = rng.below(10) as f64;
+            let id = k.schedule(t, i);
+            if rng.chance(0.2) {
+                cancels.push(id);
+            } else {
+                expect.push((t as u64, i));
+            }
+        }
+        for id in cancels {
+            assert!(k.cancel(id));
+        }
+        // Stable sort by time preserves insertion order within a tie —
+        // exactly the kernel's contract.
+        expect.sort_by_key(|&(t, _)| t);
+        let got: Vec<(u64, usize)> =
+            std::iter::from_fn(|| k.next().map(|(t, e)| (t as u64, e))).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn reschedule_under_new_generation_survives() {
+        let mut k = Kernel::new();
+        k.schedule_tagged(1.0, 3, "stale");
+        k.invalidate_tag(3);
+        k.invalidate_tag(3);
+        k.schedule_tagged(1.0, 3, "fresh");
+        assert_eq!(k.len(), 1);
+        assert_eq!(k.next().unwrap().1, "fresh");
+    }
+}

@@ -1,50 +1,26 @@
 //! Discrete-event simulation substrate.
 //!
-//! A minimal, deterministic event queue: events of user type `E` are
-//! scheduled at f64 times; ties break by insertion sequence so runs are
-//! reproducible. The inference-serving simulations (Fig. 7/8) and the
-//! cost sweeps are built on this.
+//! [`kernel::Kernel`] is the co-simulation kernel: a deterministic event
+//! queue (f64 times, FIFO tie-break by insertion sequence) with
+//! cancellable and generation-tagged timers, `peek_time`/`clear`, and the
+//! [`kernel::Component`] trait that lets the serving, training and
+//! control planes each handle their own events on one shared clock
+//! (`inference::cosim`).
+//!
+//! [`Des`] is the original minimal scheduler API, now a thin wrapper over
+//! the kernel: events of user type `E` are scheduled at f64 times; ties
+//! break by insertion sequence so runs are reproducible. The
+//! static-assignment inference simulations (Fig. 7/8) and the cost sweeps
+//! are built on this.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+pub mod kernel;
 
-/// One scheduled entry.
-struct Entry<E> {
-    time: f64,
-    seq: u64,
-    event: E,
-}
+pub use kernel::{Component, Kernel, TimerId};
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl<E> Eq for Entry<E> {}
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap on (time, seq). `total_cmp` keeps the heap
-        // ordering a lawful total order even if a NaN time ever slips in
-        // (partial_cmp would silently collapse it to Equal and corrupt
-        // the queue's tie-breaking).
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-/// Deterministic discrete-event scheduler.
+/// Deterministic discrete-event scheduler (no cancellation; the
+/// historical API, kept for the static simulation paths).
 pub struct Des<E> {
-    heap: BinaryHeap<Entry<E>>,
-    now: f64,
-    seq: u64,
-    processed: u64,
+    k: Kernel<E>,
 }
 
 impl<E> Default for Des<E> {
@@ -55,53 +31,45 @@ impl<E> Default for Des<E> {
 
 impl<E> Des<E> {
     pub fn new() -> Des<E> {
-        Des { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+        Des { k: Kernel::new() }
     }
 
     /// Current simulation time.
     pub fn now(&self) -> f64 {
-        self.now
+        self.k.now()
     }
 
     pub fn processed(&self) -> u64 {
-        self.processed
+        self.k.processed()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.k.is_empty()
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.k.len()
     }
 
     /// Schedule `event` at absolute time `time` (must be >= now).
     pub fn schedule(&mut self, time: f64, event: E) {
-        debug_assert!(time >= self.now - 1e-12, "scheduling into the past");
-        self.heap.push(Entry { time: time.max(self.now), seq: self.seq, event });
-        self.seq += 1;
+        self.k.schedule(time, event);
     }
 
     /// Schedule `event` `delay` after now.
     pub fn schedule_in(&mut self, delay: f64, event: E) {
-        self.schedule(self.now + delay.max(0.0), event);
+        self.k.schedule_in(delay, event);
     }
 
     /// Pop the next event, advancing the clock.
     #[allow(clippy::should_implement_trait)]
     pub fn next(&mut self) -> Option<(f64, E)> {
-        let e = self.heap.pop()?;
-        self.now = e.time;
-        self.processed += 1;
-        Some((e.time, e.event))
+        self.k.next()
     }
 
     /// Pop the next event only if it occurs before `horizon`.
     pub fn next_before(&mut self, horizon: f64) -> Option<(f64, E)> {
-        match self.heap.peek() {
-            Some(e) if e.time < horizon => self.next(),
-            _ => None,
-        }
+        self.k.next_before(horizon)
     }
 }
 

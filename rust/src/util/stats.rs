@@ -220,6 +220,241 @@ impl Histogram {
     }
 }
 
+/// Seeded reservoir sampler (Vitter's Algorithm R): a uniform random
+/// sample of a stream in O(cap) memory. Replaces unbounded
+/// `Vec<f64>` sample retention in the serving simulation so
+/// million-request runs keep distribution plots (Fig. 7) without holding
+/// every latency in RAM. Deterministic: the kept sample depends only on
+/// the seed and the push order. Equality compares the kept sample and
+/// stream length (not the generator state).
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    items: Vec<f64>,
+    rng: crate::util::rng::Rng,
+}
+
+impl PartialEq for Reservoir {
+    fn eq(&self, other: &Self) -> bool {
+        self.cap == other.cap && self.seen == other.seen && self.items == other.items
+    }
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir {
+            cap,
+            seen: 0,
+            items: Vec::with_capacity(cap.min(4096)),
+            rng: crate::util::rng::Rng::new(seed),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.items.len() < self.cap {
+            self.items.push(x);
+            return;
+        }
+        let j = self.rng.below(self.seen as usize);
+        if j < self.cap {
+            self.items[j] = x;
+        }
+    }
+
+    /// Total stream length observed (>= kept length).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.items
+    }
+}
+
+impl std::ops::Deref for Reservoir {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        &self.items
+    }
+}
+
+/// Streaming quantile estimator — the P² algorithm (Jain & Chlamtac,
+/// 1985): tracks one quantile with five markers in O(1) memory and O(1)
+/// per observation, no samples stored. Exact for the first five
+/// observations, then a piecewise-parabolic approximation.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// Marker heights.
+    q: [f64; 5],
+    /// Marker positions (1-based observation ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired-position increments per observation.
+    dn: [f64; 5],
+    count: u64,
+    /// First five observations (exact phase).
+    init: Vec<f64>,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> P2Quantile {
+        assert!((0.0..=1.0).contains(&p), "quantile out of [0,1]");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [0.0; 5],
+            np: [0.0; 5],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+            init: Vec::with_capacity(5),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x.is_nan() {
+            return; // a NaN would poison every marker; drop it
+        }
+        self.count += 1;
+        if self.init.len() < 5 {
+            self.init.push(x);
+            if self.init.len() == 5 {
+                let mut s = self.init.clone();
+                s.sort_by(f64::total_cmp);
+                for i in 0..5 {
+                    self.q[i] = s[i];
+                    self.n[i] = (i + 1) as f64;
+                }
+                let p = self.p;
+                self.np = [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0];
+            }
+            return;
+        }
+
+        // Cell k (0-based): x lands in [q[k], q[k+1]).
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            if x > self.q[4] {
+                self.q[4] = x;
+            }
+            3
+        } else {
+            let mut k = 3;
+            for i in 1..5 {
+                if x < self.q[i] {
+                    k = i - 1;
+                    break;
+                }
+            }
+            k
+        };
+
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+
+        // Adjust interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let ds = d.signum();
+                let qp = self.parabolic(i, ds);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, ds)
+                };
+                self.n[i] += ds;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current quantile estimate (NaN before any observation).
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.init.len() < 5 {
+            let mut s = self.init.clone();
+            s.sort_by(f64::total_cmp);
+            return percentile_sorted(&s, self.p * 100.0);
+        }
+        self.q[2]
+    }
+}
+
+/// The latency percentiles the serving reports quote (p50/p90/p99),
+/// estimated streaming so outcomes stay O(1) in request count.
+#[derive(Debug, Clone)]
+pub struct StreamingPercentiles {
+    p50: P2Quantile,
+    p90: P2Quantile,
+    p99: P2Quantile,
+}
+
+impl Default for StreamingPercentiles {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamingPercentiles {
+    pub fn new() -> StreamingPercentiles {
+        StreamingPercentiles {
+            p50: P2Quantile::new(0.50),
+            p90: P2Quantile::new(0.90),
+            p99: P2Quantile::new(0.99),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.p50.push(x);
+        self.p90.push(x);
+        self.p99.push(x);
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.p50.value()
+    }
+    pub fn p90(&self) -> f64 {
+        self.p90.value()
+    }
+    pub fn p99(&self) -> f64 {
+        self.p99.value()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,5 +563,102 @@ mod tests {
         let r = h.render(20);
         assert_eq!(r.lines().count(), 4);
         assert!(r.contains('#'));
+    }
+
+    #[test]
+    fn reservoir_keeps_everything_under_cap() {
+        let mut r = Reservoir::new(10, 1);
+        for i in 0..7 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.as_slice(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(r.seen(), 7);
+    }
+
+    #[test]
+    fn reservoir_bounded_and_deterministic() {
+        let stream: Vec<f64> = (0..10_000).map(|i| ((i * 31) % 997) as f64).collect();
+        let mut a = Reservoir::new(64, 42);
+        let mut b = Reservoir::new(64, 42);
+        for &x in &stream {
+            a.push(x);
+            b.push(x);
+        }
+        assert_eq!(a.len(), 64);
+        assert_eq!(a, b);
+        let mut c = Reservoir::new(64, 43);
+        for &x in &stream {
+            c.push(x);
+        }
+        assert_ne!(a, c, "different seeds keep different samples");
+    }
+
+    #[test]
+    fn reservoir_sample_is_representative() {
+        // Uniform stream: the kept sample's mean must be near the
+        // stream's mean (loose bound; the sampler is unbiased).
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut r = Reservoir::new(2000, 9);
+        let mut stream_mean = 0.0;
+        let n = 100_000;
+        for i in 0..n {
+            let x = rng.uniform(0.0, 100.0);
+            stream_mean += (x - stream_mean) / (i + 1) as f64;
+            r.push(x);
+        }
+        let kept_mean: f64 = r.iter().sum::<f64>() / r.len() as f64;
+        assert!((kept_mean - stream_mean).abs() < 3.0, "{kept_mean} vs {stream_mean}");
+    }
+
+    #[test]
+    fn p2_exact_during_init_phase() {
+        let mut q = P2Quantile::new(0.5);
+        assert!(q.value().is_nan());
+        q.push(10.0);
+        assert_eq!(q.value(), 10.0);
+        q.push(20.0);
+        q.push(30.0);
+        assert_eq!(q.value(), 20.0);
+    }
+
+    #[test]
+    fn p2_tracks_known_quantiles() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut p50 = P2Quantile::new(0.5);
+        let mut p90 = P2Quantile::new(0.9);
+        let mut xs = Vec::new();
+        for _ in 0..20_000 {
+            // Skewed positive stream (latency-like).
+            let x = rng.exponential(0.1) + rng.uniform(0.0, 5.0);
+            xs.push(x);
+            p50.push(x);
+            p90.push(x);
+        }
+        let exact50 = percentile(&xs, 50.0);
+        let exact90 = percentile(&xs, 90.0);
+        assert!((p50.value() - exact50).abs() / exact50 < 0.05, "{} vs {exact50}", p50.value());
+        assert!((p90.value() - exact90).abs() / exact90 < 0.05, "{} vs {exact90}", p90.value());
+    }
+
+    #[test]
+    fn p2_ignores_nan() {
+        let mut q = P2Quantile::new(0.5);
+        for x in [1.0, f64::NAN, 2.0, 3.0, f64::NAN, 4.0, 5.0, 6.0, 7.0] {
+            q.push(x);
+        }
+        assert!(q.value().is_finite());
+        assert_eq!(q.count(), 7);
+    }
+
+    #[test]
+    fn streaming_percentiles_ordered() {
+        let mut sp = StreamingPercentiles::new();
+        let mut rng = crate::util::rng::Rng::new(13);
+        for _ in 0..5000 {
+            sp.push(rng.uniform(0.0, 1000.0));
+        }
+        assert!(sp.p50() < sp.p90());
+        assert!(sp.p90() < sp.p99());
+        assert!((sp.p50() - 500.0).abs() < 50.0, "{}", sp.p50());
     }
 }

@@ -1,0 +1,127 @@
+//! Determinism guarantees of the co-simulation kernel, end to end:
+//! same seed ⇒ bit-identical event trace and outcome, including a
+//! mid-run orchestrator plan swap; kernel ordering is FIFO at equal
+//! timestamps.
+
+use hflop::experiments::interference::{run, InterferenceConfig, Preset};
+use hflop::experiments::{Scenario, ScenarioConfig};
+use hflop::sim::Kernel;
+use hflop::util::rng::Rng;
+
+fn scenario() -> Scenario {
+    Scenario::build(ScenarioConfig {
+        n_clients: 12,
+        n_edges: 3,
+        weeks: 5,
+        balanced_clients: false,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn cosim_trace_bit_identical_across_runs_with_plan_swap() {
+    let sc = scenario();
+    // Edge failure with no training interference: deterministic mid-run
+    // re-solve and plan swap (the swap itself is part of the contract).
+    let cfg = InterferenceConfig {
+        preset: Preset::EdgeFailure,
+        duration_s: 120.0,
+        lambda_scale: 0.5,
+        interference_factor: 1.0,
+        record_trace: true,
+        ..Default::default()
+    };
+    let a = run(&sc, &cfg).unwrap();
+    let b = run(&sc, &cfg).unwrap();
+
+    assert!(a.plan_swaps >= 1, "the run must exercise a mid-run plan swap");
+    assert_eq!(a.trace.len(), b.trace.len());
+    assert_eq!(a.trace, b.trace, "event traces diverged");
+    assert_eq!(a.serving.total(), b.serving.total());
+    assert_eq!(a.serving.served_at_edge, b.serving.served_at_edge);
+    assert_eq!(a.serving.spilled_to_cloud, b.serving.spilled_to_cloud);
+    assert_eq!(a.serving.direct_to_cloud, b.serving.direct_to_cloud);
+    assert_eq!(a.serving.latency.mean().to_bits(), b.serving.latency.mean().to_bits());
+    assert_eq!(a.serving.latency.std().to_bits(), b.serving.latency.std().to_bits());
+    assert_eq!(a.serving.samples, b.serving.samples);
+    assert_eq!(a.plan_swaps, b.plan_swaps);
+    assert_eq!(a.reclusters, b.reclusters);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.events_cancelled, b.events_cancelled);
+}
+
+#[test]
+fn different_seed_changes_the_trace() {
+    let sc = scenario();
+    let cfg = InterferenceConfig {
+        preset: Preset::Steady,
+        duration_s: 60.0,
+        lambda_scale: 0.5,
+        record_trace: true,
+        ..Default::default()
+    };
+    let a = run(&sc, &cfg).unwrap();
+    let cfg2 = InterferenceConfig { seed: cfg.seed + 1, ..cfg };
+    let c = run(&sc, &cfg2).unwrap();
+    assert_ne!(a.trace, c.trace);
+}
+
+#[test]
+fn kernel_is_fifo_at_equal_timestamps() {
+    // Property: among live events at one timestamp, delivery order is
+    // insertion order — across many random batches with interleaved
+    // cancellations and tag invalidations.
+    let mut rng = Rng::new(2026);
+    for round in 0..20 {
+        let mut k: Kernel<usize> = Kernel::new();
+        let mut expect: Vec<(u64, usize)> = Vec::new();
+        let mut cancels = Vec::new();
+        let mut tagged_dead = 0usize;
+        for i in 0..400 {
+            let t = rng.below(8) as f64;
+            if rng.chance(0.15) {
+                // Tagged under tag 1; invalidated below -> must not fire.
+                k.schedule_tagged(t, 1, i);
+                tagged_dead += 1;
+            } else {
+                let id = k.schedule(t, i);
+                if rng.chance(0.2) {
+                    cancels.push(id);
+                } else {
+                    expect.push((t as u64, i));
+                }
+            }
+        }
+        assert_eq!(k.invalidate_tag(1), tagged_dead, "round {round}");
+        for id in cancels {
+            assert!(k.cancel(id));
+        }
+        // A stable sort by time is exactly the kernel's ordering contract.
+        expect.sort_by_key(|&(t, _)| t);
+        let got: Vec<(u64, usize)> =
+            std::iter::from_fn(|| k.next().map(|(t, e)| (t as u64, e))).collect();
+        assert_eq!(got, expect, "round {round}");
+        assert!(k.is_empty());
+    }
+}
+
+#[test]
+fn kernel_clock_never_regresses_under_cancellation() {
+    let mut rng = Rng::new(7);
+    let mut k: Kernel<u32> = Kernel::new();
+    let mut ids = Vec::new();
+    for i in 0..200u32 {
+        ids.push(k.schedule(rng.uniform(0.0, 50.0), i));
+    }
+    for (n, id) in ids.into_iter().enumerate() {
+        if n % 3 == 0 {
+            k.cancel(id);
+        }
+    }
+    let mut last = 0.0;
+    while let Some((t, _)) = k.next() {
+        assert!(t >= last, "{t} < {last}");
+        last = t;
+    }
+}
