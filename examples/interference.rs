@@ -9,7 +9,7 @@
 //!
 //! Run: `cargo run --release --example interference`
 
-use hflop::experiments::interference::{run, InterferenceConfig, Preset};
+use hflop::experiments::interference::{run, InterferenceConfig, Preset, EDGE_FAILURE_AT_FRAC};
 use hflop::experiments::{Scenario, ScenarioConfig};
 use hflop::metrics::export::ascii_table;
 
@@ -49,8 +49,7 @@ fn main() -> anyhow::Result<()> {
             format!("{}", out.events_cancelled),
         ]);
         if preset == Preset::EdgeFailure {
-            // Matches experiments::interference::preset_plan's schedule.
-            failure_at_s = 0.4 * cfg.duration_s;
+            failure_at_s = EDGE_FAILURE_AT_FRAC * cfg.duration_s;
             failure_timeline = Some(out);
         }
     }

@@ -1,0 +1,72 @@
+//! Deterministic parallel scenario sweep (`experiments::sweep`).
+//!
+//! Runs the smoke grid (all four interference presets × seeds × both
+//! local-search engines) twice — serially and on the scoped worker pool
+//! — verifies the two matrices are byte-identical, reports the speedup,
+//! and writes the combined artifact to `results/BENCH_sweep.json`.
+//!
+//! Run: `cargo run --release --example sweep`
+
+use hflop::experiments::sweep::{run_grid, SweepGrid};
+use hflop::metrics::export::{ascii_table, ResultsWriter};
+use hflop::util::json::Json;
+use hflop::util::pool;
+use hflop::util::time_it;
+
+fn main() -> anyhow::Result<()> {
+    hflop::init_logging();
+
+    let grid = SweepGrid::smoke(2026);
+    let workers = pool::default_workers();
+    println!(
+        "sweep '{}': {} cells ({} rows x {} seeds x {} modes x {} envs), {} workers",
+        grid.name,
+        grid.n_cells(),
+        grid.rows.len(),
+        grid.n_seeds,
+        grid.modes.len(),
+        grid.envs.len(),
+        workers
+    );
+
+    let (serial, serial_s) = time_it(|| run_grid(&grid, 1));
+    let serial = serial?;
+    let (parallel, parallel_s) = time_it(|| run_grid(&grid, workers));
+    let parallel = parallel?;
+
+    let identical = serial.to_json().to_pretty() == parallel.to_json().to_pretty();
+    println!(
+        "serial {serial_s:.2}s | {workers}-worker {parallel_s:.2}s | speedup {:.2}x | \
+         bit-identical: {identical}",
+        serial_s / parallel_s.max(1e-9)
+    );
+    anyhow::ensure!(identical, "worker count changed the matrix — determinism bug");
+
+    println!(
+        "{}",
+        ascii_table(
+            &["row", "cells", "requests", "mean ms", "p99 ms", "rounds", "swaps"],
+            &parallel.summary_rows()
+        )
+    );
+
+    let out = ResultsWriter::default_dir()?;
+    let path = out.write_json(
+        "BENCH_sweep.json",
+        &Json::obj(vec![
+            ("matrix", parallel.to_json()),
+            (
+                "timing",
+                Json::obj(vec![
+                    ("workers", Json::Num(workers as f64)),
+                    ("serial_wall_s", Json::Num(serial_s)),
+                    ("parallel_wall_s", Json::Num(parallel_s)),
+                    ("speedup", Json::Num(serial_s / parallel_s.max(1e-9))),
+                    ("total_cell_wall_s", Json::Num(parallel.total_cell_wall_s())),
+                ]),
+            ),
+        ]),
+    )?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

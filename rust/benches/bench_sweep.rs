@@ -1,0 +1,62 @@
+//! Bench: the scenario-sweep engine — serial loop vs the scoped worker
+//! pool on the interference grid. Emits `BENCH_sweep.json` (matrix +
+//! timing) so the perf trajectory accumulates data points in CI, and
+//! prints the speedup the acceptance criterion tracks: the 8-worker run
+//! of the interference presets must complete in measurably less
+//! wall-clock than the serial loop.
+//!
+//! `HFLOP_BENCH_SMOKE=1` swaps in the smoke grid (small world, short
+//! horizon) so CI can verify the harness cheaply.
+
+mod bench_common;
+use bench_common::{bench, header, smoke};
+
+use hflop::experiments::sweep::{run_grid, SweepGrid};
+use hflop::util::json::Json;
+use hflop::util::pool;
+
+fn main() {
+    let smoke = smoke();
+    let grid = if smoke { SweepGrid::smoke(2026) } else { SweepGrid::interference(2026) };
+    let workers = pool::default_workers().clamp(2, 8);
+
+    header(&format!(
+        "sweep engine: '{}' grid, {} cells, serial vs {} workers",
+        grid.name,
+        grid.n_cells(),
+        workers
+    ));
+
+    let mut matrix = None;
+    let serial = bench("sweep/serial", 1, || {
+        run_grid(&grid, 1).expect("serial sweep")
+    });
+    let parallel = bench(&format!("sweep/{workers}-workers"), 1, || {
+        let m = run_grid(&grid, workers).expect("parallel sweep");
+        matrix = Some(m);
+    });
+    let matrix = matrix.expect("parallel sweep ran");
+    let speedup = serial.mean_s / parallel.mean_s.max(1e-9);
+    println!(
+        "  -> speedup {speedup:.2}x over {} cells (total cell work {:.2}s)",
+        matrix.cells.len(),
+        matrix.total_cell_wall_s()
+    );
+
+    let artifact = Json::obj(vec![
+        ("matrix", matrix.to_json()),
+        (
+            "timing",
+            Json::obj(vec![
+                ("workers", Json::Num(workers as f64)),
+                ("serial_wall_s", Json::Num(serial.mean_s)),
+                ("parallel_wall_s", Json::Num(parallel.mean_s)),
+                ("speedup", Json::Num(speedup)),
+                ("total_cell_wall_s", Json::Num(matrix.total_cell_wall_s())),
+                ("smoke", Json::Bool(smoke)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_sweep.json", artifact.to_pretty()).expect("write BENCH_sweep.json");
+    println!("  -> wrote BENCH_sweep.json");
+}

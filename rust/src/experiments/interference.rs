@@ -26,7 +26,7 @@
 use crate::experiments::scenario::Scenario;
 use crate::fl::timing::RoundTimeModel;
 use crate::inference::cosim::{
-    ControlConfig, ControlPlane, CoSim, CoSimConfig, CoSimOutcome, DriftModel, FaultEvent,
+    run_cell, ControlConfig, ControlPlane, CoSimConfig, CoSimOutcome, DriftModel, FaultEvent,
     TrainingConfig, TrainingSchedule,
 };
 use crate::inference::simulation::ServingConfig;
@@ -35,6 +35,7 @@ use crate::orchestrator::{
     DeploymentPlan, Gpo, InferenceController, InferenceCtlConfig, LearningController,
     LearningCtlConfig,
 };
+use crate::solver::SolveOptions;
 
 /// The four joint-timeline scenarios.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -80,6 +81,9 @@ pub struct InterferenceConfig {
     pub time_model: RoundTimeModel,
     pub epochs: usize,
     pub model_bytes: usize,
+    /// Solver options for the control plane's re-solves (the sweep
+    /// engine's `LsMode` axis plugs in here).
+    pub solve: SolveOptions,
     pub seed: u64,
     pub record_trace: bool,
 }
@@ -99,11 +103,19 @@ impl Default for InterferenceConfig {
             time_model: RoundTimeModel::default(),
             epochs: 5,
             model_bytes: 4 * 65_536,
+            solve: SolveOptions::auto(),
             seed: 7,
             record_trace: false,
         }
     }
 }
+
+/// When the [`Preset::EdgeFailure`] victim fails / recovers, as
+/// fractions of the run horizon. Public so drivers annotating the
+/// latency timeline (e.g. `examples/interference.rs`) stay in sync with
+/// the schedule instead of duplicating the constants.
+pub const EDGE_FAILURE_AT_FRAC: f64 = 0.4;
+pub const EDGE_RECOVER_AT_FRAC: f64 = 0.75;
 
 /// Training cadence + fault schedule for one preset.
 fn preset_plan(
@@ -139,8 +151,8 @@ fn preset_plan(
             (
                 periodic,
                 vec![
-                    (0.4 * d, FaultEvent::EdgeFail(victim)),
-                    (0.75 * d, FaultEvent::EdgeRecover(victim)),
+                    (EDGE_FAILURE_AT_FRAC * d, FaultEvent::EdgeFail(victim)),
+                    (EDGE_RECOVER_AT_FRAC * d, FaultEvent::EdgeRecover(victim)),
                 ],
                 no_drift,
             )
@@ -174,6 +186,7 @@ pub fn run(sc: &Scenario, cfg: &InterferenceConfig) -> anyhow::Result<CoSimOutco
 
     let mut learning = LearningController::new(LearningCtlConfig {
         l: sc.cfg.l,
+        solve: cfg.solve.clone(),
         ..Default::default()
     });
     for (dev, &l) in lambdas.iter().enumerate() {
@@ -200,7 +213,7 @@ pub fn run(sc: &Scenario, cfg: &InterferenceConfig) -> anyhow::Result<CoSimOutco
         },
     );
 
-    let cosim = CoSim::new(
+    Ok(run_cell(
         CoSimConfig {
             serving: ServingConfig {
                 assign: sc.assign_hflop.assign.clone(),
@@ -223,8 +236,7 @@ pub fn run(sc: &Scenario, cfg: &InterferenceConfig) -> anyhow::Result<CoSimOutco
             record_trace: cfg.record_trace,
         },
         Some(control),
-    );
-    Ok(cosim.run())
+    ))
 }
 
 #[cfg(test)]

@@ -9,10 +9,12 @@
 //! | [`fig9`]   | communication-cost savings vs edge density |
 //! | [`cl_table`] | §V-B1 static vs continually-retrained MSE |
 //! | [`interference`] | joint training/serving timeline (co-sim presets) |
+//! | [`sweep`]  | deterministic parallel scenario-sweep engine (grids over the above) |
 //!
 //! [`scenario`] builds the shared world (synthetic METR-LA, topology,
 //! assignments). The `examples/` binaries and `rust/benches/` harnesses
-//! are thin drivers over these functions.
+//! are thin drivers over these functions; [`sweep`] fans grids of them
+//! over a worker pool with per-cell coordinate-hashed seeds.
 
 pub mod cl_table;
 pub mod fig2;
@@ -22,5 +24,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod interference;
 pub mod scenario;
+pub mod sweep;
 
 pub use scenario::{Scenario, ScenarioConfig};
+pub use sweep::{SweepGrid, SweepMatrix};

@@ -1,0 +1,619 @@
+//! Deterministic parallel scenario-sweep engine.
+//!
+//! Every headline artifact of the paper (Figs. 6–9, the §V-B1 table) is
+//! a *sweep*: many (scenario × seed × solver mode × environment) cells.
+//! This module turns that shape into a first-class engine:
+//!
+//! * [`SweepGrid`] declares the grid — rows (static Fig. 7/8 setups or
+//!   `interference` co-sim presets) × a seed range × solver [`LsMode`] ×
+//!   environment configs (interference factor / speedup / λ-scale);
+//! * [`run_grid`] fans the cells over a scoped worker pool
+//!   (`util::pool`), reusing the PR 2 co-sim kernel and the PR 1
+//!   incremental solver inside each cell;
+//! * every cell's RNG seed is **hashed from its grid coordinates**
+//!   (`util::rng::mix_seed`) and each cell owns all of its state
+//!   (`inference::cosim::run_cell`), so the assembled [`SweepMatrix`] —
+//!   and its JSON — is **bit-identical regardless of worker count or
+//!   completion order** (`rust/tests/sweep_determinism.rs` holds this at
+//!   1, 2 and 8 workers, including under an injected slow cell);
+//! * [`SweepMatrix::to_json`] serializes via `util::json` into the
+//!   deterministic half of `BENCH_sweep.json` (cell wall-clock lives
+//!   outside it, in the driver's timing object).
+//!
+//! Drivers: `hflop sweep` (CLI), `examples/sweep.rs`, and
+//! `benches/bench_sweep.rs` (which records the serial-vs-parallel
+//! wall-clock the ROADMAP's perf trajectory tracks).
+
+use crate::experiments::interference::{self, InterferenceConfig, Preset};
+use crate::experiments::scenario::{Scenario, ScenarioConfig};
+use crate::inference::simulation::{simulate, ServingConfig};
+use crate::inference::LatencyModel;
+use crate::metrics::cost::{flat_fl_bytes, hfl_bytes};
+use crate::solver::{LocalSearchOptions, LsMode, Mode, SolveOptions};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::rng::mix_seed;
+
+/// Which fixed assignment a static (serving-only) row simulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StaticSetup {
+    /// Flat FL: no aggregators, every request direct to cloud.
+    Flat,
+    /// Location-clustered (capacity-blind) assignment.
+    Location,
+    /// The scenario's HFLOP (capacity-aware) assignment.
+    Hflop,
+}
+
+/// What one grid row runs per cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// The Fig. 7/8 static serving fast path.
+    Static(StaticSetup),
+    /// A joint-timeline co-simulation preset (orchestrator in the loop).
+    Cosim(Preset),
+}
+
+/// One named grid row.
+#[derive(Debug, Clone)]
+pub struct RowSpec {
+    pub name: &'static str,
+    pub workload: Workload,
+}
+
+/// One environment configuration (the grid's fourth axis).
+#[derive(Debug, Clone)]
+pub struct EnvSpec {
+    pub name: String,
+    /// Serving-capacity multiplier while an edge trains (co-sim rows).
+    pub interference_factor: f64,
+    /// Edge→cloud compute speedup in [0, 0.95] (static rows, Fig. 8).
+    pub speedup: f64,
+    /// Scale factor on every λ_i.
+    pub lambda_scale: f64,
+}
+
+impl Default for EnvSpec {
+    fn default() -> Self {
+        EnvSpec { name: "base".into(), interference_factor: 0.25, speedup: 0.0, lambda_scale: 1.0 }
+    }
+}
+
+/// Stable short name for an [`LsMode`] axis entry.
+pub fn mode_name(mode: LsMode) -> &'static str {
+    match mode {
+        LsMode::Auto => "auto",
+        LsMode::Completion => "completion",
+        LsMode::Incremental => "incremental",
+    }
+}
+
+/// Solve options that pin the control plane's re-solves to one
+/// local-search engine (the sweep's solver axis).
+pub fn solve_options(mode: LsMode) -> SolveOptions {
+    SolveOptions {
+        mode: Mode::Heuristic,
+        ls: LocalSearchOptions { mode, ..Default::default() },
+        ..SolveOptions::exact()
+    }
+}
+
+/// The declarative sweep: rows × seeds × solver modes × environments.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub name: &'static str,
+    /// Shared world built once per grid (all cells read it immutably).
+    pub scenario: ScenarioConfig,
+    pub rows: Vec<RowSpec>,
+    /// Seed axis: scenario-replication seeds `seed_base..seed_base+n`.
+    pub seed_base: u64,
+    pub n_seeds: usize,
+    pub modes: Vec<LsMode>,
+    pub envs: Vec<EnvSpec>,
+    /// Simulated wall time per cell (s).
+    pub duration_s: f64,
+    /// Serialized model size for comm-volume accounting.
+    pub model_bytes: usize,
+    /// Root of the per-cell seed derivation.
+    pub root_seed: u64,
+}
+
+impl SweepGrid {
+    /// The default grid: all four interference presets × 2 replication
+    /// seeds × both local-search engines × two interference factors —
+    /// 32 cells over the full co-sim (the acceptance grid).
+    pub fn interference(root_seed: u64) -> SweepGrid {
+        SweepGrid {
+            name: "interference",
+            scenario: ScenarioConfig {
+                n_clients: 20,
+                n_edges: 4,
+                weeks: 5,
+                balanced_clients: false,
+                ..Default::default()
+            },
+            rows: Preset::ALL
+                .iter()
+                .map(|&p| RowSpec { name: p.name(), workload: Workload::Cosim(p) })
+                .collect(),
+            seed_base: 0,
+            n_seeds: 2,
+            modes: vec![LsMode::Completion, LsMode::Incremental],
+            envs: vec![
+                EnvSpec { name: "if0.25".into(), interference_factor: 0.25, ..Default::default() },
+                EnvSpec { name: "if1.0".into(), interference_factor: 1.0, ..Default::default() },
+            ],
+            duration_s: 240.0,
+            model_bytes: 4 * 65_536,
+            root_seed,
+        }
+    }
+
+    /// CI smoke grid: still ≥ 24 cells but a small world and a short
+    /// horizon, so `sweep --smoke` finishes in seconds.
+    pub fn smoke(root_seed: u64) -> SweepGrid {
+        SweepGrid {
+            name: "smoke",
+            scenario: ScenarioConfig {
+                n_clients: 12,
+                n_edges: 3,
+                weeks: 5,
+                balanced_clients: false,
+                ..Default::default()
+            },
+            n_seeds: 3,
+            envs: vec![EnvSpec {
+                name: "if0.25".into(),
+                interference_factor: 0.25,
+                lambda_scale: 0.5,
+                ..Default::default()
+            }],
+            duration_s: 60.0,
+            ..Self::interference(root_seed)
+        }
+    }
+
+    /// Fig. 7 as grid rows: the three static setups × replication seeds.
+    pub fn fig7(root_seed: u64) -> SweepGrid {
+        SweepGrid {
+            name: "fig7",
+            scenario: ScenarioConfig {
+                n_clients: 20,
+                n_edges: 4,
+                weeks: 5,
+                balanced_clients: false,
+                ..Default::default()
+            },
+            rows: vec![
+                RowSpec { name: "flat", workload: Workload::Static(StaticSetup::Flat) },
+                RowSpec { name: "location", workload: Workload::Static(StaticSetup::Location) },
+                RowSpec { name: "hflop", workload: Workload::Static(StaticSetup::Hflop) },
+            ],
+            seed_base: 0,
+            n_seeds: 6,
+            modes: vec![LsMode::Auto],
+            envs: vec![EnvSpec { interference_factor: 1.0, ..Default::default() }],
+            duration_s: 120.0,
+            model_bytes: 4 * 65_536,
+            root_seed,
+        }
+    }
+
+    /// Fig. 8b as grid rows: the three static setups × a speedup axis at
+    /// λ×10 (the saturated regime with the paper's crossover).
+    pub fn fig8(root_seed: u64) -> SweepGrid {
+        SweepGrid {
+            name: "fig8",
+            n_seeds: 2,
+            envs: (0..=5)
+                .map(|i| {
+                    let sp = i as f64 * 0.19;
+                    EnvSpec {
+                        name: format!("sp{sp:.2}"),
+                        interference_factor: 1.0,
+                        speedup: sp,
+                        lambda_scale: 10.0,
+                    }
+                })
+                .collect(),
+            duration_s: 60.0,
+            ..Self::fig7(root_seed)
+        }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.rows.len() * self.n_seeds * self.modes.len() * self.envs.len()
+    }
+
+    /// Decode a flat cell index into `(row, seed, mode, env)` indices
+    /// (row-major, the order cells appear in the matrix).
+    pub fn coords(&self, idx: usize) -> (usize, usize, usize, usize) {
+        assert!(idx < self.n_cells(), "cell index out of range");
+        let e = idx % self.envs.len();
+        let rest = idx / self.envs.len();
+        let m = rest % self.modes.len();
+        let rest = rest / self.modes.len();
+        let s = rest % self.n_seeds;
+        let r = rest / self.n_seeds;
+        (r, s, m, e)
+    }
+
+    /// The cell's RNG seed, hashed from the root seed and the cell's
+    /// grid coordinates — never from execution order.
+    pub fn cell_seed(&self, r: usize, s: usize, m: usize, e: usize) -> u64 {
+        mix_seed(self.root_seed, &[r as u64, self.seed_base + s as u64, m as u64, e as u64])
+    }
+}
+
+/// Compact, fully deterministic outcome of one sweep cell.
+#[derive(Debug, Clone)]
+pub struct CellOutcome {
+    pub row: usize,
+    pub seed_idx: usize,
+    pub mode_idx: usize,
+    pub env_idx: usize,
+    /// `row/s<seed>/<mode>/<env>`.
+    pub label: String,
+    pub cell_seed: u64,
+    // --- serving (streaming moments + P² percentiles) -------------------
+    pub requests: u64,
+    pub served_at_edge: u64,
+    pub spilled_to_cloud: u64,
+    pub direct_to_cloud: u64,
+    pub spill_fraction: f64,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    // --- training / orchestration ---------------------------------------
+    pub rounds_completed: usize,
+    pub plan_swaps: usize,
+    pub reclusters: usize,
+    pub retrain_triggers: usize,
+    pub events_processed: u64,
+    pub events_cancelled: u64,
+    // --- cost accounting -------------------------------------------------
+    /// Eq. 1 communication cost of the cell's deployment plan.
+    pub eq1_cost: f64,
+    /// Predicted metered traffic (GB) for the cell's training activity.
+    pub comm_gb: f64,
+    /// Wall-clock seconds this cell took. Recorded for the bench report,
+    /// EXCLUDED from [`CellOutcome::to_json`] — wall time varies run to
+    /// run and must not break matrix bit-identity.
+    pub wall_s: f64,
+}
+
+impl CellOutcome {
+    /// Deterministic JSON view (everything except `wall_s`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("cell_seed", Json::Str(format!("{:016x}", self.cell_seed))),
+            ("requests", Json::Num(self.requests as f64)),
+            ("served_at_edge", Json::Num(self.served_at_edge as f64)),
+            ("spilled_to_cloud", Json::Num(self.spilled_to_cloud as f64)),
+            ("direct_to_cloud", Json::Num(self.direct_to_cloud as f64)),
+            ("spill_fraction", Json::Num(self.spill_fraction)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("std_ms", Json::Num(self.std_ms)),
+            ("min_ms", Json::Num(self.min_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p90_ms", Json::Num(self.p90_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("rounds_completed", Json::Num(self.rounds_completed as f64)),
+            ("plan_swaps", Json::Num(self.plan_swaps as f64)),
+            ("reclusters", Json::Num(self.reclusters as f64)),
+            ("retrain_triggers", Json::Num(self.retrain_triggers as f64)),
+            ("events_processed", Json::Num(self.events_processed as f64)),
+            ("events_cancelled", Json::Num(self.events_cancelled as f64)),
+            ("eq1_cost", Json::Num(self.eq1_cost)),
+            ("comm_gb", Json::Num(self.comm_gb)),
+        ])
+    }
+}
+
+/// The merged sweep result: one [`CellOutcome`] per grid cell, in grid
+/// order (independent of which worker finished first).
+#[derive(Debug, Clone)]
+pub struct SweepMatrix {
+    pub grid_name: String,
+    pub root_seed: u64,
+    pub row_names: Vec<String>,
+    pub seeds: Vec<u64>,
+    pub mode_names: Vec<String>,
+    pub env_names: Vec<String>,
+    pub duration_s: f64,
+    pub cells: Vec<CellOutcome>,
+}
+
+impl SweepMatrix {
+    /// The deterministic sweep artifact (the `matrix` half of
+    /// `BENCH_sweep.json`): bit-identical for a given grid + root seed
+    /// at any worker count.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "grid",
+                Json::obj(vec![
+                    ("name", Json::Str(self.grid_name.clone())),
+                    ("root_seed", Json::Num(self.root_seed as f64)),
+                    ("rows", str_arr(&self.row_names)),
+                    (
+                        "seeds",
+                        Json::Arr(self.seeds.iter().map(|&s| Json::Num(s as f64)).collect()),
+                    ),
+                    ("modes", str_arr(&self.mode_names)),
+                    ("envs", str_arr(&self.env_names)),
+                    ("duration_s", Json::Num(self.duration_s)),
+                    ("n_cells", Json::Num(self.cells.len() as f64)),
+                ]),
+            ),
+            ("cells", Json::Arr(self.cells.iter().map(CellOutcome::to_json).collect())),
+        ])
+    }
+
+    /// Sum of per-cell wall-clock (the work the pool parallelizes).
+    pub fn total_cell_wall_s(&self) -> f64 {
+        self.cells.iter().map(|c| c.wall_s).sum()
+    }
+
+    /// Per-row mean-latency summary for terminal reports.
+    pub fn summary_rows(&self) -> Vec<Vec<String>> {
+        let mut out = Vec::new();
+        for (r, name) in self.row_names.iter().enumerate() {
+            let cells: Vec<&CellOutcome> = self.cells.iter().filter(|c| c.row == r).collect();
+            if cells.is_empty() {
+                continue;
+            }
+            let n = cells.len() as f64;
+            let mean = cells.iter().map(|c| c.mean_ms).sum::<f64>() / n;
+            let p99 = cells.iter().map(|c| c.p99_ms).sum::<f64>() / n;
+            let req: u64 = cells.iter().map(|c| c.requests).sum();
+            let swaps: usize = cells.iter().map(|c| c.plan_swaps).sum();
+            let rounds: usize = cells.iter().map(|c| c.rounds_completed).sum();
+            out.push(vec![
+                name.clone(),
+                format!("{}", cells.len()),
+                format!("{req}"),
+                format!("{mean:.2}"),
+                format!("{p99:.1}"),
+                format!("{rounds}"),
+                format!("{swaps}"),
+            ]);
+        }
+        out
+    }
+}
+
+fn str_arr(xs: &[String]) -> Json {
+    Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect())
+}
+
+/// Run one cell by flat index against the shared scenario. Pure in the
+/// functional sense: output depends only on `(sc, grid, idx)`.
+fn run_cell_at(sc: &Scenario, grid: &SweepGrid, idx: usize) -> anyhow::Result<CellOutcome> {
+    let (r, s, m, e) = grid.coords(idx);
+    let row = &grid.rows[r];
+    let env = &grid.envs[e];
+    let mode = grid.modes[m];
+    let seed = grid.cell_seed(r, s, m, e);
+    let label =
+        format!("{}/s{}/{}/{}", row.name, grid.seed_base + s as u64, mode_name(mode), env.name);
+    let t0 = std::time::Instant::now();
+
+    let mut rounds_completed = 0usize;
+    let mut plan_swaps = 0usize;
+    let mut reclusters = 0usize;
+    let mut retrain_triggers = 0usize;
+    let mut events_processed = 0u64;
+    let mut events_cancelled = 0u64;
+    let serving = match row.workload {
+        Workload::Static(setup) => {
+            let assign = match setup {
+                StaticSetup::Flat => vec![None; sc.topo.n_devices()],
+                StaticSetup::Location => sc.assign_location.assign.clone(),
+                StaticSetup::Hflop => sc.assign_hflop.assign.clone(),
+            };
+            let cfg = ServingConfig {
+                assign,
+                lambda: sc.lambdas().iter().map(|l| l * env.lambda_scale).collect(),
+                capacity: sc.capacities(),
+                latency: LatencyModel::default().with_speedup(env.speedup.min(0.95)),
+                duration_s: grid.duration_s,
+                queue_window_s: 0.05,
+                seed,
+            };
+            simulate(&cfg)
+        }
+        Workload::Cosim(preset) => {
+            let cfg = InterferenceConfig {
+                preset,
+                duration_s: grid.duration_s,
+                interference_factor: env.interference_factor,
+                lambda_scale: env.lambda_scale,
+                model_bytes: grid.model_bytes,
+                solve: solve_options(mode),
+                seed,
+                ..Default::default()
+            };
+            let out = interference::run(sc, &cfg)?;
+            rounds_completed = out.rounds_completed;
+            plan_swaps = out.plan_swaps;
+            reclusters = out.reclusters;
+            retrain_triggers = out.retrain_triggers;
+            events_processed = out.events_processed;
+            events_cancelled = out.events_cancelled;
+            out.serving
+        }
+    };
+
+    // Eq. 1 cost of the cell's (initial) deployment plan and the metered
+    // traffic its training activity predicts (static rows use the
+    // paper's nominal 100 aggregation rounds).
+    let (eq1_cost, comm_rounds) = match row.workload {
+        Workload::Static(StaticSetup::Flat) => (0.0, 100),
+        Workload::Static(StaticSetup::Location) => (sc.assign_location.cost(&sc.inst), 100),
+        Workload::Static(StaticSetup::Hflop) => (sc.hflop_cost, 100),
+        Workload::Cosim(_) => (sc.hflop_cost, rounds_completed),
+    };
+    let comm_bytes = match row.workload {
+        Workload::Static(StaticSetup::Flat) => {
+            flat_fl_bytes(sc.topo.n_devices(), comm_rounds, grid.model_bytes)
+        }
+        Workload::Static(StaticSetup::Location) => {
+            hfl_bytes(&sc.inst, &sc.assign_location, comm_rounds, grid.model_bytes)
+        }
+        _ => hfl_bytes(&sc.inst, &sc.assign_hflop, comm_rounds, grid.model_bytes),
+    };
+
+    Ok(CellOutcome {
+        row: r,
+        seed_idx: s,
+        mode_idx: m,
+        env_idx: e,
+        label,
+        cell_seed: seed,
+        requests: serving.total(),
+        served_at_edge: serving.served_at_edge,
+        spilled_to_cloud: serving.spilled_to_cloud,
+        direct_to_cloud: serving.direct_to_cloud,
+        spill_fraction: serving.spill_fraction(),
+        mean_ms: serving.latency.mean(),
+        std_ms: serving.latency.std(),
+        min_ms: serving.latency.min(),
+        max_ms: serving.latency.max(),
+        p50_ms: serving.percentiles.p50(),
+        p90_ms: serving.percentiles.p90(),
+        p99_ms: serving.percentiles.p99(),
+        rounds_completed,
+        plan_swaps,
+        reclusters,
+        retrain_triggers,
+        events_processed,
+        events_cancelled,
+        eq1_cost,
+        comm_gb: comm_bytes as f64 / 1e9,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Fan the grid over `workers` pool threads and merge the outcomes into
+/// a [`SweepMatrix`] in grid order.
+pub fn run_grid(grid: &SweepGrid, workers: usize) -> anyhow::Result<SweepMatrix> {
+    run_grid_with_hook(grid, workers, |_| {})
+}
+
+/// [`run_grid`] with a per-cell entry hook, called with the cell index
+/// on the worker thread *before* the cell runs. The determinism tests
+/// use it to inject a slow cell and scramble completion order; it must
+/// not touch cell state.
+pub fn run_grid_with_hook(
+    grid: &SweepGrid,
+    workers: usize,
+    pre_cell: impl Fn(usize) + Sync,
+) -> anyhow::Result<SweepMatrix> {
+    anyhow::ensure!(grid.n_cells() > 0, "empty sweep grid");
+    let sc = Scenario::build(grid.scenario.clone())?;
+    let results = pool::scoped_map(workers, grid.n_cells(), |i| {
+        pre_cell(i);
+        run_cell_at(&sc, grid, i)
+    });
+    let cells = results.into_iter().collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(SweepMatrix {
+        grid_name: grid.name.to_string(),
+        root_seed: grid.root_seed,
+        row_names: grid.rows.iter().map(|r| r.name.to_string()).collect(),
+        seeds: (0..grid.n_seeds).map(|s| grid.seed_base + s as u64).collect(),
+        mode_names: grid.modes.iter().map(|&m| mode_name(m).to_string()).collect(),
+        env_names: grid.envs.iter().map(|e| e.name.clone()).collect(),
+        duration_s: grid.duration_s,
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SweepGrid {
+        SweepGrid {
+            scenario: ScenarioConfig {
+                n_clients: 12,
+                n_edges: 3,
+                weeks: 5,
+                balanced_clients: false,
+                ..Default::default()
+            },
+            rows: vec![
+                RowSpec { name: "flat", workload: Workload::Static(StaticSetup::Flat) },
+                RowSpec { name: "steady", workload: Workload::Cosim(Preset::Steady) },
+            ],
+            n_seeds: 2,
+            modes: vec![LsMode::Incremental],
+            envs: vec![EnvSpec { lambda_scale: 0.5, ..Default::default() }],
+            duration_s: 20.0,
+            ..SweepGrid::interference(7)
+        }
+    }
+
+    #[test]
+    fn coords_roundtrip_covers_grid() {
+        let g = SweepGrid::interference(1);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..g.n_cells() {
+            let (r, s, m, e) = g.coords(i);
+            assert!(r < g.rows.len() && s < g.n_seeds);
+            assert!(m < g.modes.len() && e < g.envs.len());
+            assert!(seen.insert((r, s, m, e)), "coords repeat at {i}");
+        }
+        assert_eq!(seen.len(), g.n_cells());
+    }
+
+    #[test]
+    fn acceptance_grid_is_at_least_24_cells() {
+        assert!(SweepGrid::interference(0).n_cells() >= 24);
+        assert!(SweepGrid::smoke(0).n_cells() >= 24);
+    }
+
+    #[test]
+    fn cell_seeds_are_distinct_and_root_dependent() {
+        let g = SweepGrid::interference(3);
+        let mut seeds = std::collections::HashSet::new();
+        for i in 0..g.n_cells() {
+            let (r, s, m, e) = g.coords(i);
+            assert!(seeds.insert(g.cell_seed(r, s, m, e)));
+        }
+        let g2 = SweepGrid::interference(4);
+        assert_ne!(g.cell_seed(0, 0, 0, 0), g2.cell_seed(0, 0, 0, 0));
+    }
+
+    #[test]
+    fn tiny_grid_runs_and_merges_in_order() {
+        let m = run_grid(&tiny(), 2).unwrap();
+        assert_eq!(m.cells.len(), 4);
+        for (i, c) in m.cells.iter().enumerate() {
+            let (r, s, mo, e) = tiny().coords(i);
+            assert_eq!((c.row, c.seed_idx, c.mode_idx, c.env_idx), (r, s, mo, e));
+            assert!(c.requests > 0, "cell {} served nothing", c.label);
+        }
+        // Static flat rows serve everything at the cloud; the co-sim row
+        // trains on the timeline.
+        assert!(m.cells[0].direct_to_cloud > 0);
+        assert_eq!(m.cells[0].rounds_completed, 0);
+        assert!(m.cells[2].rounds_completed >= 1);
+    }
+
+    #[test]
+    fn matrix_json_excludes_wall_clock() {
+        let m = run_grid(&tiny(), 1).unwrap();
+        let text = m.to_json().to_pretty();
+        assert!(!text.contains("wall"), "wall-clock leaked into the deterministic matrix");
+        assert!(text.contains("\"cells\""));
+        assert!(Json::parse(&text).is_ok());
+        assert!(m.total_cell_wall_s() > 0.0);
+    }
+}

@@ -746,6 +746,15 @@ pub struct CoSimOutcome {
     pub resolve_failures: usize,
     pub events_processed: u64,
     pub events_cancelled: u64,
+    /// The GPO's per-edge capacity view at the end of the run, indexed by
+    /// dense edge id (empty without a control plane). After every
+    /// training round's restoring `CapacityReport` has fired, this must
+    /// equal the base capacities — the stale-capacity regression tests
+    /// assert exactly that.
+    pub gpo_edge_capacity: Vec<f64>,
+    /// The GPO's event log (capacity reports, failures, deployments;
+    /// empty without a control plane).
+    pub gpo_events: Vec<String>,
     /// Per-event trace (empty unless `record_trace`).
     pub trace: Vec<String>,
 }
@@ -863,6 +872,15 @@ impl CoSim {
             }
         }
 
+        let m = self.shared.edges.len();
+        let gpo_edge_capacity: Vec<f64> = match self.control.as_ref() {
+            Some(c) => {
+                (0..m).map(|j| c.gpo.edge(j).map(|n| n.capacity).unwrap_or(f64::NAN)).collect()
+            }
+            None => Vec::new(),
+        };
+        let gpo_events =
+            self.control.as_mut().map(|c| std::mem::take(&mut c.gpo.events)).unwrap_or_default();
         CoSimOutcome {
             serving: self.serving.out,
             timeline: self.serving.timeline,
@@ -873,9 +891,22 @@ impl CoSim {
             resolve_failures: self.control.as_ref().map(|c| c.resolve_failures).unwrap_or(0),
             events_processed: self.kernel.processed(),
             events_cancelled: self.kernel.cancelled_count(),
+            gpo_edge_capacity,
+            gpo_events,
             trace: self.trace.unwrap_or_default(),
         }
     }
+}
+
+/// Run one fully-specified co-simulation cell and return its outcome.
+///
+/// The sweep engine's entry point: everything a run needs arrives in the
+/// arguments (config, optional control plane, the seed inside
+/// `cfg.serving.seed`) and everything it produces leaves in the returned
+/// [`CoSimOutcome`] — no global or thread-local state is read or written,
+/// so cells are safe to fan out across `util::pool` workers in any order.
+pub fn run_cell(cfg: CoSimConfig, control: Option<ControlPlane>) -> CoSimOutcome {
+    CoSim::new(cfg, control).run()
 }
 
 #[cfg(test)]
@@ -1067,6 +1098,105 @@ mod tests {
         assert!(before < 30.0, "before {before}");
         assert!(during > 45.0, "during {during}");
         assert!(after < 30.0, "after {after}");
+    }
+
+    /// Control plane for a 10-device / 2-edge world (both edges at
+    /// capacity 200), the satellite-2 stale-capacity test rig.
+    fn two_edge_control(report_delay_s: f64) -> ControlPlane {
+        let p = GeoPoint { lat: 34.05, lon: -118.25 };
+        let mut gpo = Gpo::new();
+        for d in 0..10 {
+            gpo.register_device(d, p);
+        }
+        gpo.register_edge(0, p, 200.0);
+        gpo.register_edge(1, p, 200.0);
+        let mut learning = LearningController::new(LearningCtlConfig::default());
+        for d in 0..10 {
+            learning.set_lambda(d, 5.0);
+        }
+        ControlPlane::new(
+            gpo,
+            learning,
+            InferenceController::new(InferenceCtlConfig::default()),
+            ControlConfig {
+                monitor_period_s: 10.0,
+                report_delay_s,
+                drift: DriftModel { fresh_mse: 0.0, drift_per_s: 0.0 },
+                resolve_on_recover: true,
+            },
+        )
+    }
+
+    fn one_round_on_edge0(duration_s: f64, faults: Vec<(f64, FaultEvent)>) -> CoSimConfig {
+        CoSimConfig {
+            serving: serving_cfg(
+                vec![Some(0); 10],
+                vec![5.0; 10],
+                vec![200.0, 200.0],
+                duration_s,
+                42,
+            ),
+            interference_factor: 0.05,
+            training: TrainingConfig {
+                schedule: TrainingSchedule::Periodic { start_s: 30.0, gap_s: 1.0e9 },
+                time_model: RoundTimeModel { epoch_compute_s: 6.0, ..Default::default() },
+                epochs: 5,
+                model_bytes: 400_000,
+            },
+            faults,
+            bucket_s: 5.0,
+            record_trace: false,
+        }
+    }
+
+    #[test]
+    fn gpo_capacity_degrades_then_restores_after_round() {
+        // The control plane pushes the *degraded* effective rate into the
+        // GPO when a round starts; the restoring report after the round's
+        // EdgeTrainEnd must bring it back to base — otherwise every later
+        // re-solve prices the edge at its training-time rate forever.
+        let out = run_cell(one_round_on_edge0(80.0, Vec::new()), Some(two_edge_control(5.0)));
+        assert_eq!(out.rounds_completed, 1);
+        // Degraded report fired (200 × 0.05 = 10 req/s)...
+        assert!(
+            out.gpo_events.iter().any(|e| e == "edge 0 capacity -> 10"),
+            "no degraded report: {:?}",
+            out.gpo_events
+        );
+        // ...and the edge returned to base after the round.
+        let last0 = out
+            .gpo_events
+            .iter()
+            .rev()
+            .find(|e| e.starts_with("edge 0 capacity"))
+            .expect("no capacity report for edge 0");
+        assert_eq!(last0, "edge 0 capacity -> 200");
+        assert_eq!(out.gpo_edge_capacity, vec![200.0, 200.0]);
+        // The degraded report also drove the mid-round plan swap away
+        // from the training edge.
+        assert!(out.plan_swaps >= 1);
+    }
+
+    #[test]
+    fn gpo_capacity_restores_after_midround_failure_and_swap() {
+        // Edge 0 fails *during* its round: the failure cancels the edge's
+        // stale service timers via the kernel tag, the re-solve installs
+        // a plan swap, and the training interval still ends with a
+        // restoring report — no stale degraded capacity survives the run,
+        // even across the failure/recovery cycle.
+        let faults = vec![(33.0, FaultEvent::EdgeFail(0)), (66.0, FaultEvent::EdgeRecover(0))];
+        let out = run_cell(one_round_on_edge0(90.0, faults), Some(two_edge_control(5.0)));
+        assert_eq!(out.rounds_completed, 1);
+        assert!(out.plan_swaps >= 1, "failure must install a plan swap");
+        assert!(out.events_cancelled > 0, "failure must cancel the edge's pending timers");
+        let last0 = out
+            .gpo_events
+            .iter()
+            .rev()
+            .find(|e| e.starts_with("edge 0 capacity"))
+            .expect("no capacity report for edge 0");
+        assert_eq!(last0, "edge 0 capacity -> 200");
+        assert_eq!(out.gpo_edge_capacity, vec![200.0, 200.0]);
     }
 
     #[test]

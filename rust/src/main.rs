@@ -5,6 +5,7 @@
 //!   train       run continual hierarchical FL on the PJRT runtime
 //!   serve       run the real batched-serving hot path (PJRT predict)
 //!   experiment  regenerate a paper artifact: fig2|fig6|fig7|fig8|fig9|cl
+//!   sweep       run a deterministic parallel scenario-sweep grid
 //!   info        print artifact manifest / environment info
 //!
 //! Flags go last (schema-light parser): `hflop solve --n 100 --m 8 --exact`.
@@ -32,6 +33,8 @@ USAGE: hflop <subcommand> [options] [--flags]
               [--clients N] [--edges M] [--epochs E] [--batches B] [--lr LR]
   serve       --requests N [--variant small|paper]
   experiment  fig2|fig6|fig7|fig8|fig9|cl [--out results/]
+  sweep       [--grid interference|fig7|fig8] [--workers W] [--root-seed S]
+              [--out results/] [--smoke] [--compare]
   info
 ";
 
@@ -49,6 +52,7 @@ fn main() {
         Some("train") => run_train(&args),
         Some("serve") => run_serve(&args),
         Some("experiment") => run_experiment(&args),
+        Some("sweep") => run_sweep(&args),
         Some("info") => run_info(),
         _ => {
             println!("{USAGE}");
@@ -148,6 +152,81 @@ fn run_serve(args: &Args) -> anyhow::Result<()> {
         s.exec_throughput_rps(),
         s.request_ms.mean()
     );
+    Ok(())
+}
+
+fn run_sweep(args: &Args) -> anyhow::Result<()> {
+    use hflop::experiments::sweep::{run_grid, SweepGrid};
+    use hflop::util::{pool, time_it};
+
+    let root = args.u64_or("root-seed", 2026)?;
+    let grid = if args.has_flag("smoke") {
+        // `--smoke` is its own (reduced) grid; an explicit `--grid`
+        // would be silently ignored, so reject the combination.
+        anyhow::ensure!(
+            !args.options.contains_key("grid"),
+            "--smoke selects the smoke grid; drop --grid or drop --smoke"
+        );
+        SweepGrid::smoke(root)
+    } else {
+        match args.str_or("grid", "interference").as_str() {
+            "interference" => SweepGrid::interference(root),
+            "fig7" => SweepGrid::fig7(root),
+            "fig8" => SweepGrid::fig8(root),
+            other => anyhow::bail!("unknown sweep grid '{other}' (interference|fig7|fig8)"),
+        }
+    };
+    let workers = args.usize_or("workers", pool::default_workers())?;
+    println!(
+        "sweep '{}': {} cells ({} rows x {} seeds x {} modes x {} envs), {} workers",
+        grid.name,
+        grid.n_cells(),
+        grid.rows.len(),
+        grid.n_seeds,
+        grid.modes.len(),
+        grid.envs.len(),
+        workers
+    );
+
+    let (matrix, wall_s) = time_it(|| run_grid(&grid, workers));
+    let matrix = matrix?;
+    let mut timing = vec![
+        ("workers", Json::Num(workers as f64)),
+        ("parallel_wall_s", Json::Num(wall_s)),
+        ("total_cell_wall_s", Json::Num(matrix.total_cell_wall_s())),
+    ];
+    println!("{workers}-worker run: {wall_s:.2}s wall over {} cells", matrix.cells.len());
+
+    // `--compare` (implied by `--smoke`) re-runs the grid serially: the
+    // acceptance check that the pool beats the serial loop while the
+    // matrix stays byte-identical.
+    if args.has_flag("compare") || args.has_flag("smoke") {
+        let (serial, serial_s) = time_it(|| run_grid(&grid, 1));
+        let serial = serial?;
+        let identical = serial.to_json().to_pretty() == matrix.to_json().to_pretty();
+        println!(
+            "serial re-run: {serial_s:.2}s wall | speedup {:.2}x | bit-identical: {identical}",
+            serial_s / wall_s.max(1e-9)
+        );
+        anyhow::ensure!(identical, "worker count changed the matrix — determinism bug");
+        timing.push(("serial_wall_s", Json::Num(serial_s)));
+        timing.push(("speedup", Json::Num(serial_s / wall_s.max(1e-9))));
+    }
+
+    println!(
+        "{}",
+        ascii_table(
+            &["row", "cells", "requests", "mean ms", "p99 ms", "rounds", "swaps"],
+            &matrix.summary_rows()
+        )
+    );
+
+    let out = ResultsWriter::new(args.str_or("out", "results"))?;
+    let path = out.write_json(
+        "BENCH_sweep.json",
+        &Json::obj(vec![("matrix", matrix.to_json()), ("timing", Json::obj(timing))]),
+    )?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

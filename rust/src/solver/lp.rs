@@ -457,7 +457,7 @@ mod tests {
                 // The greedy "5 cheapest vars at 1" point is feasible;
                 // optimum must be <= its cost.
                 let mut costs = lp.objective.clone();
-                costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                costs.sort_by(f64::total_cmp);
                 let greedy: f64 = costs[..5].iter().sum();
                 assert!(obj <= greedy + 1e-6);
                 assert!((obj - greedy).abs() < 1e-6); // actually equal here

@@ -1,9 +1,11 @@
 //! Utility substrates built in-tree (the offline environment provides no
 //! serde / rand / clap / criterion): JSON, PRNG + distributions,
-//! statistics, TOML-subset configs, logging, and a tiny bench timer.
+//! statistics, a scoped worker pool, TOML-subset configs, logging, and a
+//! tiny bench timer.
 
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod tomlmini;

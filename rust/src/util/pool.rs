@@ -1,0 +1,151 @@
+//! Scoped worker pool for deterministic fan-out.
+//!
+//! The sweep engine (`experiments::sweep`) runs many independent
+//! simulation cells; this pool fans an indexed job set over
+//! `std::thread::scope` workers (no external deps) while keeping the
+//! *results* in job order, so callers observe output that is independent
+//! of worker count and completion order. Determinism of the work itself
+//! is the caller's job (each sweep cell derives its RNG from its grid
+//! coordinates, never from execution order).
+//!
+//! Invariants:
+//! * jobs are claimed from a single atomic counter — every index in
+//!   `0..n_jobs` runs exactly once;
+//! * results land in slot `i` for job `i` regardless of which worker
+//!   finished first;
+//! * `workers <= 1` (or a single job) runs inline on the caller thread —
+//!   the serial loop and the pooled run are the same code path feeding
+//!   the same slots;
+//! * a panicking job propagates: the scope re-raises the worker panic
+//!   after the surviving workers drain.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Reasonable worker-count default: the machine's available parallelism
+/// (1 when it cannot be queried).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `0..n_jobs` on up to `workers` scoped threads, returning
+/// the results in job order. `f` must be pure with respect to execution
+/// order (same index ⇒ same result) for the output to be reproducible
+/// across worker counts — which is exactly the contract the sweep
+/// determinism tests enforce end to end.
+pub fn scoped_map<T, F>(workers: usize, n_jobs: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.clamp(1, n_jobs.max(1));
+    if workers == 1 {
+        return (0..n_jobs).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut slots: Vec<Option<T>> = (0..n_jobs).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_jobs {
+                    break;
+                }
+                // The receiver outlives the scope; a send only fails if
+                // the collector stopped early (another job panicked) —
+                // stop claiming work in that case.
+                if tx.send((i, f(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        // The collector runs on the caller thread inside the scope; the
+        // channel closes when the last worker drops its sender.
+        drop(tx);
+        for (i, r) in rx {
+            debug_assert!(slots[i].is_none(), "job {i} delivered twice");
+            slots[i] = Some(r);
+        }
+    });
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.unwrap_or_else(|| panic!("job {i} produced no result")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_are_in_job_order() {
+        let out = scoped_map(4, 64, |i| i * i);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let job = |i: usize| (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let serial = scoped_map(1, 33, job);
+        for workers in [2, 3, 8] {
+            assert_eq!(scoped_map(workers, 33, job), serial);
+        }
+    }
+
+    #[test]
+    fn slow_first_job_does_not_scramble_output() {
+        // Job 0 finishes last; its result must still land in slot 0.
+        let out = scoped_map(8, 16, |i| {
+            if i == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+            }
+            i + 100
+        });
+        assert_eq!(out, (100..116).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let runs = AtomicUsize::new(0);
+        let out = scoped_map(8, 200, |i| {
+            runs.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 200);
+        assert_eq!(runs.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn zero_jobs_is_empty() {
+        let out: Vec<usize> = scoped_map(4, 0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs_is_fine() {
+        assert_eq!(scoped_map(32, 3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        scoped_map(4, 8, |i| {
+            if i == 5 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

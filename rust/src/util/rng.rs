@@ -26,6 +26,22 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Hash a root seed with coordinate words into a well-mixed child seed
+/// (chained SplitMix64). The sweep engine derives every cell's RNG seed
+/// from its grid coordinates this way, so a cell's stream depends only on
+/// *where it sits in the grid* — never on worker count, scheduling, or
+/// completion order. Changing any single coordinate (or the root) yields
+/// an unrelated stream.
+pub fn mix_seed(root: u64, coords: &[u64]) -> u64 {
+    let mut state = root ^ 0xA0761D6478BD642F;
+    let mut out = splitmix64(&mut state);
+    for &c in coords {
+        state = out ^ c.wrapping_mul(0x9E3779B97F4A7C15);
+        out = splitmix64(&mut state);
+    }
+    out
+}
+
 impl Rng {
     /// Create a generator from a seed. Different seeds give independent
     /// streams (SplitMix64 scrambles the state initialization).
@@ -326,6 +342,35 @@ mod tests {
         let mut b = root.fork(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 2);
+    }
+
+    #[test]
+    fn mix_seed_sensitive_to_every_coordinate() {
+        let base = mix_seed(7, &[1, 2, 3]);
+        assert_eq!(base, mix_seed(7, &[1, 2, 3]), "deterministic");
+        assert_ne!(base, mix_seed(8, &[1, 2, 3]), "root matters");
+        assert_ne!(base, mix_seed(7, &[0, 2, 3]));
+        assert_ne!(base, mix_seed(7, &[1, 0, 3]));
+        assert_ne!(base, mix_seed(7, &[1, 2, 0]));
+        assert_ne!(base, mix_seed(7, &[1, 2]), "length matters");
+        // Coordinate order matters (a swap is a different cell).
+        assert_ne!(mix_seed(7, &[1, 2, 3]), mix_seed(7, &[2, 1, 3]));
+    }
+
+    #[test]
+    fn mix_seed_low_collision_over_small_grid() {
+        // Every cell of an 8x8x8x8 grid gets a distinct seed.
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..8u64 {
+            for b in 0..8u64 {
+                for c in 0..8u64 {
+                    for d in 0..8u64 {
+                        assert!(seen.insert(mix_seed(42, &[a, b, c, d])));
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len(), 4096);
     }
 
     #[test]

@@ -1,0 +1,45 @@
+//! Source-level regression guard: PR 1 swept the solver stack's sorts
+//! onto `f64::total_cmp`, and PR 3 fixed the last straggler in
+//! `solver/lp.rs`. This test greps the solver sources so a NaN-unsafe
+//! comparator (`partial_cmp(..).unwrap()` inside a sort/min/max) cannot
+//! silently come back: `partial_cmp` returns `None` on NaN, and the
+//! unwrap turns one poisoned cost into a panic mid-solve.
+
+use std::fs;
+use std::path::Path;
+
+/// Lines that may legitimately mention `partial_cmp`: a `PartialOrd`
+/// impl forwarding to a total order (e.g. `solver::bb`'s heap entry).
+fn is_allowed(line: &str) -> bool {
+    let t = line.trim_start();
+    t.starts_with("//") || t.starts_with("fn partial_cmp(")
+}
+
+#[test]
+fn no_partial_cmp_comparators_in_solver_sources() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/solver");
+    let mut scanned = 0usize;
+    let mut offenders = Vec::new();
+    for entry in fs::read_dir(&dir).expect("read src/solver") {
+        let path = entry.expect("dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("rs") {
+            continue;
+        }
+        scanned += 1;
+        let text = fs::read_to_string(&path).expect("read solver source");
+        for (lineno, line) in text.lines().enumerate() {
+            if !line.contains("partial_cmp") || is_allowed(line) {
+                continue;
+            }
+            // A comparator built from partial_cmp — whether in sort_by,
+            // max_by, min_by or a hand-rolled closure — is the NaN hazard.
+            offenders.push(format!("{}:{}: {}", path.display(), lineno + 1, line.trim()));
+        }
+    }
+    assert!(scanned >= 5, "expected the solver module tree, found {scanned} files");
+    assert!(
+        offenders.is_empty(),
+        "NaN-unsafe comparator(s) in solver sources (use f64::total_cmp):\n{}",
+        offenders.join("\n")
+    );
+}

@@ -1,0 +1,105 @@
+//! End-to-end determinism of the sweep engine: the same grid + root
+//! seed must produce a byte-identical `SweepMatrix` JSON at 1, 2 and 8
+//! workers — including when an injected slow cell scrambles the order
+//! in which workers finish. Per-cell RNG is hashed from grid
+//! coordinates, so nothing about scheduling can leak into the results.
+
+use hflop::experiments::interference::Preset;
+use hflop::experiments::scenario::ScenarioConfig;
+use hflop::experiments::sweep::{
+    run_grid, run_grid_with_hook, EnvSpec, RowSpec, StaticSetup, SweepGrid, Workload,
+};
+use hflop::solver::LsMode;
+
+/// A ≥24-cell grid over a small world with a short horizon: big enough
+/// to exercise every axis (static + co-sim rows, both solver engines,
+/// two environments), small enough to run repeatedly in one test file.
+fn grid() -> SweepGrid {
+    SweepGrid {
+        scenario: ScenarioConfig {
+            n_clients: 12,
+            n_edges: 3,
+            weeks: 5,
+            balanced_clients: false,
+            ..Default::default()
+        },
+        rows: vec![
+            RowSpec { name: "flat", workload: Workload::Static(StaticSetup::Flat) },
+            RowSpec { name: "hflop", workload: Workload::Static(StaticSetup::Hflop) },
+            RowSpec { name: "steady", workload: Workload::Cosim(Preset::Steady) },
+            RowSpec { name: "edge-failure", workload: Workload::Cosim(Preset::EdgeFailure) },
+        ],
+        n_seeds: 2,
+        modes: vec![LsMode::Completion, LsMode::Incremental],
+        envs: vec![
+            EnvSpec { name: "if0.25".into(), lambda_scale: 0.5, ..Default::default() },
+            EnvSpec {
+                name: "if1.0".into(),
+                interference_factor: 1.0,
+                lambda_scale: 0.5,
+                ..Default::default()
+            },
+        ],
+        duration_s: 25.0,
+        ..SweepGrid::interference(2026)
+    }
+}
+
+#[test]
+fn matrix_json_bit_identical_at_1_2_and_8_workers() {
+    let g = grid();
+    assert!(g.n_cells() >= 24, "{} cells", g.n_cells());
+    let serial = run_grid(&g, 1).unwrap().to_json().to_pretty();
+    for workers in [2, 8] {
+        let parallel = run_grid(&g, workers).unwrap().to_json().to_pretty();
+        assert_eq!(serial.as_bytes(), parallel.as_bytes(), "matrix diverged at {workers} workers");
+    }
+}
+
+#[test]
+fn slow_cell_scrambles_completion_order_but_not_the_matrix() {
+    let g = grid();
+    let serial = run_grid(&g, 1).unwrap().to_json().to_pretty();
+    // Cell 0 sleeps long enough that (with 8 workers) most other cells
+    // complete before it — the merge must still land it in slot 0.
+    let slowed = run_grid_with_hook(&g, 8, |i| {
+        if i == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(250));
+        }
+    })
+    .unwrap();
+    assert_eq!(serial.as_bytes(), slowed.to_json().to_pretty().as_bytes());
+    assert_eq!(slowed.cells[0].row, 0);
+    assert_eq!(slowed.cells[0].seed_idx, 0);
+}
+
+#[test]
+fn different_root_seed_changes_cells() {
+    let a = run_grid(&SweepGrid { root_seed: 1, ..grid() }, 2).unwrap();
+    let b = run_grid(&SweepGrid { root_seed: 2, ..grid() }, 2).unwrap();
+    assert_eq!(a.cells.len(), b.cells.len());
+    assert!(
+        a.cells.iter().zip(&b.cells).any(|(x, y)| x.cell_seed != y.cell_seed),
+        "root seed did not reach the cells"
+    );
+    assert_ne!(
+        a.to_json().to_pretty(),
+        b.to_json().to_pretty(),
+        "different roots produced identical sweeps"
+    );
+}
+
+#[test]
+fn every_cell_simulated_real_traffic() {
+    let m = run_grid(&grid(), 8).unwrap();
+    for c in &m.cells {
+        assert!(c.requests > 100, "cell {} looks empty ({} requests)", c.label, c.requests);
+        assert!(c.mean_ms.is_finite() && c.mean_ms > 0.0, "cell {}", c.label);
+        assert!(c.p50_ms <= c.p99_ms, "cell {} percentiles inverted", c.label);
+    }
+    // Co-sim rows actually trained.
+    assert!(
+        m.cells.iter().filter(|c| c.row >= 2).all(|c| c.rounds_completed >= 1),
+        "a co-sim cell completed no training round"
+    );
+}
