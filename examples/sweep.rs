@@ -8,7 +8,7 @@
 //! Run: `cargo run --release --example sweep`
 
 use hflop::experiments::sweep::{run_grid, SweepGrid};
-use hflop::metrics::export::{ascii_table, ResultsWriter};
+use hflop::metrics::export::{ascii_table, ResultsWriter, SCHEMA_VERSION};
 use hflop::util::json::Json;
 use hflop::util::pool;
 use hflop::util::time_it;
@@ -16,6 +16,9 @@ use hflop::util::time_it;
 fn main() -> anyhow::Result<()> {
     hflop::init_logging();
 
+    // Built-in grids are declarative: one registered experiment × axis
+    // overrides × a seed range (`SweepGrid::by_name` lists them; any
+    // registry experiment sweeps the same way via `SweepGrid::custom`).
     let grid = SweepGrid::smoke(2026);
     let workers = pool::default_workers();
     println!(
@@ -54,6 +57,7 @@ fn main() -> anyhow::Result<()> {
     let path = out.write_json(
         "BENCH_sweep.json",
         &Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
             ("matrix", parallel.to_json()),
             (
                 "timing",

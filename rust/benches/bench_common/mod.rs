@@ -9,13 +9,11 @@ use std::time::Instant;
 
 /// CI smoke mode: `HFLOP_BENCH_SMOKE=1` clamps every bench to a single
 /// iteration and skips warmup, so workflows can verify the harnesses
-/// still build and run without paying for full sweeps. `0`, empty, or
-/// unset mean full runs. Public so benches that also scale their
-/// *workload* down in smoke mode (bench_sweep) share one predicate.
+/// still build and run without paying for full sweeps. Delegates to
+/// `hflop::util::smoke_mode` — the registry experiments obey the same
+/// knob, so one environment variable scales the whole CI smoke budget.
 pub fn smoke() -> bool {
-    std::env::var("HFLOP_BENCH_SMOKE")
-        .map(|v| !v.is_empty() && v != "0" && v.to_ascii_lowercase() != "false")
-        .unwrap_or(false)
+    hflop::util::smoke_mode()
 }
 
 pub struct BenchResult {

@@ -12,6 +12,7 @@ mod bench_common;
 use bench_common::{bench, header, smoke};
 
 use hflop::experiments::sweep::{run_grid, SweepGrid};
+use hflop::metrics::export::SCHEMA_VERSION;
 use hflop::util::json::Json;
 use hflop::util::pool;
 
@@ -44,6 +45,7 @@ fn main() {
     );
 
     let artifact = Json::obj(vec![
+        ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
         ("matrix", matrix.to_json()),
         (
             "timing",

@@ -11,6 +11,10 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub subcommand: Option<String>,
     pub options: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in command-line order. `options`
+    /// keeps only the last value per key; repeatable options (such as
+    /// `experiment --set k=v --set k2=v2`) read this instead.
+    pub all_options: Vec<(String, String)>,
     pub flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -32,7 +36,9 @@ pub fn parse(argv: &[String]) -> Result<Args, CliError> {
         if let Some(name) = tok.strip_prefix("--") {
             match it.peek() {
                 Some(next) if !next.starts_with("--") => {
-                    args.options.insert(name.to_string(), it.next().unwrap().clone());
+                    let value = it.next().unwrap().clone();
+                    args.options.insert(name.to_string(), value.clone());
+                    args.all_options.push((name.to_string(), value));
                 }
                 _ => args.flags.push(name.to_string()),
             }
@@ -79,6 +85,15 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// All values given for a repeatable option, in command-line order.
+    pub fn all(&self, key: &str) -> Vec<&str> {
+        self.all_options
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -120,6 +135,15 @@ mod tests {
     fn bad_numeric_value_errors() {
         let a = parse(&argv("x --n abc")).unwrap();
         assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn repeated_options_all_preserved() {
+        let a = parse(&argv("experiment fig7 --set a=1 --set b=2 --set a=3")).unwrap();
+        // Map keeps the last occurrence; `all` keeps every one in order.
+        assert_eq!(a.str_or("set", ""), "a=3");
+        assert_eq!(a.all("set"), vec!["a=1", "b=2", "a=3"]);
+        assert!(a.all("nope").is_empty());
     }
 
     #[test]

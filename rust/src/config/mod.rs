@@ -7,6 +7,8 @@
 //! §V settings scaled to this testbed (see EXPERIMENTS.md for the
 //! scaling notes).
 
+pub mod params;
+
 use crate::fl::FlConfig;
 use crate::inference::LatencyModel;
 use crate::util::tomlmini::Config;
@@ -20,15 +22,26 @@ pub enum Setup {
     HflopUncapacitated,
 }
 
+/// Accepted spellings per variant; the first is the canonical `name()`.
+const SETUP_SPELLINGS: [(&[&str], Setup); 4] = [
+    (&["flat", "vanilla", "centralized"], Setup::Flat),
+    (&["location", "hierarchical", "hier"], Setup::LocationClustered),
+    (&["hflop"], Setup::Hflop),
+    (&["hflop-uncap", "uncapacitated"], Setup::HflopUncapacitated),
+];
+
 impl Setup {
+    pub const ALL: [Setup; 4] =
+        [Setup::Flat, Setup::LocationClustered, Setup::Hflop, Setup::HflopUncapacitated];
+
     pub fn parse(s: &str) -> anyhow::Result<Setup> {
-        Ok(match s {
-            "flat" | "vanilla" | "centralized" => Setup::Flat,
-            "location" | "hierarchical" | "hier" => Setup::LocationClustered,
-            "hflop" => Setup::Hflop,
-            "hflop-uncap" | "uncapacitated" => Setup::HflopUncapacitated,
-            other => anyhow::bail!("unknown setup '{other}'"),
-        })
+        for (spellings, setup) in SETUP_SPELLINGS {
+            if spellings.contains(&s) {
+                return Ok(setup);
+            }
+        }
+        let valid: Vec<String> = SETUP_SPELLINGS.iter().map(|(sp, _)| sp.join("|")).collect();
+        anyhow::bail!("unknown setup '{s}' (valid: {})", valid.join(", "))
     }
 
     pub fn name(&self) -> &'static str {
@@ -178,6 +191,32 @@ mod tests {
         assert_eq!(Setup::parse("hflop").unwrap(), Setup::Hflop);
         assert_eq!(Setup::parse("uncapacitated").unwrap(), Setup::HflopUncapacitated);
         assert!(Setup::parse("wat").is_err());
+    }
+
+    #[test]
+    fn setup_name_parse_round_trip_all_variants() {
+        // Every canonical name must re-parse to the same variant — the
+        // CLI, config files and the sweep engine all pass setups by name.
+        for setup in Setup::ALL {
+            assert_eq!(Setup::parse(setup.name()).unwrap(), setup, "{}", setup.name());
+        }
+        // Every documented alias parses, and lands on a variant whose
+        // canonical name round-trips back to it.
+        for (spellings, expected) in SETUP_SPELLINGS {
+            for s in spellings {
+                let parsed = Setup::parse(s).unwrap();
+                assert_eq!(parsed, expected, "alias '{s}'");
+                assert_eq!(Setup::parse(parsed.name()).unwrap(), parsed);
+            }
+        }
+    }
+
+    #[test]
+    fn setup_parse_error_lists_valid_spellings() {
+        let err = Setup::parse("hflopp").unwrap_err().to_string();
+        for canonical in ["flat", "location", "hflop", "hflop-uncap", "uncapacitated", "hier"] {
+            assert!(err.contains(canonical), "error should list '{canonical}': {err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,362 @@
+//! Schema-checked experiment parameters (DESIGN.md §5).
+//!
+//! Every registry experiment declares a static `&[ParamSpec]` schema:
+//! the full set of keys it understands, each with a typed default and a
+//! help line (the generated `hflop experiment <name> --help` renders it
+//! verbatim). [`Params::resolve`] merges three layers in precedence
+//! order
+//!
+//! 1. schema defaults (lowest),
+//! 2. a TOML-subset config file (`--config run.toml`, parsed by
+//!    [`crate::util::tomlmini`]; section headers flatten to dotted keys),
+//! 3. `--set key=value` CLI overrides (highest; later wins),
+//!
+//! and **hard-errors on any key the schema does not declare** — a typo'd
+//! parameter fails fast with the list of valid spellings instead of
+//! silently running on defaults. Typed getters ([`Params::usize`],
+//! [`Params::f64`], …) never miss: resolution already proved every
+//! stored value matches its spec's kind.
+
+use std::collections::BTreeMap;
+
+use crate::util::tomlmini::Config;
+pub use crate::util::tomlmini::Value;
+
+/// The kind of value a parameter accepts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    Int,
+    Float,
+    Bool,
+    Str,
+}
+
+impl ParamKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ParamKind::Int => "int",
+            ParamKind::Float => "float",
+            ParamKind::Bool => "bool",
+            ParamKind::Str => "string",
+        }
+    }
+}
+
+/// A parameter's typed default (const-constructible for static schemas).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ParamDefault {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(&'static str),
+}
+
+impl ParamDefault {
+    pub fn kind(&self) -> ParamKind {
+        match self {
+            ParamDefault::Int(_) => ParamKind::Int,
+            ParamDefault::Float(_) => ParamKind::Float,
+            ParamDefault::Bool(_) => ParamKind::Bool,
+            ParamDefault::Str(_) => ParamKind::Str,
+        }
+    }
+
+    /// Rendering for `--help` output.
+    pub fn render(&self) -> String {
+        match self {
+            ParamDefault::Int(i) => format!("{i}"),
+            ParamDefault::Float(f) => format!("{f}"),
+            ParamDefault::Bool(b) => format!("{b}"),
+            ParamDefault::Str(s) => format!("\"{s}\""),
+        }
+    }
+}
+
+/// One declared experiment parameter.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamSpec {
+    /// Flat dotted key, e.g. `"seed"` or `"fl.rounds"`.
+    pub key: &'static str,
+    pub default: ParamDefault,
+    pub help: &'static str,
+}
+
+/// Resolved parameters: explicitly-set values over schema defaults.
+#[derive(Debug, Clone)]
+pub struct Params {
+    schema: &'static [ParamSpec],
+    values: BTreeMap<String, Value>,
+}
+
+fn valid_keys(schema: &[ParamSpec]) -> String {
+    schema.iter().map(|s| s.key).collect::<Vec<_>>().join(", ")
+}
+
+/// Type-check (and lightly coerce) one provided value against its spec.
+/// Ints are accepted where floats are expected; a string spec accepts
+/// any scalar (stringified) so `--set preset=steady` and `--set m=4`
+/// both do the obvious thing.
+fn check(spec: &ParamSpec, value: Value) -> anyhow::Result<Value> {
+    let ok = match (spec.default.kind(), &value) {
+        (ParamKind::Int, Value::Int(_)) => true,
+        (ParamKind::Float, Value::Int(i)) => return Ok(Value::Float(*i as f64)),
+        (ParamKind::Float, Value::Float(_)) => true,
+        (ParamKind::Bool, Value::Bool(_)) => true,
+        (ParamKind::Str, Value::Str(_)) => true,
+        (ParamKind::Str, Value::Int(i)) => return Ok(Value::Str(format!("{i}"))),
+        (ParamKind::Str, Value::Float(f)) => return Ok(Value::Str(format!("{f}"))),
+        (ParamKind::Str, Value::Bool(b)) => return Ok(Value::Str(format!("{b}"))),
+        _ => false,
+    };
+    anyhow::ensure!(
+        ok,
+        "parameter '{}' expects {} (got {:?})",
+        spec.key,
+        spec.default.kind().name(),
+        value
+    );
+    Ok(value)
+}
+
+impl Params {
+    /// Schema defaults only.
+    pub fn defaults(schema: &'static [ParamSpec]) -> Params {
+        Params { schema, values: BTreeMap::new() }
+    }
+
+    /// Merge defaults ← config file ← `--set` overrides. Unknown keys in
+    /// either layer are a hard error listing the valid spellings.
+    pub fn resolve(
+        schema: &'static [ParamSpec],
+        file: Option<&Config>,
+        sets: &[(String, Value)],
+    ) -> anyhow::Result<Params> {
+        let mut p = Params::defaults(schema);
+        if let Some(cfg) = file {
+            for (key, value) in &cfg.entries {
+                p.set(key, value.clone())?;
+            }
+        }
+        for (key, value) in sets {
+            p.set(key, value.clone())?;
+        }
+        Ok(p)
+    }
+
+    /// Set one value, schema-checked. Later calls override earlier ones.
+    pub fn set(&mut self, key: &str, value: Value) -> anyhow::Result<()> {
+        let spec = self.schema.iter().find(|s| s.key == key).ok_or_else(|| {
+            anyhow::anyhow!("unknown parameter '{}' (valid: {})", key, valid_keys(self.schema))
+        })?;
+        let value = check(spec, value)?;
+        self.values.insert(key.to_string(), value);
+        Ok(())
+    }
+
+    pub fn schema(&self) -> &'static [ParamSpec] {
+        self.schema
+    }
+
+    /// Was this key explicitly set (file or CLI), or is it on default?
+    pub fn is_set(&self, key: &str) -> bool {
+        self.values.contains_key(key)
+    }
+
+    fn spec(&self, key: &str) -> anyhow::Result<&ParamSpec> {
+        self.schema.iter().find(|s| s.key == key).ok_or_else(|| {
+            anyhow::anyhow!(
+                "experiment read undeclared parameter '{}' (schema bug; valid: {})",
+                key,
+                valid_keys(self.schema)
+            )
+        })
+    }
+
+    pub fn i64(&self, key: &str) -> anyhow::Result<i64> {
+        let spec = self.spec(key)?;
+        match (self.values.get(key), spec.default) {
+            (Some(Value::Int(i)), _) => Ok(*i),
+            (None, ParamDefault::Int(i)) => Ok(i),
+            (v, d) => anyhow::bail!("parameter '{key}' is not an int (value {v:?}, default {d:?})"),
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> anyhow::Result<usize> {
+        let i = self.i64(key)?;
+        anyhow::ensure!(i >= 0, "parameter '{key}' must be non-negative (got {i})");
+        Ok(i as usize)
+    }
+
+    /// Seeds are 64-bit hashes; they round-trip through the i64 storage
+    /// bit-exactly (the sweep engine stores `cell_seed as i64`).
+    pub fn u64(&self, key: &str) -> anyhow::Result<u64> {
+        Ok(self.i64(key)? as u64)
+    }
+
+    pub fn f64(&self, key: &str) -> anyhow::Result<f64> {
+        let spec = self.spec(key)?;
+        match (self.values.get(key), spec.default) {
+            (Some(Value::Float(f)), _) => Ok(*f),
+            (Some(Value::Int(i)), _) => Ok(*i as f64),
+            (None, ParamDefault::Float(f)) => Ok(f),
+            (None, ParamDefault::Int(i)) => Ok(i as f64),
+            (v, d) => anyhow::bail!("parameter '{key}' is not a float (value {v:?}, default {d:?})"),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> anyhow::Result<bool> {
+        let spec = self.spec(key)?;
+        match (self.values.get(key), spec.default) {
+            (Some(Value::Bool(b)), _) => Ok(*b),
+            (None, ParamDefault::Bool(b)) => Ok(b),
+            (v, d) => anyhow::bail!("parameter '{key}' is not a bool (value {v:?}, default {d:?})"),
+        }
+    }
+
+    pub fn str(&self, key: &str) -> anyhow::Result<String> {
+        let spec = self.spec(key)?;
+        match (self.values.get(key), spec.default) {
+            (Some(Value::Str(s)), _) => Ok(s.clone()),
+            (None, ParamDefault::Str(s)) => Ok(s.to_string()),
+            (v, d) => {
+                anyhow::bail!("parameter '{key}' is not a string (value {v:?}, default {d:?})")
+            }
+        }
+    }
+
+    /// The seed the [`crate::experiments::registry::ExperimentCtx`] RNG
+    /// starts from: the `seed` parameter if the schema declares one.
+    pub fn seed_or(&self, default: u64) -> u64 {
+        if self.schema.iter().any(|s| s.key == "seed") {
+            self.u64("seed").unwrap_or(default)
+        } else {
+            default
+        }
+    }
+}
+
+/// Canonical text form of a value — the sweep engine hashes override
+/// sets through this (`experiments::sweep::override_coord`), so it must
+/// stay stable.
+pub fn value_repr(v: &Value) -> String {
+    match v {
+        Value::Str(s) => s.clone(),
+        Value::Int(i) => format!("{i}"),
+        Value::Float(f) => format!("{f}"),
+        Value::Bool(b) => format!("{b}"),
+        Value::Arr(a) => {
+            let parts: Vec<String> = a.iter().map(value_repr).collect();
+            format!("[{}]", parts.join(","))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SCHEMA: &[ParamSpec] = &[
+        ParamSpec { key: "seed", default: ParamDefault::Int(7), help: "rng seed" },
+        ParamSpec { key: "duration_s", default: ParamDefault::Float(120.0), help: "sim horizon" },
+        ParamSpec { key: "preset", default: ParamDefault::Str("steady"), help: "scenario preset" },
+        ParamSpec { key: "balanced", default: ParamDefault::Bool(true), help: "balanced clients" },
+        ParamSpec { key: "fl.rounds", default: ParamDefault::Int(40), help: "fl rounds" },
+    ];
+
+    #[test]
+    fn defaults_apply_when_unset() {
+        let p = Params::defaults(SCHEMA);
+        assert_eq!(p.i64("seed").unwrap(), 7);
+        assert!((p.f64("duration_s").unwrap() - 120.0).abs() < 1e-12);
+        assert_eq!(p.str("preset").unwrap(), "steady");
+        assert!(p.bool("balanced").unwrap());
+        assert!(!p.is_set("seed"));
+    }
+
+    #[test]
+    fn file_overrides_defaults_and_sets_override_file() {
+        let cfg = Config::parse("seed = 1\npreset = \"edge-failure\"\n[fl]\nrounds = 9\n").unwrap();
+        let sets = vec![("seed".to_string(), Value::Int(2))];
+        let p = Params::resolve(SCHEMA, Some(&cfg), &sets).unwrap();
+        // --set beats the file; the file beats the default.
+        assert_eq!(p.i64("seed").unwrap(), 2);
+        assert_eq!(p.str("preset").unwrap(), "edge-failure");
+        assert_eq!(p.usize("fl.rounds").unwrap(), 9);
+        // Untouched keys keep defaults.
+        assert!((p.f64("duration_s").unwrap() - 120.0).abs() < 1e-12);
+        assert!(p.is_set("seed") && !p.is_set("duration_s"));
+    }
+
+    #[test]
+    fn later_set_wins() {
+        let sets = vec![
+            ("seed".to_string(), Value::Int(1)),
+            ("seed".to_string(), Value::Int(5)),
+        ];
+        let p = Params::resolve(SCHEMA, None, &sets).unwrap();
+        assert_eq!(p.i64("seed").unwrap(), 5);
+    }
+
+    #[test]
+    fn unknown_key_is_a_hard_error_in_both_layers() {
+        // A typo in the file must not silently run on defaults.
+        let cfg = Config::parse("durration_s = 10.0\n").unwrap();
+        let err = Params::resolve(SCHEMA, Some(&cfg), &[]).unwrap_err();
+        assert!(err.to_string().contains("unknown parameter 'durration_s'"), "{err}");
+        assert!(err.to_string().contains("duration_s"), "error must list valid keys: {err}");
+        // Same for --set.
+        let sets = vec![("sed".to_string(), Value::Int(1))];
+        let err = Params::resolve(SCHEMA, None, &sets).unwrap_err();
+        assert!(err.to_string().contains("unknown parameter 'sed'"), "{err}");
+    }
+
+    #[test]
+    fn type_mismatch_rejected_and_int_widens_to_float() {
+        let bad = vec![("balanced".to_string(), Value::Int(1))];
+        assert!(Params::resolve(SCHEMA, None, &bad).is_err());
+        let bad = vec![("seed".to_string(), Value::Float(1.5))];
+        assert!(Params::resolve(SCHEMA, None, &bad).is_err());
+        // Int where a float is expected widens.
+        let ok = vec![("duration_s".to_string(), Value::Int(60))];
+        let p = Params::resolve(SCHEMA, None, &ok).unwrap();
+        assert!((p.f64("duration_s").unwrap() - 60.0).abs() < 1e-12);
+        // Scalars coerce into string params (CLI ergonomics).
+        let ok = vec![("preset".to_string(), Value::Int(3))];
+        let p = Params::resolve(SCHEMA, None, &ok).unwrap();
+        assert_eq!(p.str("preset").unwrap(), "3");
+    }
+
+    #[test]
+    fn u64_seed_round_trips_through_i64_storage() {
+        let big: u64 = 0xDEAD_BEEF_CAFE_F00D;
+        let sets = vec![("seed".to_string(), Value::Int(big as i64))];
+        let p = Params::resolve(SCHEMA, None, &sets).unwrap();
+        assert_eq!(p.u64("seed").unwrap(), big);
+    }
+
+    #[test]
+    fn undeclared_read_errors() {
+        let p = Params::defaults(SCHEMA);
+        assert!(p.i64("nope").is_err());
+        assert!(p.usize("preset").is_err(), "kind mismatch on read must error");
+    }
+
+    #[test]
+    fn value_repr_stable() {
+        assert_eq!(value_repr(&Value::Int(-3)), "-3");
+        assert_eq!(value_repr(&Value::Float(0.25)), "0.25");
+        assert_eq!(value_repr(&Value::Bool(true)), "true");
+        assert_eq!(value_repr(&Value::Str("x".into())), "x");
+        assert_eq!(
+            value_repr(&Value::Arr(vec![Value::Int(1), Value::Str("a".into())])),
+            "[1,a]"
+        );
+    }
+
+    #[test]
+    fn negative_usize_rejected() {
+        let sets = vec![("fl.rounds".to_string(), Value::Int(-1))];
+        let p = Params::resolve(SCHEMA, None, &sets).unwrap();
+        assert!(p.usize("fl.rounds").is_err());
+    }
+}

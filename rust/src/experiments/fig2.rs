@@ -7,9 +7,13 @@
 //! the reproduced claim is the *shape*: super-linear growth in n·m and
 //! feasibility for practically-sized instances (§IV-C).
 
+use crate::config::params::ParamSpec;
 use crate::hflop::InstanceBuilder;
+use crate::metrics::export::ascii_table;
 use crate::solver::{branch_and_bound, BbOptions};
 use crate::util::stats::Summary;
+
+use super::registry::{Experiment, ExperimentCtx, ParamDefault, Report};
 
 /// One sweep point result.
 #[derive(Debug, Clone)]
@@ -64,9 +68,88 @@ pub fn run(sweep: &[(usize, usize)], reps: usize, time_limit_s: f64) -> Vec<Fig2
     rows
 }
 
+/// Registry port (DESIGN.md §5): the Fig. 2 solve-time sweep as a typed
+/// experiment.
+pub struct Fig2Experiment;
+
+const SCHEMA: &[ParamSpec] = &[
+    ParamSpec {
+        key: "reps",
+        default: ParamDefault::Int(5),
+        help: "random instances per sweep point",
+    },
+    ParamSpec {
+        key: "time_limit_s",
+        default: ParamDefault::Float(60.0),
+        help: "B&B time limit per solve",
+    },
+    ParamSpec {
+        key: "max_points",
+        default: ParamDefault::Int(6),
+        help: "how many of the default sweep sizes to run",
+    },
+];
+
+impl Experiment for Fig2Experiment {
+    fn name(&self) -> &'static str {
+        "fig2"
+    }
+
+    fn describe(&self) -> &'static str {
+        "HFLOP optimal solve times vs instance size (mean + 95% CI)"
+    }
+
+    fn param_schema(&self) -> &'static [ParamSpec] {
+        SCHEMA
+    }
+
+    fn run(&self, ctx: &mut ExperimentCtx) -> anyhow::Result<Report> {
+        let reps = ctx.usize_capped("reps", 2)?;
+        let time_limit_s = ctx.params.f64("time_limit_s")?;
+        // Smoke runs keep only the two smallest points.
+        let max_points = ctx.usize_capped("max_points", 2)?.max(1);
+        let mut sweep = default_sweep();
+        sweep.truncate(max_points);
+
+        let rows = run(&sweep, reps, time_limit_s);
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}", r.n),
+                    format!("{}", r.m),
+                    format!("{:.4}", r.mean_s),
+                    format!("{:.4}", r.ci95_s),
+                    format!("{:.0}", r.mean_nodes),
+                    format!("{}", r.all_optimal),
+                ]
+            })
+            .collect();
+        ctx.say(|| ascii_table(&["n", "m", "mean_s", "ci95", "nodes", "optimal"], &table));
+
+        let mut report = Report::new("fig2");
+        report.num("n_points", rows.len() as f64);
+        report.num("reps", reps as f64);
+        report.flag("all_optimal", rows.iter().all(|r| r.all_optimal));
+        report.num(
+            "max_mean_s",
+            rows.iter().map(|r| r.mean_s).fold(0.0f64, f64::max),
+        );
+        report.table(
+            "fig2",
+            &["n", "m", "mean_s", "ci95_s", "mean_nodes"],
+            rows.iter()
+                .map(|r| vec![r.n as f64, r.m as f64, r.mean_s, r.ci95_s, r.mean_nodes])
+                .collect(),
+        );
+        Ok(report)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::params::Params;
 
     #[test]
     fn small_sweep_runs_and_grows() {
@@ -83,5 +166,17 @@ mod tests {
         let rows = run(&[(10, 3)], 4, 60.0);
         assert!(rows[0].ci95_s >= 0.0);
         assert!(rows[0].mean_nodes >= 1.0);
+    }
+
+    #[test]
+    fn experiment_trait_runs_in_smoke_mode() {
+        let params = Params::defaults(Fig2Experiment.param_schema());
+        let mut ctx = ExperimentCtx::cell(params).with_smoke(true);
+        let report = Fig2Experiment.run(&mut ctx).unwrap();
+        assert_eq!(report.experiment, "fig2");
+        // Smoke caps: 2 points, 2 reps.
+        assert_eq!(report.get_f64("n_points").unwrap(), 2.0);
+        assert_eq!(report.tables.len(), 1);
+        assert_eq!(report.tables[0].rows.len(), 2);
     }
 }

@@ -5,12 +5,15 @@
 //! converge after ~20 rounds to comparable MSE (hierarchy does not hurt
 //! accuracy), with mild oscillation later as the data drifts.
 
-use super::scenario::Scenario;
+use crate::config::params::ParamSpec;
 use crate::config::Setup;
 use crate::data::window::{ClientData, ContinualWindow, WindowSpec};
-use crate::fl::{Client, ContinualHfl, FlConfig, Hierarchy, ModelRuntime};
+use crate::fl::{Client, ContinualHfl, FlConfig, Hierarchy, MockRuntime, ModelRuntime};
 use crate::metrics::cost::CommLedger;
 use crate::metrics::MseCurves;
+
+use super::registry::{runtime_gate, Experiment, ExperimentCtx, ParamDefault, Report};
+use super::scenario::{Scenario, ScenarioConfig};
 
 /// Outcome of one setup's training run.
 pub struct Fig6Run {
@@ -111,6 +114,144 @@ pub fn run_all(
         .collect()
 }
 
+/// Registry port (DESIGN.md §5). The `runtime` parameter gates what
+/// backs the MSE curves:
+///
+/// * `"real"` — the PJRT engine over the AOT GRU artifacts (errors when
+///   the artifacts / `pjrt` feature are absent); artifact `fig6.csv`.
+/// * `"mock"` — the linear [`MockRuntime`]. The MSE values are synthetic
+///   (a harness check, **not** a paper artifact), so the run is loudly
+///   marked: artifact `fig6_mock.csv`, summary `runtime = "mock"` /
+///   `mock = true`, and a stderr warning.
+/// * `"auto"` (default) — try real, fall back to mock with the warning.
+pub struct Fig6Experiment;
+
+const SCHEMA: &[ParamSpec] = &[
+    ParamSpec {
+        key: "runtime",
+        default: ParamDefault::Str("auto"),
+        help: "auto|real|mock — real PJRT GRU, or the clearly-marked linear mock",
+    },
+    ParamSpec {
+        key: "variant",
+        default: ParamDefault::Str("small"),
+        help: "model variant from the artifact manifest (real runtime)",
+    },
+    ParamSpec { key: "clients", default: ParamDefault::Int(20), help: "FL clients" },
+    ParamSpec { key: "edges", default: ParamDefault::Int(4), help: "edge servers / clusters" },
+    ParamSpec { key: "weeks", default: ParamDefault::Int(6), help: "synthetic dataset length" },
+    ParamSpec {
+        key: "balanced",
+        default: ParamDefault::Bool(true),
+        help: "balanced client placement (paper: 5 per cluster)",
+    },
+    ParamSpec { key: "scenario_seed", default: ParamDefault::Int(42), help: "scenario seed" },
+    ParamSpec { key: "data_seed", default: ParamDefault::Int(1234), help: "dataset seed" },
+    ParamSpec { key: "rounds", default: ParamDefault::Int(40), help: "aggregation rounds" },
+    ParamSpec { key: "epochs", default: ParamDefault::Int(2), help: "local epochs per round" },
+    ParamSpec {
+        key: "batches",
+        default: ParamDefault::Int(4),
+        help: "batches per local epoch",
+    },
+    ParamSpec { key: "l", default: ParamDefault::Int(2), help: "local rounds per global round" },
+    ParamSpec { key: "lr", default: ParamDefault::Float(0.05), help: "learning rate" },
+    ParamSpec {
+        key: "shift",
+        default: ParamDefault::Int(288),
+        help: "window shift per round (timesteps; 288 = one day)",
+    },
+    ParamSpec { key: "seed", default: ParamDefault::Int(3), help: "client-sampling seed" },
+];
+
+const MOCK_WARNING: &str = "fig6: MOCK runtime — synthetic linear-model MSE, clearly marked \
+                            (fig6_mock.csv, summary mock=true); NOT a paper artifact. Build the \
+                            PJRT artifacts and pass --set runtime=real for the real curves.";
+
+impl Experiment for Fig6Experiment {
+    fn name(&self) -> &'static str {
+        "fig6"
+    }
+
+    fn describe(&self) -> &'static str {
+        "per-client MSE curves over rounds, 3 setups, continual HFL"
+    }
+
+    fn param_schema(&self) -> &'static [ParamSpec] {
+        SCHEMA
+    }
+
+    fn run(&self, ctx: &mut ExperimentCtx) -> anyhow::Result<Report> {
+        let sc = Scenario::build(ScenarioConfig {
+            n_clients: ctx.params.usize("clients")?,
+            n_edges: ctx.params.usize("edges")?,
+            weeks: ctx.params.usize("weeks")?,
+            balanced_clients: ctx.params.bool("balanced")?,
+            seed: ctx.params.u64("scenario_seed")?,
+            data_seed: ctx.params.u64("data_seed")?,
+            ..Default::default()
+        })?;
+        let fl = FlConfig {
+            epochs: ctx.params.usize("epochs")?,
+            batches_per_epoch: ctx.params.usize("batches")?,
+            l: ctx.params.usize("l")?,
+            lr: ctx.params.f64("lr")? as f32,
+            rounds: ctx.usize_capped("rounds", 8)?,
+            eval_every: 1,
+        };
+        let window = ContinualWindow::paper(sc.dataset.n_steps, ctx.params.usize("shift")?);
+        let seed = ctx.params.u64("seed")?;
+
+        // --- runtime gate (mock results must be unmistakable) -----------
+        let real = runtime_gate(ctx, "fig6")?;
+        let mock = MockRuntime::new(12, 16);
+        let (runs, runtime_name) = match &real {
+            Some((manifest, engine)) => {
+                let init = manifest.load_init_params(engine.variant())?;
+                (run_all(&sc, engine, fl, window, init, seed)?, "real")
+            }
+            None => {
+                eprintln!("{MOCK_WARNING}");
+                let init = vec![0.0f32; mock.n_params()];
+                (run_all(&sc, &mock, fl, window, init, seed)?, "mock")
+            }
+        };
+
+        let mut report = Report::new("fig6");
+        if runtime_name == "mock" {
+            report.set_stem("fig6_mock");
+        }
+        report.text("runtime", runtime_name);
+        report.flag("mock", runtime_name == "mock");
+        let mut rows = Vec::new();
+        for r in &runs {
+            ctx.say(|| {
+                format!(
+                    "{:<10} final_mse={:.5} converged_at={:?} comm={:.4} GB",
+                    r.setup.name(),
+                    r.mean_final_mse,
+                    r.rounds_to_converge,
+                    r.ledger.total_gb()
+                )
+            });
+            let key = r.setup.name().replace('-', "_");
+            report.num(&format!("{key}_final_mse"), r.mean_final_mse as f64);
+            report.num(&format!("{key}_comm_gb"), r.ledger.total_gb());
+            let setup_id = match r.setup {
+                Setup::Flat => 0.0,
+                Setup::LocationClustered => 1.0,
+                _ => 2.0,
+            };
+            for round in 0..r.curves.n_rounds() {
+                rows.push(vec![setup_id, round as f64, r.curves.mean_at(round) as f64]);
+            }
+        }
+        let stem = report.stem.clone();
+        report.table(&stem, &["setup", "round", "mean_mse"], rows);
+        Ok(report)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +314,42 @@ mod tests {
             hflop.ledger.total_bytes(),
             flat.ledger.total_bytes()
         );
+    }
+
+    #[test]
+    fn experiment_trait_mock_run_is_clearly_marked() {
+        use crate::config::params::{Params, Value};
+        let mut p = Params::defaults(Fig6Experiment.param_schema());
+        p.set("runtime", Value::Str("mock".into())).unwrap();
+        p.set("clients", Value::Int(8)).unwrap();
+        p.set("edges", Value::Int(2)).unwrap();
+        p.set("weeks", Value::Int(5)).unwrap();
+        p.set("rounds", Value::Int(6)).unwrap();
+        let mut ctx = ExperimentCtx::cell(p);
+        let report = Fig6Experiment.run(&mut ctx).unwrap();
+        // The mock gate: artifact stem, summary flag and table name all
+        // scream "mock" so the CSV can't pass for a paper artifact.
+        assert_eq!(report.stem, "fig6_mock");
+        assert_eq!(report.summary.get("mock").unwrap().as_bool(), Some(true));
+        assert_eq!(report.summary.get("runtime").unwrap().as_str(), Some("mock"));
+        assert_eq!(report.tables[0].name, "fig6_mock");
+        assert!(report.get_f64("hflop_final_mse").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn experiment_trait_real_runtime_hard_errors_without_artifacts() {
+        use crate::config::params::{Params, Value};
+        // Without the pjrt feature/artifacts, runtime=real must fail
+        // loudly rather than silently substitute the mock.
+        if cfg!(feature = "pjrt") {
+            return;
+        }
+        let mut p = Params::defaults(Fig6Experiment.param_schema());
+        p.set("runtime", Value::Str("real".into())).unwrap();
+        p.set("clients", Value::Int(8)).unwrap();
+        p.set("edges", Value::Int(2)).unwrap();
+        p.set("weeks", Value::Int(5)).unwrap();
+        assert!(Fig6Experiment.run(&mut ExperimentCtx::cell(p)).is_err());
     }
 
     #[test]

@@ -9,9 +9,17 @@
 //! capacity-aware assignment keeps edges under their limits, so its
 //! latency concentrates at the edge RTT.
 
-use super::scenario::Scenario;
+use crate::config::params::ParamSpec;
+use crate::config::Setup;
 use crate::inference::simulation::{simulate, ServingConfig, ServingOutcome};
 use crate::inference::LatencyModel;
+use crate::metrics::cost::{flat_fl_bytes, hfl_bytes};
+use crate::metrics::export::ascii_table;
+use crate::util::json::Json;
+use crate::util::stats::OnlineStats;
+
+use super::registry::{Experiment, ExperimentCtx, ParamDefault, Report};
+use super::scenario::{Scenario, ScenarioConfig};
 
 /// Results for the three setups.
 #[derive(Debug)]
@@ -65,9 +73,263 @@ pub fn run(sc: &Scenario, cfg: &Fig7Config) -> Fig7Result {
     Fig7Result { flat, location, hflop }
 }
 
+/// Standard serving-metric summary keys shared by every experiment the
+/// sweep engine can turn into a [`super::sweep::CellOutcome`]. The key
+/// names mirror the cell fields exactly; values pass through `f64`
+/// untouched, which is what keeps the registry-driven sweep bit-exact
+/// with the pre-registry cell runner.
+pub fn serving_summary(report: &mut Report, o: &ServingOutcome) {
+    report.num("requests", o.total() as f64);
+    report.num("served_at_edge", o.served_at_edge as f64);
+    report.num("spilled_to_cloud", o.spilled_to_cloud as f64);
+    report.num("direct_to_cloud", o.direct_to_cloud as f64);
+    report.num("spill_fraction", o.spill_fraction());
+    report.num("mean_ms", o.latency.mean());
+    report.num("std_ms", o.latency.std());
+    report.num("min_ms", o.latency.min());
+    report.num("max_ms", o.latency.max());
+    report.num("p50_ms", o.percentiles.p50());
+    report.num("p90_ms", o.percentiles.p90());
+    report.num("p99_ms", o.percentiles.p99());
+}
+
+/// Registry port (DESIGN.md §5). Two modes:
+///
+/// * `setup = "all"` (default) — the paper figure: aggregate the three
+///   setups over `reps` random scenario draws;
+/// * `setup = flat|location|hflop` — one setup on one fixed scenario,
+///   the sweep-cell fast path (`hflop sweep --grid fig7|fig8` drives
+///   this with per-cell seeds; kept bit-identical to the pre-registry
+///   cell runner by `rust/tests/sweep_golden_matrix.rs`).
+pub struct Fig7Experiment;
+
+const SCHEMA: &[ParamSpec] = &[
+    ParamSpec {
+        key: "setup",
+        default: ParamDefault::Str("all"),
+        help: "all, or one of flat|location|hflop (single-setup sweep cell)",
+    },
+    ParamSpec { key: "reps", default: ParamDefault::Int(6), help: "scenario draws (setup=all)" },
+    ParamSpec { key: "clients", default: ParamDefault::Int(20), help: "FL clients / devices" },
+    ParamSpec { key: "edges", default: ParamDefault::Int(4), help: "candidate edge hosts" },
+    ParamSpec { key: "weeks", default: ParamDefault::Int(5), help: "synthetic dataset length" },
+    ParamSpec {
+        key: "balanced",
+        default: ParamDefault::Bool(false),
+        help: "balanced client placement (false = uneven clusters, the Fig. 7 regime)",
+    },
+    ParamSpec {
+        key: "scenario_seed",
+        default: ParamDefault::Int(42),
+        help: "scenario seed (base seed of the draws when setup=all)",
+    },
+    ParamSpec { key: "data_seed", default: ParamDefault::Int(1234), help: "dataset seed" },
+    ParamSpec {
+        key: "duration_s",
+        default: ParamDefault::Float(120.0),
+        help: "simulated serving horizon (s)",
+    },
+    ParamSpec {
+        key: "queue_window_s",
+        default: ParamDefault::Float(0.05),
+        help: "R3 admission window (s)",
+    },
+    ParamSpec {
+        key: "lambda_scale",
+        default: ParamDefault::Float(1.0),
+        help: "scale factor on every lambda_i (Fig. 8b uses 10)",
+    },
+    ParamSpec {
+        key: "speedup",
+        default: ParamDefault::Float(0.0),
+        help: "edge->cloud compute speedup in [0, 0.95]",
+    },
+    ParamSpec {
+        key: "seed",
+        default: ParamDefault::Int(7),
+        help: "serving-simulation seed (the sweep writes the cell seed here)",
+    },
+    ParamSpec {
+        key: "rounds",
+        default: ParamDefault::Int(100),
+        help: "nominal aggregation rounds for comm-volume accounting",
+    },
+    ParamSpec {
+        key: "model_bytes",
+        default: ParamDefault::Int(262_144),
+        help: "serialized model size for comm-volume accounting",
+    },
+];
+
+fn scenario_from(ctx: &ExperimentCtx, seed: u64) -> anyhow::Result<Scenario> {
+    Scenario::build(ScenarioConfig {
+        n_clients: ctx.params.usize("clients")?,
+        n_edges: ctx.params.usize("edges")?,
+        weeks: ctx.params.usize("weeks")?,
+        balanced_clients: ctx.params.bool("balanced")?,
+        seed,
+        data_seed: ctx.params.u64("data_seed")?,
+        ..Default::default()
+    })
+}
+
+/// The single-setup sweep-cell path. Mirrors the pre-registry
+/// `sweep::run_cell_at` static branch statement-for-statement: default
+/// latency model + `with_speedup`, fixed scenario, the cell seed driving
+/// only the serving simulation, Eq. 1 cost and predicted comm volume per
+/// setup.
+fn run_single(ctx: &mut ExperimentCtx, setup: Setup) -> anyhow::Result<Report> {
+    // No uncapacitated serving variant exists: silently reusing the
+    // capacitated assignment would mislabel the artifact.
+    anyhow::ensure!(
+        setup != Setup::HflopUncapacitated,
+        "fig7 has no uncapacitated serving setup (valid: all, flat, location, hflop)"
+    );
+    let sc = scenario_from(ctx, ctx.params.u64("scenario_seed")?)?;
+    let env_lambda = ctx.params.f64("lambda_scale")?;
+    let speedup = ctx.params.f64("speedup")?;
+    let assign = match setup {
+        Setup::Flat => vec![None; sc.topo.n_devices()],
+        Setup::LocationClustered => sc.assign_location.assign.clone(),
+        Setup::Hflop | Setup::HflopUncapacitated => sc.assign_hflop.assign.clone(),
+    };
+    let cfg = ServingConfig {
+        assign,
+        lambda: sc.lambdas().iter().map(|l| l * env_lambda).collect(),
+        capacity: sc.capacities(),
+        latency: LatencyModel::default().with_speedup(speedup.min(0.95)),
+        duration_s: ctx.params.f64("duration_s")?,
+        queue_window_s: ctx.params.f64("queue_window_s")?,
+        seed: ctx.params.u64("seed")?,
+    };
+    let out = simulate(&cfg);
+
+    let rounds = ctx.params.usize("rounds")?;
+    let model_bytes = ctx.params.usize("model_bytes")?;
+    let (eq1_cost, comm_bytes) = match setup {
+        Setup::Flat => (0.0, flat_fl_bytes(sc.topo.n_devices(), rounds, model_bytes)),
+        Setup::LocationClustered => (
+            sc.assign_location.cost(&sc.inst),
+            hfl_bytes(&sc.inst, &sc.assign_location, rounds, model_bytes),
+        ),
+        Setup::Hflop | Setup::HflopUncapacitated => {
+            (sc.hflop_cost, hfl_bytes(&sc.inst, &sc.assign_hflop, rounds, model_bytes))
+        }
+    };
+
+    let mut report = Report::new("fig7");
+    report.text("setup", setup.name());
+    serving_summary(&mut report, &out);
+    report.num("eq1_cost", eq1_cost);
+    report.num("comm_gb", comm_bytes as f64 / 1e9);
+    ctx.say(|| {
+        format!(
+            "fig7 setup={}: {} requests, mean {:.2} ms, p99 {:.1} ms, spill {:.3}",
+            setup.name(),
+            out.total(),
+            out.latency.mean(),
+            out.percentiles.p99(),
+            out.spill_fraction()
+        )
+    });
+    Ok(report)
+}
+
+/// The paper figure: three setups aggregated over several scenario draws.
+fn run_all_setups(ctx: &mut ExperimentCtx) -> anyhow::Result<Report> {
+    let base_seed = ctx.params.u64("scenario_seed")?;
+    let reps = ctx.usize_capped("reps", 2)? as u64;
+    let duration_s = ctx.f64_capped("duration_s", 30.0)?;
+    let cfg7 = Fig7Config {
+        duration_s,
+        queue_window_s: ctx.params.f64("queue_window_s")?,
+        seed: ctx.params.u64("seed")?,
+        lambda_scale: ctx.params.f64("lambda_scale")?,
+        latency: LatencyModel::default()
+            .with_speedup(ctx.params.f64("speedup")?.min(0.95)),
+    };
+    let mut agg = [OnlineStats::new(), OnlineStats::new(), OnlineStats::new()];
+    let mut spills = [0.0f64; 3];
+    let mut requests = [0u64; 3];
+    for s in 0..reps {
+        let sc = scenario_from(ctx, base_seed + s)?;
+        let r = run(&sc, &cfg7);
+        for (k, o) in [&r.flat, &r.location, &r.hflop].iter().enumerate() {
+            agg[k].merge(&o.latency);
+            spills[k] += o.spill_fraction();
+            requests[k] += o.total();
+        }
+    }
+    let names = ["flat", "hier", "hflop"];
+    let table: Vec<Vec<String>> = (0..3)
+        .map(|k| {
+            vec![
+                names[k].to_string(),
+                format!("{:.2}", agg[k].mean()),
+                format!("{:.2}", agg[k].std()),
+                format!("{}", requests[k]),
+                format!("{:.3}", spills[k] / reps as f64),
+            ]
+        })
+        .collect();
+    ctx.say(|| "paper:  flat 79.07±15.94   hier 17.72±24.26   hflop 9.89±4.63 (ms)".to_string());
+    ctx.say(|| ascii_table(&["setup", "mean_ms", "std_ms", "requests", "spill"], &table));
+
+    let mut report = Report::new("fig7");
+    report.text("setup", "all");
+    report.num("reps", reps as f64);
+    for (k, prefix) in ["flat", "hier", "hflop"].iter().enumerate() {
+        report.num(&format!("{prefix}_mean_ms"), agg[k].mean());
+        report.num(&format!("{prefix}_std_ms"), agg[k].std());
+        report.put(&format!("{prefix}_requests"), Json::Num(requests[k] as f64));
+        report.num(&format!("{prefix}_spill"), spills[k] / reps as f64);
+    }
+    report.table(
+        "fig7",
+        &["setup", "mean_ms", "std_ms", "requests", "spill"],
+        (0..3)
+            .map(|k| {
+                vec![
+                    k as f64,
+                    agg[k].mean(),
+                    agg[k].std(),
+                    requests[k] as f64,
+                    spills[k] / reps as f64,
+                ]
+            })
+            .collect(),
+    );
+    Ok(report)
+}
+
+impl Experiment for Fig7Experiment {
+    fn name(&self) -> &'static str {
+        "fig7"
+    }
+
+    fn describe(&self) -> &'static str {
+        "inference response-time distributions, 3 setups (or one setup as a sweep cell)"
+    }
+
+    fn param_schema(&self) -> &'static [ParamSpec] {
+        SCHEMA
+    }
+
+    fn run(&self, ctx: &mut ExperimentCtx) -> anyhow::Result<Report> {
+        let setup = ctx.params.str("setup")?;
+        if setup == "all" {
+            run_all_setups(ctx)
+        } else {
+            let setup = Setup::parse(&setup)?;
+            run_single(ctx, setup)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::params::{Params, Value};
     use crate::experiments::scenario::ScenarioConfig;
 
     fn scenario() -> Scenario {
@@ -112,5 +374,58 @@ mod tests {
         let heavy = run(&sc, &Fig7Config { lambda_scale: 10.0, ..Default::default() });
         assert!(heavy.hflop.spill_fraction() >= base.hflop.spill_fraction());
         assert!(heavy.location.latency.mean() > base.location.latency.mean());
+    }
+
+    fn quick_params(setup: &str) -> Params {
+        let mut p = Params::defaults(Fig7Experiment.param_schema());
+        p.set("setup", Value::Str(setup.into())).unwrap();
+        p.set("clients", Value::Int(12)).unwrap();
+        p.set("edges", Value::Int(3)).unwrap();
+        p.set("duration_s", Value::Float(15.0)).unwrap();
+        p
+    }
+
+    #[test]
+    fn single_setup_cell_reports_standard_metrics() {
+        let mut ctx = ExperimentCtx::cell(quick_params("hflop"));
+        let report = Fig7Experiment.run(&mut ctx).unwrap();
+        assert!(report.get_f64("requests").unwrap() > 100.0);
+        assert!(report.get_f64("mean_ms").unwrap() > 0.0);
+        assert!(report.get_f64("comm_gb").unwrap() > 0.0);
+        assert!(report.get_f64("eq1_cost").unwrap() > 0.0);
+        // Static cells never train.
+        assert!(report.get_f64("rounds_completed").is_none());
+    }
+
+    #[test]
+    fn single_setup_flat_serves_all_at_cloud() {
+        let mut ctx = ExperimentCtx::cell(quick_params("flat"));
+        let report = Fig7Experiment.run(&mut ctx).unwrap();
+        assert_eq!(report.get_f64("served_at_edge").unwrap(), 0.0);
+        assert!(report.get_f64("direct_to_cloud").unwrap() > 0.0);
+        assert_eq!(report.get_f64("eq1_cost").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn setup_all_aggregates_three_setups() {
+        let mut p = quick_params("all");
+        p.set("reps", Value::Int(2)).unwrap();
+        p.set("duration_s", Value::Float(10.0)).unwrap();
+        let mut ctx = ExperimentCtx::cell(p);
+        let report = Fig7Experiment.run(&mut ctx).unwrap();
+        for key in ["flat_mean_ms", "hier_mean_ms", "hflop_mean_ms"] {
+            assert!(report.get_f64(key).unwrap() > 0.0, "{key}");
+        }
+        assert!(
+            report.get_f64("flat_mean_ms").unwrap() > report.get_f64("hflop_mean_ms").unwrap()
+        );
+    }
+
+    #[test]
+    fn bad_setup_name_errors_with_spellings() {
+        let mut p = Params::defaults(Fig7Experiment.param_schema());
+        p.set("setup", Value::Str("hflopp".into())).unwrap();
+        let err = Fig7Experiment.run(&mut ExperimentCtx::cell(p)).unwrap_err().to_string();
+        assert!(err.contains("valid:"), "{err}");
     }
 }

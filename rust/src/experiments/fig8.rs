@@ -9,9 +9,12 @@
 //!     benefit on their spilled fraction — above a crossover speedup the
 //!     non-hierarchical method wins (paper: 14.25%).
 
-use super::fig7::{run as run_fig7, Fig7Config};
-use super::scenario::Scenario;
+use crate::config::params::ParamSpec;
 use crate::inference::LatencyModel;
+
+use super::fig7::{run as run_fig7, Fig7Config};
+use super::registry::{Experiment, ExperimentCtx, ParamDefault, Report};
+use super::scenario::{Scenario, ScenarioConfig};
 
 #[derive(Debug, Clone)]
 pub struct Fig8Row {
@@ -81,9 +84,114 @@ pub fn crossover(rows: &[Fig8Row]) -> Option<f64> {
         .map(|r| r.speedup)
 }
 
+/// Registry port (DESIGN.md §5): both Fig. 8 panels — (a) base rates,
+/// (b) rates × `lambda_scale_b` with the paper's crossover — on one
+/// scenario. The `fig8` *sweep grid* does not use this experiment: it
+/// re-expresses the speedup axis as `fig7` single-setup cells (see
+/// `SweepGrid::fig8`), which is exactly what the pre-registry grid ran.
+pub struct Fig8Experiment;
+
+const SCHEMA: &[ParamSpec] = &[
+    ParamSpec { key: "clients", default: ParamDefault::Int(20), help: "FL clients / devices" },
+    ParamSpec { key: "edges", default: ParamDefault::Int(4), help: "candidate edge hosts" },
+    ParamSpec { key: "weeks", default: ParamDefault::Int(5), help: "synthetic dataset length" },
+    ParamSpec {
+        key: "balanced",
+        default: ParamDefault::Bool(false),
+        help: "balanced client placement",
+    },
+    ParamSpec { key: "scenario_seed", default: ParamDefault::Int(42), help: "scenario seed" },
+    ParamSpec { key: "data_seed", default: ParamDefault::Int(1234), help: "dataset seed" },
+    ParamSpec {
+        key: "duration_s",
+        default: ParamDefault::Float(60.0),
+        help: "simulated serving horizon per speedup point (s)",
+    },
+    ParamSpec { key: "seed", default: ParamDefault::Int(11), help: "serving-simulation seed" },
+    ParamSpec {
+        key: "edge_service_ms",
+        default: ParamDefault::Float(25.0),
+        help: "compute-heavy service time of the speedup study (ms)",
+    },
+    ParamSpec {
+        key: "lambda_scale_b",
+        default: ParamDefault::Float(10.0),
+        help: "rate multiplier of panel (b), the saturated regime",
+    },
+    ParamSpec {
+        key: "speedup_points",
+        default: ParamDefault::Int(20),
+        help: "points on the 0..0.95 speedup axis",
+    },
+];
+
+impl Experiment for Fig8Experiment {
+    fn name(&self) -> &'static str {
+        "fig8"
+    }
+
+    fn describe(&self) -> &'static str {
+        "end-to-end latency vs edge->cloud speedup, panels (a) and (b) with crossover"
+    }
+
+    fn param_schema(&self) -> &'static [ParamSpec] {
+        SCHEMA
+    }
+
+    fn run(&self, ctx: &mut ExperimentCtx) -> anyhow::Result<Report> {
+        let sc = Scenario::build(ScenarioConfig {
+            n_clients: ctx.params.usize("clients")?,
+            n_edges: ctx.params.usize("edges")?,
+            weeks: ctx.params.usize("weeks")?,
+            balanced_clients: ctx.params.bool("balanced")?,
+            seed: ctx.params.u64("scenario_seed")?,
+            data_seed: ctx.params.u64("data_seed")?,
+            ..Default::default()
+        })?;
+        let n_points = ctx.usize_capped("speedup_points", 5)?.max(2);
+        let duration_s = ctx.f64_capped("duration_s", 15.0)?;
+        let speedups: Vec<f64> =
+            (0..n_points).map(|i| 0.95 * i as f64 / (n_points - 1) as f64).collect();
+        let base = Fig8Config {
+            latency: LatencyModel {
+                edge_service_ms: ctx.params.f64("edge_service_ms")?,
+                ..LatencyModel::default()
+            },
+            duration_s,
+            seed: ctx.params.u64("seed")?,
+            speedups,
+            ..Fig8Config::default()
+        };
+
+        let mut report = Report::new("fig8");
+        let lambda_b = ctx.params.f64("lambda_scale_b")?;
+        for (panel, scale) in [("a", 1.0), ("b", lambda_b)] {
+            let cfg = Fig8Config { lambda_scale: scale, ..base.clone() };
+            let rows = run(&sc, &cfg);
+            let cx = crossover(&rows);
+            ctx.say(|| {
+                format!("fig8{panel} (lambda x{scale}): crossover={cx:?} (paper 8b: 0.1425)")
+            });
+            match cx {
+                Some(v) => report.num(&format!("crossover_{panel}"), v),
+                None => report.put(&format!("crossover_{panel}"), crate::util::json::Json::Null),
+            }
+            report.table(
+                &format!("fig8{panel}"),
+                &["speedup", "flat_ms", "location_ms", "hflop_ms"],
+                rows.iter()
+                    .map(|r| vec![r.speedup, r.flat_ms, r.location_ms, r.hflop_ms])
+                    .collect(),
+            );
+        }
+        Ok(report)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::params::{Params, Value};
     use crate::experiments::scenario::ScenarioConfig;
 
     fn scenario() -> Scenario {
@@ -143,5 +251,23 @@ mod tests {
         for w in rows.windows(2) {
             assert!(w[1].flat_ms <= w[0].flat_ms + 2.0, "{w:?}");
         }
+    }
+
+    #[test]
+    fn experiment_trait_emits_both_panels() {
+        let mut p = Params::defaults(Fig8Experiment.param_schema());
+        p.set("clients", Value::Int(12)).unwrap();
+        p.set("edges", Value::Int(3)).unwrap();
+        p.set("duration_s", Value::Float(10.0)).unwrap();
+        p.set("speedup_points", Value::Int(3)).unwrap();
+        let mut ctx = ExperimentCtx::cell(p);
+        let report = Fig8Experiment.run(&mut ctx).unwrap();
+        assert_eq!(report.tables.len(), 2);
+        assert_eq!(report.tables[0].name, "fig8a");
+        assert_eq!(report.tables[1].name, "fig8b");
+        assert_eq!(report.tables[0].rows.len(), 3);
+        // Both panels report a crossover entry (possibly null).
+        assert!(report.summary.get("crossover_a").is_some());
+        assert!(report.summary.get("crossover_b").is_some());
     }
 }

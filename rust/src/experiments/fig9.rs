@@ -9,10 +9,14 @@
 //! Absolute reference (4 edges / 20 devices): FL 2.37 GB, HFLOP 0.53 GB,
 //! uncapacitated 0.24 GB.
 
+use crate::config::params::ParamSpec;
 use crate::hflop::InstanceBuilder;
 use crate::metrics::cost::{flat_fl_bytes, hfl_bytes};
+use crate::metrics::export::ascii_table;
 use crate::solver::{self, SolveOptions};
 use crate::util::stats::Summary;
+
+use super::registry::{Experiment, ExperimentCtx, ParamDefault, Report};
 
 #[derive(Debug, Clone)]
 pub struct Fig9Row {
@@ -113,9 +117,114 @@ pub fn absolute_reference(seed: u64) -> anyhow::Result<(f64, f64, f64)> {
     Ok((flat, c, u))
 }
 
+/// Registry port (DESIGN.md §5): the density sweep plus the paper's
+/// absolute-volume reference case.
+pub struct Fig9Experiment;
+
+const SCHEMA: &[ParamSpec] = &[
+    ParamSpec { key: "n", default: ParamDefault::Int(200), help: "devices (paper caption: 200)" },
+    ParamSpec {
+        key: "densities",
+        default: ParamDefault::Str("2,4,8,16,32"),
+        help: "comma-separated edge-node densities (the x axis)",
+    },
+    ParamSpec { key: "reps", default: ParamDefault::Int(10), help: "random instances per density" },
+    ParamSpec {
+        key: "rounds",
+        default: ParamDefault::Int(100),
+        help: "local aggregation rounds until convergence",
+    },
+    ParamSpec {
+        key: "model_bytes",
+        default: ParamDefault::Int(598_020),
+        help: "model payload (paper: 594 KB)",
+    },
+    ParamSpec { key: "seed", default: ParamDefault::Int(9), help: "instance-generator seed base" },
+];
+
+fn parse_densities(s: &str) -> anyhow::Result<Vec<usize>> {
+    let out: Result<Vec<usize>, _> = s.split(',').map(|p| p.trim().parse::<usize>()).collect();
+    let out = out.map_err(|_| anyhow::anyhow!("bad densities '{s}' (want e.g. \"2,4,8\")"))?;
+    anyhow::ensure!(!out.is_empty() && out.iter().all(|&m| m > 0), "densities must be positive");
+    Ok(out)
+}
+
+impl Experiment for Fig9Experiment {
+    fn name(&self) -> &'static str {
+        "fig9"
+    }
+
+    fn describe(&self) -> &'static str {
+        "communication-cost savings vs edge density (HFLOP + uncapacitated vs flat FL)"
+    }
+
+    fn param_schema(&self) -> &'static [ParamSpec] {
+        SCHEMA
+    }
+
+    fn run(&self, ctx: &mut ExperimentCtx) -> anyhow::Result<Report> {
+        let mut densities = parse_densities(&ctx.params.str("densities")?)?;
+        if ctx.smoke && !ctx.params.is_set("densities") {
+            densities.truncate(2);
+        }
+        let cfg = Fig9Config {
+            n_devices: ctx.usize_capped("n", 40)?,
+            densities,
+            reps: ctx.usize_capped("reps", 2)?,
+            rounds: ctx.params.usize("rounds")?,
+            model_bytes: ctx.params.usize("model_bytes")?,
+            seed: ctx.params.u64("seed")?,
+        };
+        let rows = run(&cfg)?;
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}", r.m),
+                    format!("{:.2}", r.hflop_savings_pct),
+                    format!("{:.2}", r.hflop_ci95),
+                    format!("{:.2}", r.uncap_savings_pct),
+                    format!("{:.2}", r.uncap_ci95),
+                ]
+            })
+            .collect();
+        ctx.say(|| ascii_table(&["edges", "hflop_sav_%", "±", "uncap_sav_%", "±"], &table));
+        let (flat, hflop, uncap) = absolute_reference(5)?;
+        ctx.say(|| {
+            format!(
+                "absolute (20 dev, 4 edges, 100 rounds): flat={flat:.2} GB hflop={hflop:.2} GB uncap={uncap:.2} GB\n\
+                 paper:                                  flat=2.37 GB hflop=0.53 GB uncap=0.24 GB"
+            )
+        });
+
+        let mut report = Report::new("fig9");
+        report.num("n_devices", cfg.n_devices as f64);
+        report.num("flat_gb", flat);
+        report.num("hflop_gb", hflop);
+        report.num("uncap_gb", uncap);
+        report.table(
+            "fig9",
+            &["m", "hflop_savings_pct", "hflop_ci95", "uncap_savings_pct", "uncap_ci95"],
+            rows.iter()
+                .map(|r| {
+                    vec![
+                        r.m as f64,
+                        r.hflop_savings_pct,
+                        r.hflop_ci95,
+                        r.uncap_savings_pct,
+                        r.uncap_ci95,
+                    ]
+                })
+                .collect(),
+        );
+        Ok(report)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::params::Params;
 
     #[test]
     fn savings_positive_and_ordered() {
@@ -151,6 +260,25 @@ mod tests {
             rows[0].uncap_savings_pct >= rows[1].uncap_savings_pct - 1.0,
             "{rows:?}"
         );
+    }
+
+    #[test]
+    fn experiment_trait_smoke_run_shrinks_and_reports() {
+        let params = Params::defaults(Fig9Experiment.param_schema());
+        let mut ctx = ExperimentCtx::cell(params).with_smoke(true);
+        let report = Fig9Experiment.run(&mut ctx).unwrap();
+        // Smoke caps: 40 devices, 2 densities, 2 reps.
+        assert_eq!(report.get_f64("n_devices").unwrap(), 40.0);
+        assert_eq!(report.tables[0].rows.len(), 2);
+        assert!(report.get_f64("hflop_gb").unwrap() < report.get_f64("flat_gb").unwrap());
+    }
+
+    #[test]
+    fn densities_parse_rejects_garbage() {
+        assert!(parse_densities("2,4,8").is_ok());
+        assert!(parse_densities("").is_err());
+        assert!(parse_densities("2,x").is_err());
+        assert!(parse_densities("0").is_err());
     }
 
     #[test]

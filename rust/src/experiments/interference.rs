@@ -23,7 +23,10 @@
 //!
 //! Driver: `cargo run --release --example interference`.
 
-use crate::experiments::scenario::Scenario;
+use crate::config::params::ParamSpec;
+use crate::experiments::fig7::serving_summary;
+use crate::experiments::registry::{Experiment, ExperimentCtx, ParamDefault, Report};
+use crate::experiments::scenario::{Scenario, ScenarioConfig};
 use crate::fl::timing::RoundTimeModel;
 use crate::inference::cosim::{
     run_cell, ControlConfig, ControlPlane, CoSimConfig, CoSimOutcome, DriftModel, FaultEvent,
@@ -57,6 +60,13 @@ impl Preset {
             Preset::EdgeFailure => "edge-failure",
             Preset::RetrainBurst => "retrain-burst",
         }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Preset> {
+        Preset::ALL.into_iter().find(|p| p.name() == s).ok_or_else(|| {
+            let valid: Vec<&str> = Preset::ALL.iter().map(Preset::name).collect();
+            anyhow::anyhow!("unknown preset '{s}' (valid: all, {})", valid.join(", "))
+        })
     }
 }
 
@@ -239,6 +249,224 @@ pub fn run(sc: &Scenario, cfg: &InterferenceConfig) -> anyhow::Result<CoSimOutco
     ))
 }
 
+/// Solve options that pin the control plane's re-solves to one
+/// local-search engine (the sweep's `ls_mode` axis plugs in here;
+/// formerly `sweep::solve_options`).
+pub fn solve_options_for(mode: LsMode) -> SolveOptions {
+    SolveOptions {
+        mode: Mode::Heuristic,
+        ls: LocalSearchOptions { mode, ..Default::default() },
+        ..SolveOptions::exact()
+    }
+}
+
+/// Map the `ls_mode` parameter onto solver options: `"auto"` keeps the
+/// full auto policy (exact when small — the standalone default), the
+/// other two pin the heuristic engine the way the sweep's axis does.
+fn solve_from_ls_mode(s: &str) -> anyhow::Result<SolveOptions> {
+    Ok(match s {
+        "auto" => SolveOptions::auto(),
+        "completion" => solve_options_for(LsMode::Completion),
+        "incremental" => solve_options_for(LsMode::Incremental),
+        other => anyhow::bail!("unknown ls_mode '{other}' (valid: auto, completion, incremental)"),
+    })
+}
+
+/// Registry port (DESIGN.md §5). `preset = "all"` (default) reproduces
+/// the joint-timeline artifact over all four presets; a single preset
+/// name runs one co-simulation and reports the standard serving +
+/// orchestration metrics — the sweep-cell path, kept bit-identical to
+/// the pre-registry cell runner by `rust/tests/sweep_golden_matrix.rs`.
+pub struct InterferenceExperiment;
+
+const SCHEMA: &[ParamSpec] = &[
+    ParamSpec {
+        key: "preset",
+        default: ParamDefault::Str("all"),
+        help: "all, or one of steady|diurnal-surge|edge-failure|retrain-burst",
+    },
+    ParamSpec { key: "clients", default: ParamDefault::Int(20), help: "FL clients / devices" },
+    ParamSpec { key: "edges", default: ParamDefault::Int(4), help: "candidate edge hosts" },
+    ParamSpec { key: "weeks", default: ParamDefault::Int(5), help: "synthetic dataset length" },
+    ParamSpec {
+        key: "balanced",
+        default: ParamDefault::Bool(false),
+        help: "balanced client placement",
+    },
+    ParamSpec { key: "scenario_seed", default: ParamDefault::Int(42), help: "scenario seed" },
+    ParamSpec { key: "data_seed", default: ParamDefault::Int(1234), help: "dataset seed" },
+    ParamSpec {
+        key: "duration_s",
+        default: ParamDefault::Float(240.0),
+        help: "simulated co-sim horizon (s)",
+    },
+    ParamSpec {
+        key: "interference_factor",
+        default: ParamDefault::Float(0.25),
+        help: "serving-capacity multiplier while an edge trains",
+    },
+    ParamSpec {
+        key: "lambda_scale",
+        default: ParamDefault::Float(1.0),
+        help: "scale factor on every lambda_i",
+    },
+    ParamSpec {
+        key: "model_bytes",
+        default: ParamDefault::Int(262_144),
+        help: "model transfer size (round timing + comm accounting)",
+    },
+    ParamSpec {
+        key: "ls_mode",
+        default: ParamDefault::Str("auto"),
+        help: "control-plane re-solve engine: auto|completion|incremental",
+    },
+    ParamSpec {
+        key: "seed",
+        default: ParamDefault::Int(7),
+        help: "co-simulation seed (the sweep writes the cell seed here)",
+    },
+];
+
+fn scenario_from(ctx: &ExperimentCtx) -> anyhow::Result<Scenario> {
+    Scenario::build(ScenarioConfig {
+        n_clients: ctx.params.usize("clients")?,
+        n_edges: ctx.params.usize("edges")?,
+        weeks: ctx.params.usize("weeks")?,
+        balanced_clients: ctx.params.bool("balanced")?,
+        seed: ctx.params.u64("scenario_seed")?,
+        data_seed: ctx.params.u64("data_seed")?,
+        ..Default::default()
+    })
+}
+
+fn config_from(
+    ctx: &ExperimentCtx,
+    preset: Preset,
+    duration_s: f64,
+) -> anyhow::Result<InterferenceConfig> {
+    Ok(InterferenceConfig {
+        preset,
+        duration_s,
+        interference_factor: ctx.params.f64("interference_factor")?,
+        lambda_scale: ctx.params.f64("lambda_scale")?,
+        model_bytes: ctx.params.usize("model_bytes")?,
+        solve: solve_from_ls_mode(&ctx.params.str("ls_mode")?)?,
+        seed: ctx.params.u64("seed")?,
+        ..Default::default()
+    })
+}
+
+/// Fill a report with one co-sim outcome: the standard serving keys
+/// (shared with `fig7`) plus training/orchestration counters and the
+/// cost accounting the pre-registry sweep cell carried.
+fn cosim_summary(
+    report: &mut Report,
+    sc: &Scenario,
+    out: &CoSimOutcome,
+    model_bytes: usize,
+) {
+    serving_summary(report, &out.serving);
+    report.num("rounds_completed", out.rounds_completed as f64);
+    report.num("plan_swaps", out.plan_swaps as f64);
+    report.num("reclusters", out.reclusters as f64);
+    report.num("retrain_triggers", out.retrain_triggers as f64);
+    report.num("events_processed", out.events_processed as f64);
+    report.num("events_cancelled", out.events_cancelled as f64);
+    report.num("eq1_cost", sc.hflop_cost);
+    let comm = hfl_bytes(&sc.inst, &sc.assign_hflop, out.rounds_completed, model_bytes);
+    report.num("comm_gb", comm as f64 / 1e9);
+}
+
+impl Experiment for InterferenceExperiment {
+    fn name(&self) -> &'static str {
+        "interference"
+    }
+
+    fn describe(&self) -> &'static str {
+        "joint training/serving co-sim timeline, orchestrator in the loop (4 presets)"
+    }
+
+    fn param_schema(&self) -> &'static [ParamSpec] {
+        SCHEMA
+    }
+
+    fn run(&self, ctx: &mut ExperimentCtx) -> anyhow::Result<Report> {
+        let sc = scenario_from(ctx)?;
+        let which = ctx.params.str("preset")?;
+        let model_bytes = ctx.params.usize("model_bytes")?;
+        let mut report = Report::new("interference");
+
+        if which == "all" {
+            let duration_s = ctx.f64_capped("duration_s", 60.0)?;
+            let mut rows = Vec::new();
+            let mut pretty: Vec<Vec<String>> = Vec::new();
+            for (i, preset) in Preset::ALL.into_iter().enumerate() {
+                let out = run(&sc, &config_from(ctx, preset, duration_s)?)?;
+                let key = preset.name().replace('-', "_");
+                report.num(&format!("{key}_mean_ms"), out.serving.latency.mean());
+                report.num(&format!("{key}_rounds"), out.rounds_completed as f64);
+                report.num(&format!("{key}_plan_swaps"), out.plan_swaps as f64);
+                rows.push(vec![
+                    i as f64,
+                    out.serving.total() as f64,
+                    out.serving.latency.mean(),
+                    out.serving.percentiles.p99(),
+                    out.serving.spill_fraction(),
+                    out.rounds_completed as f64,
+                    out.plan_swaps as f64,
+                    out.retrain_triggers as f64,
+                    out.events_cancelled as f64,
+                ]);
+                pretty.push(vec![
+                    preset.name().to_string(),
+                    format!("{}", out.serving.total()),
+                    format!("{:.2}", out.serving.latency.mean()),
+                    format!("{:.1}", out.serving.percentiles.p99()),
+                    format!("{:.1}%", 100.0 * out.serving.spill_fraction()),
+                    format!("{}", out.rounds_completed),
+                    format!("{}", out.plan_swaps),
+                    format!("{}", out.retrain_triggers),
+                ]);
+            }
+            ctx.say(|| {
+                ascii_table(
+                    &[
+                        "preset", "requests", "mean ms", "p99 ms", "spill", "rounds", "swaps",
+                        "retrains",
+                    ],
+                    &pretty,
+                )
+            });
+            report.text("preset", "all");
+            report.table(
+                "interference",
+                &[
+                    "preset", "requests", "mean_ms", "p99_ms", "spill", "rounds", "swaps",
+                    "retrains", "cancelled",
+                ],
+                rows,
+            );
+        } else {
+            let preset = Preset::parse(&which)?;
+            let duration_s = ctx.params.f64("duration_s")?;
+            let out = run(&sc, &config_from(ctx, preset, duration_s)?)?;
+            report.text("preset", preset.name());
+            cosim_summary(&mut report, &sc, &out, model_bytes);
+            ctx.say(|| {
+                format!(
+                    "interference preset={}: {} requests, mean {:.2} ms, {} rounds, {} swaps",
+                    preset.name(),
+                    out.serving.total(),
+                    out.serving.latency.mean(),
+                    out.rounds_completed,
+                    out.plan_swaps
+                )
+            });
+        }
+        Ok(report)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -310,6 +538,42 @@ mod tests {
             surged.serving.total(),
             steady.serving.total()
         );
+    }
+
+    #[test]
+    fn preset_names_round_trip_through_parse() {
+        for p in Preset::ALL {
+            assert_eq!(Preset::parse(p.name()).unwrap(), p);
+        }
+        let err = Preset::parse("steadyy").unwrap_err().to_string();
+        assert!(err.contains("steady") && err.contains("retrain-burst"), "{err}");
+    }
+
+    #[test]
+    fn experiment_trait_single_preset_reports_cosim_metrics() {
+        use crate::config::params::{Params, Value};
+        let mut p = Params::defaults(InterferenceExperiment.param_schema());
+        p.set("preset", Value::Str("steady".into())).unwrap();
+        p.set("clients", Value::Int(12)).unwrap();
+        p.set("edges", Value::Int(3)).unwrap();
+        p.set("duration_s", Value::Float(60.0)).unwrap();
+        p.set("lambda_scale", Value::Float(0.5)).unwrap();
+        p.set("ls_mode", Value::Str("incremental".into())).unwrap();
+        let mut ctx = ExperimentCtx::cell(p);
+        let report = InterferenceExperiment.run(&mut ctx).unwrap();
+        assert!(report.get_f64("requests").unwrap() > 100.0);
+        assert!(report.get_f64("rounds_completed").unwrap() >= 1.0);
+        assert!(report.get_f64("eq1_cost").unwrap() > 0.0);
+        assert!(report.get_f64("comm_gb").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn bad_ls_mode_errors() {
+        use crate::config::params::{Params, Value};
+        let mut p = Params::defaults(InterferenceExperiment.param_schema());
+        p.set("preset", Value::Str("steady".into())).unwrap();
+        p.set("ls_mode", Value::Str("fastest".into())).unwrap();
+        assert!(InterferenceExperiment.run(&mut ExperimentCtx::cell(p)).is_err());
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! Experiment harnesses — one module per paper artifact (DESIGN.md §5):
+//! Experiment harnesses — one module per paper artifact, all unified
+//! behind the [`registry::Experiment`] trait (DESIGN.md §5):
 //!
-//! | module     | paper artifact |
+//! | experiment | paper artifact |
 //! |------------|----------------|
 //! | [`fig2`]   | HFLOP optimal solve times vs instance size |
 //! | [`fig6`]   | per-client MSE curves, 3 setups, continual HFL |
@@ -9,12 +10,14 @@
 //! | [`fig9`]   | communication-cost savings vs edge density |
 //! | [`cl_table`] | §V-B1 static vs continually-retrained MSE |
 //! | [`interference`] | joint training/serving timeline (co-sim presets) |
-//! | [`sweep`]  | deterministic parallel scenario-sweep engine (grids over the above) |
+//! | [`scenario`] | the shared world itself (topology + assignments) |
 //!
-//! [`scenario`] builds the shared world (synthetic METR-LA, topology,
-//! assignments). The `examples/` binaries and `rust/benches/` harnesses
-//! are thin drivers over these functions; [`sweep`] fans grids of them
-//! over a worker pool with per-cell coordinate-hashed seeds.
+//! [`registry::REGISTRY`] is the single typed entry point: `main.rs`
+//! dispatches `hflop experiment <name>` through it, `--list`/`--help`
+//! are generated from it, and [`sweep`] fans *registered experiment ×
+//! param-override axes × seed range* grids over the worker pool with
+//! per-cell coordinate-hashed seeds. The `examples/` binaries and
+//! `rust/benches/` harnesses stay thin drivers over these modules.
 
 pub mod cl_table;
 pub mod fig2;
@@ -23,8 +26,10 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod interference;
+pub mod registry;
 pub mod scenario;
 pub mod sweep;
 
+pub use registry::{Experiment, ExperimentCtx, Report, REGISTRY};
 pub use scenario::{Scenario, ScenarioConfig};
 pub use sweep::{SweepGrid, SweepMatrix};

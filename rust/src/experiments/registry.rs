@@ -1,0 +1,350 @@
+//! The experiment registry — one typed entry point for every paper
+//! artifact (DESIGN.md §5).
+//!
+//! Every scenario the repo can reproduce implements [`Experiment`]:
+//!
+//! * `name()` / `describe()` — identity and the one-liner
+//!   `hflop experiment --list` prints;
+//! * `param_schema()` — the full set of parameters the experiment
+//!   understands ([`ParamSpec`]), from which the per-experiment `--help`
+//!   is generated and against which every config file / `--set` override
+//!   is validated (unknown keys fail fast, `config::params`);
+//! * `run(&mut ExperimentCtx)` — the work, returning a uniform
+//!   [`Report`] artifact bundle (JSON summary + named CSV tables through
+//!   `metrics::export`, stamped with
+//!   [`crate::metrics::export::SCHEMA_VERSION`]).
+//!
+//! The static [`REGISTRY`] lists every implementation. `main.rs`
+//! dispatches `hflop experiment <name>` purely through [`find`]; the
+//! sweep engine (`experiments::sweep`) builds its grids as *registered
+//! experiment × param-override axes × seed range*, so anything added
+//! here is immediately runnable, documentable (`--list`/`--help`),
+//! sweepable, and smoke-tested by the CI loop over `--names` — without
+//! touching the launcher or `sweep.rs`.
+
+use crate::config::params::{ParamSpec, Params};
+use crate::metrics::export::{ResultsWriter, Table, SCHEMA_VERSION};
+use crate::runtime::{Engine, Manifest, Preload};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub use crate::config::params::{ParamDefault, ParamKind};
+
+/// Everything an experiment run needs, bundled: the resolved parameters,
+/// a seeded RNG (from the `seed` parameter when the schema declares
+/// one), the optional output sink for extra artifacts, and the two
+/// execution-mode knobs (CI smoke budget, sweep-cell quiet mode).
+pub struct ExperimentCtx {
+    pub params: Params,
+    pub rng: Rng,
+    /// Extra-artifact sink. The launcher passes one; sweep cells pass
+    /// `None` (cells must not touch the filesystem — their entire output
+    /// is the returned [`Report`]).
+    pub out: Option<ResultsWriter>,
+    /// `HFLOP_BENCH_SMOKE=1`: shrink the workload (experiments only
+    /// shrink parameters the user did not explicitly set).
+    pub smoke: bool,
+    /// Suppress console tables (sweep cells run quiet on worker threads).
+    pub quiet: bool,
+}
+
+impl ExperimentCtx {
+    /// Launcher-side context: smoke from the environment, console on.
+    pub fn new(params: Params) -> ExperimentCtx {
+        let rng = Rng::new(params.seed_or(0));
+        ExperimentCtx { params, rng, out: None, smoke: crate::util::smoke_mode(), quiet: false }
+    }
+
+    /// Sweep-cell context: quiet, and immune to the smoke knob so a
+    /// grid's declared parameters fully determine its matrix.
+    pub fn cell(params: Params) -> ExperimentCtx {
+        let rng = Rng::new(params.seed_or(0));
+        ExperimentCtx { params, rng, out: None, smoke: false, quiet: true }
+    }
+
+    pub fn with_out(mut self, out: ResultsWriter) -> ExperimentCtx {
+        self.out = Some(out);
+        self
+    }
+
+    pub fn with_smoke(mut self, smoke: bool) -> ExperimentCtx {
+        self.smoke = smoke;
+        self
+    }
+
+    /// `usize` parameter with a smoke-mode cap: explicit settings always
+    /// win; otherwise smoke runs use `min(default, cap)`.
+    pub fn usize_capped(&self, key: &str, cap: usize) -> anyhow::Result<usize> {
+        let v = self.params.usize(key)?;
+        Ok(if self.smoke && !self.params.is_set(key) { v.min(cap) } else { v })
+    }
+
+    /// `f64` parameter with a smoke-mode cap (same rules).
+    pub fn f64_capped(&self, key: &str, cap: f64) -> anyhow::Result<f64> {
+        let v = self.params.f64(key)?;
+        Ok(if self.smoke && !self.params.is_set(key) { v.min(cap) } else { v })
+    }
+
+    /// Console print gate: `ctx.say(|| format!(...))`.
+    pub fn say(&self, line: impl FnOnce() -> String) {
+        if !self.quiet {
+            println!("{}", line());
+        }
+    }
+}
+
+/// A uniform experiment artifact bundle: one JSON summary object plus
+/// any number of named CSV tables. [`Report::write`] lands it under the
+/// results directory as `<stem>.json` + `<table>.csv` files, all
+/// carrying [`SCHEMA_VERSION`].
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub experiment: String,
+    /// Output file stem for the JSON summary (defaults to the experiment
+    /// name; the mock-gated experiments switch to `<name>_mock` so a
+    /// fabricated artifact can never be mistaken for a paper one).
+    pub stem: String,
+    pub schema_version: u32,
+    /// Always a `Json::Obj`.
+    pub summary: Json,
+    pub tables: Vec<Table>,
+}
+
+impl Report {
+    pub fn new(experiment: &str) -> Report {
+        Report {
+            experiment: experiment.to_string(),
+            stem: experiment.to_string(),
+            schema_version: SCHEMA_VERSION,
+            summary: Json::obj(vec![]),
+            tables: Vec::new(),
+        }
+    }
+
+    pub fn set_stem(&mut self, stem: &str) {
+        self.stem = stem.to_string();
+    }
+
+    /// Insert one summary entry.
+    pub fn put(&mut self, key: &str, value: Json) {
+        if let Json::Obj(m) = &mut self.summary {
+            m.insert(key.to_string(), value);
+        }
+    }
+
+    pub fn num(&mut self, key: &str, value: f64) {
+        self.put(key, Json::Num(value));
+    }
+
+    pub fn text(&mut self, key: &str, value: &str) {
+        self.put(key, Json::Str(value.to_string()));
+    }
+
+    pub fn flag(&mut self, key: &str, value: bool) {
+        self.put(key, Json::Bool(value));
+    }
+
+    pub fn table(&mut self, name: &str, header: &[&str], rows: Vec<Vec<f64>>) {
+        self.tables.push(Table::new(name, header, rows));
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.summary.get(key).and_then(Json::as_f64)
+    }
+
+    /// The JSON summary artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("experiment", Json::Str(self.experiment.clone())),
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("summary", self.summary.clone()),
+        ])
+    }
+
+    /// Write `<stem>.json` + one CSV per table; returns the paths.
+    pub fn write(&self, out: &ResultsWriter) -> anyhow::Result<Vec<std::path::PathBuf>> {
+        let mut paths = vec![out.write_json(&format!("{}.json", self.stem), &self.to_json())?];
+        for t in &self.tables {
+            paths.push(out.write_table(t)?);
+        }
+        Ok(paths)
+    }
+}
+
+/// One reproducible artifact of the paper (or a derived scenario).
+///
+/// `Sync` is a supertrait so implementations can live in the static
+/// [`REGISTRY`] and run on sweep worker threads.
+pub trait Experiment: Sync {
+    /// Registry key: what `hflop experiment <name>` dispatches on.
+    fn name(&self) -> &'static str;
+    /// One-line description for `--list` and DESIGN.md §5.
+    fn describe(&self) -> &'static str;
+    /// Every parameter the experiment understands.
+    fn param_schema(&self) -> &'static [ParamSpec];
+    /// Run with resolved parameters; all output goes through the report.
+    fn run(&self, ctx: &mut ExperimentCtx) -> anyhow::Result<Report>;
+}
+
+/// Every registered experiment, in `--list` order. DESIGN.md §5 must
+/// mirror this table row-for-row (`rust/tests/registry_contract.rs`).
+pub static REGISTRY: &[&dyn Experiment] = &[
+    &super::fig2::Fig2Experiment,
+    &super::fig6::Fig6Experiment,
+    &super::fig7::Fig7Experiment,
+    &super::fig8::Fig8Experiment,
+    &super::fig9::Fig9Experiment,
+    &super::cl_table::ClTableExperiment,
+    &super::interference::InterferenceExperiment,
+    &super::scenario::ScenarioExperiment,
+];
+
+/// Look an experiment up by registry name.
+pub fn find(name: &str) -> Option<&'static dyn Experiment> {
+    REGISTRY.iter().copied().find(|e| e.name() == name)
+}
+
+/// All registered names, in `--list` order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name()).collect()
+}
+
+/// Like [`find`] but with an error listing the valid names.
+pub fn lookup(name: &str) -> anyhow::Result<&'static dyn Experiment> {
+    find(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown experiment '{}' (valid: {})", name, names().join(", "))
+    })
+}
+
+/// Shared `runtime = auto|real|mock` gate for the PJRT-backed
+/// experiments (`fig6`, `cl`; their schemas declare `runtime` and
+/// `variant`). `Some((manifest, engine))` means run the real engine;
+/// `None` means take the clearly-marked mock path. `auto` tries real
+/// and falls back with a stderr note; `real` hard-errors when the
+/// artifacts / `pjrt` feature are absent rather than silently
+/// substituting fabricated numbers.
+pub fn runtime_gate(
+    ctx: &ExperimentCtx,
+    experiment: &str,
+) -> anyhow::Result<Option<(Manifest, Engine)>> {
+    let requested = ctx.params.str("runtime")?;
+    match requested.as_str() {
+        "mock" => Ok(None),
+        "real" | "auto" => {
+            let attempt = Manifest::load_default().and_then(|manifest| {
+                let engine =
+                    Engine::new(&manifest, &ctx.params.str("variant")?, Preload::Training)?;
+                Ok((manifest, engine))
+            });
+            match attempt {
+                Ok(pair) => Ok(Some(pair)),
+                Err(e) if requested == "auto" => {
+                    eprintln!(
+                        "{experiment}: real runtime unavailable ({e}); falling back to mock"
+                    );
+                    Ok(None)
+                }
+                Err(e) => Err(e.context(format!("{experiment} --set runtime=real"))),
+            }
+        }
+        other => anyhow::bail!("unknown runtime '{other}' (valid: auto, real, mock)"),
+    }
+}
+
+/// Generated per-experiment help, straight from the schema.
+pub fn render_help(e: &dyn Experiment) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("hflop experiment {} — {}\n\n", e.name(), e.describe()));
+    out.push_str("parameters (set via --<key> <value>, --set <key>=<value>, or --config <file>):\n");
+    let width = e.param_schema().iter().map(|s| s.key.len()).max().unwrap_or(0);
+    for spec in e.param_schema() {
+        out.push_str(&format!(
+            "  --set {:<width$}={:<10} {} [{}]\n",
+            spec.key,
+            spec.default.render(),
+            spec.help,
+            spec.default.kind().name(),
+        ));
+    }
+    out.push_str("\ncommon options: --config <file.toml>  --out <dir>  --help\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_well_formed() {
+        let names = names();
+        assert_eq!(names.len(), REGISTRY.len());
+        let mut uniq = names.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), names.len(), "duplicate registry names: {names:?}");
+        for e in REGISTRY {
+            assert!(!e.name().is_empty());
+            assert!(!e.describe().is_empty(), "{} has no description", e.name());
+            assert!(!e.param_schema().is_empty(), "{} declares no parameters", e.name());
+        }
+    }
+
+    #[test]
+    fn registry_holds_all_eight_experiments() {
+        for expect in ["fig2", "fig6", "fig7", "fig8", "fig9", "cl", "interference", "scenario"] {
+            assert!(find(expect).is_some(), "experiment '{expect}' not registered");
+        }
+        assert_eq!(REGISTRY.len(), 8);
+    }
+
+    #[test]
+    fn schema_keys_unique_per_experiment() {
+        for e in REGISTRY {
+            let mut keys: Vec<&str> = e.param_schema().iter().map(|s| s.key).collect();
+            let n = keys.len();
+            keys.sort_unstable();
+            keys.dedup();
+            assert_eq!(keys.len(), n, "{} has duplicate schema keys", e.name());
+        }
+    }
+
+    #[test]
+    fn lookup_error_lists_valid_names() {
+        let err = lookup("fig11").unwrap_err().to_string();
+        assert!(err.contains("fig2") && err.contains("interference"), "{err}");
+    }
+
+    #[test]
+    fn help_renders_every_parameter() {
+        for e in REGISTRY {
+            let help = render_help(*e);
+            for spec in e.param_schema() {
+                assert!(help.contains(spec.key), "{}: help misses '{}'", e.name(), spec.key);
+            }
+        }
+    }
+
+    #[test]
+    fn report_bundle_roundtrips_to_disk() {
+        let mut r = Report::new("demo");
+        r.num("x", 1.5);
+        r.text("mode", "test");
+        r.table("demo_rows", &["a", "b"], vec![vec![1.0, 2.0]]);
+        let json = r.to_json();
+        assert_eq!(json.get("experiment").unwrap().as_str().unwrap(), "demo");
+        assert_eq!(
+            json.get("schema_version").unwrap().as_f64().unwrap() as u32,
+            SCHEMA_VERSION
+        );
+        assert_eq!(json.path(&["summary", "x"]).unwrap().as_f64().unwrap(), 1.5);
+
+        let dir = std::env::temp_dir().join("hflop_registry_report_test");
+        let out = ResultsWriter::new(&dir).unwrap();
+        let paths = r.write(&out).unwrap();
+        assert_eq!(paths.len(), 2);
+        assert!(paths[0].ends_with("demo.json"));
+        assert!(paths[1].ends_with("demo_rows.csv"));
+        let text = std::fs::read_to_string(&paths[0]).unwrap();
+        assert!(Json::parse(&text).unwrap().get("schema_version").is_some());
+    }
+}

@@ -3,11 +3,15 @@
 //! device→edge assignments the paper compares (flat / location-clustered
 //! / HFLOP).
 
+use crate::config::params::ParamSpec;
 use crate::data::synth::{generate, SynthConfig, TrafficDataset};
 use crate::hflop::{Instance, InstanceBuilder};
+use crate::metrics::export::ascii_table;
 use crate::solver::{self, Assignment, SolveOptions};
 use crate::topology::{kmeans, GeoTopologyBuilder, Topology};
 use crate::util::rng::Rng;
+
+use super::registry::{Experiment, ExperimentCtx, ParamDefault, Report};
 
 /// Scenario parameters (paper defaults: 20 clients, 4 edge servers).
 #[derive(Debug, Clone)]
@@ -145,6 +149,135 @@ impl Scenario {
     }
 }
 
+/// Registry port (DESIGN.md §5): the static `Scenario` builder as a
+/// first-class experiment — build the shared world and report the
+/// topology, the three assignments and their Eq. 1 costs. Useful on its
+/// own (inspect what every figure runs on) and as the template future
+/// world-building scenarios (budget triggers, MaaS pricing) extend.
+pub struct ScenarioExperiment;
+
+const SCHEMA: &[ParamSpec] = &[
+    ParamSpec { key: "clients", default: ParamDefault::Int(20), help: "FL clients / devices" },
+    ParamSpec { key: "edges", default: ParamDefault::Int(4), help: "candidate edge hosts" },
+    ParamSpec {
+        key: "weeks",
+        default: ParamDefault::Int(17),
+        help: "synthetic dataset length (paper scale: 17)",
+    },
+    ParamSpec {
+        key: "balanced",
+        default: ParamDefault::Bool(true),
+        help: "balanced client placement (5 per cluster)",
+    },
+    ParamSpec { key: "scenario_seed", default: ParamDefault::Int(42), help: "scenario seed" },
+    ParamSpec { key: "data_seed", default: ParamDefault::Int(1234), help: "dataset seed" },
+    ParamSpec {
+        key: "lambda_min",
+        default: ParamDefault::Float(20.0),
+        help: "lambda_i sampling range lower bound (req/s)",
+    },
+    ParamSpec {
+        key: "lambda_max",
+        default: ParamDefault::Float(60.0),
+        help: "lambda_i sampling range upper bound (req/s)",
+    },
+    ParamSpec {
+        key: "capacity_min",
+        default: ParamDefault::Float(250.0),
+        help: "r_j sampling range lower bound (req/s)",
+    },
+    ParamSpec {
+        key: "capacity_max",
+        default: ParamDefault::Float(450.0),
+        help: "r_j sampling range upper bound (req/s)",
+    },
+];
+
+impl Experiment for ScenarioExperiment {
+    fn name(&self) -> &'static str {
+        "scenario"
+    }
+
+    fn describe(&self) -> &'static str {
+        "build the shared world: topology, three assignments, Eq. 1 costs"
+    }
+
+    fn param_schema(&self) -> &'static [ParamSpec] {
+        SCHEMA
+    }
+
+    fn run(&self, ctx: &mut ExperimentCtx) -> anyhow::Result<Report> {
+        let sc = Scenario::build(ScenarioConfig {
+            n_clients: ctx.params.usize("clients")?,
+            n_edges: ctx.params.usize("edges")?,
+            weeks: ctx.usize_capped("weeks", 5)?,
+            balanced_clients: ctx.params.bool("balanced")?,
+            seed: ctx.params.u64("scenario_seed")?,
+            data_seed: ctx.params.u64("data_seed")?,
+            lambda_range: (ctx.params.f64("lambda_min")?, ctx.params.f64("lambda_max")?),
+            capacity_range: (ctx.params.f64("capacity_min")?, ctx.params.f64("capacity_max")?),
+            ..Default::default()
+        })?;
+
+        let location_cost = sc.assign_location.cost(&sc.inst);
+        let location_feasible = sc.assign_location.check_feasible(&sc.inst).is_ok();
+        ctx.say(|| {
+            ascii_table(
+                &["assignment", "eq1_cost", "feasible"],
+                &[
+                    vec![
+                        "location".into(),
+                        format!("{location_cost:.2}"),
+                        format!("{location_feasible}"),
+                    ],
+                    vec!["hflop".into(), format!("{:.2}", sc.hflop_cost), "true".into()],
+                ],
+            )
+        });
+
+        let mut report = Report::new("scenario");
+        report.num("n_devices", sc.topo.n_devices() as f64);
+        report.num("n_edges", sc.topo.n_edges() as f64);
+        report.num("dataset_steps", sc.dataset.n_steps as f64);
+        report.num("hflop_cost", sc.hflop_cost);
+        report.flag("hflop_optimal", sc.hflop_optimal);
+        report.num("location_cost", location_cost);
+        report.flag("location_feasible", location_feasible);
+        report.num("total_lambda", sc.lambdas().iter().sum());
+        report.num("total_capacity", sc.capacities().iter().sum());
+        report.table(
+            "scenario_devices",
+            &["device", "lambda", "location_edge", "hflop_edge"],
+            (0..sc.topo.n_devices())
+                .map(|i| {
+                    let enc = |a: &Option<usize>| a.map(|j| j as f64).unwrap_or(-1.0);
+                    vec![
+                        i as f64,
+                        sc.topo.devices[i].lambda,
+                        enc(&sc.assign_location.assign[i]),
+                        enc(&sc.assign_hflop.assign[i]),
+                    ]
+                })
+                .collect(),
+        );
+        report.table(
+            "scenario_edges",
+            &["edge", "capacity", "open_location", "open_hflop"],
+            (0..sc.topo.n_edges())
+                .map(|j| {
+                    vec![
+                        j as f64,
+                        sc.topo.edges[j].capacity,
+                        sc.assign_location.open[j] as u8 as f64,
+                        sc.assign_hflop.open[j] as u8 as f64,
+                    ]
+                })
+                .collect(),
+        );
+        Ok(report)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +324,22 @@ mod tests {
         let b = Scenario::build(tiny_cfg()).unwrap();
         assert_eq!(a.client_sensors, b.client_sensors);
         assert_eq!(a.assign_hflop.assign, b.assign_hflop.assign);
+    }
+
+    #[test]
+    fn experiment_trait_reports_world() {
+        use crate::config::params::{Params, Value};
+        use crate::experiments::registry::ExperimentCtx;
+        let mut p = Params::defaults(ScenarioExperiment.param_schema());
+        p.set("clients", Value::Int(12)).unwrap();
+        p.set("edges", Value::Int(3)).unwrap();
+        p.set("weeks", Value::Int(5)).unwrap();
+        let mut ctx = ExperimentCtx::cell(p);
+        let report = ScenarioExperiment.run(&mut ctx).unwrap();
+        assert_eq!(report.get_f64("n_devices").unwrap(), 12.0);
+        assert_eq!(report.get_f64("n_edges").unwrap(), 3.0);
+        assert!(report.get_f64("hflop_cost").unwrap() > 0.0);
+        assert_eq!(report.tables[0].rows.len(), 12);
+        assert_eq!(report.tables[1].rows.len(), 3);
     }
 }

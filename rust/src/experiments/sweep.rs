@@ -1,121 +1,137 @@
-//! Deterministic parallel scenario-sweep engine.
+//! Deterministic parallel scenario-sweep engine, rebuilt on the
+//! experiment registry (DESIGN.md §5/§8).
 //!
-//! Every headline artifact of the paper (Figs. 6–9, the §V-B1 table) is
-//! a *sweep*: many (scenario × seed × solver mode × environment) cells.
-//! This module turns that shape into a first-class engine:
+//! A [`SweepGrid`] is now fully declarative: **one registered experiment
+//! × three param-override axes (rows / modes / envs) × a seed range**.
+//! Each cell resolves the experiment's schema with the grid's base
+//! overrides, its axis-point overrides and a coordinate-hashed seed,
+//! runs the experiment through the [`registry::Experiment`] trait (quiet, no
+//! filesystem), and compacts the returned [`Report`] summary into a
+//! [`CellOutcome`]. Any experiment in the registry — including future
+//! budget-trigger / MaaS scenarios — becomes sweepable by declaring a
+//! grid; `sweep.rs` itself never changes. Compaction refuses reports
+//! flagged `mock = true` or lacking the standard serving keys, so a
+//! matrix can never silently fill with fabricated or zeroed numbers.
 //!
-//! * [`SweepGrid`] declares the grid — rows (static Fig. 7/8 setups or
-//!   `interference` co-sim presets) × a seed range × solver [`LsMode`] ×
-//!   environment configs (interference factor / speedup / λ-scale);
-//! * [`run_grid`] fans the cells over a scoped worker pool
-//!   (`util::pool`), reusing the PR 2 co-sim kernel and the PR 1
-//!   incremental solver inside each cell;
-//! * every cell's RNG seed is **hashed from its grid coordinates**
-//!   (`util::rng::mix_seed`) and each cell owns all of its state
-//!   (`inference::cosim::run_cell`), so the assembled [`SweepMatrix`] —
-//!   and its JSON — is **bit-identical regardless of worker count or
-//!   completion order** (`rust/tests/sweep_determinism.rs` holds this at
-//!   1, 2 and 8 workers, including under an injected slow cell);
-//! * [`SweepMatrix::to_json`] serializes via `util::json` into the
-//!   deterministic half of `BENCH_sweep.json` (cell wall-clock lives
-//!   outside it, in the driver's timing object).
+//! **Cell seeding.** A cell's RNG seed is
+//! `mix_seed(root, [row.coord, seed_base + s, mode.coord, env.coord])`.
+//! Axis points made with [`AxisPoint::hashed`] derive their coordinate
+//! word by hashing *the experiment name + their override set*
+//! ([`override_coord`]), so a point's stream is tied to what it runs,
+//! not to where it happens to sit in a `Vec`. The built-in
+//! `interference`/`fig7`/`fig8`/`smoke` grids instead pin the
+//! pre-registry integer coordinates ([`AxisPoint::pinned`]), which keeps
+//! their matrices **byte-identical to the pre-registry engine** — held
+//! by the golden-matrix regression test
+//! (`rust/tests/sweep_golden_matrix.rs`, 1 and 8 workers).
 //!
-//! Drivers: `hflop sweep` (CLI), `examples/sweep.rs`, and
-//! `benches/bench_sweep.rs` (which records the serial-vs-parallel
-//! wall-clock the ROADMAP's perf trajectory tracks).
+//! Execution and merge semantics are unchanged from PR 3: cells fan out
+//! over `util::pool::scoped_map`, results land in grid (row-major)
+//! order, per-cell wall time is excluded from [`SweepMatrix::to_json`]
+//! (the determinism contract, now stamped with
+//! [`metrics::export::SCHEMA_VERSION`]), and
+//! `rust/tests/sweep_determinism.rs` holds byte-identity at 1/2/8
+//! workers including under an injected slow cell.
+//!
+//! Known tradeoff: cells are fully self-contained, so each one rebuilds
+//! its `Scenario` from params (the pre-registry engine shared one per
+//! grid). The build is deterministic — results are unaffected — but
+//! per-cell wall time now includes it; treat `BENCH_sweep.json` timing
+//! across the PR 3 → PR 4 boundary accordingly.
 
-use crate::experiments::interference::{self, InterferenceConfig, Preset};
-use crate::experiments::scenario::{Scenario, ScenarioConfig};
-use crate::inference::simulation::{simulate, ServingConfig};
-use crate::inference::LatencyModel;
-use crate::metrics::cost::{flat_fl_bytes, hfl_bytes};
-use crate::solver::{LocalSearchOptions, LsMode, Mode, SolveOptions};
+use crate::config::params::{value_repr, Params, Value};
+use crate::experiments::registry::{self, ExperimentCtx, Report};
+use crate::metrics::export::SCHEMA_VERSION;
 use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::rng::mix_seed;
 
-/// Which fixed assignment a static (serving-only) row simulates.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum StaticSetup {
-    /// Flat FL: no aggregators, every request direct to cloud.
-    Flat,
-    /// Location-clustered (capacity-blind) assignment.
-    Location,
-    /// The scenario's HFLOP (capacity-aware) assignment.
-    Hflop,
-}
-
-/// What one grid row runs per cell.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Workload {
-    /// The Fig. 7/8 static serving fast path.
-    Static(StaticSetup),
-    /// A joint-timeline co-simulation preset (orchestrator in the loop).
-    Cosim(Preset),
-}
-
-/// One named grid row.
+/// One point on a grid axis: a label segment for the cell's
+/// `row/s<seed>/mode/env` label, the param overrides the point applies,
+/// and the `mix_seed` coordinate word identifying it.
 #[derive(Debug, Clone)]
-pub struct RowSpec {
-    pub name: &'static str,
-    pub workload: Workload,
-}
-
-/// One environment configuration (the grid's fourth axis).
-#[derive(Debug, Clone)]
-pub struct EnvSpec {
+pub struct AxisPoint {
     pub name: String,
-    /// Serving-capacity multiplier while an edge trains (co-sim rows).
-    pub interference_factor: f64,
-    /// Edge→cloud compute speedup in [0, 0.95] (static rows, Fig. 8).
-    pub speedup: f64,
-    /// Scale factor on every λ_i.
-    pub lambda_scale: f64,
+    pub overrides: Vec<(String, Value)>,
+    pub coord: u64,
 }
 
-impl Default for EnvSpec {
-    fn default() -> Self {
-        EnvSpec { name: "base".into(), interference_factor: 0.25, speedup: 0.0, lambda_scale: 1.0 }
+impl AxisPoint {
+    /// A point with an explicitly pinned coordinate word. The built-in
+    /// grids pin the pre-registry integer coordinates so their cell
+    /// seeds (and matrices) stay byte-identical across the redesign.
+    pub fn pinned(coord: u64, name: &str, overrides: Vec<(String, Value)>) -> AxisPoint {
+        AxisPoint { name: name.to_string(), overrides, coord }
+    }
+
+    /// A point whose coordinate word hashes the experiment name and the
+    /// override set — the default for newly declared grids: reordering
+    /// or extending an axis never changes an existing point's seeds.
+    pub fn hashed(experiment: &str, name: &str, overrides: Vec<(String, Value)>) -> AxisPoint {
+        let coord = override_coord(experiment, &overrides);
+        AxisPoint { name: name.to_string(), overrides, coord }
+    }
+
+    /// A neutral singleton (no overrides, coordinate 0) for unused axes.
+    pub fn neutral(name: &str) -> AxisPoint {
+        AxisPoint::pinned(0, name, Vec::new())
     }
 }
 
-/// Stable short name for an [`LsMode`] axis entry.
-pub fn mode_name(mode: LsMode) -> &'static str {
-    match mode {
-        LsMode::Auto => "auto",
-        LsMode::Completion => "completion",
-        LsMode::Incremental => "incremental",
+/// FNV-1a over bytes, the stable word hash under [`override_coord`].
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
+    h
 }
 
-/// Solve options that pin the control plane's re-solves to one
-/// local-search engine (the sweep's solver axis).
-pub fn solve_options(mode: LsMode) -> SolveOptions {
-    SolveOptions {
-        mode: Mode::Heuristic,
-        ls: LocalSearchOptions { mode, ..Default::default() },
-        ..SolveOptions::exact()
+/// Hash an experiment name + override set into a `mix_seed` coordinate
+/// word. Overrides are canonicalized (sorted by key, values through
+/// `config::params::value_repr`) so declaration order cannot leak into
+/// cell seeds.
+pub fn override_coord(experiment: &str, overrides: &[(String, Value)]) -> u64 {
+    let mut words = vec![fnv1a(experiment.as_bytes())];
+    let mut sorted: Vec<&(String, Value)> = overrides.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    for (key, value) in sorted {
+        words.push(fnv1a(key.as_bytes()));
+        words.push(fnv1a(value_repr(value).as_bytes()));
     }
+    mix_seed(0x9E37_79B9_7F4A_7C15, &words)
 }
 
-/// The declarative sweep: rows × seeds × solver modes × environments.
+/// The declarative sweep: one registered experiment × override axes ×
+/// a seed range.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
-    pub name: &'static str,
-    /// Shared world built once per grid (all cells read it immutably).
-    pub scenario: ScenarioConfig,
-    pub rows: Vec<RowSpec>,
-    /// Seed axis: scenario-replication seeds `seed_base..seed_base+n`.
+    pub name: String,
+    /// Registry name of the experiment every cell runs.
+    pub experiment: String,
+    /// Overrides applied to every cell (the grid's fixed world).
+    pub base: Vec<(String, Value)>,
+    /// Primary axis (scenario presets / setups).
+    pub rows: Vec<AxisPoint>,
+    /// Secondary axis (solver engines in the built-in grids).
+    pub modes: Vec<AxisPoint>,
+    /// Environment axis (interference factor / speedup / λ-scale).
+    pub envs: Vec<AxisPoint>,
+    /// Seed axis: replication seeds `seed_base..seed_base + n_seeds`.
     pub seed_base: u64,
     pub n_seeds: usize,
-    pub modes: Vec<LsMode>,
-    pub envs: Vec<EnvSpec>,
-    /// Simulated wall time per cell (s).
+    /// Which experiment parameter receives the per-cell seed.
+    pub seed_key: String,
+    /// Simulated horizon recorded in the matrix header (kept in sync
+    /// with the grid's `duration_s` override by the constructors).
     pub duration_s: f64,
-    /// Serialized model size for comm-volume accounting.
-    pub model_bytes: usize,
     /// Root of the per-cell seed derivation.
     pub root_seed: u64,
+}
+
+fn ov(key: &str, value: Value) -> (String, Value) {
+    (key.to_string(), value)
 }
 
 impl SweepGrid {
@@ -124,27 +140,42 @@ impl SweepGrid {
     /// 32 cells over the full co-sim (the acceptance grid).
     pub fn interference(root_seed: u64) -> SweepGrid {
         SweepGrid {
-            name: "interference",
-            scenario: ScenarioConfig {
-                n_clients: 20,
-                n_edges: 4,
-                weeks: 5,
-                balanced_clients: false,
-                ..Default::default()
-            },
-            rows: Preset::ALL
+            name: "interference".into(),
+            experiment: "interference".into(),
+            base: vec![
+                ov("clients", Value::Int(20)),
+                ov("edges", Value::Int(4)),
+                ov("weeks", Value::Int(5)),
+                ov("balanced", Value::Bool(false)),
+                ov("duration_s", Value::Float(240.0)),
+                ov("model_bytes", Value::Int(4 * 65_536)),
+            ],
+            rows: crate::experiments::interference::Preset::ALL
                 .iter()
-                .map(|&p| RowSpec { name: p.name(), workload: Workload::Cosim(p) })
+                .enumerate()
+                .map(|(i, p)| {
+                    AxisPoint::pinned(
+                        i as u64,
+                        p.name(),
+                        vec![ov("preset", Value::Str(p.name().into()))],
+                    )
+                })
                 .collect(),
+            modes: ["completion", "incremental"]
+                .iter()
+                .enumerate()
+                .map(|(i, m)| {
+                    AxisPoint::pinned(i as u64, m, vec![ov("ls_mode", Value::Str((*m).into()))])
+                })
+                .collect(),
+            envs: vec![
+                AxisPoint::pinned(0, "if0.25", vec![ov("interference_factor", Value::Float(0.25))]),
+                AxisPoint::pinned(1, "if1.0", vec![ov("interference_factor", Value::Float(1.0))]),
+            ],
             seed_base: 0,
             n_seeds: 2,
-            modes: vec![LsMode::Completion, LsMode::Incremental],
-            envs: vec![
-                EnvSpec { name: "if0.25".into(), interference_factor: 0.25, ..Default::default() },
-                EnvSpec { name: "if1.0".into(), interference_factor: 1.0, ..Default::default() },
-            ],
+            seed_key: "seed".into(),
             duration_s: 240.0,
-            model_bytes: 4 * 65_536,
             root_seed,
         }
     }
@@ -152,72 +183,146 @@ impl SweepGrid {
     /// CI smoke grid: still ≥ 24 cells but a small world and a short
     /// horizon, so `sweep --smoke` finishes in seconds.
     pub fn smoke(root_seed: u64) -> SweepGrid {
-        SweepGrid {
-            name: "smoke",
-            scenario: ScenarioConfig {
-                n_clients: 12,
-                n_edges: 3,
-                weeks: 5,
-                balanced_clients: false,
-                ..Default::default()
-            },
-            n_seeds: 3,
-            envs: vec![EnvSpec {
-                name: "if0.25".into(),
-                interference_factor: 0.25,
-                lambda_scale: 0.5,
-                ..Default::default()
-            }],
-            duration_s: 60.0,
-            ..Self::interference(root_seed)
-        }
+        let mut g = SweepGrid::interference(root_seed);
+        g.name = "smoke".into();
+        g.set_base("clients", Value::Int(12));
+        g.set_base("edges", Value::Int(3));
+        g.set_base("duration_s", Value::Float(60.0));
+        g.duration_s = 60.0;
+        g.n_seeds = 3;
+        g.envs = vec![AxisPoint::pinned(
+            0,
+            "if0.25",
+            vec![
+                ov("interference_factor", Value::Float(0.25)),
+                ov("lambda_scale", Value::Float(0.5)),
+            ],
+        )];
+        g
     }
 
-    /// Fig. 7 as grid rows: the three static setups × replication seeds.
+    /// Fig. 7 as grid rows: the three static setups × replication seeds,
+    /// each cell a single-setup `fig7` serving simulation.
     pub fn fig7(root_seed: u64) -> SweepGrid {
         SweepGrid {
-            name: "fig7",
-            scenario: ScenarioConfig {
-                n_clients: 20,
-                n_edges: 4,
-                weeks: 5,
-                balanced_clients: false,
-                ..Default::default()
-            },
-            rows: vec![
-                RowSpec { name: "flat", workload: Workload::Static(StaticSetup::Flat) },
-                RowSpec { name: "location", workload: Workload::Static(StaticSetup::Location) },
-                RowSpec { name: "hflop", workload: Workload::Static(StaticSetup::Hflop) },
+            name: "fig7".into(),
+            experiment: "fig7".into(),
+            base: vec![
+                ov("clients", Value::Int(20)),
+                ov("edges", Value::Int(4)),
+                ov("weeks", Value::Int(5)),
+                ov("balanced", Value::Bool(false)),
+                ov("duration_s", Value::Float(120.0)),
+                ov("model_bytes", Value::Int(4 * 65_536)),
             ],
+            rows: ["flat", "location", "hflop"]
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    AxisPoint::pinned(i as u64, s, vec![ov("setup", Value::Str((*s).into()))])
+                })
+                .collect(),
+            modes: vec![AxisPoint::neutral("auto")],
+            envs: vec![AxisPoint::neutral("base")],
             seed_base: 0,
             n_seeds: 6,
-            modes: vec![LsMode::Auto],
-            envs: vec![EnvSpec { interference_factor: 1.0, ..Default::default() }],
+            seed_key: "seed".into(),
             duration_s: 120.0,
-            model_bytes: 4 * 65_536,
             root_seed,
         }
     }
 
     /// Fig. 8b as grid rows: the three static setups × a speedup axis at
-    /// λ×10 (the saturated regime with the paper's crossover).
+    /// λ×10 (the saturated regime with the paper's crossover). Runs the
+    /// `fig7` experiment — the speedup study *is* the Fig. 7 serving
+    /// fast path under different environments.
     pub fn fig8(root_seed: u64) -> SweepGrid {
-        SweepGrid {
-            name: "fig8",
-            n_seeds: 2,
-            envs: (0..=5)
-                .map(|i| {
-                    let sp = i as f64 * 0.19;
-                    EnvSpec {
-                        name: format!("sp{sp:.2}"),
-                        interference_factor: 1.0,
-                        speedup: sp,
-                        lambda_scale: 10.0,
-                    }
-                })
-                .collect(),
-            duration_s: 60.0,
-            ..Self::fig7(root_seed)
+        let mut g = SweepGrid::fig7(root_seed);
+        g.name = "fig8".into();
+        g.set_base("duration_s", Value::Float(60.0));
+        g.set_base("lambda_scale", Value::Float(10.0));
+        g.duration_s = 60.0;
+        g.n_seeds = 2;
+        g.envs = (0..=5)
+            .map(|i| {
+                let sp = i as f64 * 0.19;
+                AxisPoint::pinned(
+                    i as u64,
+                    &format!("sp{sp:.2}"),
+                    vec![ov("speedup", Value::Float(sp))],
+                )
+            })
+            .collect();
+        g
+    }
+
+    /// Built-in grid lookup for the CLI.
+    pub fn by_name(name: &str, root_seed: u64) -> Option<SweepGrid> {
+        match name {
+            "interference" => Some(SweepGrid::interference(root_seed)),
+            "smoke" => Some(SweepGrid::smoke(root_seed)),
+            "fig7" => Some(SweepGrid::fig7(root_seed)),
+            "fig8" => Some(SweepGrid::fig8(root_seed)),
+            _ => None,
+        }
+    }
+
+    pub const BUILTIN: [&'static str; 4] = ["interference", "smoke", "fig7", "fig8"];
+
+    /// A custom grid over any registered experiment (the
+    /// `hflop sweep --experiment ...` path). Axis points get hashed
+    /// coordinates; the matrix-header duration comes from the
+    /// experiment's `duration_s` schema default unless the base
+    /// overrides it.
+    pub fn custom(
+        experiment: &str,
+        base: Vec<(String, Value)>,
+        rows: Vec<AxisPoint>,
+        modes: Vec<AxisPoint>,
+        envs: Vec<AxisPoint>,
+        n_seeds: usize,
+        root_seed: u64,
+    ) -> anyhow::Result<SweepGrid> {
+        let exp = registry::lookup(experiment)?;
+        anyhow::ensure!(
+            exp.param_schema().iter().any(|s| s.key == "seed"),
+            "experiment '{experiment}' declares no 'seed' parameter and cannot be swept"
+        );
+        let mut duration_s = exp
+            .param_schema()
+            .iter()
+            .find(|s| s.key == "duration_s")
+            .and_then(|s| match s.default {
+                crate::config::params::ParamDefault::Float(f) => Some(f),
+                crate::config::params::ParamDefault::Int(i) => Some(i as f64),
+                _ => None,
+            })
+            .unwrap_or(0.0);
+        if let Some((_, v)) = base.iter().rev().find(|(k, _)| k == "duration_s") {
+            if let Some(f) = v.as_f64() {
+                duration_s = f;
+            }
+        }
+        Ok(SweepGrid {
+            name: format!("custom-{experiment}"),
+            experiment: experiment.to_string(),
+            base,
+            rows,
+            modes,
+            envs,
+            seed_base: 0,
+            n_seeds,
+            seed_key: "seed".into(),
+            duration_s,
+            root_seed,
+        })
+    }
+
+    /// Replace (or append) one base override.
+    pub fn set_base(&mut self, key: &str, value: Value) {
+        match self.base.iter_mut().find(|(k, _)| k == key) {
+            Some(slot) => slot.1 = value,
+            None => self.base.push(ov(key, value)),
         }
     }
 
@@ -239,13 +344,47 @@ impl SweepGrid {
     }
 
     /// The cell's RNG seed, hashed from the root seed and the cell's
-    /// grid coordinates — never from execution order.
+    /// axis coordinate words — never from execution order.
     pub fn cell_seed(&self, r: usize, s: usize, m: usize, e: usize) -> u64 {
-        mix_seed(self.root_seed, &[r as u64, self.seed_base + s as u64, m as u64, e as u64])
+        mix_seed(
+            self.root_seed,
+            &[
+                self.rows[r].coord,
+                self.seed_base + s as u64,
+                self.modes[m].coord,
+                self.envs[e].coord,
+            ],
+        )
+    }
+
+    /// `row/s<seed>/<mode>/<env>`.
+    pub fn cell_label(&self, r: usize, s: usize, m: usize, e: usize) -> String {
+        format!(
+            "{}/s{}/{}/{}",
+            self.rows[r].name,
+            self.seed_base + s as u64,
+            self.modes[m].name,
+            self.envs[e].name
+        )
+    }
+
+    /// Resolve the full parameter set of one cell: base ← row ← mode ←
+    /// env ← per-cell seed, all schema-checked against the experiment.
+    pub fn cell_params(&self, r: usize, s: usize, m: usize, e: usize) -> anyhow::Result<Params> {
+        let exp = registry::lookup(&self.experiment)?;
+        let mut sets = self.base.clone();
+        sets.extend(self.rows[r].overrides.iter().cloned());
+        sets.extend(self.modes[m].overrides.iter().cloned());
+        sets.extend(self.envs[e].overrides.iter().cloned());
+        let seed = self.cell_seed(r, s, m, e);
+        sets.push((self.seed_key.clone(), Value::Int(seed as i64)));
+        Params::resolve(exp.param_schema(), None, &sets)
     }
 }
 
-/// Compact, fully deterministic outcome of one sweep cell.
+/// Compact, fully deterministic outcome of one sweep cell, extracted
+/// from the experiment's [`Report`] summary (missing keys read as 0 —
+/// e.g. static serving cells have no training counters).
 #[derive(Debug, Clone)]
 pub struct CellOutcome {
     pub row: usize,
@@ -287,6 +426,50 @@ pub struct CellOutcome {
 }
 
 impl CellOutcome {
+    /// Compact an experiment report into a cell (standard summary keys;
+    /// values pass through as the `f64`s the experiment wrote, which is
+    /// what keeps the registry path bit-identical to the old direct
+    /// cell runner).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_report(
+        (r, s, m, e): (usize, usize, usize, usize),
+        label: String,
+        cell_seed: u64,
+        report: &Report,
+        wall_s: f64,
+    ) -> CellOutcome {
+        let g = |k: &str| report.get_f64(k).unwrap_or(0.0);
+        CellOutcome {
+            row: r,
+            seed_idx: s,
+            mode_idx: m,
+            env_idx: e,
+            label,
+            cell_seed,
+            requests: g("requests") as u64,
+            served_at_edge: g("served_at_edge") as u64,
+            spilled_to_cloud: g("spilled_to_cloud") as u64,
+            direct_to_cloud: g("direct_to_cloud") as u64,
+            spill_fraction: g("spill_fraction"),
+            mean_ms: g("mean_ms"),
+            std_ms: g("std_ms"),
+            min_ms: g("min_ms"),
+            max_ms: g("max_ms"),
+            p50_ms: g("p50_ms"),
+            p90_ms: g("p90_ms"),
+            p99_ms: g("p99_ms"),
+            rounds_completed: g("rounds_completed") as usize,
+            plan_swaps: g("plan_swaps") as usize,
+            reclusters: g("reclusters") as usize,
+            retrain_triggers: g("retrain_triggers") as usize,
+            events_processed: g("events_processed") as u64,
+            events_cancelled: g("events_cancelled") as u64,
+            eq1_cost: g("eq1_cost"),
+            comm_gb: g("comm_gb"),
+            wall_s,
+        }
+    }
+
     /// Deterministic JSON view (everything except `wall_s`).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -322,6 +505,7 @@ impl CellOutcome {
 pub struct SweepMatrix {
     pub grid_name: String,
     pub root_seed: u64,
+    pub experiment: String,
     pub row_names: Vec<String>,
     pub seeds: Vec<u64>,
     pub mode_names: Vec<String>,
@@ -333,14 +517,17 @@ pub struct SweepMatrix {
 impl SweepMatrix {
     /// The deterministic sweep artifact (the `matrix` half of
     /// `BENCH_sweep.json`): bit-identical for a given grid + root seed
-    /// at any worker count.
+    /// at any worker count. Carries `schema_version` since v2
+    /// (DESIGN.md §8 compatibility note).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
             (
                 "grid",
                 Json::obj(vec![
                     ("name", Json::Str(self.grid_name.clone())),
                     ("root_seed", Json::Num(self.root_seed as f64)),
+                    ("experiment", Json::Str(self.experiment.clone())),
                     ("rows", str_arr(&self.row_names)),
                     (
                         "seeds",
@@ -393,112 +580,47 @@ fn str_arr(xs: &[String]) -> Json {
     Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect())
 }
 
-/// Run one cell by flat index against the shared scenario. Pure in the
-/// functional sense: output depends only on `(sc, grid, idx)`.
-fn run_cell_at(sc: &Scenario, grid: &SweepGrid, idx: usize) -> anyhow::Result<CellOutcome> {
+/// Run one cell by flat index: resolve its params, run the registered
+/// experiment through the trait (quiet, no sink), compact the report.
+/// Pure in the functional sense: output depends only on `(grid, idx)`.
+fn run_cell_at(grid: &SweepGrid, idx: usize) -> anyhow::Result<CellOutcome> {
     let (r, s, m, e) = grid.coords(idx);
-    let row = &grid.rows[r];
-    let env = &grid.envs[e];
-    let mode = grid.modes[m];
     let seed = grid.cell_seed(r, s, m, e);
-    let label =
-        format!("{}/s{}/{}/{}", row.name, grid.seed_base + s as u64, mode_name(mode), env.name);
+    let label = grid.cell_label(r, s, m, e);
     let t0 = std::time::Instant::now();
-
-    let mut rounds_completed = 0usize;
-    let mut plan_swaps = 0usize;
-    let mut reclusters = 0usize;
-    let mut retrain_triggers = 0usize;
-    let mut events_processed = 0u64;
-    let mut events_cancelled = 0u64;
-    let serving = match row.workload {
-        Workload::Static(setup) => {
-            let assign = match setup {
-                StaticSetup::Flat => vec![None; sc.topo.n_devices()],
-                StaticSetup::Location => sc.assign_location.assign.clone(),
-                StaticSetup::Hflop => sc.assign_hflop.assign.clone(),
-            };
-            let cfg = ServingConfig {
-                assign,
-                lambda: sc.lambdas().iter().map(|l| l * env.lambda_scale).collect(),
-                capacity: sc.capacities(),
-                latency: LatencyModel::default().with_speedup(env.speedup.min(0.95)),
-                duration_s: grid.duration_s,
-                queue_window_s: 0.05,
-                seed,
-            };
-            simulate(&cfg)
-        }
-        Workload::Cosim(preset) => {
-            let cfg = InterferenceConfig {
-                preset,
-                duration_s: grid.duration_s,
-                interference_factor: env.interference_factor,
-                lambda_scale: env.lambda_scale,
-                model_bytes: grid.model_bytes,
-                solve: solve_options(mode),
-                seed,
-                ..Default::default()
-            };
-            let out = interference::run(sc, &cfg)?;
-            rounds_completed = out.rounds_completed;
-            plan_swaps = out.plan_swaps;
-            reclusters = out.reclusters;
-            retrain_triggers = out.retrain_triggers;
-            events_processed = out.events_processed;
-            events_cancelled = out.events_cancelled;
-            out.serving
-        }
-    };
-
-    // Eq. 1 cost of the cell's (initial) deployment plan and the metered
-    // traffic its training activity predicts (static rows use the
-    // paper's nominal 100 aggregation rounds).
-    let (eq1_cost, comm_rounds) = match row.workload {
-        Workload::Static(StaticSetup::Flat) => (0.0, 100),
-        Workload::Static(StaticSetup::Location) => (sc.assign_location.cost(&sc.inst), 100),
-        Workload::Static(StaticSetup::Hflop) => (sc.hflop_cost, 100),
-        Workload::Cosim(_) => (sc.hflop_cost, rounds_completed),
-    };
-    let comm_bytes = match row.workload {
-        Workload::Static(StaticSetup::Flat) => {
-            flat_fl_bytes(sc.topo.n_devices(), comm_rounds, grid.model_bytes)
-        }
-        Workload::Static(StaticSetup::Location) => {
-            hfl_bytes(&sc.inst, &sc.assign_location, comm_rounds, grid.model_bytes)
-        }
-        _ => hfl_bytes(&sc.inst, &sc.assign_hflop, comm_rounds, grid.model_bytes),
-    };
-
-    Ok(CellOutcome {
-        row: r,
-        seed_idx: s,
-        mode_idx: m,
-        env_idx: e,
+    let exp = registry::lookup(&grid.experiment)?;
+    let params = grid.cell_params(r, s, m, e)?;
+    let report = exp
+        .run(&mut ExperimentCtx::cell(params))
+        .map_err(|err| err.context(format!("sweep cell {label}")))?;
+    // Two honesty guards before compaction. Mock-gated experiments
+    // (fig6/cl) mark fabricated results with `mock = true`: those must
+    // never be laundered into a matrix of real-looking numbers. And a
+    // report without the standard serving keys would zero-fill every
+    // cell field — a silent all-zero BENCH_sweep.json — so reject it
+    // with a pointer to a serving-shaped mode instead.
+    anyhow::ensure!(
+        report.summary.get("mock").and_then(Json::as_bool) != Some(true),
+        "sweep cell {label}: experiment '{}' produced MOCK-runtime results, which must not \
+         enter a sweep matrix as real numbers (build the PJRT artifacts, or sweep a \
+         serving-shaped experiment)",
+        grid.experiment
+    );
+    anyhow::ensure!(
+        report.get_f64("requests").is_some(),
+        "sweep cell {label}: experiment '{}' reported no serving metrics ('requests' missing), \
+         so every cell field would read 0 — select a serving-shaped mode on the row axis \
+         (e.g. fig7 --rows setup=flat,location,hflop or an interference preset; setup=all, \
+         fig6 and cl reports are not sweep-compatible)",
+        grid.experiment
+    );
+    Ok(CellOutcome::from_report(
+        (r, s, m, e),
         label,
-        cell_seed: seed,
-        requests: serving.total(),
-        served_at_edge: serving.served_at_edge,
-        spilled_to_cloud: serving.spilled_to_cloud,
-        direct_to_cloud: serving.direct_to_cloud,
-        spill_fraction: serving.spill_fraction(),
-        mean_ms: serving.latency.mean(),
-        std_ms: serving.latency.std(),
-        min_ms: serving.latency.min(),
-        max_ms: serving.latency.max(),
-        p50_ms: serving.percentiles.p50(),
-        p90_ms: serving.percentiles.p90(),
-        p99_ms: serving.percentiles.p99(),
-        rounds_completed,
-        plan_swaps,
-        reclusters,
-        retrain_triggers,
-        events_processed,
-        events_cancelled,
-        eq1_cost,
-        comm_gb: comm_bytes as f64 / 1e9,
-        wall_s: t0.elapsed().as_secs_f64(),
-    })
+        seed,
+        &report,
+        t0.elapsed().as_secs_f64(),
+    ))
 }
 
 /// Fan the grid over `workers` pool threads and merge the outcomes into
@@ -517,18 +639,19 @@ pub fn run_grid_with_hook(
     pre_cell: impl Fn(usize) + Sync,
 ) -> anyhow::Result<SweepMatrix> {
     anyhow::ensure!(grid.n_cells() > 0, "empty sweep grid");
-    let sc = Scenario::build(grid.scenario.clone())?;
+    registry::lookup(&grid.experiment)?;
     let results = pool::scoped_map(workers, grid.n_cells(), |i| {
         pre_cell(i);
-        run_cell_at(&sc, grid, i)
+        run_cell_at(grid, i)
     });
     let cells = results.into_iter().collect::<anyhow::Result<Vec<_>>>()?;
     Ok(SweepMatrix {
-        grid_name: grid.name.to_string(),
+        grid_name: grid.name.clone(),
         root_seed: grid.root_seed,
-        row_names: grid.rows.iter().map(|r| r.name.to_string()).collect(),
+        experiment: grid.experiment.clone(),
+        row_names: grid.rows.iter().map(|r| r.name.clone()).collect(),
         seeds: (0..grid.n_seeds).map(|s| grid.seed_base + s as u64).collect(),
-        mode_names: grid.modes.iter().map(|&m| mode_name(m).to_string()).collect(),
+        mode_names: grid.modes.iter().map(|m| m.name.clone()).collect(),
         env_names: grid.envs.iter().map(|e| e.name.clone()).collect(),
         duration_s: grid.duration_s,
         cells,
@@ -539,25 +662,20 @@ pub fn run_grid_with_hook(
 mod tests {
     use super::*;
 
+    /// A fast 4-cell grid: one static fig7 row is impossible in a
+    /// single-experiment grid, so the tiny grid runs the co-sim
+    /// experiment with a short horizon and a small world.
     fn tiny() -> SweepGrid {
-        SweepGrid {
-            scenario: ScenarioConfig {
-                n_clients: 12,
-                n_edges: 3,
-                weeks: 5,
-                balanced_clients: false,
-                ..Default::default()
-            },
-            rows: vec![
-                RowSpec { name: "flat", workload: Workload::Static(StaticSetup::Flat) },
-                RowSpec { name: "steady", workload: Workload::Cosim(Preset::Steady) },
-            ],
-            n_seeds: 2,
-            modes: vec![LsMode::Incremental],
-            envs: vec![EnvSpec { lambda_scale: 0.5, ..Default::default() }],
-            duration_s: 20.0,
-            ..SweepGrid::interference(7)
-        }
+        let mut g = SweepGrid::interference(7);
+        g.set_base("clients", Value::Int(12));
+        g.set_base("edges", Value::Int(3));
+        g.set_base("duration_s", Value::Float(20.0));
+        g.set_base("lambda_scale", Value::Float(0.5));
+        g.duration_s = 20.0;
+        g.rows.truncate(2); // steady, diurnal-surge
+        g.modes.truncate(1); // completion
+        g.envs.truncate(1); // if0.25
+        g
     }
 
     #[test]
@@ -592,27 +710,146 @@ mod tests {
     }
 
     #[test]
-    fn tiny_grid_runs_and_merges_in_order() {
-        let m = run_grid(&tiny(), 2).unwrap();
-        assert_eq!(m.cells.len(), 4);
-        for (i, c) in m.cells.iter().enumerate() {
-            let (r, s, mo, e) = tiny().coords(i);
-            assert_eq!((c.row, c.seed_idx, c.mode_idx, c.env_idx), (r, s, mo, e));
-            assert!(c.requests > 0, "cell {} served nothing", c.label);
+    fn builtin_grid_cells_resolve_against_their_schemas() {
+        // Every base/axis override of every built-in grid must name a
+        // declared parameter of the grid's experiment — a drifting key
+        // would otherwise only explode at run time.
+        for name in SweepGrid::BUILTIN {
+            let g = SweepGrid::by_name(name, 1).unwrap();
+            for idx in 0..g.n_cells() {
+                let (r, s, m, e) = g.coords(idx);
+                g.cell_params(r, s, m, e)
+                    .unwrap_or_else(|err| panic!("grid {name} cell {idx}: {err}"));
+            }
         }
-        // Static flat rows serve everything at the cloud; the co-sim row
-        // trains on the timeline.
-        assert!(m.cells[0].direct_to_cloud > 0);
-        assert_eq!(m.cells[0].rounds_completed, 0);
-        assert!(m.cells[2].rounds_completed >= 1);
     }
 
     #[test]
-    fn matrix_json_excludes_wall_clock() {
+    fn hashed_coords_depend_on_experiment_and_overrides_not_order() {
+        let a = override_coord("fig7", &[ov("setup", Value::Str("flat".into()))]);
+        let b = override_coord("fig7", &[ov("setup", Value::Str("hflop".into()))]);
+        let c = override_coord("interference", &[ov("setup", Value::Str("flat".into()))]);
+        assert_ne!(a, b, "override value must reach the coord");
+        assert_ne!(a, c, "experiment name must reach the coord");
+        // Canonicalization: declaration order does not matter.
+        let x = override_coord(
+            "fig7",
+            &[ov("a", Value::Int(1)), ov("b", Value::Int(2))],
+        );
+        let y = override_coord(
+            "fig7",
+            &[ov("b", Value::Int(2)), ov("a", Value::Int(1))],
+        );
+        assert_eq!(x, y);
+        // And the empty set is stable.
+        assert_eq!(override_coord("fig7", &[]), override_coord("fig7", &[]));
+    }
+
+    #[test]
+    fn tiny_grid_runs_and_merges_in_order() {
+        let g = tiny();
+        let m = run_grid(&g, 2).unwrap();
+        assert_eq!(m.cells.len(), 4);
+        for (i, c) in m.cells.iter().enumerate() {
+            let (r, s, mo, e) = g.coords(i);
+            assert_eq!((c.row, c.seed_idx, c.mode_idx, c.env_idx), (r, s, mo, e));
+            assert!(c.requests > 0, "cell {} served nothing", c.label);
+        }
+        // Co-sim rows train on the timeline.
+        assert!(m.cells.iter().all(|c| c.rounds_completed >= 1));
+        assert_eq!(m.experiment, "interference");
+    }
+
+    #[test]
+    fn custom_grid_over_fig7_runs_static_cells() {
+        let g = SweepGrid::custom(
+            "fig7",
+            vec![
+                ov("clients", Value::Int(12)),
+                ov("edges", Value::Int(3)),
+                ov("duration_s", Value::Float(15.0)),
+            ],
+            vec![
+                AxisPoint::hashed("fig7", "flat", vec![ov("setup", Value::Str("flat".into()))]),
+                AxisPoint::hashed("fig7", "hflop", vec![ov("setup", Value::Str("hflop".into()))]),
+            ],
+            vec![AxisPoint::neutral("auto")],
+            vec![AxisPoint::neutral("base")],
+            2,
+            9,
+        )
+        .unwrap();
+        assert_eq!(g.n_cells(), 4);
+        // Header duration falls back to the base override.
+        assert!((g.duration_s - 15.0).abs() < 1e-12);
+        let m = run_grid(&g, 2).unwrap();
+        // Static flat rows serve everything at the cloud and never train.
+        assert!(m.cells[0].direct_to_cloud > 0);
+        assert_eq!(m.cells[0].rounds_completed, 0);
+        assert!(m.cells.iter().all(|c| c.requests > 100));
+        // Distinct hashed row coords -> distinct seeds at equal indices.
+        assert_ne!(m.cells[0].cell_seed, m.cells[2].cell_seed);
+    }
+
+    #[test]
+    fn custom_grid_rejects_unknown_experiment_and_unsweepable_schema() {
+        assert!(SweepGrid::custom("fig11", vec![], vec![], vec![], vec![], 1, 0).is_err());
+    }
+
+    #[test]
+    fn mock_backed_cells_are_rejected() {
+        // Sweeping a mock-gated experiment must not launder fabricated
+        // numbers into a matrix: the cell fails with a MOCK error.
+        let g = SweepGrid::custom(
+            "cl",
+            vec![
+                ov("runtime", Value::Str("mock".into())),
+                ov("weeks", Value::Int(6)),
+                ov("initial_steps", Value::Int(60)),
+                ov("steps_per_shift", Value::Int(20)),
+            ],
+            vec![AxisPoint::hashed("cl", "drift", vec![ov("drift_scale", Value::Float(2.0))])],
+            vec![AxisPoint::neutral("base")],
+            vec![AxisPoint::neutral("base")],
+            1,
+            5,
+        )
+        .unwrap();
+        let err = run_grid(&g, 1).unwrap_err().to_string();
+        assert!(err.contains("MOCK"), "{err}");
+    }
+
+    #[test]
+    fn non_serving_reports_are_rejected_not_zero_filled() {
+        // `--experiment fig7` without a row axis leaves setup=all, whose
+        // report has none of the standard serving keys; the old behavior
+        // silently compacted it to an all-zero matrix.
+        let g = SweepGrid::custom(
+            "fig7",
+            vec![
+                ov("clients", Value::Int(12)),
+                ov("edges", Value::Int(3)),
+                ov("duration_s", Value::Float(8.0)),
+                ov("reps", Value::Int(1)),
+            ],
+            vec![AxisPoint::neutral("all")],
+            vec![AxisPoint::neutral("base")],
+            vec![AxisPoint::neutral("base")],
+            1,
+            5,
+        )
+        .unwrap();
+        let err = run_grid(&g, 1).unwrap_err().to_string();
+        assert!(err.contains("no serving metrics"), "{err}");
+    }
+
+    #[test]
+    fn matrix_json_excludes_wall_clock_and_carries_schema_version() {
         let m = run_grid(&tiny(), 1).unwrap();
         let text = m.to_json().to_pretty();
         assert!(!text.contains("wall"), "wall-clock leaked into the deterministic matrix");
         assert!(text.contains("\"cells\""));
+        assert!(text.contains("\"schema_version\""));
         assert!(Json::parse(&text).is_ok());
         assert!(m.total_cell_wall_s() > 0.0);
     }

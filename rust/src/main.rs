@@ -4,24 +4,34 @@
 //!   solve       solve one HFLOP instance (synthetic generators or sweep)
 //!   train       run continual hierarchical FL on the PJRT runtime
 //!   serve       run the real batched-serving hot path (PJRT predict)
-//!   experiment  regenerate a paper artifact: fig2|fig6|fig7|fig8|fig9|cl
+//!   experiment  run a registered experiment (see `experiment --list`)
 //!   sweep       run a deterministic parallel scenario-sweep grid
 //!   info        print artifact manifest / environment info
+//!
+//! `experiment` dispatches purely through the registry
+//! (`experiments::registry::REGISTRY`): `--list` enumerates it,
+//! `experiment <name> --help` renders the generated parameter schema,
+//! and parameters resolve as defaults ← `--config file.toml` ←
+//! `--set key=value` (unknown keys fail fast).
 //!
 //! Flags go last (schema-light parser): `hflop solve --n 100 --m 8 --exact`.
 
 use hflop::cli::Args;
+use hflop::config::params::Params;
 use hflop::config::Setup;
 use hflop::data::window::ContinualWindow;
+use hflop::experiments::registry::{self, ExperimentCtx};
+use hflop::experiments::sweep::{AxisPoint, run_grid, SweepGrid};
 use hflop::experiments::{self, Scenario, ScenarioConfig};
-use hflop::fl::{FlConfig, ModelRuntime};
+use hflop::fl::FlConfig;
 use hflop::hflop::InstanceBuilder;
 use hflop::inference::serving::{BatchingServer, InferenceRequest};
-use hflop::metrics::export::{ascii_table, ResultsWriter};
+use hflop::metrics::export::{ascii_table, ResultsWriter, SCHEMA_VERSION};
 use hflop::runtime::{Engine, Manifest, Preload};
 use hflop::solver::{self, SolveOptions};
 use hflop::util::json::Json;
 use hflop::util::rng::Rng;
+use hflop::util::tomlmini::{self, Config};
 
 const USAGE: &str = "\
 hflop — inference load-aware orchestration for hierarchical FL
@@ -32,9 +42,13 @@ USAGE: hflop <subcommand> [options] [--flags]
   train       --setup flat|hier|hflop --rounds R [--variant small|paper]
               [--clients N] [--edges M] [--epochs E] [--batches B] [--lr LR]
   serve       --requests N [--variant small|paper]
-  experiment  fig2|fig6|fig7|fig8|fig9|cl [--out results/]
-  sweep       [--grid interference|fig7|fig8] [--workers W] [--root-seed S]
+  experiment  --list | --names
+  experiment  <name> [--help] [--config F.toml] [--set k=v]... [--<param> v]...
+              [--out results/] [--smoke]
+  sweep       [--grid interference|smoke|fig7|fig8] [--workers W] [--root-seed S]
               [--out results/] [--smoke] [--compare]
+  sweep       --experiment <name> [--rows k=v1,v2] [--modes k=v1,v2]
+              [--envs k=v1,v2] [--seeds N] [--set k=v]... (custom registry grid)
   info
 ";
 
@@ -155,12 +169,166 @@ fn run_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Option keys / flags the experiment subcommand itself consumes; every
+/// other `--key value` is resolved against the experiment's schema.
+const RESERVED_OPTIONS: [&str; 3] = ["config", "out", "set"];
+const RESERVED_FLAGS: [&str; 4] = ["list", "names", "help", "smoke"];
+
+fn run_experiment(args: &Args) -> anyhow::Result<()> {
+    // --list / --names: enumerate the registry (names = machine-readable,
+    // one per line — the CI smoke loop iterates over it).
+    if args.has_flag("names") {
+        for e in registry::REGISTRY {
+            println!("{}", e.name());
+        }
+        return Ok(());
+    }
+    if args.has_flag("list") {
+        println!("registered experiments (hflop experiment <name> --help for parameters):");
+        let width = registry::names().iter().map(|n| n.len()).max().unwrap_or(0);
+        for e in registry::REGISTRY {
+            println!("  {:<width$}  {}", e.name(), e.describe());
+        }
+        return Ok(());
+    }
+
+    let name = args.positional.first().map(String::as_str).ok_or_else(|| {
+        anyhow::anyhow!("experiment name required (one of: {})", registry::names().join(", "))
+    })?;
+    let exp = registry::lookup(name)?;
+    if args.has_flag("help") {
+        println!("{}", registry::render_help(exp));
+        return Ok(());
+    }
+
+    // Parameter resolution: defaults ← --config file ← --<param> value /
+    // --set k=v overrides (in command-line order; unknown keys fail fast).
+    let file: Option<Config> = match args.options.get("config") {
+        Some(path) => Some(Config::load(path)?),
+        None => None,
+    };
+    let schema = exp.param_schema();
+    let mut sets = Vec::new();
+    for (key, value) in &args.all_options {
+        if key == "set" {
+            sets.push(parse_set_spec(value)?);
+            continue;
+        }
+        if RESERVED_OPTIONS.contains(&key.as_str()) {
+            continue;
+        }
+        anyhow::ensure!(
+            schema.iter().any(|s| s.key == *key),
+            "unknown option --{} for experiment '{}' (parameters: {}; or use --set k=v)",
+            key,
+            name,
+            schema.iter().map(|s| s.key).collect::<Vec<_>>().join(", ")
+        );
+        sets.push((key.clone(), tomlmini::parse_scalar(value)));
+    }
+    for flag in &args.flags {
+        if RESERVED_FLAGS.contains(&flag.as_str()) {
+            continue;
+        }
+        anyhow::ensure!(
+            schema.iter().any(|s| s.key == *flag),
+            "unknown flag --{} for experiment '{}'",
+            flag,
+            name
+        );
+        sets.push((flag.clone(), hflop::util::tomlmini::Value::Bool(true)));
+    }
+    let params = Params::resolve(schema, file.as_ref(), &sets)?;
+
+    let out = ResultsWriter::new(args.str_or("out", "results"))?;
+    let mut ctx = ExperimentCtx::new(params).with_out(out);
+    if args.has_flag("smoke") {
+        ctx = ctx.with_smoke(true);
+    }
+    let report = exp.run(&mut ctx)?;
+    let sink = ctx.out.as_ref().expect("launcher always provides a sink");
+    for path in report.write(sink)? {
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// Parse one `--set key=value` spec (shared by `experiment` and the
+/// custom-grid `sweep` path).
+fn parse_set_spec(spec: &str) -> anyhow::Result<(String, hflop::util::tomlmini::Value)> {
+    let (key, value) = spec
+        .split_once('=')
+        .ok_or_else(|| anyhow::anyhow!("--set expects key=value (got '{spec}')"))?;
+    Ok((key.trim().to_string(), tomlmini::parse_scalar(value)))
+}
+
+/// Parse one `--rows/--modes/--envs key=v1,v2,...` axis spec into hashed
+/// axis points (one per value).
+fn parse_axis(experiment: &str, spec: &str) -> anyhow::Result<Vec<AxisPoint>> {
+    let (key, values) = spec
+        .split_once('=')
+        .ok_or_else(|| anyhow::anyhow!("axis expects key=v1,v2,... (got '{spec}')"))?;
+    let points: Vec<AxisPoint> = values
+        .split(',')
+        .map(|v| {
+            let value = tomlmini::parse_scalar(v);
+            AxisPoint::hashed(
+                experiment,
+                v.trim(),
+                vec![(key.trim().to_string(), value)],
+            )
+        })
+        .collect();
+    anyhow::ensure!(!points.is_empty(), "axis '{spec}' has no values");
+    Ok(points)
+}
+
 fn run_sweep(args: &Args) -> anyhow::Result<()> {
-    use hflop::experiments::sweep::{run_grid, SweepGrid};
     use hflop::util::{pool, time_it};
 
     let root = args.u64_or("root-seed", 2026)?;
-    let grid = if args.has_flag("smoke") {
+    let grid = if let Some(exp) = args.options.get("experiment") {
+        // Custom declarative grid: any registered experiment × override
+        // axes × seed range, no code changes required.
+        anyhow::ensure!(
+            !args.options.contains_key("grid") && !args.has_flag("smoke"),
+            "--experiment builds a custom grid; drop --grid/--smoke"
+        );
+        // Same fail-fast contract as `experiment`: anything that is not
+        // a sweep option must be a --set override, never silently
+        // dropped (a typo'd `--duration_s 10` would otherwise run the
+        // full default grid while looking parameterized).
+        const SWEEP_OPTIONS: [&str; 9] =
+            ["experiment", "rows", "modes", "envs", "seeds", "set", "workers", "root-seed", "out"];
+        let mut base = Vec::new();
+        for (key, value) in &args.all_options {
+            if key == "set" {
+                base.push(parse_set_spec(value)?);
+                continue;
+            }
+            anyhow::ensure!(
+                SWEEP_OPTIONS.contains(&key.as_str()),
+                "unknown option --{key} for a custom sweep (sweep options: {}; experiment \
+                 parameters go through --set k=v)",
+                SWEEP_OPTIONS.join(", ")
+            );
+        }
+        let axis_or_neutral = |opt: &str, neutral: &str| -> anyhow::Result<Vec<AxisPoint>> {
+            match args.options.get(opt) {
+                Some(spec) => parse_axis(exp, spec),
+                None => Ok(vec![AxisPoint::neutral(neutral)]),
+            }
+        };
+        SweepGrid::custom(
+            exp,
+            base,
+            axis_or_neutral("rows", "all")?,
+            axis_or_neutral("modes", "base")?,
+            axis_or_neutral("envs", "base")?,
+            args.usize_or("seeds", 2)?,
+            root,
+        )?
+    } else if args.has_flag("smoke") {
         // `--smoke` is its own (reduced) grid; an explicit `--grid`
         // would be silently ignored, so reject the combination.
         anyhow::ensure!(
@@ -169,17 +337,16 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
         );
         SweepGrid::smoke(root)
     } else {
-        match args.str_or("grid", "interference").as_str() {
-            "interference" => SweepGrid::interference(root),
-            "fig7" => SweepGrid::fig7(root),
-            "fig8" => SweepGrid::fig8(root),
-            other => anyhow::bail!("unknown sweep grid '{other}' (interference|fig7|fig8)"),
-        }
+        let name = args.str_or("grid", "interference");
+        SweepGrid::by_name(&name, root).ok_or_else(|| {
+            anyhow::anyhow!("unknown sweep grid '{name}' ({})", SweepGrid::BUILTIN.join("|"))
+        })?
     };
     let workers = args.usize_or("workers", pool::default_workers())?;
     println!(
-        "sweep '{}': {} cells ({} rows x {} seeds x {} modes x {} envs), {} workers",
+        "sweep '{}' over experiment '{}': {} cells ({} rows x {} seeds x {} modes x {} envs), {} workers",
         grid.name,
+        grid.experiment,
         grid.n_cells(),
         grid.rows.len(),
         grid.n_seeds,
@@ -224,255 +391,13 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
     let out = ResultsWriter::new(args.str_or("out", "results"))?;
     let path = out.write_json(
         "BENCH_sweep.json",
-        &Json::obj(vec![("matrix", matrix.to_json()), ("timing", Json::obj(timing))]),
+        &Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            ("matrix", matrix.to_json()),
+            ("timing", Json::obj(timing)),
+        ]),
     )?;
     println!("wrote {}", path.display());
-    Ok(())
-}
-
-fn run_experiment(args: &Args) -> anyhow::Result<()> {
-    let which = args
-        .positional
-        .first()
-        .map(String::as_str)
-        .ok_or_else(|| anyhow::anyhow!("experiment name required: fig2|fig6|fig7|fig8|fig9|cl"))?;
-    let out = ResultsWriter::new(args.str_or("out", "results"))?;
-    match which {
-        "fig2" => experiment_fig2(args, &out),
-        "fig6" => experiment_fig6(args, &out),
-        "fig7" => experiment_fig7(args, &out),
-        "fig8" => experiment_fig8(args, &out),
-        "fig9" => experiment_fig9(args, &out),
-        "cl" => experiment_cl(args, &out),
-        other => anyhow::bail!("unknown experiment '{other}'"),
-    }
-}
-
-fn experiment_fig2(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
-    let reps = args.usize_or("reps", 5)?;
-    let rows = experiments::fig2::run(&experiments::fig2::default_sweep(), reps, 60.0);
-    let table: Vec<Vec<String>> = rows
-        .iter()
-        .map(|r| {
-            vec![
-                format!("{}", r.n),
-                format!("{}", r.m),
-                format!("{:.4}", r.mean_s),
-                format!("{:.4}", r.ci95_s),
-                format!("{:.0}", r.mean_nodes),
-                format!("{}", r.all_optimal),
-            ]
-        })
-        .collect();
-    println!("{}", ascii_table(&["n", "m", "mean_s", "ci95", "nodes", "optimal"], &table));
-    out.write_csv(
-        "fig2.csv",
-        &["n", "m", "mean_s", "ci95_s", "mean_nodes"],
-        &rows
-            .iter()
-            .map(|r| vec![r.n as f64, r.m as f64, r.mean_s, r.ci95_s, r.mean_nodes])
-            .collect::<Vec<_>>(),
-    )?;
-    Ok(())
-}
-
-fn experiment_fig6(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
-    // The end-to-end PJRT driver lives in examples/continual_traffic.rs;
-    // this regenerates the figure quickly with the mock runtime.
-    let sc = Scenario::build(ScenarioConfig {
-        weeks: args.usize_or("weeks", 6)?,
-        ..Default::default()
-    })?;
-    let rt = hflop::fl::MockRuntime::new(12, 16);
-    let fl = FlConfig {
-        epochs: 2,
-        batches_per_epoch: 4,
-        l: 2,
-        lr: 0.05,
-        rounds: args.usize_or("rounds", 40)?,
-        eval_every: 1,
-    };
-    let window = ContinualWindow::paper(sc.dataset.n_steps, 288);
-    let runs = experiments::fig6::run_all(&sc, &rt, fl, window, vec![0.0; rt.n_params()], 3)?;
-    let mut rows = Vec::new();
-    for r in &runs {
-        println!(
-            "{:<10} final_mse={:.5} converged_at={:?} comm={:.4} GB",
-            r.setup.name(),
-            r.mean_final_mse,
-            r.rounds_to_converge,
-            r.ledger.total_gb()
-        );
-        for round in 0..r.curves.n_rounds() {
-            rows.push(vec![
-                match r.setup {
-                    Setup::Flat => 0.0,
-                    Setup::LocationClustered => 1.0,
-                    _ => 2.0,
-                },
-                round as f64,
-                r.curves.mean_at(round) as f64,
-            ]);
-        }
-    }
-    out.write_csv("fig6_mock.csv", &["setup", "round", "mean_mse"], &rows)?;
-    Ok(())
-}
-
-fn experiment_fig7(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
-    // The paper reports one testbed run; we aggregate over several random
-    // scenario draws (client placement + workloads + capacities) — the
-    // location-blind baseline's heavy tail comes from the draws whose
-    // geographic clusters overload a weak edge.
-    use hflop::util::stats::OnlineStats;
-    let base_seed = args.u64_or("seed", 40)?;
-    let reps = args.u64_or("reps", 6)?;
-    let mut agg = [OnlineStats::new(), OnlineStats::new(), OnlineStats::new()];
-    let mut spills = [0.0f64; 3];
-    let mut requests = [0u64; 3];
-    for s in 0..reps {
-        let sc = Scenario::build(ScenarioConfig {
-            weeks: 5,
-            balanced_clients: false,
-            seed: base_seed + s,
-            ..Default::default()
-        })?;
-        let r = experiments::fig7::run(&sc, &experiments::fig7::Fig7Config::default());
-        for (k, o) in [&r.flat, &r.location, &r.hflop].iter().enumerate() {
-            agg[k].merge(&o.latency);
-            spills[k] += o.spill_fraction();
-            requests[k] += o.total();
-        }
-    }
-    let names = ["flat", "hier", "hflop"];
-    let table: Vec<Vec<String>> = (0..3)
-        .map(|k| {
-            vec![
-                names[k].to_string(),
-                format!("{:.2}", agg[k].mean()),
-                format!("{:.2}", agg[k].std()),
-                format!("{}", requests[k]),
-                format!("{:.3}", spills[k] / reps as f64),
-            ]
-        })
-        .collect();
-    println!("paper:  flat 79.07±15.94   hier 17.72±24.26   hflop 9.89±4.63 (ms)");
-    println!("{}", ascii_table(&["setup", "mean_ms", "std_ms", "requests", "spill"], &table));
-    out.write_json(
-        "fig7.json",
-        &Json::obj(vec![
-            ("flat_mean_ms", Json::Num(agg[0].mean())),
-            ("flat_std_ms", Json::Num(agg[0].std())),
-            ("hier_mean_ms", Json::Num(agg[1].mean())),
-            ("hier_std_ms", Json::Num(agg[1].std())),
-            ("hflop_mean_ms", Json::Num(agg[2].mean())),
-            ("hflop_std_ms", Json::Num(agg[2].std())),
-        ]),
-    )?;
-    Ok(())
-}
-
-fn experiment_fig8(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
-    let sc = Scenario::build(ScenarioConfig {
-        weeks: 5,
-        balanced_clients: false,
-        seed: args.u64_or("seed", 42)?,
-        ..Default::default()
-    })?;
-    for (name, scale) in [("a", 1.0), ("b", 10.0)] {
-        let cfg = experiments::fig8::Fig8Config { lambda_scale: scale, ..Default::default() };
-        let rows = experiments::fig8::run(&sc, &cfg);
-        let cx = experiments::fig8::crossover(&rows);
-        println!("fig8{name} (lambda x{scale}): crossover={cx:?} (paper 8b: 0.1425)");
-        out.write_csv(
-            &format!("fig8{name}.csv"),
-            &["speedup", "flat_ms", "location_ms", "hflop_ms"],
-            &rows
-                .iter()
-                .map(|r| vec![r.speedup, r.flat_ms, r.location_ms, r.hflop_ms])
-                .collect::<Vec<_>>(),
-        )?;
-    }
-    Ok(())
-}
-
-fn experiment_fig9(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
-    let cfg = experiments::fig9::Fig9Config {
-        n_devices: args.usize_or("n", 200)?,
-        reps: args.usize_or("reps", 10)?,
-        ..Default::default()
-    };
-    let rows = experiments::fig9::run(&cfg)?;
-    let table: Vec<Vec<String>> = rows
-        .iter()
-        .map(|r| {
-            vec![
-                format!("{}", r.m),
-                format!("{:.2}", r.hflop_savings_pct),
-                format!("{:.2}", r.hflop_ci95),
-                format!("{:.2}", r.uncap_savings_pct),
-                format!("{:.2}", r.uncap_ci95),
-            ]
-        })
-        .collect();
-    println!("{}", ascii_table(&["edges", "hflop_sav_%", "±", "uncap_sav_%", "±"], &table));
-    let (flat, hflop, uncap) = experiments::fig9::absolute_reference(5)?;
-    println!("absolute (20 dev, 4 edges, 100 rounds): flat={flat:.2} GB hflop={hflop:.2} GB uncap={uncap:.2} GB");
-    println!("paper:                                  flat=2.37 GB hflop=0.53 GB uncap=0.24 GB");
-    out.write_csv(
-        "fig9.csv",
-        &["m", "hflop_savings_pct", "hflop_ci95", "uncap_savings_pct", "uncap_ci95"],
-        &rows
-            .iter()
-            .map(|r| {
-                vec![r.m as f64, r.hflop_savings_pct, r.hflop_ci95, r.uncap_savings_pct, r.uncap_ci95]
-            })
-            .collect::<Vec<_>>(),
-    )?;
-    Ok(())
-}
-
-fn experiment_cl(args: &Args, out: &ResultsWriter) -> anyhow::Result<()> {
-    use hflop::data::synth::{generate, SynthConfig};
-    use hflop::data::STEPS_PER_WEEK;
-    let synth = SynthConfig {
-        n_steps: args.usize_or("weeks", 10)? * STEPS_PER_WEEK,
-        drift_scale: 2.5,
-        ..Default::default()
-    };
-    let ds = generate(&synth);
-    // The real GRU through PJRT (the paper's §V-B1 is a centralized GRU
-    // run); a linear mock cannot see the drift — next-step traffic
-    // prediction is nearly level-invariant for a linear AR model.
-    let manifest = Manifest::load_default()?;
-    let variant = args.str_or("variant", "small");
-    let engine = Engine::new(&manifest, &variant, Preload::Training)?;
-    let init = manifest.load_init_params(engine.variant())?;
-    let window =
-        ContinualWindow::new(3 * STEPS_PER_WEEK, STEPS_PER_WEEK, STEPS_PER_WEEK / 2, ds.n_steps);
-    let r = experiments::cl_table::run(
-        &engine,
-        &ds.series[0],
-        init,
-        window,
-        args.usize_or("initial_steps", 1500)?,
-        args.usize_or("steps_per_shift", 300)?,
-        args.f64_or("lr", 0.01)? as f32,
-        7,
-    )?;
-    println!(
-        "static MSE = {:.5}   retrained MSE = {:.5}   improvement = {:.2}% (paper: 0.04470 -> 0.04284, 4.2%)",
-        r.static_mse,
-        r.retrained_mse,
-        r.improvement_pct()
-    );
-    out.write_json(
-        "cl_table.json",
-        &Json::obj(vec![
-            ("static_mse", Json::Num(r.static_mse as f64)),
-            ("retrained_mse", Json::Num(r.retrained_mse as f64)),
-        ]),
-    )?;
     Ok(())
 }
 

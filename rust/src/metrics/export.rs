@@ -9,6 +9,33 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 
+/// Version stamp for every machine-readable artifact this module writes:
+/// registry `Report` JSON summaries, the `SweepMatrix` JSON and
+/// `BENCH_sweep.json`. Bump on any breaking change to those layouts and
+/// record the migration in DESIGN.md §8. History: v1 = the unstamped
+/// PR 3 formats; v2 = the registry-era formats (stamp added, report
+/// summaries wrapped in `{experiment, schema_version, summary}`).
+pub const SCHEMA_VERSION: u32 = 2;
+
+/// A named CSV table inside an experiment's artifact bundle; `name` is
+/// the output file stem (`<name>.csv`).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub name: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(name: &str, header: &[&str], rows: Vec<Vec<f64>>) -> Table {
+        Table {
+            name: name.to_string(),
+            header: header.iter().map(|h| h.to_string()).collect(),
+            rows,
+        }
+    }
+}
+
 /// Writes experiment results into a directory (creating it).
 pub struct ResultsWriter {
     dir: PathBuf,
@@ -52,6 +79,12 @@ impl ResultsWriter {
         let path = self.path(name);
         fs::write(&path, value.to_pretty())?;
         Ok(path)
+    }
+
+    /// Write one named table as `<table.name>.csv`.
+    pub fn write_table(&self, table: &Table) -> anyhow::Result<PathBuf> {
+        let header: Vec<&str> = table.header.iter().map(String::as_str).collect();
+        self.write_csv(&format!("{}.csv", table.name), &header, &table.rows)
     }
 }
 

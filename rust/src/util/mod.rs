@@ -19,6 +19,18 @@ pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (v, t0.elapsed().as_secs_f64())
 }
 
+/// CI smoke mode: `HFLOP_BENCH_SMOKE=1` asks every harness — benches
+/// *and* registry experiments — to shrink its workload so workflows can
+/// verify the code paths cheaply. `0`, empty, `false`, or unset mean
+/// full runs. The bench harness (`benches/bench_common`) and the
+/// experiment registry (`experiments::registry::ExperimentCtx::smoke`)
+/// share this one predicate.
+pub fn smoke_mode() -> bool {
+    std::env::var("HFLOP_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0" && v.to_ascii_lowercase() != "false")
+        .unwrap_or(false)
+}
+
 #[cfg(test)]
 mod tests {
     #[test]

@@ -144,6 +144,18 @@ impl Config {
     }
 }
 
+/// Parse one TOML-subset value from a bare string (the `--set key=value`
+/// CLI path). Unlike [`Config::parse`] this accepts an *unquoted* word as
+/// a string fallback, so `--set preset=steady` works without shell
+/// quoting gymnastics; quoted strings, ints, floats, bools and arrays
+/// parse exactly as they do in a config file.
+pub fn parse_scalar(s: &str) -> Value {
+    match parse_value(s.trim()) {
+        Ok(v) => v,
+        Err(_) => Value::Str(s.trim().to_string()),
+    }
+}
+
 fn strip_comment(line: &str) -> &str {
     // A '#' inside a quoted string does not start a comment.
     let mut in_str = false;
@@ -276,6 +288,17 @@ labels = ["a", "b"]
         assert!(Config::parse("x = \"open\n").is_err());
         let e = Config::parse("ok = 1\nbad\n").unwrap_err();
         assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn parse_scalar_types_and_bare_string_fallback() {
+        assert_eq!(parse_scalar("42"), Value::Int(42));
+        assert_eq!(parse_scalar("0.25"), Value::Float(0.25));
+        assert_eq!(parse_scalar("true"), Value::Bool(true));
+        assert_eq!(parse_scalar("\"quoted\""), Value::Str("quoted".into()));
+        // Bare words fall back to strings (CLI ergonomics).
+        assert_eq!(parse_scalar("steady"), Value::Str("steady".into()));
+        assert_eq!(parse_scalar(" hflop-uncap "), Value::Str("hflop-uncap".into()));
     }
 
     #[test]

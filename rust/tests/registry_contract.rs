@@ -1,0 +1,78 @@
+//! Table-drift guard (same spirit as `solver_nan_guard.rs`): the
+//! experiment registry and DESIGN.md §5 must mirror each other exactly.
+//! Every `REGISTRY` entry needs a doc row in the §5 contract table, and
+//! every documented experiment must actually be registered — so the
+//! docs can never silently rot as experiments are added or renamed.
+
+use std::collections::BTreeSet;
+
+use hflop::experiments::registry::{self, REGISTRY};
+
+fn design_md() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../DESIGN.md");
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+/// The §5 section body (from its header to the next `## §`).
+fn section5(text: &str) -> &str {
+    let start = text.find("## §5").expect("DESIGN.md lost its §5 header");
+    let rest = &text[start..];
+    let end = rest[5..].find("\n## §").map(|i| i + 5).unwrap_or(rest.len());
+    &rest[..end]
+}
+
+/// Experiment names documented in the §5 contract table: first cell of
+/// each body row, backticked (`| \`name\` | ... |`).
+fn documented_names(sec: &str) -> BTreeSet<String> {
+    sec.lines()
+        .filter_map(|line| {
+            let line = line.trim();
+            let rest = line.strip_prefix("| `")?;
+            let name = rest.split('`').next()?;
+            Some(name.to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn every_registry_entry_has_a_design_doc_row_and_vice_versa() {
+    let text = design_md();
+    let documented = documented_names(section5(&text));
+    let registered: BTreeSet<String> =
+        registry::names().iter().map(|s| s.to_string()).collect();
+
+    let undocumented: Vec<&String> = registered.difference(&documented).collect();
+    assert!(
+        undocumented.is_empty(),
+        "registered experiments missing from the DESIGN.md §5 contract table: {undocumented:?}"
+    );
+    let stale: Vec<&String> = documented.difference(&registered).collect();
+    assert!(
+        stale.is_empty(),
+        "DESIGN.md §5 documents experiments that are not in REGISTRY: {stale:?}"
+    );
+    assert_eq!(documented.len(), REGISTRY.len());
+}
+
+#[test]
+fn design_section5_mentions_the_trait_contract() {
+    let text = design_md();
+    let sec = section5(&text);
+    // The section is the registry contract: the trait surface and the
+    // resolution/report machinery must be named so readers land on the
+    // right types.
+    for needle in ["Experiment", "param_schema", "ExperimentCtx", "Report", "--set"] {
+        assert!(sec.contains(needle), "DESIGN.md §5 no longer mentions '{needle}'");
+    }
+}
+
+#[test]
+fn design_section8_documents_schema_version() {
+    let text = design_md();
+    let start = text.find("## §8").expect("DESIGN.md lost its §8 header");
+    let sec = &text[start..];
+    assert!(
+        sec.contains("schema_version"),
+        "DESIGN.md §8 must carry the schema_version compatibility note"
+    );
+}

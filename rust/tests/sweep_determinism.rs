@@ -1,48 +1,25 @@
-//! End-to-end determinism of the sweep engine: the same grid + root
-//! seed must produce a byte-identical `SweepMatrix` JSON at 1, 2 and 8
-//! workers — including when an injected slow cell scrambles the order
-//! in which workers finish. Per-cell RNG is hashed from grid
-//! coordinates, so nothing about scheduling can leak into the results.
+//! End-to-end determinism of the registry-driven sweep engine: the same
+//! grid + root seed must produce a byte-identical `SweepMatrix` JSON at
+//! 1, 2 and 8 workers — including when an injected slow cell scrambles
+//! the order in which workers finish. Per-cell RNG is hashed from axis
+//! coordinate words, and every cell resolves and runs its experiment
+//! through the registry on the worker thread, so nothing about
+//! scheduling can leak into the results.
 
-use hflop::experiments::interference::Preset;
-use hflop::experiments::scenario::ScenarioConfig;
-use hflop::experiments::sweep::{
-    run_grid, run_grid_with_hook, EnvSpec, RowSpec, StaticSetup, SweepGrid, Workload,
-};
-use hflop::solver::LsMode;
+use hflop::config::params::Value;
+use hflop::experiments::sweep::{run_grid, run_grid_with_hook, AxisPoint, SweepGrid};
 
-/// A ≥24-cell grid over a small world with a short horizon: big enough
-/// to exercise every axis (static + co-sim rows, both solver engines,
-/// two environments), small enough to run repeatedly in one test file.
+/// A ≥24-cell interference grid over a small world with a short
+/// horizon: every axis exercised (all four presets, both solver
+/// engines, two environments), small enough to run repeatedly.
 fn grid() -> SweepGrid {
-    SweepGrid {
-        scenario: ScenarioConfig {
-            n_clients: 12,
-            n_edges: 3,
-            weeks: 5,
-            balanced_clients: false,
-            ..Default::default()
-        },
-        rows: vec![
-            RowSpec { name: "flat", workload: Workload::Static(StaticSetup::Flat) },
-            RowSpec { name: "hflop", workload: Workload::Static(StaticSetup::Hflop) },
-            RowSpec { name: "steady", workload: Workload::Cosim(Preset::Steady) },
-            RowSpec { name: "edge-failure", workload: Workload::Cosim(Preset::EdgeFailure) },
-        ],
-        n_seeds: 2,
-        modes: vec![LsMode::Completion, LsMode::Incremental],
-        envs: vec![
-            EnvSpec { name: "if0.25".into(), lambda_scale: 0.5, ..Default::default() },
-            EnvSpec {
-                name: "if1.0".into(),
-                interference_factor: 1.0,
-                lambda_scale: 0.5,
-                ..Default::default()
-            },
-        ],
-        duration_s: 25.0,
-        ..SweepGrid::interference(2026)
-    }
+    let mut g = SweepGrid::interference(2026);
+    g.set_base("clients", Value::Int(12));
+    g.set_base("edges", Value::Int(3));
+    g.set_base("duration_s", Value::Float(25.0));
+    g.set_base("lambda_scale", Value::Float(0.5));
+    g.duration_s = 25.0;
+    g
 }
 
 #[test]
@@ -96,10 +73,49 @@ fn every_cell_simulated_real_traffic() {
         assert!(c.requests > 100, "cell {} looks empty ({} requests)", c.label, c.requests);
         assert!(c.mean_ms.is_finite() && c.mean_ms > 0.0, "cell {}", c.label);
         assert!(c.p50_ms <= c.p99_ms, "cell {} percentiles inverted", c.label);
+        // Every co-sim cell actually trained on the timeline.
+        assert!(c.rounds_completed >= 1, "cell {} completed no round", c.label);
     }
-    // Co-sim rows actually trained.
-    assert!(
-        m.cells.iter().filter(|c| c.row >= 2).all(|c| c.rounds_completed >= 1),
-        "a co-sim cell completed no training round"
-    );
+}
+
+#[test]
+fn custom_registry_grid_is_deterministic_too() {
+    // The declarative path new experiments use: sweep `fig7` cells via
+    // hashed axis coordinates — same byte-identity contract.
+    let g = SweepGrid::custom(
+        "fig7",
+        vec![
+            ("clients".to_string(), Value::Int(12)),
+            ("edges".to_string(), Value::Int(3)),
+            ("duration_s".to_string(), Value::Float(15.0)),
+        ],
+        vec![
+            AxisPoint::hashed(
+                "fig7",
+                "flat",
+                vec![("setup".to_string(), Value::Str("flat".into()))],
+            ),
+            AxisPoint::hashed(
+                "fig7",
+                "hflop",
+                vec![("setup".to_string(), Value::Str("hflop".into()))],
+            ),
+        ],
+        vec![AxisPoint::neutral("auto")],
+        vec![
+            AxisPoint::hashed("fig7", "base", vec![]),
+            AxisPoint::hashed(
+                "fig7",
+                "sp0.50",
+                vec![("speedup".to_string(), Value::Float(0.5))],
+            ),
+        ],
+        2,
+        11,
+    )
+    .unwrap();
+    assert_eq!(g.n_cells(), 8);
+    let serial = run_grid(&g, 1).unwrap().to_json().to_pretty();
+    let parallel = run_grid(&g, 8).unwrap().to_json().to_pretty();
+    assert_eq!(serial.as_bytes(), parallel.as_bytes());
 }

@@ -1,0 +1,466 @@
+//! Golden-matrix regression: the registry-driven sweep engine must
+//! produce **byte-identical cells** to the pre-registry engine for the
+//! existing `interference`/`fig7`/`fig8` (and `smoke`) grids.
+//!
+//! The oracle below is a verbatim port of the pre-registry cell runner
+//! (`sweep::run_cell_at` + the old grid definitions, PR 3): one shared
+//! `Scenario` per grid, direct `simulate`/`interference::run` calls, and
+//! `mix_seed(root, [row, seed_base+s, mode, env])` cell seeds. It only
+//! uses primitives this PR did not touch, so it genuinely pins the old
+//! behavior. Both sides serialize through today's `SweepMatrix`, whose
+//! v2 header adds exactly two fields (`schema_version`, the experiment
+//! name — DESIGN.md §8); the *cells* array is the unchanged determinism
+//! contract.
+//!
+//! Checks: full-pipeline byte identity on reduced-horizon variants of
+//! all three grids at **1 and 8 workers**, plus cheap full-grid identity
+//! of every cell seed, label and axis name against the legacy formulas.
+
+use hflop::experiments::interference::{self, solve_options_for, InterferenceConfig, Preset};
+use hflop::experiments::scenario::{Scenario, ScenarioConfig};
+use hflop::experiments::sweep::{run_grid, CellOutcome, SweepGrid, SweepMatrix};
+use hflop::inference::simulation::{simulate, ServingConfig};
+use hflop::inference::LatencyModel;
+use hflop::metrics::cost::{flat_fl_bytes, hfl_bytes};
+use hflop::solver::LsMode;
+use hflop::util::json::Json;
+use hflop::util::rng::mix_seed;
+
+// ----- the pre-registry engine, kept verbatim as the oracle -----------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum StaticSetup {
+    Flat,
+    Location,
+    Hflop,
+}
+
+#[derive(Clone, Copy)]
+enum Workload {
+    Static(StaticSetup),
+    Cosim(Preset),
+}
+
+struct LegacyRow {
+    name: &'static str,
+    workload: Workload,
+}
+
+struct LegacyEnv {
+    name: String,
+    interference_factor: f64,
+    speedup: f64,
+    lambda_scale: f64,
+}
+
+struct LegacyGrid {
+    name: &'static str,
+    experiment: &'static str, // v2 header field only; not part of the cells
+    scenario: ScenarioConfig,
+    rows: Vec<LegacyRow>,
+    seed_base: u64,
+    n_seeds: usize,
+    modes: Vec<LsMode>,
+    envs: Vec<LegacyEnv>,
+    duration_s: f64,
+    model_bytes: usize,
+    root_seed: u64,
+}
+
+fn mode_name(mode: LsMode) -> &'static str {
+    match mode {
+        LsMode::Auto => "auto",
+        LsMode::Completion => "completion",
+        LsMode::Incremental => "incremental",
+    }
+}
+
+impl LegacyGrid {
+    fn interference(root_seed: u64) -> LegacyGrid {
+        LegacyGrid {
+            name: "interference",
+            experiment: "interference",
+            scenario: ScenarioConfig {
+                n_clients: 20,
+                n_edges: 4,
+                weeks: 5,
+                balanced_clients: false,
+                ..Default::default()
+            },
+            rows: Preset::ALL
+                .iter()
+                .map(|&p| LegacyRow { name: p.name(), workload: Workload::Cosim(p) })
+                .collect(),
+            seed_base: 0,
+            n_seeds: 2,
+            modes: vec![LsMode::Completion, LsMode::Incremental],
+            envs: vec![
+                LegacyEnv {
+                    name: "if0.25".into(),
+                    interference_factor: 0.25,
+                    speedup: 0.0,
+                    lambda_scale: 1.0,
+                },
+                LegacyEnv {
+                    name: "if1.0".into(),
+                    interference_factor: 1.0,
+                    speedup: 0.0,
+                    lambda_scale: 1.0,
+                },
+            ],
+            duration_s: 240.0,
+            model_bytes: 4 * 65_536,
+            root_seed,
+        }
+    }
+
+    fn fig7(root_seed: u64) -> LegacyGrid {
+        LegacyGrid {
+            name: "fig7",
+            experiment: "fig7",
+            scenario: ScenarioConfig {
+                n_clients: 20,
+                n_edges: 4,
+                weeks: 5,
+                balanced_clients: false,
+                ..Default::default()
+            },
+            rows: vec![
+                LegacyRow { name: "flat", workload: Workload::Static(StaticSetup::Flat) },
+                LegacyRow { name: "location", workload: Workload::Static(StaticSetup::Location) },
+                LegacyRow { name: "hflop", workload: Workload::Static(StaticSetup::Hflop) },
+            ],
+            seed_base: 0,
+            n_seeds: 6,
+            modes: vec![LsMode::Auto],
+            envs: vec![LegacyEnv {
+                name: "base".into(),
+                interference_factor: 1.0,
+                speedup: 0.0,
+                lambda_scale: 1.0,
+            }],
+            duration_s: 120.0,
+            model_bytes: 4 * 65_536,
+            root_seed,
+        }
+    }
+
+    fn fig8(root_seed: u64) -> LegacyGrid {
+        LegacyGrid {
+            name: "fig8",
+            n_seeds: 2,
+            envs: (0..=5)
+                .map(|i| {
+                    let sp = i as f64 * 0.19;
+                    LegacyEnv {
+                        name: format!("sp{sp:.2}"),
+                        interference_factor: 1.0,
+                        speedup: sp,
+                        lambda_scale: 10.0,
+                    }
+                })
+                .collect(),
+            duration_s: 60.0,
+            ..Self::fig7(root_seed)
+        }
+    }
+
+    fn n_cells(&self) -> usize {
+        self.rows.len() * self.n_seeds * self.modes.len() * self.envs.len()
+    }
+
+    fn coords(&self, idx: usize) -> (usize, usize, usize, usize) {
+        let e = idx % self.envs.len();
+        let rest = idx / self.envs.len();
+        let m = rest % self.modes.len();
+        let rest = rest / self.modes.len();
+        let s = rest % self.n_seeds;
+        let r = rest / self.n_seeds;
+        (r, s, m, e)
+    }
+
+    fn cell_seed(&self, r: usize, s: usize, m: usize, e: usize) -> u64 {
+        mix_seed(self.root_seed, &[r as u64, self.seed_base + s as u64, m as u64, e as u64])
+    }
+}
+
+/// Verbatim port of the pre-registry `run_cell_at`.
+fn legacy_cell(sc: &Scenario, grid: &LegacyGrid, idx: usize) -> CellOutcome {
+    let (r, s, m, e) = grid.coords(idx);
+    let row = &grid.rows[r];
+    let env = &grid.envs[e];
+    let mode = grid.modes[m];
+    let seed = grid.cell_seed(r, s, m, e);
+    let label =
+        format!("{}/s{}/{}/{}", row.name, grid.seed_base + s as u64, mode_name(mode), env.name);
+
+    let mut rounds_completed = 0usize;
+    let mut plan_swaps = 0usize;
+    let mut reclusters = 0usize;
+    let mut retrain_triggers = 0usize;
+    let mut events_processed = 0u64;
+    let mut events_cancelled = 0u64;
+    let serving = match row.workload {
+        Workload::Static(setup) => {
+            let assign = match setup {
+                StaticSetup::Flat => vec![None; sc.topo.n_devices()],
+                StaticSetup::Location => sc.assign_location.assign.clone(),
+                StaticSetup::Hflop => sc.assign_hflop.assign.clone(),
+            };
+            let cfg = ServingConfig {
+                assign,
+                lambda: sc.lambdas().iter().map(|l| l * env.lambda_scale).collect(),
+                capacity: sc.capacities(),
+                latency: LatencyModel::default().with_speedup(env.speedup.min(0.95)),
+                duration_s: grid.duration_s,
+                queue_window_s: 0.05,
+                seed,
+            };
+            simulate(&cfg)
+        }
+        Workload::Cosim(preset) => {
+            let cfg = InterferenceConfig {
+                preset,
+                duration_s: grid.duration_s,
+                interference_factor: env.interference_factor,
+                lambda_scale: env.lambda_scale,
+                model_bytes: grid.model_bytes,
+                solve: solve_options_for(mode),
+                seed,
+                ..Default::default()
+            };
+            let out = interference::run(sc, &cfg).expect("legacy cosim cell");
+            rounds_completed = out.rounds_completed;
+            plan_swaps = out.plan_swaps;
+            reclusters = out.reclusters;
+            retrain_triggers = out.retrain_triggers;
+            events_processed = out.events_processed;
+            events_cancelled = out.events_cancelled;
+            out.serving
+        }
+    };
+
+    let (eq1_cost, comm_rounds) = match row.workload {
+        Workload::Static(StaticSetup::Flat) => (0.0, 100),
+        Workload::Static(StaticSetup::Location) => (sc.assign_location.cost(&sc.inst), 100),
+        Workload::Static(StaticSetup::Hflop) => (sc.hflop_cost, 100),
+        Workload::Cosim(_) => (sc.hflop_cost, rounds_completed),
+    };
+    let comm_bytes = match row.workload {
+        Workload::Static(StaticSetup::Flat) => {
+            flat_fl_bytes(sc.topo.n_devices(), comm_rounds, grid.model_bytes)
+        }
+        Workload::Static(StaticSetup::Location) => {
+            hfl_bytes(&sc.inst, &sc.assign_location, comm_rounds, grid.model_bytes)
+        }
+        _ => hfl_bytes(&sc.inst, &sc.assign_hflop, comm_rounds, grid.model_bytes),
+    };
+
+    CellOutcome {
+        row: r,
+        seed_idx: s,
+        mode_idx: m,
+        env_idx: e,
+        label,
+        cell_seed: seed,
+        requests: serving.total(),
+        served_at_edge: serving.served_at_edge,
+        spilled_to_cloud: serving.spilled_to_cloud,
+        direct_to_cloud: serving.direct_to_cloud,
+        spill_fraction: serving.spill_fraction(),
+        mean_ms: serving.latency.mean(),
+        std_ms: serving.latency.std(),
+        min_ms: serving.latency.min(),
+        max_ms: serving.latency.max(),
+        p50_ms: serving.percentiles.p50(),
+        p90_ms: serving.percentiles.p90(),
+        p99_ms: serving.percentiles.p99(),
+        rounds_completed,
+        plan_swaps,
+        reclusters,
+        retrain_triggers,
+        events_processed,
+        events_cancelled,
+        eq1_cost,
+        comm_gb: comm_bytes as f64 / 1e9,
+        wall_s: 0.0,
+    }
+}
+
+/// Run the legacy grid serially (one shared scenario, grid order) and
+/// wrap it in today's `SweepMatrix` so both sides share one serializer.
+fn legacy_matrix(grid: &LegacyGrid) -> SweepMatrix {
+    let sc = Scenario::build(grid.scenario.clone()).expect("legacy scenario");
+    let cells: Vec<CellOutcome> = (0..grid.n_cells()).map(|i| legacy_cell(&sc, grid, i)).collect();
+    SweepMatrix {
+        grid_name: grid.name.to_string(),
+        root_seed: grid.root_seed,
+        experiment: grid.experiment.to_string(),
+        row_names: grid.rows.iter().map(|r| r.name.to_string()).collect(),
+        seeds: (0..grid.n_seeds).map(|s| grid.seed_base + s as u64).collect(),
+        mode_names: grid.modes.iter().map(|&m| mode_name(m).to_string()).collect(),
+        env_names: grid.envs.iter().map(|e| e.name.clone()).collect(),
+        duration_s: grid.duration_s,
+        cells,
+    }
+}
+
+/// Strip `wall_s` influence: serialization already excludes it, so JSON
+/// comparison is the right equality.
+fn golden_check(legacy: &LegacyGrid, new: &SweepGrid) {
+    assert_eq!(legacy.n_cells(), new.n_cells(), "{}: cell counts differ", legacy.name);
+    let oracle = legacy_matrix(legacy).to_json().to_pretty();
+    for workers in [1, 8] {
+        let got = run_grid(new, workers).unwrap().to_json().to_pretty();
+        assert_eq!(
+            oracle.as_bytes(),
+            got.as_bytes(),
+            "{}: registry sweep diverged from the pre-registry engine at {workers} workers",
+            legacy.name
+        );
+    }
+}
+
+// ----- reduced-horizon variants (identical shrink on both sides) ------------
+
+fn shrink_legacy(mut g: LegacyGrid, duration_s: f64, n_seeds: usize) -> LegacyGrid {
+    g.duration_s = duration_s;
+    g.n_seeds = n_seeds;
+    g
+}
+
+fn shrink_new(mut g: SweepGrid, duration_s: f64, n_seeds: usize) -> SweepGrid {
+    use hflop::config::params::Value;
+    g.set_base("duration_s", Value::Float(duration_s));
+    g.duration_s = duration_s;
+    g.n_seeds = n_seeds;
+    g
+}
+
+#[test]
+fn golden_interference_grid_bit_identical_at_1_and_8_workers() {
+    // Small world + short horizon on BOTH sides; all four presets, both
+    // solver engines, both interference factors stay covered.
+    let mut legacy = shrink_legacy(LegacyGrid::interference(2026), 25.0, 1);
+    legacy.scenario.n_clients = 12;
+    legacy.scenario.n_edges = 3;
+    let mut new = shrink_new(SweepGrid::interference(2026), 25.0, 1);
+    {
+        use hflop::config::params::Value;
+        new.set_base("clients", Value::Int(12));
+        new.set_base("edges", Value::Int(3));
+    }
+    golden_check(&legacy, &new);
+}
+
+#[test]
+fn golden_fig7_grid_bit_identical_at_1_and_8_workers() {
+    let legacy = shrink_legacy(LegacyGrid::fig7(2026), 20.0, 2);
+    let new = shrink_new(SweepGrid::fig7(2026), 20.0, 2);
+    golden_check(&legacy, &new);
+}
+
+#[test]
+fn golden_fig8_grid_bit_identical_at_1_and_8_workers() {
+    let mut legacy = shrink_legacy(LegacyGrid::fig8(2026), 8.0, 1);
+    legacy.envs.truncate(3);
+    let mut new = shrink_new(SweepGrid::fig8(2026), 8.0, 1);
+    new.envs.truncate(3);
+    golden_check(&legacy, &new);
+}
+
+#[test]
+fn full_grids_keep_legacy_cell_seeds_labels_and_axis_names() {
+    // Cheap identity over the FULL acceptance grids (no simulation):
+    // every cell seed and label must match the pre-registry formulas.
+    for (legacy, new) in [
+        (LegacyGrid::interference(7), SweepGrid::interference(7)),
+        (LegacyGrid::fig7(7), SweepGrid::fig7(7)),
+        (LegacyGrid::fig8(7), SweepGrid::fig8(7)),
+    ] {
+        assert_eq!(legacy.n_cells(), new.n_cells(), "{}", legacy.name);
+        assert_eq!(
+            legacy.rows.iter().map(|r| r.name.to_string()).collect::<Vec<_>>(),
+            new.rows.iter().map(|r| r.name.clone()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            legacy.modes.iter().map(|&m| mode_name(m).to_string()).collect::<Vec<_>>(),
+            new.modes.iter().map(|m| m.name.clone()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            legacy.envs.iter().map(|e| e.name.clone()).collect::<Vec<_>>(),
+            new.envs.iter().map(|e| e.name.clone()).collect::<Vec<_>>()
+        );
+        for idx in 0..legacy.n_cells() {
+            let (r, s, m, e) = legacy.coords(idx);
+            assert_eq!((r, s, m, e), new.coords(idx), "{} idx {idx}", legacy.name);
+            assert_eq!(
+                legacy.cell_seed(r, s, m, e),
+                new.cell_seed(r, s, m, e),
+                "{}: cell seed drifted at {:?}",
+                legacy.name,
+                (r, s, m, e)
+            );
+            let legacy_label = format!(
+                "{}/s{}/{}/{}",
+                legacy.rows[r].name,
+                legacy.seed_base + s as u64,
+                mode_name(legacy.modes[m]),
+                legacy.envs[e].name
+            );
+            assert_eq!(legacy_label, new.cell_label(r, s, m, e));
+        }
+    }
+}
+
+#[test]
+fn v2_header_adds_only_schema_version_and_experiment() {
+    // The compatibility contract of DESIGN.md §8: relative to the v1
+    // matrix, v2 adds exactly `schema_version` (top level) and
+    // `grid.experiment`; cells carry the identical key set.
+    let m = legacy_matrix(&shrink_legacy(LegacyGrid::fig7(1), 5.0, 1)).to_json();
+    let top = m.as_obj().unwrap();
+    assert_eq!(
+        top.keys().map(String::as_str).collect::<Vec<_>>(),
+        vec!["cells", "grid", "schema_version"]
+    );
+    let grid = m.get("grid").unwrap().as_obj().unwrap();
+    assert_eq!(
+        grid.keys().map(String::as_str).collect::<Vec<_>>(),
+        vec![
+            "duration_s", "envs", "experiment", "modes", "n_cells", "name", "root_seed", "rows",
+            "seeds"
+        ]
+    );
+    let cell = m.get("cells").unwrap().as_arr().unwrap()[0].as_obj().unwrap();
+    // The v1 cell key set, unchanged.
+    let keys: Vec<&str> = cell.keys().map(String::as_str).collect();
+    assert_eq!(
+        keys,
+        vec![
+            "cell_seed",
+            "comm_gb",
+            "direct_to_cloud",
+            "eq1_cost",
+            "events_cancelled",
+            "events_processed",
+            "label",
+            "max_ms",
+            "mean_ms",
+            "min_ms",
+            "p50_ms",
+            "p90_ms",
+            "p99_ms",
+            "plan_swaps",
+            "reclusters",
+            "requests",
+            "retrain_triggers",
+            "rounds_completed",
+            "served_at_edge",
+            "spill_fraction",
+            "spilled_to_cloud",
+            "std_ms"
+        ]
+    );
+    assert!(Json::parse(&m.to_pretty()).is_ok());
+}
