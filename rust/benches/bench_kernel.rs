@@ -1,0 +1,220 @@
+//! Bench: the event-kernel hot path, in events/sec.
+//!
+//! Three workloads, run against both the production calendar-queue
+//! [`hflop::sim::Kernel`] and the frozen binary-heap oracle
+//! [`hflop::sim::oracle::HeapKernel`] (the exact queue the repo used to
+//! run on):
+//!
+//! 1. `churn` — pure schedule→fire at a large resident set (the classic
+//!    hold-model queue benchmark): pop one event, schedule its
+//!    replacement a uniform offset ahead.
+//! 2. `tagged-cancel` — schedule/fire mixed with handle cancels and
+//!    periodic tag invalidations, the control-plane revocation pattern.
+//!    The oracle's O(len) cancel scan makes this its worst case, so the
+//!    oracle runs a smaller op count and throughput is normalized.
+//! 3. `cosim/interference` — end-to-end events/sec of a full
+//!    interference-preset co-simulation on the production kernel (no
+//!    oracle run: it is not wired into the production path).
+//!
+//! Emits `BENCH_kernel.json` (schema-versioned) so the perf trajectory
+//! accumulates data points in CI; `BENCHMARKS.md` at the repo root
+//! explains how to read it. `HFLOP_BENCH_SMOKE=1` shrinks every workload
+//! so CI can verify the harness cheaply.
+
+mod bench_common;
+use bench_common::{bench, header, smoke};
+
+use hflop::experiments::interference::{run_with_kernel, InterferenceConfig, Preset};
+use hflop::experiments::scenario::{Scenario, ScenarioConfig};
+use hflop::metrics::export::SCHEMA_VERSION;
+use hflop::sim::oracle::HeapKernel;
+use hflop::sim::Kernel;
+use hflop::util::json::Json;
+use hflop::util::rng::Rng;
+use hflop::util::stats::geomean;
+
+/// Pure schedule→fire churn: `events` pop+reschedule pairs over a
+/// resident set of `resident` pending timers. Returns ops performed
+/// (one schedule + one fire per event).
+macro_rules! churn {
+    ($mk:expr, $resident:expr, $events:expr) => {{
+        let mut k = $mk;
+        let mut rng = Rng::new(0x6368_7572_6e21);
+        for i in 0..$resident {
+            k.schedule(rng.f64() * 10.0, i as u32);
+        }
+        let mut fired = 0u64;
+        while fired < $events {
+            let (t, _) = k.next().expect("resident set never empties");
+            fired += 1;
+            k.schedule(t + rng.f64() * 10.0, fired as u32);
+        }
+        std::hint::black_box(k.len());
+        2 * fired
+    }};
+}
+
+/// Schedule/fire churn with handle cancels and periodic tag
+/// invalidations. Returns total ops (schedules + fires + cancels +
+/// invalidations), the unit the events/sec figures normalize over.
+macro_rules! cancel_churn {
+    ($mk:expr, $resident:expr, $target_ops:expr) => {{
+        let mut k = $mk;
+        let mut rng = Rng::new(0x6b69_6c6c);
+        let mut ids = std::collections::VecDeque::new();
+        let mut ops = 0u64;
+        for i in 0..$resident {
+            ids.push_back(k.schedule_tagged(rng.f64() * 10.0, i % 16, i as u32));
+            ops += 1;
+        }
+        let mut i: u32 = 0;
+        while ops < $target_ops {
+            let t = k.now() + rng.f64() * 10.0;
+            ids.push_back(k.schedule_tagged(t, (i % 16) as u64, i));
+            ops += 1;
+            // Retire the oldest handle; cancel half of them (the other
+            // half fire or die via tag invalidation).
+            if let Some(id) = ids.pop_front() {
+                if i % 2 == 0 {
+                    k.cancel(id);
+                    ops += 1;
+                }
+            }
+            if i % 4096 == 0 {
+                k.invalidate_tag(rng.below(16) as u64);
+                ops += 1;
+            }
+            if k.next().is_some() {
+                ops += 1;
+            }
+            i += 1;
+        }
+        std::hint::black_box(k.len());
+        ops
+    }};
+}
+
+fn workload_json(name: &str, events: u64, wall_s: f64) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("events", Json::Num(events as f64)),
+        ("wall_s", Json::Num(wall_s)),
+        ("events_per_sec", Json::Num(events as f64 / wall_s.max(1e-12))),
+    ])
+}
+
+fn main() {
+    let smoke = smoke();
+
+    // Workload sizes. Full mode drives ~10M events of pure churn — the
+    // trajectory point the acceptance criterion tracks.
+    let (resident, churn_events) = if smoke {
+        (4_096u64, 50_000u64)
+    } else {
+        (65_536, 10_000_000)
+    };
+    let (cc_resident, cc_new_ops, cc_old_ops) = if smoke {
+        (512u64, 20_000u64, 10_000u64)
+    } else {
+        (8_192, 2_000_000, 200_000)
+    };
+
+    header(&format!(
+        "event kernel: calendar queue vs binary-heap oracle ({} churn events, resident {})",
+        churn_events, resident
+    ));
+
+    // -- 1. pure schedule→fire churn -------------------------------------
+    let mut ops_new = 0u64;
+    let churn_new = bench("kernel/churn/calendar", 1, || {
+        ops_new = churn!(Kernel::new(), resident, churn_events);
+    });
+    let mut ops_old = 0u64;
+    let churn_old = bench("kernel/churn/heap-oracle", 1, || {
+        ops_old = churn!(HeapKernel::new(), resident, churn_events);
+    });
+    let churn_evps_new = ops_new as f64 / churn_new.mean_s.max(1e-12);
+    let churn_evps_old = ops_old as f64 / churn_old.mean_s.max(1e-12);
+    let churn_speedup = churn_evps_new / churn_evps_old.max(1e-12);
+    println!(
+        "  -> churn: {:.2e} ev/s calendar vs {:.2e} ev/s heap ({churn_speedup:.2}x)",
+        churn_evps_new, churn_evps_old
+    );
+
+    // -- 2. tagged-cancel churn -------------------------------------------
+    let mut cc_ops_new = 0u64;
+    let cc_new = bench("kernel/tagged-cancel/calendar", 1, || {
+        cc_ops_new = cancel_churn!(Kernel::new(), cc_resident, cc_new_ops);
+    });
+    let mut cc_ops_old = 0u64;
+    let cc_old = bench("kernel/tagged-cancel/heap-oracle", 1, || {
+        cc_ops_old = cancel_churn!(HeapKernel::new(), cc_resident, cc_old_ops);
+    });
+    let cc_evps_new = cc_ops_new as f64 / cc_new.mean_s.max(1e-12);
+    let cc_evps_old = cc_ops_old as f64 / cc_old.mean_s.max(1e-12);
+    let cc_speedup = cc_evps_new / cc_evps_old.max(1e-12);
+    println!(
+        "  -> tagged-cancel: {:.2e} ops/s calendar vs {:.2e} ops/s heap ({cc_speedup:.2}x)",
+        cc_evps_new, cc_evps_old
+    );
+
+    // -- 3. end-to-end co-simulation on the production kernel --------------
+    let sc = Scenario::build(ScenarioConfig {
+        n_clients: if smoke { 12 } else { 20 },
+        n_edges: if smoke { 3 } else { 4 },
+        weeks: 5,
+        balanced_clients: false,
+        ..Default::default()
+    })
+    .expect("bench scenario");
+    let cfg = InterferenceConfig {
+        preset: Preset::DiurnalSurge,
+        duration_s: if smoke { 20.0 } else { 240.0 },
+        record_trace: false,
+        ..Default::default()
+    };
+    let mut kernel = Some(Kernel::new());
+    let mut cosim_events = 0u64;
+    let cosim = bench("cosim/interference-e2e", if smoke { 1 } else { 3 }, || {
+        let (out, k) =
+            run_with_kernel(&sc, &cfg, kernel.take().expect("kernel threaded")).expect("cosim run");
+        cosim_events = out.events_processed;
+        kernel = Some(k);
+        std::hint::black_box(out.serving.total());
+    });
+    let cosim_evps = cosim_events as f64 / cosim.mean_s.max(1e-12);
+    println!("  -> cosim: {cosim_events} kernel events at {cosim_evps:.2e} ev/s");
+
+    let speedup_geomean = geomean(&[churn_speedup, cc_speedup]);
+    println!("  -> geomean kernel speedup vs heap oracle: {speedup_geomean:.2}x");
+
+    let artifact = Json::obj(vec![
+        ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "calendar",
+            Json::Arr(vec![
+                workload_json("churn", ops_new, churn_new.mean_s),
+                workload_json("tagged-cancel", cc_ops_new, cc_new.mean_s),
+            ]),
+        ),
+        (
+            "heap_oracle",
+            Json::Arr(vec![
+                workload_json("churn", ops_old, churn_old.mean_s),
+                workload_json("tagged-cancel", cc_ops_old, cc_old.mean_s),
+            ]),
+        ),
+        (
+            "speedup",
+            Json::obj(vec![
+                ("churn", Json::Num(churn_speedup)),
+                ("tagged_cancel", Json::Num(cc_speedup)),
+                ("geomean", Json::Num(speedup_geomean)),
+            ]),
+        ),
+        ("cosim", workload_json("interference-e2e", cosim_events, cosim.mean_s)),
+    ]);
+    std::fs::write("BENCH_kernel.json", artifact.to_pretty()).expect("write BENCH_kernel.json");
+    println!("  -> wrote BENCH_kernel.json");
+}

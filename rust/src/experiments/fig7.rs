@@ -11,7 +11,10 @@
 
 use crate::config::params::ParamSpec;
 use crate::config::Setup;
-use crate::inference::simulation::{simulate, ServingConfig, ServingOutcome};
+use crate::inference::simulation::{
+    simulate_with_arrivals, ServingConfig, ServingOutcome,
+};
+use crate::inference::trace::ArrivalModel;
 use crate::inference::LatencyModel;
 use crate::metrics::cost::{flat_fl_bytes, hfl_bytes};
 use crate::metrics::export::ascii_table;
@@ -37,6 +40,10 @@ pub struct Fig7Config {
     pub seed: u64,
     /// Scale factor on every λ_i (Fig. 8b uses 10×).
     pub lambda_scale: f64,
+    /// Arrival generation (default: per-device Poisson, the paper
+    /// regime; an open-loop trace evaluates the setups under diurnal /
+    /// flash-crowd / hotspot load shapes).
+    pub arrivals: ArrivalModel,
 }
 
 impl Default for Fig7Config {
@@ -47,6 +54,7 @@ impl Default for Fig7Config {
             queue_window_s: 0.05,
             seed: 7,
             lambda_scale: 1.0,
+            arrivals: ArrivalModel::PerDevicePoisson,
         }
     }
 }
@@ -66,9 +74,12 @@ pub fn run(sc: &Scenario, cfg: &Fig7Config) -> Fig7Result {
         seed: cfg.seed + seed_off,
     };
 
-    let flat = simulate(&base(vec![None; sc.topo.n_devices()], 0));
-    let location = simulate(&base(sc.assign_location.assign.clone(), 1));
-    let hflop = simulate(&base(sc.assign_hflop.assign.clone(), 2));
+    let flat =
+        simulate_with_arrivals(&base(vec![None; sc.topo.n_devices()], 0), &cfg.arrivals);
+    let location =
+        simulate_with_arrivals(&base(sc.assign_location.assign.clone(), 1), &cfg.arrivals);
+    let hflop =
+        simulate_with_arrivals(&base(sc.assign_hflop.assign.clone(), 2), &cfg.arrivals);
 
     Fig7Result { flat, location, hflop }
 }
@@ -155,11 +166,46 @@ const SCHEMA: &[ParamSpec] = &[
         help: "nominal aggregation rounds for comm-volume accounting",
     },
     ParamSpec {
+        key: "trace",
+        default: ParamDefault::Str("none"),
+        help: "open-loop arrival trace: none|constant|diurnal|flash-crowd|hotspot",
+    },
+    ParamSpec {
+        key: "trace_peak",
+        default: ParamDefault::Float(3.0),
+        help: "trace peak rate multiplier (diurnal/flash-crowd/hotspot)",
+    },
+    ParamSpec {
+        key: "trace_period_s",
+        default: ParamDefault::Float(0.0),
+        help: "diurnal period (s); 0 = one cycle over the horizon",
+    },
+    ParamSpec {
+        key: "trace_chunk_s",
+        default: ParamDefault::Float(10.0),
+        help: "open-loop generation chunk (s)",
+    },
+    ParamSpec {
         key: "model_bytes",
         default: ParamDefault::Int(262_144),
         help: "serialized model size for comm-volume accounting",
     },
 ];
+
+/// Build the arrival model from the shared `trace*` params (fig7, fig8
+/// and interference expose the same four keys).
+pub(super) fn arrivals_from(
+    ctx: &ExperimentCtx,
+    duration_s: f64,
+) -> anyhow::Result<ArrivalModel> {
+    ArrivalModel::from_named(
+        &ctx.params.str("trace")?,
+        ctx.params.f64("trace_peak")?,
+        ctx.params.f64("trace_period_s")?,
+        ctx.params.f64("trace_chunk_s")?,
+        duration_s,
+    )
+}
 
 fn scenario_from(ctx: &ExperimentCtx, seed: u64) -> anyhow::Result<Scenario> {
     Scenario::build(ScenarioConfig {
@@ -202,7 +248,8 @@ fn run_single(ctx: &mut ExperimentCtx, setup: Setup) -> anyhow::Result<Report> {
         queue_window_s: ctx.params.f64("queue_window_s")?,
         seed: ctx.params.u64("seed")?,
     };
-    let out = simulate(&cfg);
+    let arrivals = arrivals_from(ctx, cfg.duration_s)?;
+    let out = simulate_with_arrivals(&cfg, &arrivals);
 
     let rounds = ctx.params.usize("rounds")?;
     let model_bytes = ctx.params.usize("model_bytes")?;
@@ -247,6 +294,7 @@ fn run_all_setups(ctx: &mut ExperimentCtx) -> anyhow::Result<Report> {
         lambda_scale: ctx.params.f64("lambda_scale")?,
         latency: LatencyModel::default()
             .with_speedup(ctx.params.f64("speedup")?.min(0.95)),
+        arrivals: arrivals_from(ctx, duration_s)?,
     };
     let mut agg = [OnlineStats::new(), OnlineStats::new(), OnlineStats::new()];
     let mut spills = [0.0f64; 3];
@@ -419,6 +467,31 @@ mod tests {
         assert!(
             report.get_f64("flat_mean_ms").unwrap() > report.get_f64("hflop_mean_ms").unwrap()
         );
+    }
+
+    #[test]
+    fn flash_crowd_trace_preserves_setup_ordering() {
+        // The Fig. 7 ordering (flat >> hflop) must survive an open-loop
+        // flash-crowd load shape — the trace changes volume, not the
+        // routing economics.
+        let sc = scenario();
+        let cfg = Fig7Config {
+            arrivals: ArrivalModel::from_named("flash-crowd", 4.0, 0.0, 10.0, 120.0).unwrap(),
+            ..Fig7Config::default()
+        };
+        let flat = run(&sc, &Fig7Config::default());
+        let r = run(&sc, &cfg);
+        assert!(r.flat.latency.mean() > r.hflop.latency.mean());
+        // Flash crowd adds volume over the Poisson baseline.
+        assert!(r.flat.total() > flat.flat.total());
+    }
+
+    #[test]
+    fn single_setup_cell_accepts_trace_param() {
+        let mut p = quick_params("hflop");
+        p.set("trace", Value::Str("diurnal".into())).unwrap();
+        let report = Fig7Experiment.run(&mut ExperimentCtx::cell(p)).unwrap();
+        assert!(report.get_f64("requests").unwrap() > 50.0);
     }
 
     #[test]

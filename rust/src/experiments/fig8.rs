@@ -10,9 +10,10 @@
 //!     non-hierarchical method wins (paper: 14.25%).
 
 use crate::config::params::ParamSpec;
+use crate::inference::trace::ArrivalModel;
 use crate::inference::LatencyModel;
 
-use super::fig7::{run as run_fig7, Fig7Config};
+use super::fig7::{arrivals_from, run as run_fig7, Fig7Config};
 use super::registry::{Experiment, ExperimentCtx, ParamDefault, Report};
 use super::scenario::{Scenario, ScenarioConfig};
 
@@ -34,6 +35,8 @@ pub struct Fig8Config {
     pub seed: u64,
     pub lambda_scale: f64,
     pub speedups: Vec<f64>,
+    /// Arrival generation, threaded through every speedup point.
+    pub arrivals: ArrivalModel,
 }
 
 impl Default for Fig8Config {
@@ -49,6 +52,7 @@ impl Default for Fig8Config {
             seed: 11,
             lambda_scale: 1.0,
             speedups: (0..=19).map(|i| i as f64 * 0.05).collect(),
+            arrivals: ArrivalModel::PerDevicePoisson,
         }
     }
 }
@@ -64,6 +68,7 @@ pub fn run(sc: &Scenario, cfg: &Fig8Config) -> Vec<Fig8Row> {
                 queue_window_s: cfg.queue_window_s,
                 seed: cfg.seed,
                 lambda_scale: cfg.lambda_scale,
+                arrivals: cfg.arrivals.clone(),
             };
             let r = run_fig7(sc, &f7);
             Fig8Row {
@@ -123,6 +128,26 @@ const SCHEMA: &[ParamSpec] = &[
         default: ParamDefault::Int(20),
         help: "points on the 0..0.95 speedup axis",
     },
+    ParamSpec {
+        key: "trace",
+        default: ParamDefault::Str("none"),
+        help: "open-loop arrival trace: none|constant|diurnal|flash-crowd|hotspot",
+    },
+    ParamSpec {
+        key: "trace_peak",
+        default: ParamDefault::Float(3.0),
+        help: "trace peak rate multiplier (diurnal/flash-crowd/hotspot)",
+    },
+    ParamSpec {
+        key: "trace_period_s",
+        default: ParamDefault::Float(0.0),
+        help: "diurnal period (s); 0 = one cycle over the horizon",
+    },
+    ParamSpec {
+        key: "trace_chunk_s",
+        default: ParamDefault::Float(10.0),
+        help: "open-loop generation chunk (s)",
+    },
 ];
 
 impl Experiment for Fig8Experiment {
@@ -160,6 +185,7 @@ impl Experiment for Fig8Experiment {
             duration_s,
             seed: ctx.params.u64("seed")?,
             speedups,
+            arrivals: arrivals_from(ctx, duration_s)?,
             ..Fig8Config::default()
         };
 

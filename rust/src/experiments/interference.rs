@@ -29,16 +29,20 @@ use crate::experiments::registry::{Experiment, ExperimentCtx, ParamDefault, Repo
 use crate::experiments::scenario::{Scenario, ScenarioConfig};
 use crate::fl::timing::RoundTimeModel;
 use crate::inference::cosim::{
-    run_cell, ControlConfig, ControlPlane, CoSimConfig, CoSimOutcome, DriftModel, FaultEvent,
-    TrainingConfig, TrainingSchedule,
+    run_cell_reusing, CoEvent, ControlConfig, ControlPlane, CoSimConfig, CoSimOutcome,
+    DriftModel, FaultEvent, TrainingConfig, TrainingSchedule,
 };
 use crate::inference::simulation::ServingConfig;
+use crate::inference::trace::{ArrivalModel, RateTrace};
 use crate::inference::LatencyModel;
+use crate::metrics::cost::hfl_bytes;
+use crate::metrics::export::ascii_table;
 use crate::orchestrator::{
     DeploymentPlan, Gpo, InferenceController, InferenceCtlConfig, LearningController,
     LearningCtlConfig,
 };
-use crate::solver::SolveOptions;
+use crate::sim::Kernel;
+use crate::solver::{LocalSearchOptions, LsMode, Mode, SolveOptions};
 
 /// The four joint-timeline scenarios.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,6 +98,10 @@ pub struct InterferenceConfig {
     /// Solver options for the control plane's re-solves (the sweep
     /// engine's `LsMode` axis plugs in here).
     pub solve: SolveOptions,
+    /// Arrival generation. With an open-loop [`ArrivalModel::Trace`],
+    /// preset surge faults are folded into the trace as overlays (the
+    /// trace owns the λ timeline) instead of multiplier pokes.
+    pub arrivals: ArrivalModel,
     pub seed: u64,
     pub record_trace: bool,
 }
@@ -114,6 +122,7 @@ impl Default for InterferenceConfig {
             epochs: 5,
             model_bytes: 4 * 65_536,
             solve: SolveOptions::auto(),
+            arrivals: ArrivalModel::PerDevicePoisson,
             seed: 7,
             record_trace: false,
         }
@@ -180,6 +189,18 @@ fn preset_plan(
 /// the scenario's HFLOP plan (so the first re-solve is a *swap*, not a
 /// cold start), and runs the co-simulation to the horizon.
 pub fn run(sc: &Scenario, cfg: &InterferenceConfig) -> anyhow::Result<CoSimOutcome> {
+    Ok(run_with_kernel(sc, cfg, Kernel::new())?.0)
+}
+
+/// [`run`] on a caller-supplied kernel, returning it for the next cell:
+/// the all-presets driver threads one kernel through its four runs so
+/// the slab and bucket arrays are allocated once (outcomes stay
+/// bit-identical — the kernel is fully reset between cells).
+pub fn run_with_kernel(
+    sc: &Scenario,
+    cfg: &InterferenceConfig,
+    kernel: Kernel<CoEvent>,
+) -> anyhow::Result<(CoSimOutcome, Kernel<CoEvent>)> {
     let n = sc.topo.n_devices();
     let m = sc.topo.n_edges();
     let lambdas: Vec<f64> = sc.lambdas().iter().map(|l| l * cfg.lambda_scale).collect();
@@ -210,7 +231,35 @@ pub fn run(sc: &Scenario, cfg: &InterferenceConfig) -> anyhow::Result<CoSimOutco
         proven_optimal: sc.hflop_optimal,
     });
 
-    let (schedule, faults, drift) = preset_plan(cfg, sc, &lambdas);
+    let (schedule, mut faults, drift) = preset_plan(cfg, sc, &lambdas);
+    // In open-loop trace mode the trace owns the λ timeline: preset
+    // surge fault pairs are folded in as overlays (the announcements at
+    // the overlay's boundaries keep the controller's λ view in sync),
+    // and the now-inert multiplier pokes are dropped from the schedule.
+    let arrivals = match &cfg.arrivals {
+        ArrivalModel::PerDevicePoisson => ArrivalModel::PerDevicePoisson,
+        ArrivalModel::Trace { trace, chunk_s } => {
+            let mut combined = trace.clone();
+            let mut pending: Option<(f64, f64)> = None;
+            for (t, f) in &faults {
+                match f {
+                    FaultEvent::SurgeStart { factor } => pending = Some((*t, *factor)),
+                    FaultEvent::SurgeEnd => {
+                        if let Some((t0, factor)) = pending.take() {
+                            if *t > t0 {
+                                combined = combined.overlay(&RateTrace::surge(factor, t0, *t));
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            faults.retain(|(_, f)| {
+                !matches!(f, FaultEvent::SurgeStart { .. } | FaultEvent::SurgeEnd)
+            });
+            ArrivalModel::Trace { trace: combined, chunk_s: *chunk_s }
+        }
+    };
     let control = ControlPlane::new(
         gpo,
         learning,
@@ -223,7 +272,7 @@ pub fn run(sc: &Scenario, cfg: &InterferenceConfig) -> anyhow::Result<CoSimOutco
         },
     );
 
-    Ok(run_cell(
+    Ok(run_cell_reusing(
         CoSimConfig {
             serving: ServingConfig {
                 assign: sc.assign_hflop.assign.clone(),
@@ -244,8 +293,10 @@ pub fn run(sc: &Scenario, cfg: &InterferenceConfig) -> anyhow::Result<CoSimOutco
             faults,
             bucket_s: cfg.bucket_s,
             record_trace: cfg.record_trace,
+            arrivals,
         },
         Some(control),
+        kernel,
     ))
 }
 
@@ -321,6 +372,26 @@ const SCHEMA: &[ParamSpec] = &[
         help: "control-plane re-solve engine: auto|completion|incremental",
     },
     ParamSpec {
+        key: "trace",
+        default: ParamDefault::Str("none"),
+        help: "open-loop arrival trace: none|constant|diurnal|flash-crowd|hotspot",
+    },
+    ParamSpec {
+        key: "trace_peak",
+        default: ParamDefault::Float(3.0),
+        help: "trace peak rate multiplier (diurnal/flash-crowd/hotspot)",
+    },
+    ParamSpec {
+        key: "trace_period_s",
+        default: ParamDefault::Float(0.0),
+        help: "diurnal period (s); 0 = one cycle over the horizon",
+    },
+    ParamSpec {
+        key: "trace_chunk_s",
+        default: ParamDefault::Float(10.0),
+        help: "open-loop generation chunk (s)",
+    },
+    ParamSpec {
         key: "seed",
         default: ParamDefault::Int(7),
         help: "co-simulation seed (the sweep writes the cell seed here)",
@@ -351,6 +422,13 @@ fn config_from(
         lambda_scale: ctx.params.f64("lambda_scale")?,
         model_bytes: ctx.params.usize("model_bytes")?,
         solve: solve_from_ls_mode(&ctx.params.str("ls_mode")?)?,
+        arrivals: ArrivalModel::from_named(
+            &ctx.params.str("trace")?,
+            ctx.params.f64("trace_peak")?,
+            ctx.params.f64("trace_period_s")?,
+            ctx.params.f64("trace_chunk_s")?,
+            duration_s,
+        )?,
         seed: ctx.params.u64("seed")?,
         ..Default::default()
     })
@@ -400,8 +478,13 @@ impl Experiment for InterferenceExperiment {
             let duration_s = ctx.f64_capped("duration_s", 60.0)?;
             let mut rows = Vec::new();
             let mut pretty: Vec<Vec<String>> = Vec::new();
+            // One kernel threads through all four presets: its slab and
+            // bucket arrays are allocated once and reset between cells.
+            let mut kernel = Kernel::new();
             for (i, preset) in Preset::ALL.into_iter().enumerate() {
-                let out = run(&sc, &config_from(ctx, preset, duration_s)?)?;
+                let (out, k) =
+                    run_with_kernel(&sc, &config_from(ctx, preset, duration_s)?, kernel)?;
+                kernel = k;
                 let key = preset.name().replace('-', "_");
                 report.num(&format!("{key}_mean_ms"), out.serving.latency.mean());
                 report.num(&format!("{key}_rounds"), out.rounds_completed as f64);
@@ -586,5 +669,86 @@ mod tests {
         assert_eq!(a.trace, b.trace);
         assert_eq!(a.serving.latency.mean().to_bits(), b.serving.latency.mean().to_bits());
         assert_eq!(a.plan_swaps, b.plan_swaps);
+    }
+
+    #[test]
+    fn kernel_reuse_across_presets_is_bit_identical() {
+        // The all-presets driver threads one kernel through its runs;
+        // each cell must match a fresh-kernel run exactly.
+        let sc = scenario();
+        let mut kernel = Kernel::new();
+        for preset in Preset::ALL {
+            let cfg = InterferenceConfig { record_trace: true, ..quick(preset) };
+            let fresh = run(&sc, &cfg).unwrap();
+            let (reused, k) = run_with_kernel(&sc, &cfg, kernel).unwrap();
+            kernel = k;
+            assert_eq!(fresh.trace, reused.trace, "preset {}", preset.name());
+            assert_eq!(fresh.events_processed, reused.events_processed);
+            assert_eq!(fresh.events_cancelled, reused.events_cancelled);
+        }
+    }
+
+    #[test]
+    fn diurnal_trace_mode_runs_and_adds_volume() {
+        let sc = scenario();
+        let base = quick(Preset::Steady);
+        let traced = InterferenceConfig {
+            arrivals: ArrivalModel::from_named("diurnal", 3.0, 0.0, 10.0, base.duration_s)
+                .unwrap(),
+            ..base.clone()
+        };
+        let flat = run(&sc, &base).unwrap();
+        let out = run(&sc, &traced).unwrap();
+        // Diurnal trough 1.0 / peak 3.0 averages above the flat rate.
+        assert!(
+            out.serving.total() as f64 > flat.serving.total() as f64 * 1.2,
+            "{} vs {}",
+            out.serving.total(),
+            flat.serving.total()
+        );
+        assert!(out.rounds_completed >= 1);
+    }
+
+    #[test]
+    fn trace_mode_folds_preset_surge_into_overlay() {
+        // DiurnalSurge under a constant open-loop trace: the preset's
+        // SurgeStart/SurgeEnd pair must act through the trace overlay
+        // (more volume than steady), not through the inert multiplier.
+        let sc = scenario();
+        let mk = |preset| InterferenceConfig {
+            arrivals: ArrivalModel::Trace {
+                trace: RateTrace::constant(1.0),
+                chunk_s: 10.0,
+            },
+            ..quick(preset)
+        };
+        let steady = run(&sc, &mk(Preset::Steady)).unwrap();
+        let surged = run(&sc, &mk(Preset::DiurnalSurge)).unwrap();
+        assert!(
+            surged.serving.total() as f64 > steady.serving.total() as f64 * 1.2,
+            "{} vs {}",
+            surged.serving.total(),
+            steady.serving.total()
+        );
+    }
+
+    #[test]
+    fn experiment_trait_accepts_trace_param() {
+        use crate::config::params::{Params, Value};
+        let mut p = Params::defaults(InterferenceExperiment.param_schema());
+        p.set("preset", Value::Str("steady".into())).unwrap();
+        p.set("clients", Value::Int(12)).unwrap();
+        p.set("edges", Value::Int(3)).unwrap();
+        p.set("duration_s", Value::Float(60.0)).unwrap();
+        p.set("lambda_scale", Value::Float(0.5)).unwrap();
+        p.set("trace", Value::Str("flash-crowd".into())).unwrap();
+        let mut ctx = ExperimentCtx::cell(p);
+        let report = InterferenceExperiment.run(&mut ctx).unwrap();
+        assert!(report.get_f64("requests").unwrap() > 100.0);
+
+        let mut bad = Params::defaults(InterferenceExperiment.param_schema());
+        bad.set("preset", Value::Str("steady".into())).unwrap();
+        bad.set("trace", Value::Str("sinusoid".into())).unwrap();
+        assert!(InterferenceExperiment.run(&mut ExperimentCtx::cell(bad)).is_err());
     }
 }

@@ -30,6 +30,7 @@
 
 use super::latency::LatencyModel;
 use super::simulation::{admission_bound, ServingConfig, ServingOutcome};
+use super::trace::{ArrivalModel, RateTrace};
 use crate::fl::timing::RoundTimeModel;
 use crate::orchestrator::{Gpo, InferenceController, LearningController};
 use crate::sim::{Component, Kernel};
@@ -62,6 +63,10 @@ pub enum FaultEvent {
 pub enum CoEvent {
     // --- serving plane ---------------------------------------------------
     Arrival { device: usize },
+    /// Next open-loop arrival from the rate-trace source; the handler
+    /// routes it and schedules the following one from the generated
+    /// buffer (one pending timer total, not one per device).
+    TraceArrival { device: usize },
     EdgeDone { edge: usize },
     Complete { t_start: f64, class: Class },
     /// Drain a failed edge's queue, proxying the backlog to the cloud.
@@ -94,6 +99,7 @@ impl CoEvent {
     fn plane(&self) -> Plane {
         match self {
             CoEvent::Arrival { .. }
+            | CoEvent::TraceArrival { .. }
             | CoEvent::EdgeDone { .. }
             | CoEvent::Complete { .. }
             | CoEvent::FlushEdge { .. } => Plane::Serving,
@@ -200,6 +206,183 @@ impl TimeBuckets {
 }
 
 // ---------------------------------------------------------------------------
+// Open-loop arrival generation (rate traces)
+// ---------------------------------------------------------------------------
+
+/// Seed salt for the trace-arrival RNG stream — a separate stream from
+/// the serving plane's routing/service draws (same pattern as the
+/// reservoir's `RESERVOIR_SEED_SALT`), so attaching a trace never
+/// perturbs service-time sequences.
+const TRACE_SEED_SALT: u64 = 0x7261_7465_7472_6163; // "ratetrac"
+
+/// Batched open-loop arrival generator: Lewis–Shedler thinning of a
+/// [`RateTrace`] against each chunk's maximum aggregate rate. Because
+/// trace segments are piecewise-constant, the chunk maximum is a true
+/// majorant and thinning is *exact*, not approximate. Arrivals are
+/// buffered one `chunk_s` window at a time, so the kernel carries a
+/// single pending arrival timer instead of one per device.
+struct TraceSource {
+    trace: RateTrace,
+    chunk_s: f64,
+    horizon: f64,
+    rng: Rng,
+    lambda: Vec<f64>,
+    /// Prefix sums of the base per-device rates (device attribution).
+    cum_base: Vec<f64>,
+    total_base: f64,
+    /// Aggregate multiplier per trace segment: `mult` times the hotspot
+    /// share uplift, precomputed so the thinning loop is arithmetic only.
+    agg: Vec<f64>,
+    /// Boosted prefix sums cached for the current hotspot parameters.
+    cum_hot: Vec<f64>,
+    hot_key: (f64, f64),
+    buf: std::collections::VecDeque<(f64, usize)>,
+    /// Generation frontier: arrivals in `[0, gen_t)` are already drawn.
+    gen_t: f64,
+}
+
+/// Hotspot population size for `frac` of `n` devices (index prefix).
+fn hot_count(n: usize, frac: f64) -> usize {
+    ((n as f64 * frac).ceil() as usize).min(n)
+}
+
+impl TraceSource {
+    fn new(
+        trace: RateTrace,
+        chunk_s: f64,
+        lambda: Vec<f64>,
+        seed: u64,
+        horizon: f64,
+    ) -> TraceSource {
+        assert!(chunk_s > 0.0, "trace chunk must be positive");
+        let mut cum_base = Vec::with_capacity(lambda.len());
+        let mut acc = 0.0;
+        for &l in &lambda {
+            acc += l.max(0.0);
+            cum_base.push(acc);
+        }
+        let total_base = acc;
+        let agg = trace
+            .segments()
+            .iter()
+            .map(|s| {
+                let (share, boost) = if s.has_hotspot() && total_base > 0.0 {
+                    let n_hot = hot_count(lambda.len(), s.hot_frac);
+                    let share =
+                        if n_hot == 0 { 0.0 } else { cum_base[n_hot - 1] / total_base };
+                    (share, s.hot_boost)
+                } else {
+                    (0.0, 1.0)
+                };
+                s.mult * (1.0 + share * (boost - 1.0))
+            })
+            .collect();
+        TraceSource {
+            trace,
+            chunk_s,
+            horizon,
+            rng: Rng::new(seed ^ TRACE_SEED_SALT),
+            lambda,
+            cum_base,
+            total_base,
+            agg,
+            cum_hot: Vec::new(),
+            hot_key: (0.0, 1.0),
+            buf: std::collections::VecDeque::new(),
+            gen_t: 0.0,
+        }
+    }
+
+    /// Generate chunks until the buffer is non-empty or the horizon is
+    /// reached.
+    fn refill(&mut self) {
+        while self.buf.is_empty() && self.gen_t < self.horizon {
+            let end = (self.gen_t + self.chunk_s).min(self.horizon);
+            let first = self.trace.index_at(self.gen_t);
+            let last = self.trace.index_at(end);
+            let peak = self.agg[first..=last].iter().fold(0.0f64, |a, &b| a.max(b));
+            if peak > 0.0 && self.total_base > 0.0 {
+                let lam_max = self.total_base * peak;
+                let mut t = self.gen_t;
+                loop {
+                    t += self.rng.exponential(lam_max);
+                    if t >= end {
+                        break;
+                    }
+                    let idx = self.trace.index_at(t);
+                    let a = self.agg[idx];
+                    if a > 0.0 && self.rng.f64() * peak < a {
+                        let d = self.pick_device(idx);
+                        self.buf.push_back((t, d));
+                    }
+                }
+            }
+            self.gen_t = end;
+        }
+    }
+
+    fn next_arrival(&mut self) -> Option<(f64, usize)> {
+        self.refill();
+        self.buf.pop_front()
+    }
+
+    /// Attribute an accepted arrival to a device: λ-proportional in the
+    /// base regime, with hotspot devices up-weighted by the boost.
+    fn pick_device(&mut self, seg_idx: usize) -> usize {
+        let seg = &self.trace.segments()[seg_idx];
+        let (hot_frac, hot_boost, hotspot) = (seg.hot_frac, seg.hot_boost, seg.has_hotspot());
+        let u01 = self.rng.f64();
+        if hotspot {
+            self.ensure_hot_cache(hot_frac, hot_boost);
+            let total = *self.cum_hot.last().expect("non-empty device set");
+            let u = u01 * total;
+            self.cum_hot.partition_point(|&c| c <= u).min(self.lambda.len() - 1)
+        } else {
+            let u = u01 * self.total_base;
+            self.cum_base.partition_point(|&c| c <= u).min(self.lambda.len() - 1)
+        }
+    }
+
+    fn ensure_hot_cache(&mut self, frac: f64, boost: f64) {
+        if self.hot_key == (frac, boost) && !self.cum_hot.is_empty() {
+            return;
+        }
+        let n_hot = hot_count(self.lambda.len(), frac);
+        self.cum_hot.clear();
+        let mut acc = 0.0;
+        for (i, &l) in self.lambda.iter().enumerate() {
+            acc += if i < n_hot { l.max(0.0) * boost } else { l.max(0.0) };
+            self.cum_hot.push(acc);
+        }
+        self.hot_key = (frac, boost);
+    }
+
+    /// λ-change announcements for the control plane: `(t, aggregate
+    /// factor)` at every point before the horizon where the trace's
+    /// aggregate multiplier changes (including `t = 0` when it starts
+    /// away from 1.0). Scheduled as `SurgeStart` faults so the learning
+    /// controller's λ view tracks the trace — load-aware
+    /// re-orchestration without a second notification channel.
+    fn announcements(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut prev = 1.0f64;
+        let mut t = 0.0f64;
+        for (i, seg) in self.trace.segments().iter().enumerate() {
+            if t >= self.horizon {
+                break;
+            }
+            let a = self.agg[i];
+            if a != prev {
+                out.push((t, a));
+                prev = a;
+            }
+            t = seg.t_end;
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Serving plane
 // ---------------------------------------------------------------------------
 
@@ -218,6 +401,9 @@ pub struct ServingPlane {
     edges: Vec<EdgeQueue>,
     out: ServingOutcome,
     timeline: TimeBuckets,
+    /// Open-loop trace generator; `None` in the default closed-loop
+    /// per-device Poisson mode.
+    source: Option<TraceSource>,
 }
 
 impl ServingPlane {
@@ -241,6 +427,54 @@ impl ServingPlane {
             Class::Direct => self.out.direct_to_cloud += 1,
         }
     }
+
+    /// Route one request from `device` (R1/R3 on the current assignment),
+    /// regardless of whether the arrival came from the closed-loop
+    /// per-device Poisson stream or an open-loop trace.
+    fn route_request(
+        &mut self,
+        now: f64,
+        device: usize,
+        kernel: &mut Kernel<CoEvent>,
+        shared: &mut SharedWorld,
+    ) {
+        match shared.assign[device] {
+            Some(j) if j < self.edges.len() && shared.edges[j].up => {
+                // R3 admission against the *effective* rate.
+                let bound = admission_bound(self.queue_window_s, shared.effective_rate(j));
+                if self.edges[j].queue.len() < bound {
+                    self.edges[j].queue.push_back(now);
+                    if !self.edges[j].busy {
+                        self.edges[j].busy = true;
+                        let svc = self.edge_service_ms(j, shared);
+                        kernel.schedule_tagged_in(
+                            svc / 1000.0,
+                            edge_tag(j),
+                            CoEvent::EdgeDone { edge: j },
+                        );
+                    }
+                } else {
+                    // Spill: proxy to cloud (edge hop + cloud path).
+                    let lat = self.latency.edge_rtt(&mut self.rng)
+                        + self.latency.cloud_rtt(&mut self.rng)
+                        + self.latency.cloud_service(&mut self.rng);
+                    kernel.schedule_in(
+                        lat / 1000.0,
+                        CoEvent::Complete { t_start: now, class: Class::Spill },
+                    );
+                }
+            }
+            _ => {
+                // No aggregator (flat FL) or edge down: cloud.
+                let lat = self.latency.cloud_rtt(&mut self.rng)
+                    + self.latency.cloud_service(&mut self.rng);
+                kernel.schedule_in(
+                    lat / 1000.0,
+                    CoEvent::Complete { t_start: now, class: Class::Direct },
+                );
+            }
+        }
+    }
 }
 
 impl Component<CoEvent, SharedWorld> for ServingPlane {
@@ -259,45 +493,22 @@ impl Component<CoEvent, SharedWorld> for ServingPlane {
             CoEvent::Arrival { device } => {
                 // Next request from this device (Poisson stream; a load
                 // surge scales the rate of every *future* inter-arrival).
+                // The interarrival draw comes FIRST so the routing RNG
+                // sequence is unchanged from earlier revisions.
                 let rate = self.lambda[device] * shared.surge;
                 if rate > 0.0 {
                     kernel.schedule_in(self.rng.exponential(rate), CoEvent::Arrival { device });
                 }
-                match shared.assign[device] {
-                    Some(j) if j < self.edges.len() && shared.edges[j].up => {
-                        // R3 admission against the *effective* rate.
-                        let bound =
-                            admission_bound(self.queue_window_s, shared.effective_rate(j));
-                        if self.edges[j].queue.len() < bound {
-                            self.edges[j].queue.push_back(now);
-                            if !self.edges[j].busy {
-                                self.edges[j].busy = true;
-                                let svc = self.edge_service_ms(j, shared);
-                                kernel.schedule_tagged_in(
-                                    svc / 1000.0,
-                                    edge_tag(j),
-                                    CoEvent::EdgeDone { edge: j },
-                                );
-                            }
-                        } else {
-                            // Spill: proxy to cloud (edge hop + cloud path).
-                            let lat = self.latency.edge_rtt(&mut self.rng)
-                                + self.latency.cloud_rtt(&mut self.rng)
-                                + self.latency.cloud_service(&mut self.rng);
-                            kernel.schedule_in(
-                                lat / 1000.0,
-                                CoEvent::Complete { t_start: now, class: Class::Spill },
-                            );
-                        }
-                    }
-                    _ => {
-                        // No aggregator (flat FL) or edge down: cloud.
-                        let lat = self.latency.cloud_rtt(&mut self.rng)
-                            + self.latency.cloud_service(&mut self.rng);
-                        kernel.schedule_in(
-                            lat / 1000.0,
-                            CoEvent::Complete { t_start: now, class: Class::Direct },
-                        );
+                self.route_request(now, device, kernel, shared);
+            }
+            CoEvent::TraceArrival { device } => {
+                self.route_request(now, device, kernel, shared);
+                // Pull the next open-loop arrival; the source refills its
+                // buffer one chunk at a time, so the kernel only ever
+                // carries a single pending trace timer.
+                if let Some(src) = self.source.as_mut() {
+                    if let Some((t, d)) = src.next_arrival() {
+                        kernel.schedule(t, CoEvent::TraceArrival { device: d });
                     }
                 }
             }
@@ -716,6 +927,12 @@ pub struct CoSimConfig {
     pub bucket_s: f64,
     /// Record a per-event trace (determinism tests / debugging).
     pub record_trace: bool,
+    /// How request arrivals are generated. The default
+    /// ([`ArrivalModel::PerDevicePoisson`]) is the closed-loop one-timer-
+    /// per-device stream and is bit-identical to earlier revisions;
+    /// [`ArrivalModel::Trace`] switches to batched open-loop generation
+    /// from a [`RateTrace`].
+    pub arrivals: ArrivalModel,
 }
 
 impl CoSimConfig {
@@ -729,6 +946,7 @@ impl CoSimConfig {
             faults: Vec::new(),
             bucket_s: 10.0,
             record_trace: false,
+            arrivals: ArrivalModel::PerDevicePoisson,
         }
     }
 }
@@ -773,6 +991,19 @@ pub struct CoSim {
 
 impl CoSim {
     pub fn new(cfg: CoSimConfig, control: Option<ControlPlane>) -> CoSim {
+        CoSim::with_kernel(cfg, control, Kernel::new())
+    }
+
+    /// Assemble a co-simulation on a caller-supplied kernel. The kernel
+    /// is [`Kernel::reset`] before use (so only its slab/bucket capacity
+    /// carries over, never state) — this is the allocation-reuse path for
+    /// back-to-back cells ([`run_cell_reusing`]).
+    pub fn with_kernel(
+        cfg: CoSimConfig,
+        control: Option<ControlPlane>,
+        mut kernel: Kernel<CoEvent>,
+    ) -> CoSim {
+        kernel.reset();
         let n = cfg.serving.assign.len();
         assert_eq!(cfg.serving.lambda.len(), n, "lambda len");
         let m = cfg.serving.capacity.len();
@@ -788,6 +1019,16 @@ impl CoSim {
             surge: 1.0,
             plan_swaps: 0,
         };
+        let source = match &cfg.arrivals {
+            ArrivalModel::PerDevicePoisson => None,
+            ArrivalModel::Trace { trace, chunk_s } => Some(TraceSource::new(
+                trace.clone(),
+                *chunk_s,
+                cfg.serving.lambda.clone(),
+                cfg.serving.seed,
+                cfg.serving.duration_s,
+            )),
+        };
         let serving = ServingPlane {
             lambda: cfg.serving.lambda.clone(),
             latency: cfg.serving.latency.clone(),
@@ -798,6 +1039,7 @@ impl CoSim {
                 .collect(),
             out: ServingOutcome::new(cfg.serving.seed),
             timeline: TimeBuckets::new(cfg.bucket_s),
+            source,
         };
         let control_enabled = control.is_some();
         let report_delay_s = control.as_ref().map(|c| c.cfg.report_delay_s).unwrap_or(0.0);
@@ -816,7 +1058,7 @@ impl CoSim {
             control_enabled,
         };
         CoSim {
-            kernel: Kernel::new(),
+            kernel,
             shared,
             serving,
             training,
@@ -828,13 +1070,37 @@ impl CoSim {
     }
 
     /// Run to the horizon and assemble the outcome.
-    pub fn run(mut self) -> CoSimOutcome {
+    pub fn run(self) -> CoSimOutcome {
+        self.run_returning_kernel().0
+    }
+
+    /// Run to the horizon and hand the kernel back alongside the outcome,
+    /// so the next cell can reuse its slab and bucket allocations (see
+    /// [`run_cell_reusing`]).
+    pub fn run_returning_kernel(mut self) -> (CoSimOutcome, Kernel<CoEvent>) {
         // Seed arrivals FIRST — bit-for-bit with the pre-kernel simulator
-        // (same RNG draw order, same heap sequence numbers).
-        for d in 0..self.serving.lambda.len() {
-            if self.serving.lambda[d] > 0.0 {
-                let dt = self.serving.rng.exponential(self.serving.lambda[d]);
-                self.kernel.schedule(dt, CoEvent::Arrival { device: d });
+        // (same RNG draw order, same kernel sequence numbers).
+        if self.serving.source.is_some() {
+            // Open-loop trace mode: the control plane learns about λ
+            // changes via SurgeStart announcements at segment boundaries
+            // (the trace itself drives arrivals; `shared.surge` is then
+            // inert on the arrival path).
+            let announcements =
+                self.serving.source.as_ref().expect("checked").announcements();
+            for (t, factor) in announcements {
+                self.kernel.schedule(t, CoEvent::Fault(FaultEvent::SurgeStart { factor }));
+            }
+            if let Some((t, d)) =
+                self.serving.source.as_mut().expect("checked").next_arrival()
+            {
+                self.kernel.schedule(t, CoEvent::TraceArrival { device: d });
+            }
+        } else {
+            for d in 0..self.serving.lambda.len() {
+                if self.serving.lambda[d] > 0.0 {
+                    let dt = self.serving.rng.exponential(self.serving.lambda[d]);
+                    self.kernel.schedule(dt, CoEvent::Arrival { device: d });
+                }
             }
         }
         if let TrainingSchedule::Periodic { start_s, .. } = self.training.cfg.schedule {
@@ -881,7 +1147,7 @@ impl CoSim {
         };
         let gpo_events =
             self.control.as_mut().map(|c| std::mem::take(&mut c.gpo.events)).unwrap_or_default();
-        CoSimOutcome {
+        let outcome = CoSimOutcome {
             serving: self.serving.out,
             timeline: self.serving.timeline,
             rounds_completed: self.training.rounds_completed,
@@ -894,7 +1160,8 @@ impl CoSim {
             gpo_edge_capacity,
             gpo_events,
             trace: self.trace.unwrap_or_default(),
-        }
+        };
+        (outcome, self.kernel)
     }
 }
 
@@ -907,6 +1174,20 @@ impl CoSim {
 /// so cells are safe to fan out across `util::pool` workers in any order.
 pub fn run_cell(cfg: CoSimConfig, control: Option<ControlPlane>) -> CoSimOutcome {
     CoSim::new(cfg, control).run()
+}
+
+/// [`run_cell`] variant that reuses a kernel's slab and bucket
+/// allocations from a previous cell. The kernel is fully
+/// [`Kernel::reset`] before the run, so outcomes are bit-identical to
+/// [`run_cell`] — only allocation work is saved. Intended for loops that
+/// run many cells back to back (e.g. the interference experiment's
+/// all-presets sweep and the end-to-end kernel benchmark).
+pub fn run_cell_reusing(
+    cfg: CoSimConfig,
+    control: Option<ControlPlane>,
+    kernel: Kernel<CoEvent>,
+) -> (CoSimOutcome, Kernel<CoEvent>) {
+    CoSim::with_kernel(cfg, control, kernel).run_returning_kernel()
 }
 
 #[cfg(test)]
@@ -957,6 +1238,7 @@ mod tests {
             faults: Vec::new(),
             bucket_s: 10.0,
             record_trace: false,
+            arrivals: ArrivalModel::PerDevicePoisson,
         };
         let out = CoSim::new(cfg, None).run();
         assert!(out.rounds_completed >= 1, "{}", out.rounds_completed);
@@ -983,6 +1265,7 @@ mod tests {
             faults: Vec::new(),
             bucket_s: 5.0,
             record_trace: false,
+            arrivals: ArrivalModel::PerDevicePoisson,
         };
         let out = CoSim::new(cfg, None).run();
         assert_eq!(out.rounds_completed, 1);
@@ -1006,6 +1289,7 @@ mod tests {
             faults: vec![(30.0, FaultEvent::EdgeFail(0))],
             bucket_s: 10.0,
             record_trace: false,
+            arrivals: ArrivalModel::PerDevicePoisson,
         };
         let out = CoSim::new(cfg, None).run();
         // Post-failure arrivals go straight to the cloud.
@@ -1028,6 +1312,7 @@ mod tests {
             ],
             bucket_s: 10.0,
             record_trace: false,
+            arrivals: ArrivalModel::PerDevicePoisson,
         };
         let out = CoSim::new(cfg, None).run();
         // ~20 s of 4x arrivals: clearly more requests than steady state.
@@ -1087,6 +1372,7 @@ mod tests {
             faults: Vec::new(),
             bucket_s: 5.0,
             record_trace: false,
+            arrivals: ArrivalModel::PerDevicePoisson,
         };
         let out = CoSim::new(cfg, Some(control)).run();
         assert!(out.plan_swaps >= 1, "no plan swap installed");
@@ -1146,6 +1432,7 @@ mod tests {
             faults,
             bucket_s: 5.0,
             record_trace: false,
+            arrivals: ArrivalModel::PerDevicePoisson,
         }
     }
 
@@ -1211,6 +1498,7 @@ mod tests {
             faults: vec![(20.0, FaultEvent::EdgeFail(0)), (30.0, FaultEvent::EdgeRecover(0))],
             bucket_s: 10.0,
             record_trace: true,
+            arrivals: ArrivalModel::PerDevicePoisson,
         };
         let a = CoSim::new(mk(), None).run();
         let b = CoSim::new(mk(), None).run();
@@ -1219,5 +1507,139 @@ mod tests {
         assert_eq!(a.serving.latency.mean().to_bits(), b.serving.latency.mean().to_bits());
         assert_eq!(a.events_processed, b.events_processed);
         assert_eq!(a.events_cancelled, b.events_cancelled);
+    }
+
+    #[test]
+    fn constant_trace_volume_matches_closed_loop() {
+        // An open-loop constant trace at multiplier 1.0 is the same
+        // aggregate Poisson process as the closed-loop per-device
+        // streams (different RNG path, same law): total served volume
+        // must agree within sampling noise.
+        let scfg = serving_cfg(vec![Some(0); 8], vec![5.0; 8], vec![2000.0], 120.0, 13);
+        let closed = run_cell(CoSimConfig::static_serving(scfg.clone()), None);
+        let open = run_cell(
+            CoSimConfig {
+                arrivals: ArrivalModel::Trace {
+                    trace: RateTrace::constant(1.0),
+                    chunk_s: 10.0,
+                },
+                ..CoSimConfig::static_serving(scfg)
+            },
+            None,
+        );
+        let (c, o) = (closed.serving.total() as f64, open.serving.total() as f64);
+        assert!((c - o).abs() / c < 0.15, "closed {c} vs open {o}");
+        assert!(o > 3000.0, "open-loop volume implausibly low: {o}");
+    }
+
+    #[test]
+    fn trace_arrivals_are_deterministic() {
+        let mk = || CoSimConfig {
+            arrivals: ArrivalModel::Trace {
+                trace: RateTrace::diurnal(0.5, 2.0, 120.0, 8, 120.0),
+                chunk_s: 7.5,
+            },
+            record_trace: true,
+            ..CoSimConfig::static_serving(serving_cfg(
+                vec![Some(0); 6],
+                vec![4.0; 6],
+                vec![800.0],
+                120.0,
+                21,
+            ))
+        };
+        let a = run_cell(mk(), None);
+        let b = run_cell(mk(), None);
+        assert!(!a.trace.is_empty());
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.serving.samples, b.serving.samples);
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn flash_crowd_trace_adds_volume() {
+        let base = serving_cfg(vec![Some(0); 8], vec![4.0; 8], vec![2000.0], 200.0, 17);
+        let mk = |trace: RateTrace| {
+            CoSimConfig {
+                arrivals: ArrivalModel::Trace { trace, chunk_s: 10.0 },
+                ..CoSimConfig::static_serving(base.clone())
+            }
+        };
+        let flat = run_cell(mk(RateTrace::constant(1.0)), None);
+        let crowd = run_cell(mk(RateTrace::flash_crowd(1.0, 5.0, 80.0, 10.0, 40.0)), None);
+        assert!(
+            crowd.serving.total() as f64 > flat.serving.total() as f64 * 1.3,
+            "crowd {} vs flat {}",
+            crowd.serving.total(),
+            flat.serving.total()
+        );
+    }
+
+    #[test]
+    fn hotspot_trace_skews_device_attribution() {
+        // 8 equal-rate devices, the first quarter boosted 8x inside the
+        // hotspot window: arrivals drawn in the window must concentrate
+        // on the boosted prefix (expected share 16/22 ≈ 0.73).
+        let trace = RateTrace::regional_hotspot(1.0, 8.0, 0.25, 10.0, 90.0);
+        let mut src = TraceSource::new(trace, 10.0, vec![1.0; 8], 99, 200.0);
+        let (mut hot, mut tot) = (0usize, 0usize);
+        while let Some((t, d)) = src.next_arrival() {
+            if (10.0..100.0).contains(&t) {
+                tot += 1;
+                if d < 2 {
+                    hot += 1;
+                }
+            }
+        }
+        assert!(tot > 200, "too few in-window arrivals: {tot}");
+        let share = hot as f64 / tot as f64;
+        assert!(share > 0.55, "hot share {share}");
+    }
+
+    #[test]
+    fn trace_announcements_reach_the_control_plane() {
+        // Segment-boundary λ changes are announced as SurgeStart faults
+        // so the learning controller's load view tracks the trace.
+        let out = run_cell(
+            CoSimConfig {
+                arrivals: ArrivalModel::Trace {
+                    trace: RateTrace::surge(3.0, 20.0, 40.0),
+                    chunk_s: 10.0,
+                },
+                record_trace: true,
+                ..CoSimConfig::static_serving(serving_cfg(
+                    vec![Some(0); 4],
+                    vec![3.0; 4],
+                    vec![400.0],
+                    60.0,
+                    31,
+                ))
+            },
+            None,
+        );
+        let surges: Vec<&String> =
+            out.trace.iter().filter(|l| l.contains("SurgeStart")).collect();
+        // One announcement entering the surge (3.0) and one leaving (1.0).
+        assert_eq!(surges.len(), 2, "{surges:?}");
+        assert!(surges[0].contains("factor: 3.0"), "{}", surges[0]);
+    }
+
+    #[test]
+    fn run_cell_reusing_matches_run_cell() {
+        // A kernel warmed by a *different* cell and then reset must give
+        // bit-identical outcomes: reset reclaims all state, reuse only
+        // carries allocation capacity.
+        let warm_cfg = one_round_on_edge0(80.0, vec![(33.0, FaultEvent::EdgeFail(0))]);
+        let (_, kernel) = run_cell_reusing(warm_cfg, Some(two_edge_control(5.0)), Kernel::new());
+        let cfg = || CoSimConfig {
+            record_trace: true,
+            ..one_round_on_edge0(90.0, vec![(40.0, FaultEvent::SurgeStart { factor: 2.0 })])
+        };
+        let fresh = run_cell(cfg(), Some(two_edge_control(5.0)));
+        let (reused, _) = run_cell_reusing(cfg(), Some(two_edge_control(5.0)), kernel);
+        assert_eq!(fresh.trace, reused.trace);
+        assert_eq!(fresh.serving.samples, reused.serving.samples);
+        assert_eq!(fresh.events_processed, reused.events_processed);
+        assert_eq!(fresh.events_cancelled, reused.events_cancelled);
     }
 }

@@ -10,9 +10,13 @@ pub mod latency;
 pub mod routing;
 pub mod serving;
 pub mod simulation;
+pub mod trace;
 
 pub use cosim::{CoSim, CoSimConfig, CoSimOutcome, ControlPlane, FaultEvent, TrainingSchedule};
+pub use trace::{ArrivalModel, RateSegment, RateTrace};
 pub use latency::LatencyModel;
 pub use routing::{DeviceCtx, EdgeCtx, Route, RoutingPolicy};
 pub use serving::{BatchingServer, ServeStats};
-pub use simulation::{admission_bound, simulate, ServingConfig, ServingOutcome};
+pub use simulation::{
+    admission_bound, simulate, simulate_with_arrivals, ServingConfig, ServingOutcome,
+};

@@ -29,6 +29,7 @@
 
 use crate::inference::cosim::{CoSim, CoSimConfig};
 use crate::inference::latency::LatencyModel;
+use crate::inference::trace::ArrivalModel;
 use crate::util::stats::{OnlineStats, Reservoir, StreamingPercentiles};
 
 /// Response-time samples kept for distribution plots: a seeded reservoir
@@ -117,6 +118,20 @@ impl ServingOutcome {
 /// simulator for the same config and seed.
 pub fn simulate(cfg: &ServingConfig) -> ServingOutcome {
     CoSim::new(CoSimConfig::static_serving(cfg.clone()), None).run().serving
+}
+
+/// [`simulate`] with an explicit arrival model. With
+/// [`ArrivalModel::PerDevicePoisson`] this *is* `simulate` (same events,
+/// same RNG stream, bit-identical outcome); with [`ArrivalModel::Trace`]
+/// the request stream comes from the open-loop rate trace instead — the
+/// Fig. 7/8 experiments use this to evaluate policies under diurnal,
+/// flash-crowd, and hotspot load shapes.
+pub fn simulate_with_arrivals(cfg: &ServingConfig, arrivals: &ArrivalModel) -> ServingOutcome {
+    let cosim = CoSimConfig {
+        arrivals: arrivals.clone(),
+        ..CoSimConfig::static_serving(cfg.clone())
+    };
+    CoSim::new(cosim, None).run().serving
 }
 
 #[cfg(test)]
@@ -326,6 +341,20 @@ mod tests {
                 assert_eq!(new.samples, expect, "cfg {i} seed {seed}");
             }
         }
+    }
+
+    #[test]
+    fn poisson_arrival_model_is_the_static_fast_path() {
+        // simulate_with_arrivals(PerDevicePoisson) must be simulate,
+        // bit for bit — the trace plumbing is strictly opt-in.
+        let cfg = base(vec![Some(0), Some(1), None], vec![6.0; 3], vec![40.0, 500.0]);
+        let a = simulate(&cfg);
+        let b = simulate_with_arrivals(&cfg, &ArrivalModel::PerDevicePoisson);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.latency.mean().to_bits(), b.latency.mean().to_bits());
+        assert_eq!(a.served_at_edge, b.served_at_edge);
+        assert_eq!(a.spilled_to_cloud, b.spilled_to_cloud);
+        assert_eq!(a.direct_to_cloud, b.direct_to_cloud);
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! Time-varying arrival-rate traces for the open-loop serving plane.
+//!
+//! The paper's serving load is a scalar λ per device; reactive-
+//! orchestration scenarios need λ(t) — diurnal cycles, flash crowds,
+//! regional hotspots. [`RateTrace`] is the first-class representation: a
+//! **piecewise-constant** multiplier curve over the base per-device
+//! rates, optionally carrying a *regional hotspot* (an extra boost on a
+//! prefix fraction of the device population). Piecewise-constant is a
+//! deliberate restriction: within a segment the aggregate rate is flat,
+//! so Lewis–Shedler thinning against the per-chunk maximum is **exact**
+//! (no rate is ever above the majorant) and arrival generation stays a
+//! tight rejection loop (see `cosim::TraceSource`).
+//!
+//! Surge faults compose as overlays rather than multiplier pokes:
+//! [`RateTrace::overlay`] is the pointwise product of two traces, so a
+//! preset's "3× between 0.3·d and 0.6·d" surge becomes
+//! `base.overlay(&RateTrace::surge(3.0, 0.3 * d, 0.6 * d))`.
+
+/// One constant-rate span: the trace multiplies every device's base λ by
+/// `mult` for `t < t_end` (until the previous segment's end), with an
+/// optional hotspot boosting the first `hot_frac` of devices by
+/// `hot_boost` on top.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateSegment {
+    /// Exclusive end time of this segment; the final segment's is
+    /// `f64::INFINITY`.
+    pub t_end: f64,
+    /// Global arrival-rate multiplier over the base per-device rates.
+    pub mult: f64,
+    /// Fraction of the device population (by index prefix — devices are
+    /// registered in region order) inside the hotspot; 0.0 = no hotspot.
+    pub hot_frac: f64,
+    /// Extra rate multiplier for hotspot devices (1.0 = no boost).
+    pub hot_boost: f64,
+}
+
+impl RateSegment {
+    fn flat(t_end: f64, mult: f64) -> RateSegment {
+        RateSegment { t_end, mult, hot_frac: 0.0, hot_boost: 1.0 }
+    }
+
+    /// Whether this segment carries a real hotspot.
+    pub fn has_hotspot(&self) -> bool {
+        self.hot_frac > 0.0 && self.hot_boost != 1.0
+    }
+}
+
+/// Piecewise-constant λ(t) multiplier curve (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateTrace {
+    segments: Vec<RateSegment>,
+}
+
+impl RateTrace {
+    /// Build from raw segments. Ends must be strictly increasing; the
+    /// trace is extended to `t = ∞` by its last multiplier if needed.
+    pub fn from_segments(mut segments: Vec<RateSegment>) -> RateTrace {
+        assert!(!segments.is_empty(), "a rate trace needs at least one segment");
+        for s in &segments {
+            assert!(s.mult.is_finite() && s.mult >= 0.0, "segment mult must be finite and >= 0");
+            assert!((0.0..=1.0).contains(&s.hot_frac), "hot_frac must be in [0, 1]");
+            assert!(s.hot_boost.is_finite() && s.hot_boost > 0.0, "hot_boost must be positive");
+        }
+        for w in segments.windows(2) {
+            assert!(w[0].t_end < w[1].t_end, "segment ends must be strictly increasing");
+        }
+        let last = segments.last().unwrap();
+        if last.t_end.is_finite() {
+            let tail = RateSegment { t_end: f64::INFINITY, ..last.clone() };
+            segments.push(tail);
+        }
+        RateTrace { segments }
+    }
+
+    /// Constant multiplier for all time.
+    pub fn constant(mult: f64) -> RateTrace {
+        RateTrace::from_segments(vec![RateSegment::flat(f64::INFINITY, mult)])
+    }
+
+    /// A surge window: 1.0 outside `[t0, t1)`, `factor` inside — the
+    /// overlay form of a `SurgeStart`/`SurgeEnd` fault pair.
+    pub fn surge(factor: f64, t0: f64, t1: f64) -> RateTrace {
+        assert!(t0 < t1, "surge window must be non-empty");
+        let mut segs = Vec::new();
+        if t0 > 0.0 {
+            segs.push(RateSegment::flat(t0, 1.0));
+        }
+        segs.push(RateSegment::flat(t1, factor));
+        segs.push(RateSegment::flat(f64::INFINITY, 1.0));
+        RateTrace::from_segments(segs)
+    }
+
+    /// Diurnal curve: a raised-cosine oscillation between `trough` and
+    /// `peak` with the given period, discretized into `steps` constant
+    /// segments per period (each takes the curve's midpoint value), laid
+    /// out to cover `horizon_s` and settling at `trough` afterwards.
+    /// `t = 0` is the trough (night); the peak lands at `period_s / 2`.
+    pub fn diurnal(
+        trough: f64,
+        peak: f64,
+        period_s: f64,
+        steps: usize,
+        horizon_s: f64,
+    ) -> RateTrace {
+        assert!(period_s > 0.0 && steps > 0, "diurnal needs a positive period and step count");
+        assert!(trough >= 0.0 && peak >= trough, "diurnal needs 0 <= trough <= peak");
+        let n_periods = (horizon_s / period_s).ceil().max(1.0) as usize;
+        let dt = period_s / steps as f64;
+        let mut segs = Vec::with_capacity(n_periods * steps + 1);
+        for p in 0..n_periods {
+            for s in 0..steps {
+                let t_mid = (p * steps + s) as f64 * dt + 0.5 * dt;
+                let phase = std::f64::consts::TAU * (t_mid / period_s);
+                let mult = trough + (peak - trough) * 0.5 * (1.0 - phase.cos());
+                segs.push(RateSegment::flat((p * steps + s + 1) as f64 * dt, mult));
+            }
+        }
+        segs.push(RateSegment::flat(f64::INFINITY, trough));
+        RateTrace::from_segments(segs)
+    }
+
+    /// Flash crowd: `base` until `at_s`, a linear ramp (8 constant steps)
+    /// up to `peak` over `ramp_s`, a `hold_s` plateau, a symmetric ramp
+    /// down, then `base` forever.
+    pub fn flash_crowd(base: f64, peak: f64, at_s: f64, ramp_s: f64, hold_s: f64) -> RateTrace {
+        assert!(at_s >= 0.0 && ramp_s >= 0.0 && hold_s > 0.0, "flash crowd needs a hold window");
+        assert!(base >= 0.0 && peak >= base, "flash crowd needs 0 <= base <= peak");
+        const RAMP_STEPS: usize = 8;
+        let mut segs = Vec::new();
+        if at_s > 0.0 {
+            segs.push(RateSegment::flat(at_s, base));
+        }
+        let step = ramp_s / RAMP_STEPS as f64;
+        if ramp_s > 0.0 {
+            for i in 0..RAMP_STEPS {
+                let frac = (i as f64 + 0.5) / RAMP_STEPS as f64;
+                segs.push(RateSegment::flat(
+                    at_s + (i + 1) as f64 * step,
+                    base + (peak - base) * frac,
+                ));
+            }
+        }
+        let plateau_end = at_s + ramp_s + hold_s;
+        segs.push(RateSegment::flat(plateau_end, peak));
+        if ramp_s > 0.0 {
+            for i in 0..RAMP_STEPS {
+                let frac = 1.0 - (i as f64 + 0.5) / RAMP_STEPS as f64;
+                segs.push(RateSegment::flat(
+                    plateau_end + (i + 1) as f64 * step,
+                    base + (peak - base) * frac,
+                ));
+            }
+        }
+        segs.push(RateSegment::flat(f64::INFINITY, base));
+        RateTrace::from_segments(segs)
+    }
+
+    /// Regional hotspot: global rate stays at `base`, but during
+    /// `[at_s, at_s + hold_s)` the first `frac` of the device population
+    /// runs at `boost ×` its share (localized demand spike; the
+    /// orchestrator should re-place only the hot region's clusters).
+    pub fn regional_hotspot(base: f64, boost: f64, frac: f64, at_s: f64, hold_s: f64) -> RateTrace {
+        assert!(hold_s > 0.0, "hotspot needs a hold window");
+        let mut segs = Vec::new();
+        if at_s > 0.0 {
+            segs.push(RateSegment::flat(at_s, base));
+        }
+        segs.push(RateSegment {
+            t_end: at_s + hold_s,
+            mult: base,
+            hot_frac: frac,
+            hot_boost: boost,
+        });
+        segs.push(RateSegment::flat(f64::INFINITY, base));
+        RateTrace::from_segments(segs)
+    }
+
+    /// Pointwise product of two traces over the merged boundary set —
+    /// how surge faults compose onto a base trace. If both sides carry a
+    /// hotspot in an overlapping span, the one with the larger boost
+    /// wins (hotspots do not stack).
+    pub fn overlay(&self, other: &RateTrace) -> RateTrace {
+        let mut segs = Vec::new();
+        let (mut i, mut j) = (0usize, 0usize);
+        loop {
+            let (a, b) = (&self.segments[i], &other.segments[j]);
+            let t_end = a.t_end.min(b.t_end);
+            let (hot_frac, hot_boost) = if a.has_hotspot() && b.has_hotspot() {
+                if a.hot_boost >= b.hot_boost {
+                    (a.hot_frac, a.hot_boost)
+                } else {
+                    (b.hot_frac, b.hot_boost)
+                }
+            } else if a.has_hotspot() {
+                (a.hot_frac, a.hot_boost)
+            } else {
+                (b.hot_frac, b.hot_boost)
+            };
+            segs.push(RateSegment { t_end, mult: a.mult * b.mult, hot_frac, hot_boost });
+            if t_end == f64::INFINITY {
+                break;
+            }
+            if a.t_end == t_end {
+                i += 1;
+            }
+            if b.t_end == t_end {
+                j += 1;
+            }
+        }
+        RateTrace::from_segments(segs)
+    }
+
+    /// Scale every segment's multiplier by `factor`.
+    pub fn scaled(&self, factor: f64) -> RateTrace {
+        let segs = self
+            .segments
+            .iter()
+            .map(|s| RateSegment { mult: s.mult * factor, ..s.clone() })
+            .collect();
+        RateTrace::from_segments(segs)
+    }
+
+    pub fn segments(&self) -> &[RateSegment] {
+        &self.segments
+    }
+
+    /// Index of the segment containing `t` (the first with `t < t_end`).
+    pub fn index_at(&self, t: f64) -> usize {
+        self.segments.partition_point(|s| s.t_end <= t).min(self.segments.len() - 1)
+    }
+
+    /// Global multiplier at `t` (hotspot boost not included).
+    pub fn mult_at(&self, t: f64) -> f64 {
+        self.segments[self.index_at(t)].mult
+    }
+}
+
+/// How the serving plane's arrivals are generated.
+#[derive(Debug, Clone, Default)]
+pub enum ArrivalModel {
+    /// One Poisson inter-arrival timer per device — the historical
+    /// closed-loop default, bit-identical to the pre-trace simulator.
+    #[default]
+    PerDevicePoisson,
+    /// Open-loop arrivals from a [`RateTrace`], generated a `chunk_s`
+    /// window at a time by thinning: one pending kernel timer total
+    /// instead of one per device.
+    Trace { trace: RateTrace, chunk_s: f64 },
+}
+
+impl ArrivalModel {
+    /// Build from registry parameters (`trace` ∈ `none | constant |
+    /// diurnal | flash-crowd | hotspot`). The preset shapes are scaled to
+    /// the run horizon: diurnal runs `trace_period_s` cycles (0 = one
+    /// cycle per horizon), flash crowd spikes to `trace_peak` around
+    /// 0.4·duration, hotspot boosts a quarter of the population by
+    /// `trace_peak` for the middle third.
+    pub fn from_named(
+        name: &str,
+        peak: f64,
+        period_s: f64,
+        chunk_s: f64,
+        duration_s: f64,
+    ) -> anyhow::Result<ArrivalModel> {
+        anyhow::ensure!(chunk_s > 0.0, "trace_chunk_s must be positive");
+        let trace = match name {
+            "none" => return Ok(ArrivalModel::PerDevicePoisson),
+            "constant" => RateTrace::constant(1.0),
+            "diurnal" => {
+                let period = if period_s > 0.0 { period_s } else { duration_s };
+                RateTrace::diurnal(1.0, peak, period, 16, duration_s)
+            }
+            "flash-crowd" => RateTrace::flash_crowd(
+                1.0,
+                peak,
+                0.4 * duration_s,
+                0.05 * duration_s,
+                0.2 * duration_s,
+            ),
+            "hotspot" => {
+                RateTrace::regional_hotspot(1.0, peak, 0.25, 0.4 * duration_s, 0.3 * duration_s)
+            }
+            other => anyhow::bail!(
+                "unknown trace '{other}' (valid: none, constant, diurnal, flash-crowd, hotspot)"
+            ),
+        };
+        Ok(ArrivalModel::Trace { trace, chunk_s })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_trace_is_flat() {
+        let tr = RateTrace::constant(2.5);
+        assert_eq!(tr.mult_at(0.0), 2.5);
+        assert_eq!(tr.mult_at(1e12), 2.5);
+        assert_eq!(tr.segments().len(), 1);
+    }
+
+    #[test]
+    fn finite_traces_are_extended_to_infinity() {
+        let tr = RateTrace::from_segments(vec![RateSegment::flat(10.0, 3.0)]);
+        assert_eq!(tr.segments().last().unwrap().t_end, f64::INFINITY);
+        assert_eq!(tr.mult_at(1e9), 3.0);
+    }
+
+    #[test]
+    fn surge_overlay_multiplies_inside_the_window_only() {
+        let base = RateTrace::constant(2.0);
+        let combined = base.overlay(&RateTrace::surge(3.0, 10.0, 20.0));
+        assert_eq!(combined.mult_at(5.0), 2.0);
+        assert_eq!(combined.mult_at(15.0), 6.0);
+        assert_eq!(combined.mult_at(25.0), 2.0);
+    }
+
+    #[test]
+    fn diurnal_stays_within_bounds_and_peaks_mid_period() {
+        let tr = RateTrace::diurnal(1.0, 4.0, 100.0, 20, 100.0);
+        for s in tr.segments() {
+            assert!(s.mult >= 1.0 - 1e-12 && s.mult <= 4.0 + 1e-12, "mult {}", s.mult);
+        }
+        assert!(tr.mult_at(50.0) > 3.8, "peak at half period: {}", tr.mult_at(50.0));
+        assert!(tr.mult_at(2.0) < 1.2, "trough near zero: {}", tr.mult_at(2.0));
+    }
+
+    #[test]
+    fn flash_crowd_ramps_and_recovers() {
+        let tr = RateTrace::flash_crowd(1.0, 5.0, 40.0, 10.0, 20.0);
+        assert_eq!(tr.mult_at(10.0), 1.0);
+        assert!(tr.mult_at(45.0) > 1.0 && tr.mult_at(45.0) < 5.0, "mid-ramp");
+        assert_eq!(tr.mult_at(60.0), 5.0);
+        assert_eq!(tr.mult_at(200.0), 1.0);
+    }
+
+    #[test]
+    fn hotspot_keeps_global_mult_flat() {
+        let tr = RateTrace::regional_hotspot(1.0, 4.0, 0.25, 30.0, 30.0);
+        assert_eq!(tr.mult_at(40.0), 1.0);
+        let seg = &tr.segments()[tr.index_at(40.0)];
+        assert!(seg.has_hotspot());
+        assert_eq!(seg.hot_frac, 0.25);
+        assert_eq!(seg.hot_boost, 4.0);
+        assert!(!tr.segments()[tr.index_at(10.0)].has_hotspot());
+    }
+
+    #[test]
+    fn index_at_picks_the_containing_segment() {
+        let tr = RateTrace::from_segments(vec![
+            RateSegment::flat(1.0, 1.0),
+            RateSegment::flat(2.0, 2.0),
+            RateSegment::flat(f64::INFINITY, 3.0),
+        ]);
+        assert_eq!(tr.index_at(0.0), 0);
+        assert_eq!(tr.index_at(1.0), 1); // t_end is exclusive
+        assert_eq!(tr.index_at(1.999), 1);
+        assert_eq!(tr.index_at(2.0), 2);
+    }
+
+    #[test]
+    fn from_named_parses_the_registry_surface() {
+        assert!(matches!(
+            ArrivalModel::from_named("none", 3.0, 0.0, 10.0, 240.0).unwrap(),
+            ArrivalModel::PerDevicePoisson
+        ));
+        for name in ["constant", "diurnal", "flash-crowd", "hotspot"] {
+            assert!(matches!(
+                ArrivalModel::from_named(name, 3.0, 0.0, 10.0, 240.0).unwrap(),
+                ArrivalModel::Trace { .. }
+            ));
+        }
+        assert!(ArrivalModel::from_named("tsunami", 3.0, 0.0, 10.0, 240.0).is_err());
+        assert!(ArrivalModel::from_named("constant", 3.0, 0.0, 0.0, 240.0).is_err());
+    }
+}

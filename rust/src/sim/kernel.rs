@@ -4,87 +4,146 @@
 //! training/serving/control co-simulation needs:
 //!
 //! * **cancellable timers** — [`Kernel::schedule`] returns a [`TimerId`]
-//!   that [`Kernel::cancel`] can revoke before it fires (lazy removal,
-//!   O(1) per cancel);
+//!   that [`Kernel::cancel`] can revoke before it fires (O(1): the slab
+//!   slot's alive bit flips, the entry is reaped lazily);
 //! * **generation-tagged timers** — [`Kernel::schedule_tagged`] stamps an
 //!   entry with a `(tag, generation)` pair; [`Kernel::invalidate_tag`]
 //!   bumps the tag's generation so every *older* pending timer with that
 //!   tag is dead, while timers scheduled afterwards live. This is how a
 //!   mid-run deployment-plan swap cancels a failed edge's stale
 //!   service-completion timers without touching the rest of the queue;
-//! * **introspection** — [`Kernel::peek_time`], [`Kernel::clear`], live
-//!   length, processed/cancelled counters.
+//! * **introspection** — [`Kernel::peek_time`], [`Kernel::clear`],
+//!   [`Kernel::reset`], live length, processed/cancelled counters.
 //!
-//! Ordering is identical to the original queue: `(time, seq)` min-heap,
-//! so ties at equal timestamps break FIFO by insertion and every run is
-//! reproducible. Cancelled entries never advance the clock and never
-//! count as processed.
+//! # Storage: calendar queue over a slab arena
+//!
+//! Timer storage is a bucketed **calendar queue**, not a binary heap (the
+//! original heap implementation survives verbatim as
+//! [`crate::sim::oracle::HeapKernel`] for differential tests and
+//! benchmarks). Every entry lives in a flat slab (`Vec<Slot<E>>`) with a
+//! free list, so the steady-state schedule→fire cycle recycles slots and
+//! never allocates. The queue itself has three tiers:
+//!
+//! * a **near wheel** of `N` buckets of width `w`, bucket `i` covering
+//!   `[base + i*w, base + (i+1)*w)`. Scheduling is an index computation
+//!   plus a `Vec` push; firing drains one bucket at a time;
+//! * a **drain vec** (`cur`) holding the bucket currently being fired,
+//!   sorted by `(time, seq)` descending so popping the minimum is a
+//!   `Vec::pop`. Entries scheduled into the already-drained region of the
+//!   wheel (e.g. `schedule_in(0.0)` from an event handler) are
+//!   binary-search inserted here;
+//! * an **overflow tier** for timers beyond the wheel's window
+//!   (far-future round timers, `gap_s = 1e9` idle schedules). It is an
+//!   unordered `Vec`, redistributed wholesale when the wheel empties.
+//!
+//! When the wheel runs dry the kernel *re-anchors*: every live entry is
+//! collected, sorted once, and redistributed around a fresh `base = t_min`
+//! with geometry picked from the data — bucket count is the live count
+//! rounded to a power of two (clamped to `[64, 65536]`) and the width
+//! spreads the 75th-percentile span at ~one entry per bucket, so a handful
+//! of far-future outliers cannot stretch the buckets into sorted-list
+//! degeneracy. The same rebuild runs when the live count outgrows the
+//! wheel (doubling amortizes it to O(log n) per event).
+//!
+//! # Ordering contract
+//!
+//! Delivery order is **identical** to the original heap queue: strict
+//! `(time, seq)` order, so ties at equal timestamps break FIFO by
+//! insertion and every run is reproducible bit-for-bit. This holds for
+//! any bucket geometry because classification `t -> bucket` is monotone
+//! (IEEE division and floor are monotone non-decreasing), equal times
+//! always map to the same bucket, and each bucket is sorted before it
+//! fires; the differential test in `tests/kernel_differential.rs` pins
+//! this against the heap oracle. Cancelled entries never advance the
+//! clock and never count as processed.
+//!
+//! # Retention contract (`clear` vs `reset`)
+//!
+//! [`Kernel::clear`] drops pending timers but deliberately **keeps** the
+//! clock, the `seq` counter, the processed/cancelled counters, and every
+//! tag's generation — a cleared kernel is the same timeline with its
+//! future revoked, so stale [`TimerId`]s stay dead and re-scheduled tags
+//! keep their generation history. [`Kernel::reset`] is the full
+//! reclamation: counters, clock, tag generations and slab contents all
+//! return to the pristine state while the allocated slab/bucket capacity
+//! is retained, which is what `inference::cosim::run_cell_reusing` uses
+//! to run many cells on one warm kernel.
 //!
 //! [`Component`] is the plug-in trait for the co-simulation: serving,
 //! training and control logic each handle their own events on the shared
 //! clock, communicating only through scheduled events and a shared world
 //! state (see `inference::cosim`).
 
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::HashMap;
+
+/// Smallest/largest wheel sizes; powers of two so `next_power_of_two`
+/// clamps cleanly.
+const MIN_BUCKETS: usize = 64;
+const MAX_BUCKETS: usize = 1 << 16;
+/// Floor on bucket width so degenerate spans cannot divide to zero.
+const MIN_WIDTH: f64 = 1e-9;
 
 /// Handle for one scheduled timer, usable to cancel it before it fires.
+///
+/// Internally a `(slab slot, reuse stamp)` pair: the stamp is bumped each
+/// time the slot is recycled, so a stale id for a fired timer fails the
+/// stamp check instead of cancelling an unrelated newer timer. (A stamp
+/// only repeats after 2^32 reuses of one slot.)
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct TimerId(u64);
+pub struct TimerId {
+    slot: u32,
+    stamp: u32,
+}
 
-/// One scheduled entry.
-struct Entry<E> {
+/// One slab slot. `alive` is the O(1) cancellation bit; a dead slot stays
+/// in whatever tier holds it until the drain loop reaps it.
+struct Slot<E> {
     time: f64,
     seq: u64,
+    stamp: u32,
+    alive: bool,
     /// `(tag, generation at schedule time)`; the entry is dead if the tag
     /// has been invalidated since.
     tag: Option<(u64, u64)>,
-    event: E,
+    event: Option<E>,
 }
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl<E> Eq for Entry<E> {}
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap on (time, seq). `total_cmp` keeps the heap
-        // ordering a lawful total order even if a NaN time ever slips in.
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
+/// Per-tag state: current generation plus the live count of
+/// current-generation entries, maintained on schedule/fire/cancel so
+/// [`Kernel::invalidate_tag`] is O(1) and `len()` stays truthful.
+#[derive(Default)]
+struct TagState {
+    gen: u64,
+    live: usize,
 }
 
 /// Deterministic discrete-event kernel with cancellable and
-/// generation-tagged timers.
+/// generation-tagged timers (calendar-queue storage; see module docs).
 ///
 /// The hot path (schedule/next with no cancellation — the static Fig. 7/8
-/// simulations) is pure heap operations plus a counter: the cancellation
-/// bookkeeping sets are only consulted when non-empty, and individual
-/// `cancel` pays an O(len) scan instead of taxing every event with
-/// hash-set inserts.
+/// simulations) is an index computation plus slab/bucket `Vec` traffic:
+/// no per-event allocation and no hash lookups for untagged timers.
 pub struct Kernel<E> {
-    heap: BinaryHeap<Entry<E>>,
+    slots: Vec<Slot<E>>,
+    free: Vec<u32>,
+    /// Near wheel: `buckets[i]` covers `[base + i*width, base + (i+1)*width)`.
+    buckets: Vec<Vec<u32>>,
+    /// Next wheel bucket to drain; buckets before it are empty and new
+    /// entries mapping there go straight into `cur`.
+    next_bucket: usize,
+    base: f64,
+    width: f64,
+    /// Drain staging, sorted by `(time, seq)` descending (pop from back).
+    cur: Vec<u32>,
+    /// Far-future tier, unordered; redistributed at re-anchor.
+    overflow: Vec<u32>,
     now: f64,
     seq: u64,
     processed: u64,
     cancelled_count: u64,
     /// Live (scheduled, not yet fired or cancelled) timer count.
     live: usize,
-    /// Individually cancelled ids awaiting lazy removal from the heap.
-    cancelled: HashSet<u64>,
-    /// Current generation per tag; entries stamped with an older
-    /// generation are dead.
-    tag_gen: HashMap<u64, u64>,
+    tags: HashMap<u64, TagState>,
 }
 
 impl<E> Default for Kernel<E> {
@@ -96,14 +155,20 @@ impl<E> Default for Kernel<E> {
 impl<E> Kernel<E> {
     pub fn new() -> Kernel<E> {
         Kernel {
-            heap: BinaryHeap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            next_bucket: 0,
+            base: 0.0,
+            width: 1.0,
+            cur: Vec::new(),
+            overflow: Vec::new(),
             now: 0.0,
             seq: 0,
             processed: 0,
             cancelled_count: 0,
             live: 0,
-            cancelled: HashSet::new(),
-            tag_gen: HashMap::new(),
+            tags: HashMap::new(),
         }
     }
 
@@ -131,13 +196,255 @@ impl<E> Kernel<E> {
         self.live == 0
     }
 
+    // ---- slab -----------------------------------------------------------
+
+    fn alloc(&mut self, time: f64, tag: Option<(u64, u64)>, event: E) -> u32 {
+        let seq = self.seq;
+        self.seq += 1;
+        if let Some(idx) = self.free.pop() {
+            let s = &mut self.slots[idx as usize];
+            s.time = time;
+            s.seq = seq;
+            s.alive = true;
+            s.tag = tag;
+            s.event = Some(event);
+            idx
+        } else {
+            let idx = u32::try_from(self.slots.len()).expect("kernel slab exceeds u32 slots");
+            self.slots.push(Slot { time, seq, stamp: 0, alive: true, tag, event: Some(event) });
+            idx
+        }
+    }
+
+    /// Return a slot to the free list, bumping its reuse stamp so stale
+    /// [`TimerId`]s can no longer address it. Callers must have removed
+    /// `idx` from its tier first.
+    fn free_slot(&mut self, idx: u32) {
+        let s = &mut self.slots[idx as usize];
+        s.alive = false;
+        s.event = None;
+        s.tag = None;
+        s.stamp = s.stamp.wrapping_add(1);
+        self.free.push(idx);
+    }
+
+    /// Dead = individually cancelled (alive bit) or stamped with a
+    /// superseded tag generation.
+    fn slot_dead(&self, idx: u32) -> bool {
+        let s = &self.slots[idx as usize];
+        if !s.alive {
+            return true;
+        }
+        match s.tag {
+            Some((tag, gen)) => gen < self.tags.get(&tag).map_or(0, |t| t.gen),
+            None => false,
+        }
+    }
+
+    // ---- calendar placement ---------------------------------------------
+
+    /// Route a freshly scheduled slot to its tier. Classification is a
+    /// pure monotone function of the entry time (for fixed geometry), so
+    /// earlier times never land in a later tier — the ordering proof in
+    /// the module docs leans on exactly this.
+    fn place(&mut self, idx: u32) {
+        let t = self.slots[idx as usize].time;
+        let nb = self.buckets.len();
+        let rel = (t - self.base) / self.width;
+        if !(rel < nb as f64) {
+            // Beyond the wheel window (or non-finite): far-future tier.
+            self.overflow.push(idx);
+            return;
+        }
+        let b = if rel > 0.0 { rel as usize } else { 0 };
+        if b < self.next_bucket {
+            // The wheel already passed this bucket; the entry belongs to
+            // the region currently being drained.
+            self.cur_insert(idx);
+        } else {
+            self.buckets[b].push(idx);
+        }
+    }
+
+    /// Binary-search insert into the descending-sorted drain vec.
+    fn cur_insert(&mut self, idx: u32) {
+        let (t, seq) = {
+            let s = &self.slots[idx as usize];
+            (s.time, s.seq)
+        };
+        let slots = &self.slots;
+        let pos = self.cur.partition_point(|&i| {
+            let s = &slots[i as usize];
+            match s.time.total_cmp(&t) {
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Less => false,
+                std::cmp::Ordering::Equal => s.seq > seq,
+            }
+        });
+        self.cur.insert(pos, idx);
+    }
+
+    fn sort_cur(&mut self) {
+        let slots = &self.slots;
+        self.cur.sort_unstable_by(|&a, &b| {
+            let (sa, sb) = (&slots[a as usize], &slots[b as usize]);
+            sb.time.total_cmp(&sa.time).then_with(|| sb.seq.cmp(&sa.seq))
+        });
+    }
+
+    /// Collect every live entry, free the dead, and redistribute around a
+    /// fresh anchor with data-driven geometry. O(live log live); runs at
+    /// re-anchor (wheel drained) and on live-count doubling, so it
+    /// amortizes to O(log live) per event.
+    fn rebuild(&mut self) {
+        let mut entries: Vec<u32> = Vec::with_capacity(self.live);
+        for i in 0..self.cur.len() {
+            entries.push(self.cur[i]);
+        }
+        self.cur.clear();
+        for b in 0..self.buckets.len() {
+            let mut v = std::mem::take(&mut self.buckets[b]);
+            entries.append(&mut v);
+            self.buckets[b] = v; // hand the capacity back
+        }
+        entries.append(&mut self.overflow);
+        // Free the dead before computing geometry.
+        let mut w = 0;
+        for r in 0..entries.len() {
+            let idx = entries[r];
+            if self.slot_dead(idx) {
+                self.free_slot(idx);
+            } else {
+                entries[w] = idx;
+                w += 1;
+            }
+        }
+        entries.truncate(w);
+        debug_assert_eq!(entries.len(), self.live, "live count drifted from slab contents");
+
+        self.next_bucket = 0;
+        if entries.is_empty() {
+            self.base = self.now;
+            return;
+        }
+        let slots = &self.slots;
+        entries.sort_unstable_by(|&a, &b| {
+            let (sa, sb) = (&slots[a as usize], &slots[b as usize]);
+            sa.time.total_cmp(&sb.time).then_with(|| sa.seq.cmp(&sb.seq))
+        });
+        let k = entries.len();
+        let tmin = self.slots[entries[0] as usize].time;
+        // Geometry: spread the 75th-percentile span at ~one entry per
+        // bucket, so far-future outliers don't inflate the width.
+        let q = (3 * k).div_ceil(4).max(1);
+        let span = self.slots[entries[q - 1] as usize].time - tmin;
+        let target_n = k.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        self.width = if span > 0.0 { (span / q as f64).max(MIN_WIDTH) } else { 1.0 };
+        self.base = tmin;
+        if self.buckets.len() != target_n {
+            self.buckets.resize_with(target_n, Vec::new);
+        }
+        for &idx in &entries {
+            // `next_bucket` is 0 so nothing routes to `cur` here.
+            let t = self.slots[idx as usize].time;
+            let rel = (t - self.base) / self.width;
+            if !(rel < target_n as f64) {
+                self.overflow.push(idx);
+            } else {
+                let b = if rel > 0.0 { rel as usize } else { 0 };
+                self.buckets[b].push(idx);
+            }
+        }
+        if self.overflow.len() == k {
+            // Non-finite times defeated classification; force progress by
+            // draining everything through bucket 0 (it still sorts).
+            let mut v = std::mem::take(&mut self.overflow);
+            self.buckets[0].append(&mut v);
+            self.overflow = v;
+        }
+    }
+
+    /// Free every slot still held by a tier (used by `clear`/`reset`; the
+    /// live count must already be settled by the caller).
+    fn reap_all(&mut self) {
+        for i in 0..self.cur.len() {
+            let idx = self.cur[i];
+            self.free_slot(idx);
+        }
+        self.cur.clear();
+        for b in 0..self.buckets.len() {
+            for i in 0..self.buckets[b].len() {
+                let idx = self.buckets[b][i];
+                self.free_slot(idx);
+            }
+            self.buckets[b].clear();
+        }
+        for i in 0..self.overflow.len() {
+            let idx = self.overflow[i];
+            self.free_slot(idx);
+        }
+        self.overflow.clear();
+    }
+
+    /// Ensure the back of `cur` is the next live entry. Returns false iff
+    /// the queue is (live-)empty, reaping leftover dead entries so the
+    /// slab gets reused.
+    fn settle(&mut self) -> bool {
+        loop {
+            while let Some(&idx) = self.cur.last() {
+                if self.slot_dead(idx) {
+                    self.cur.pop();
+                    self.free_slot(idx);
+                } else {
+                    return true;
+                }
+            }
+            if self.next_bucket < self.buckets.len() {
+                let b = self.next_bucket;
+                self.next_bucket += 1;
+                if self.buckets[b].is_empty() {
+                    continue;
+                }
+                let mut moved = std::mem::take(&mut self.buckets[b]);
+                for &idx in &moved {
+                    if self.slot_dead(idx) {
+                        self.free_slot(idx);
+                    } else {
+                        self.cur.push(idx);
+                    }
+                }
+                moved.clear();
+                self.buckets[b] = moved;
+                self.sort_cur();
+                continue;
+            }
+            if self.live == 0 {
+                self.reap_all();
+                self.next_bucket = 0;
+                self.base = self.now;
+                return false;
+            }
+            // Wheel drained but live entries remain in overflow:
+            // re-anchor around them.
+            self.rebuild();
+        }
+    }
+
+    // ---- public scheduling API ------------------------------------------
+
     fn push(&mut self, time: f64, tag: Option<(u64, u64)>, event: E) -> TimerId {
         debug_assert!(time >= self.now - 1e-12, "scheduling into the past");
-        let id = self.seq;
-        self.heap.push(Entry { time: time.max(self.now), seq: id, tag, event });
+        let time = time.max(self.now);
+        if self.live + 1 > 2 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS {
+            // Grow before admitting the new entry: the rebuild
+            // redistributes everything already queued and `place` files
+            // the newcomer under the fresh geometry.
+            self.rebuild();
+        }
+        let idx = self.alloc(time, tag, event);
         self.live += 1;
-        self.seq += 1;
-        TimerId(id)
+        self.place(idx);
+        TimerId { slot: idx, stamp: self.slots[idx as usize].stamp }
     }
 
     /// Schedule `event` at absolute time `time` (must be >= now).
@@ -153,7 +460,9 @@ impl<E> Kernel<E> {
     /// Schedule `event` at `time`, stamped with `tag`'s current
     /// generation: [`Kernel::invalidate_tag`] on that tag kills it.
     pub fn schedule_tagged(&mut self, time: f64, tag: u64, event: E) -> TimerId {
-        let gen = self.tag_gen.get(&tag).copied().unwrap_or(0);
+        let st = self.tags.entry(tag).or_default();
+        st.live += 1;
+        let gen = st.gen;
         self.push(time, Some((tag, gen)), event)
     }
 
@@ -164,43 +473,44 @@ impl<E> Kernel<E> {
 
     /// Revoke one timer. Returns true if it was still pending.
     ///
-    /// O(len) scan: individual cancellation is a rare control-plane
-    /// operation; paying here keeps the schedule/next hot path free of
-    /// per-event hash-set bookkeeping.
+    /// O(1): flips the slab slot's alive bit after a stamp check; the
+    /// entry is reaped lazily when the drain reaches it.
     pub fn cancel(&mut self, id: TimerId) -> bool {
-        if self.cancelled.contains(&id.0) {
+        let Some(s) = self.slots.get(id.slot as usize) else { return false };
+        if s.stamp != id.stamp || !s.alive {
             return false;
         }
-        let alive = self.heap.iter().any(|e| e.seq == id.0 && !self.entry_dead(e));
-        if alive {
-            self.cancelled.insert(id.0);
-            self.cancelled_count += 1;
-            self.live -= 1;
-            true
-        } else {
-            false
+        let tag = s.tag;
+        if let Some((t, gen)) = tag {
+            if gen < self.tags.get(&t).map_or(0, |ts| ts.gen) {
+                // Already dead via tag invalidation; cancelling it again
+                // is a no-op (and was already counted).
+                return false;
+            }
         }
+        let s = &mut self.slots[id.slot as usize];
+        s.alive = false;
+        s.event = None;
+        if let Some((t, _)) = tag {
+            let ts = self.tags.get_mut(&t).expect("tagged entry without tag state");
+            ts.live -= 1;
+        }
+        self.cancelled_count += 1;
+        self.live -= 1;
+        true
     }
 
     /// Bump `tag`'s generation: every pending timer scheduled under the
     /// old generation is dead; timers tagged afterwards are unaffected.
     /// Returns how many live timers this killed.
+    ///
+    /// O(1): the per-tag live count is maintained on schedule, fire and
+    /// cancel, so invalidation never scans the queue.
     pub fn invalidate_tag(&mut self, tag: u64) -> usize {
-        let gen = self.tag_gen.entry(tag).or_insert(0);
-        let old_gen = *gen;
-        *gen += 1;
-        // Count the victims so len() stays truthful; heap entries are
-        // removed lazily on pop. Entries under generations older than
-        // `old_gen` were already dead (counted at their own
-        // invalidation), as were individually cancelled ones.
-        let mut killed = 0;
-        for e in self.heap.iter() {
-            if let Some((t, g)) = e.tag {
-                if t == tag && g == old_gen && !self.cancelled.contains(&e.seq) {
-                    killed += 1;
-                }
-            }
-        }
+        let st = self.tags.entry(tag).or_default();
+        st.gen += 1;
+        let killed = st.live;
+        st.live = 0;
         self.cancelled_count += killed as u64;
         self.live -= killed;
         killed
@@ -208,60 +518,75 @@ impl<E> Kernel<E> {
 
     /// Current generation of `tag` (0 if never invalidated).
     pub fn generation(&self, tag: u64) -> u64 {
-        self.tag_gen.get(&tag).copied().unwrap_or(0)
-    }
-
-    fn entry_dead(&self, e: &Entry<E>) -> bool {
-        if !self.cancelled.is_empty() && self.cancelled.contains(&e.seq) {
-            return true;
-        }
-        match e.tag {
-            Some((tag, gen)) => gen < self.generation(tag),
-            None => false,
-        }
-    }
-
-    /// Drop dead entries off the heap front; afterwards the front (if
-    /// any) is live. Dead entries were already counted (and removed from
-    /// the live count) by `cancel`/`invalidate_tag`.
-    fn skim(&mut self) {
-        loop {
-            let dead = match self.heap.peek() {
-                None => return,
-                Some(e) => self.entry_dead(e),
-            };
-            if !dead {
-                return;
-            }
-            let e = self.heap.pop().expect("peeked entry");
-            self.cancelled.remove(&e.seq);
-        }
+        self.tags.get(&tag).map_or(0, |t| t.gen)
     }
 
     /// Time of the next live event without delivering it.
     pub fn peek_time(&mut self) -> Option<f64> {
-        self.skim();
-        self.heap.peek().map(|e| e.time)
+        if !self.settle() {
+            return None;
+        }
+        let idx = *self.cur.last().expect("settle returned true");
+        Some(self.slots[idx as usize].time)
     }
 
-    /// Drop every pending timer without delivering (tag generations and
-    /// the clock are kept).
+    /// Drop every pending timer without delivering.
+    ///
+    /// Retention contract: the clock, `seq` counter, processed/cancelled
+    /// counters and **every tag's generation** survive — a cleared kernel
+    /// is the same timeline with its future revoked, so stale ids stay
+    /// dead and re-scheduled tags keep their generation history. Use
+    /// [`Kernel::reset`] to reclaim everything.
     pub fn clear(&mut self) {
         self.cancelled_count += self.live as u64;
         self.live = 0;
-        self.heap.clear();
-        self.cancelled.clear();
+        self.reap_all();
+        for st in self.tags.values_mut() {
+            st.live = 0;
+        }
+        self.next_bucket = 0;
+        self.base = self.now;
+    }
+
+    /// Return the kernel to its pristine just-constructed state — clock,
+    /// counters, tag generations and pending timers all reclaimed — while
+    /// keeping the slab, free-list and bucket capacity warm. This is the
+    /// between-cells reset for batch runs (`run_cell_reusing`): a reset
+    /// kernel delivers bit-identical schedules to a fresh `Kernel::new()`
+    /// because ordering depends only on `(time, seq)`, never on geometry.
+    pub fn reset(&mut self) {
+        self.reap_all();
+        self.tags.clear();
+        self.now = 0.0;
+        self.seq = 0;
+        self.processed = 0;
+        self.cancelled_count = 0;
+        self.live = 0;
+        self.next_bucket = 0;
+        self.base = 0.0;
     }
 
     /// Pop the next live event, advancing the clock.
     #[allow(clippy::should_implement_trait)]
     pub fn next(&mut self) -> Option<(f64, E)> {
-        self.skim();
-        let e = self.heap.pop()?;
+        if !self.settle() {
+            return None;
+        }
+        let idx = self.cur.pop().expect("settle returned true");
+        let (t, tag, event) = {
+            let s = &mut self.slots[idx as usize];
+            (s.time, s.tag, s.event.take().expect("live slot holds an event"))
+        };
+        if let Some((tag, _gen)) = tag {
+            // A live fire is necessarily current-generation.
+            let ts = self.tags.get_mut(&tag).expect("tagged entry without tag state");
+            ts.live -= 1;
+        }
+        self.free_slot(idx);
         self.live -= 1;
-        self.now = e.time;
+        self.now = t;
         self.processed += 1;
-        Some((e.time, e.event))
+        Some((t, event))
     }
 
     /// Pop the next live event only if it occurs before `horizon`.
@@ -412,5 +737,92 @@ mod tests {
         k.schedule_tagged(1.0, 3, "fresh");
         assert_eq!(k.len(), 1);
         assert_eq!(k.next().unwrap().1, "fresh");
+    }
+
+    #[test]
+    fn clustered_and_far_future_times_pop_in_order() {
+        // Exercises all three tiers at once: a dense near cluster, a mid
+        // band, and far-future outliers (the `gap_s = 1e9` idle pattern),
+        // with enough entries to trigger growth rebuilds.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut k = Kernel::new();
+        let mut times = Vec::new();
+        for i in 0..5000usize {
+            let t = match i % 3 {
+                0 => rng.f64() * 1e-3,        // dense cluster near zero
+                1 => 1.0 + rng.f64() * 100.0, // mid band
+                _ => 1.0e9 + rng.f64(),       // far future
+            };
+            k.schedule(t, i);
+            times.push((t, i));
+        }
+        times.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let got: Vec<(f64, usize)> = std::iter::from_fn(|| k.next()).collect();
+        assert_eq!(got, times);
+        assert_eq!(k.processed(), 5000);
+        assert!(k.is_empty());
+    }
+
+    #[test]
+    fn insert_into_draining_region_keeps_order() {
+        // `schedule_in(0.0)` from inside the event loop must land in the
+        // already-passed wheel region and still fire after the current
+        // event's equal-time peers, FIFO by seq.
+        let mut k = Kernel::new();
+        for i in 0..10 {
+            k.schedule(1.0, i);
+        }
+        let (t0, first) = k.next().unwrap();
+        assert_eq!((t0, first), (1.0, 0));
+        k.schedule_in(0.0, 100); // same timestamp, scheduled mid-drain
+        k.schedule_in(0.5, 200);
+        let rest: Vec<i32> = std::iter::from_fn(|| k.next().map(|(_, e)| e)).collect();
+        assert_eq!(rest, vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 100, 200]);
+    }
+
+    #[test]
+    fn clear_keeps_tag_generations_reset_reclaims_them() {
+        let mut k = Kernel::new();
+        k.schedule_tagged(1.0, 5, "a");
+        k.invalidate_tag(5);
+        k.clear();
+        // clear(): generation history survives.
+        assert_eq!(k.generation(5), 1);
+        k.schedule(2.0, "x");
+        k.next();
+        assert!(k.now() > 0.0);
+        k.reset();
+        // reset(): pristine state, capacity retained.
+        assert_eq!(k.generation(5), 0);
+        assert_eq!(k.now(), 0.0);
+        assert_eq!(k.processed(), 0);
+        assert_eq!(k.cancelled_count(), 0);
+        assert!(k.is_empty());
+    }
+
+    #[test]
+    fn reset_kernel_matches_fresh_kernel() {
+        // A warmed-then-reset kernel must deliver the exact sequence a
+        // fresh one does: ordering depends only on (time, seq).
+        let run = |k: &mut Kernel<usize>| -> Vec<(f64, usize)> {
+            let mut rng = crate::util::rng::Rng::new(42);
+            let mut ids = Vec::new();
+            for i in 0..300 {
+                let t = rng.f64() * 50.0;
+                ids.push(k.schedule(t, i));
+            }
+            for (j, id) in ids.iter().enumerate() {
+                if j % 7 == 0 {
+                    k.cancel(*id);
+                }
+            }
+            std::iter::from_fn(|| k.next()).collect()
+        };
+        let mut fresh = Kernel::new();
+        let expect = run(&mut fresh);
+        let mut warmed = Kernel::new();
+        let _ = run(&mut warmed); // warm the slab and wheel
+        warmed.reset();
+        assert_eq!(run(&mut warmed), expect);
     }
 }

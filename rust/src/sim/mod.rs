@@ -5,7 +5,9 @@
 //! cancellable and generation-tagged timers, `peek_time`/`clear`, and the
 //! [`kernel::Component`] trait that lets the serving, training and
 //! control planes each handle their own events on one shared clock
-//! (`inference::cosim`).
+//! (`inference::cosim`). Storage is a calendar queue over a slab arena;
+//! [`oracle::HeapKernel`] preserves the original binary-heap
+//! implementation as the differential-test and benchmark baseline.
 //!
 //! [`Des`] is the original minimal scheduler API, now a thin wrapper over
 //! the kernel: events of user type `E` are scheduled at f64 times; ties
@@ -14,6 +16,7 @@
 //! are built on this.
 
 pub mod kernel;
+pub mod oracle;
 
 pub use kernel::{Component, Kernel, TimerId};
 

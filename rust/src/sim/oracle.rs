@@ -1,0 +1,224 @@
+//! The original binary-heap event kernel, kept **verbatim** as a
+//! differential-testing and benchmarking oracle.
+//!
+//! When `sim::kernel` moved to calendar-queue storage, this module froze
+//! the pre-existing `BinaryHeap<Entry>` implementation (O(log n)
+//! schedule/pop, O(len) `cancel` scan, O(heap) `invalidate_tag` scan) so
+//! that:
+//!
+//! * `tests/kernel_differential.rs` can drive both kernels through the
+//!   same random operation stream and assert bit-identical pop sequences
+//!   and counters — the ordering contract is pinned by executable spec,
+//!   not prose;
+//! * `benches/bench_kernel.rs` can report events/sec speedups against the
+//!   exact queue the repo used to run on.
+//!
+//! Do not "improve" this module: its value is that it does not change.
+//! It is not wired into any production path.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+/// Handle for one scheduled oracle timer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OracleTimerId(u64);
+
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    tag: Option<(u64, u64)>,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap on (time, seq).
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The pre-calendar-queue kernel: `BinaryHeap` storage, lazy removal via
+/// a cancelled-id hash set, O(len)/O(heap) cancellation scans.
+pub struct HeapKernel<E> {
+    heap: BinaryHeap<Entry<E>>,
+    now: f64,
+    seq: u64,
+    processed: u64,
+    cancelled_count: u64,
+    live: usize,
+    cancelled: HashSet<u64>,
+    tag_gen: HashMap<u64, u64>,
+}
+
+impl<E> Default for HeapKernel<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> HeapKernel<E> {
+    pub fn new() -> HeapKernel<E> {
+        HeapKernel {
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+            cancelled_count: 0,
+            live: 0,
+            cancelled: HashSet::new(),
+            tag_gen: HashMap::new(),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn cancelled_count(&self) -> u64 {
+        self.cancelled_count
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    fn push(&mut self, time: f64, tag: Option<(u64, u64)>, event: E) -> OracleTimerId {
+        debug_assert!(time >= self.now - 1e-12, "scheduling into the past");
+        let id = self.seq;
+        self.heap.push(Entry { time: time.max(self.now), seq: id, tag, event });
+        self.live += 1;
+        self.seq += 1;
+        OracleTimerId(id)
+    }
+
+    pub fn schedule(&mut self, time: f64, event: E) -> OracleTimerId {
+        self.push(time, None, event)
+    }
+
+    pub fn schedule_in(&mut self, delay: f64, event: E) -> OracleTimerId {
+        self.push(self.now + delay.max(0.0), None, event)
+    }
+
+    pub fn schedule_tagged(&mut self, time: f64, tag: u64, event: E) -> OracleTimerId {
+        let gen = self.tag_gen.get(&tag).copied().unwrap_or(0);
+        self.push(time, Some((tag, gen)), event)
+    }
+
+    pub fn schedule_tagged_in(&mut self, delay: f64, tag: u64, event: E) -> OracleTimerId {
+        self.schedule_tagged(self.now + delay.max(0.0), tag, event)
+    }
+
+    /// Revoke one timer via the historical O(len) scan.
+    pub fn cancel(&mut self, id: OracleTimerId) -> bool {
+        if self.cancelled.contains(&id.0) {
+            return false;
+        }
+        let alive = self.heap.iter().any(|e| e.seq == id.0 && !self.entry_dead(e));
+        if alive {
+            self.cancelled.insert(id.0);
+            self.cancelled_count += 1;
+            self.live -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Bump `tag`'s generation via the historical O(heap) victim count.
+    pub fn invalidate_tag(&mut self, tag: u64) -> usize {
+        let gen = self.tag_gen.entry(tag).or_insert(0);
+        let old_gen = *gen;
+        *gen += 1;
+        let mut killed = 0;
+        for e in self.heap.iter() {
+            if let Some((t, g)) = e.tag {
+                if t == tag && g == old_gen && !self.cancelled.contains(&e.seq) {
+                    killed += 1;
+                }
+            }
+        }
+        self.cancelled_count += killed as u64;
+        self.live -= killed;
+        killed
+    }
+
+    pub fn generation(&self, tag: u64) -> u64 {
+        self.tag_gen.get(&tag).copied().unwrap_or(0)
+    }
+
+    fn entry_dead(&self, e: &Entry<E>) -> bool {
+        if !self.cancelled.is_empty() && self.cancelled.contains(&e.seq) {
+            return true;
+        }
+        match e.tag {
+            Some((tag, gen)) => gen < self.generation(tag),
+            None => false,
+        }
+    }
+
+    fn skim(&mut self) {
+        loop {
+            let dead = match self.heap.peek() {
+                None => return,
+                Some(e) => self.entry_dead(e),
+            };
+            if !dead {
+                return;
+            }
+            let e = self.heap.pop().expect("peeked entry");
+            self.cancelled.remove(&e.seq);
+        }
+    }
+
+    pub fn peek_time(&mut self) -> Option<f64> {
+        self.skim();
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Historical `clear`: tag generations and the clock are kept.
+    pub fn clear(&mut self) {
+        self.cancelled_count += self.live as u64;
+        self.live = 0;
+        self.heap.clear();
+        self.cancelled.clear();
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<(f64, E)> {
+        self.skim();
+        let e = self.heap.pop()?;
+        self.live -= 1;
+        self.now = e.time;
+        self.processed += 1;
+        Some((e.time, e.event))
+    }
+
+    pub fn next_before(&mut self, horizon: f64) -> Option<(f64, E)> {
+        match self.peek_time() {
+            Some(t) if t < horizon => self.next(),
+            _ => None,
+        }
+    }
+}

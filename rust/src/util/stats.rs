@@ -92,6 +92,17 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Geometric mean of strictly positive values, computed in log space so
+/// wide dynamic ranges (e.g. per-workload benchmark speedups spanning
+/// orders of magnitude) don't overflow. Returns NaN on empty input or
+/// any non-positive value — callers must not silently average those.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() || xs.iter().any(|&x| !(x > 0.0)) {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
 /// Streaming accumulator (Welford). Constant memory; used by the DES to
 /// track per-class latency without storing every sample.
 #[derive(Debug, Clone, Default)]
@@ -488,6 +499,18 @@ mod tests {
             prev = t;
         }
         assert!((t_critical_975(1000) - 1.96).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[5.0]) - 5.0).abs() < 1e-12);
+        // Log-space path survives huge dynamic range without overflow.
+        let g = geomean(&[1e-300, 1e300]);
+        assert!((g - 1.0).abs() < 1e-9, "{g}");
+        assert!(geomean(&[]).is_nan());
+        assert!(geomean(&[1.0, 0.0]).is_nan());
+        assert!(geomean(&[1.0, -2.0]).is_nan());
     }
 
     #[test]

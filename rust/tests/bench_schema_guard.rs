@@ -1,0 +1,26 @@
+//! Guard: the committed kernel-bench artifact stays parseable and
+//! schema-versioned.
+//!
+//! `benches/bench_kernel.rs` overwrites `BENCH_kernel.json` on every run
+//! (CI uploads it as an artifact), so the file's shape is a contract:
+//! downstream tooling keys on `schema_version` to interpret the
+//! trajectory. This test pins that the checked-in baseline (or a
+//! freshly regenerated artifact — the bench writes to the same path)
+//! parses as JSON and carries the current schema version.
+
+use hflop::metrics::export::SCHEMA_VERSION;
+use hflop::util::json::Json;
+
+const ARTIFACT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_kernel.json");
+
+#[test]
+fn bench_kernel_artifact_is_schema_versioned_json() {
+    let raw = std::fs::read_to_string(ARTIFACT)
+        .unwrap_or_else(|e| panic!("BENCH_kernel.json must be committed at {ARTIFACT}: {e}"));
+    let json = Json::parse(&raw).expect("BENCH_kernel.json parses as JSON");
+    let version = json
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .expect("BENCH_kernel.json carries a numeric schema_version");
+    assert_eq!(version as u32, SCHEMA_VERSION, "artifact schema version drifted");
+}

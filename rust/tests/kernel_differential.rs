@@ -1,0 +1,206 @@
+//! Differential property test: the calendar-queue [`hflop::sim::Kernel`]
+//! against the frozen binary-heap oracle [`hflop::sim::oracle::HeapKernel`].
+//!
+//! Both kernels are driven through the same randomized operation stream —
+//! schedules across clustered and far-future timestamps, relative
+//! schedules, tagged schedules, cancels, tag invalidations, peeks, pops
+//! and occasional clears — and must agree *bit for bit*: identical
+//! `(time, payload)` pop sequences (times compared via `to_bits`),
+//! identical boolean/count returns from `cancel` / `invalidate_tag`, and
+//! identical `processed` / `cancelled_count` / `len` counters throughout.
+//!
+//! The ordering contract ("deliver in `(time, seq)` order, FIFO at equal
+//! timestamps") is thereby pinned by executable spec rather than prose:
+//! any divergence between the two storage schemes fails loudly with the
+//! op index that exposed it.
+
+use hflop::sim::oracle::{HeapKernel, OracleTimerId};
+use hflop::sim::{Kernel, TimerId};
+use hflop::util::rng::Rng;
+
+const TAGS: [u64; 4] = [7, 11, 13, 1 << 40];
+
+/// Draw a scheduling timestamp offset from a mixture that stresses every
+/// calendar tier: dense clusters (many entries per bucket, frequent
+/// exact ties), a mid band (ordinary spread), and far-future outliers
+/// (overflow tier, re-anchor churn).
+fn draw_offset(rng: &mut Rng) -> f64 {
+    match rng.below(10) {
+        // Dense cluster just ahead of the clock; quantized so exact
+        // timestamp ties are common and FIFO-at-ties is exercised.
+        0..=4 => (rng.below(64) as f64) * 1e-4,
+        // Mid band.
+        5..=7 => rng.uniform(0.0, 50.0),
+        // Far future: lands in the overflow tier until a re-anchor.
+        _ => 1e6 + rng.uniform(0.0, 1e9),
+    }
+}
+
+struct Pair {
+    new: Kernel<u32>,
+    old: HeapKernel<u32>,
+    // Parallel handle vectors, indexed by issue order.
+    new_ids: Vec<TimerId>,
+    old_ids: Vec<OracleTimerId>,
+}
+
+impl Pair {
+    fn fresh() -> Pair {
+        Pair {
+            new: Kernel::new(),
+            old: HeapKernel::new(),
+            new_ids: Vec::new(),
+            old_ids: Vec::new(),
+        }
+    }
+
+    fn check_counters(&self, op: usize) {
+        assert_eq!(self.new.len(), self.old.len(), "len diverged at op {op}");
+        assert_eq!(self.new.processed(), self.old.processed(), "processed diverged at op {op}");
+        assert_eq!(
+            self.new.cancelled_count(),
+            self.old.cancelled_count(),
+            "cancelled_count diverged at op {op}"
+        );
+        assert_eq!(
+            self.new.now().to_bits(),
+            self.old.now().to_bits(),
+            "clock diverged at op {op}"
+        );
+    }
+}
+
+/// Drive both kernels through `n_ops` random operations and assert
+/// bit-identical observable behaviour at every step.
+fn differential_run(seed: u64, n_ops: usize) {
+    let mut rng = Rng::new(seed);
+    let mut p = Pair::fresh();
+    let mut payload: u32 = 0;
+
+    for op in 0..n_ops {
+        match rng.below(100) {
+            // Absolute-time schedule (the dominant operation).
+            0..=39 => {
+                let t = p.new.now() + draw_offset(&mut rng);
+                payload += 1;
+                p.new_ids.push(p.new.schedule(t, payload));
+                p.old_ids.push(p.old.schedule(t, payload));
+            }
+            // Relative schedule, including clamped negative delays.
+            40..=49 => {
+                let d = draw_offset(&mut rng) - 0.5;
+                payload += 1;
+                p.new_ids.push(p.new.schedule_in(d, payload));
+                p.old_ids.push(p.old.schedule_in(d, payload));
+            }
+            // Tagged schedule under one of a few rotating tags.
+            50..=64 => {
+                let t = p.new.now() + draw_offset(&mut rng);
+                let tag = TAGS[rng.below(TAGS.len())];
+                payload += 1;
+                p.new_ids.push(p.new.schedule_tagged(t, tag, payload));
+                p.old_ids.push(p.old.schedule_tagged(t, tag, payload));
+            }
+            // Cancel a previously issued handle (live, fired, already
+            // cancelled, or tag-revoked — the return value must agree in
+            // every case).
+            65..=79 => {
+                if p.new_ids.is_empty() {
+                    continue;
+                }
+                let k = rng.below(p.new_ids.len());
+                let a = p.new.cancel(p.new_ids[k]);
+                let b = p.old.cancel(p.old_ids[k]);
+                assert_eq!(a, b, "cancel return diverged at op {op} (handle {k})");
+            }
+            // Invalidate a tag generation.
+            80..=84 => {
+                let tag = TAGS[rng.below(TAGS.len())];
+                let a = p.new.invalidate_tag(tag);
+                let b = p.old.invalidate_tag(tag);
+                assert_eq!(a, b, "invalidate_tag count diverged at op {op}");
+                assert_eq!(p.new.generation(tag), p.old.generation(tag));
+            }
+            // Peek.
+            85..=89 => {
+                let a = p.new.peek_time().map(f64::to_bits);
+                let b = p.old.peek_time().map(f64::to_bits);
+                assert_eq!(a, b, "peek_time diverged at op {op}");
+            }
+            // Pop a burst of events.
+            90..=97 => {
+                for _ in 0..=rng.below(8) {
+                    let a = p.new.next().map(|(t, e)| (t.to_bits(), e));
+                    let b = p.old.next().map(|(t, e)| (t.to_bits(), e));
+                    assert_eq!(a, b, "pop diverged at op {op}");
+                    if a.is_none() {
+                        break;
+                    }
+                }
+            }
+            // Bounded pop.
+            98 => {
+                let h = p.new.now() + rng.uniform(0.0, 10.0);
+                let a = p.new.next_before(h).map(|(t, e)| (t.to_bits(), e));
+                let b = p.old.next_before(h).map(|(t, e)| (t.to_bits(), e));
+                assert_eq!(a, b, "next_before diverged at op {op}");
+            }
+            // Rare wholesale clear (retention contract: counters and tag
+            // generations survive on both sides).
+            _ => {
+                p.new.clear();
+                p.old.clear();
+            }
+        }
+        p.check_counters(op);
+    }
+
+    // Drain both queues to the end: the full residual pop sequence must
+    // match bit for bit.
+    loop {
+        let a = p.new.next().map(|(t, e)| (t.to_bits(), e));
+        let b = p.old.next().map(|(t, e)| (t.to_bits(), e));
+        assert_eq!(a, b, "drain diverged");
+        if a.is_none() {
+            break;
+        }
+    }
+    p.check_counters(n_ops);
+}
+
+#[test]
+fn calendar_kernel_matches_heap_oracle_over_random_ops() {
+    // ~10k ops per seed; several seeds so clustered/far-future mixtures,
+    // re-anchors and growth rebuilds all get distinct interleavings.
+    for seed in [1, 2026, 0xC0FFEE] {
+        differential_run(seed, 10_000);
+    }
+}
+
+#[test]
+fn calendar_kernel_matches_heap_oracle_under_heavy_ties() {
+    // All-clustered workload: every timestamp is one of 16 values, so
+    // almost every delivery decision is settled by the FIFO seq tiebreak.
+    let mut rng = Rng::new(99);
+    let mut new = Kernel::new();
+    let mut old = HeapKernel::new();
+    for i in 0..4_000u32 {
+        let t = (rng.below(16) as f64) * 0.25;
+        new.schedule(t, i);
+        old.schedule(t, i);
+        if rng.chance(0.3) {
+            let a = new.next().map(|(t, e)| (t.to_bits(), e));
+            let b = old.next().map(|(t, e)| (t.to_bits(), e));
+            assert_eq!(a, b);
+        }
+    }
+    loop {
+        let a = new.next().map(|(t, e)| (t.to_bits(), e));
+        let b = old.next().map(|(t, e)| (t.to_bits(), e));
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+    assert_eq!(new.processed(), old.processed());
+}

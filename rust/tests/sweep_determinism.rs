@@ -79,6 +79,64 @@ fn every_cell_simulated_real_traffic() {
 }
 
 #[test]
+fn trace_env_axis_is_deterministic_and_moves_traffic() {
+    // The CLI spelling `hflop sweep --experiment interference
+    //   --rows preset=steady,diurnal-surge --envs trace=none,diurnal,flash-crowd`
+    // builds exactly this grid (see `run_sweep` in main.rs): open-loop
+    // arrival traces are just another hashed env axis, so the byte-
+    // identity contract must hold across worker counts — chunked
+    // thinning generation runs on the worker thread from the cell seed.
+    let trace_env = |name: &str| {
+        AxisPoint::hashed(
+            "interference",
+            name,
+            vec![("trace".to_string(), Value::Str(name.into()))],
+        )
+    };
+    let g = SweepGrid::custom(
+        "interference",
+        vec![
+            ("clients".to_string(), Value::Int(12)),
+            ("edges".to_string(), Value::Int(3)),
+            ("duration_s".to_string(), Value::Float(25.0)),
+            ("lambda_scale".to_string(), Value::Float(0.5)),
+        ],
+        vec![
+            AxisPoint::hashed(
+                "interference",
+                "steady",
+                vec![("preset".to_string(), Value::Str("steady".into()))],
+            ),
+            AxisPoint::hashed(
+                "interference",
+                "diurnal-surge",
+                vec![("preset".to_string(), Value::Str("diurnal-surge".into()))],
+            ),
+        ],
+        vec![AxisPoint::neutral("base")],
+        vec![trace_env("none"), trace_env("diurnal"), trace_env("flash-crowd")],
+        1,
+        7,
+    )
+    .unwrap();
+    assert_eq!(g.n_cells(), 6);
+    let serial = run_grid(&g, 1).unwrap();
+    let serial_json = serial.to_json().to_pretty();
+    let parallel = run_grid(&g, 8).unwrap().to_json().to_pretty();
+    assert_eq!(serial_json.as_bytes(), parallel.as_bytes(), "trace envs broke determinism");
+
+    // The trace envs must actually change the traffic, not just relabel
+    // it: both open-loop shapes peak above the closed-loop base rate.
+    let requests = |env_idx: usize| -> u64 {
+        serial.cells.iter().filter(|c| c.env_idx == env_idx).map(|c| c.requests).sum()
+    };
+    let (closed, diurnal, flash) = (requests(0), requests(1), requests(2));
+    assert!(closed > 100, "closed-loop cells look empty ({closed})");
+    assert!(diurnal > closed, "diurnal trace did not add volume ({diurnal} vs {closed})");
+    assert!(flash > closed, "flash-crowd trace did not add volume ({flash} vs {closed})");
+}
+
+#[test]
 fn custom_registry_grid_is_deterministic_too() {
     // The declarative path new experiments use: sweep `fig7` cells via
     // hashed axis coordinates — same byte-identity contract.
