@@ -1,19 +1,31 @@
-//! Bench: Fig. 2 — exact HFLOP solve time vs instance size, plus the
-//! LP-simplex microbenchmark and the exact-vs-heuristic ablation.
-//! Regenerates the data behind paper Fig. 2 (see EXPERIMENTS.md).
+//! Bench: Fig. 2 — exact HFLOP solve time vs instance size, the
+//! LP-simplex microbenchmark, the exact-vs-heuristic ablation, and the
+//! sharded region-parallel scale trajectory (up to n = 1M devices).
+//! Regenerates the data behind paper Fig. 2 (see EXPERIMENTS.md) and
+//! writes the schema-versioned `BENCH_solver.json` artifact that CI
+//! uploads on every run (BENCHMARKS.md tracks the trajectory).
 
 mod bench_common;
-use bench_common::{bench, bench_auto, header};
+use bench_common::{bench, bench_auto, header, smoke};
 
-use hflop::hflop::InstanceBuilder;
+use hflop::hflop::{InstanceBuilder, SparseInstance};
+use hflop::metrics::export::SCHEMA_VERSION;
 use hflop::solver::greedy::greedy;
 use hflop::solver::local_search::{local_search, LocalSearchOptions, LsMode};
 use hflop::solver::milp::build_relaxation;
-use hflop::solver::{branch_and_bound, BbOptions};
+use hflop::solver::{aggregated_lp_bound, branch_and_bound, solve_sparse, BbOptions, SolveOptions};
+use hflop::util::json::Json;
 
 fn main() {
+    let smoke = smoke();
+
     header("Fig. 2: exact solve time vs instance size (B&B + simplex, 1 core)");
-    for &(n, m) in &[(25usize, 4usize), (50, 4), (100, 6), (200, 8), (400, 10)] {
+    let exact_points: &[(usize, usize)] = if smoke {
+        &[(25, 4), (50, 4)]
+    } else {
+        &[(25, 4), (50, 4), (100, 6), (200, 8), (400, 10)]
+    };
+    for &(n, m) in exact_points {
         let insts: Vec<_> = (0..3)
             .map(|r| InstanceBuilder::unit_cost(n, m, 7000 + r).build())
             .collect();
@@ -34,7 +46,9 @@ fn main() {
     }
 
     header("Heuristics (large-instance path, §IV-C)");
-    for &(n, m) in &[(200usize, 10usize), (500, 20), (1000, 32)] {
+    let heur_points: &[(usize, usize)] =
+        if smoke { &[(200, 10)] } else { &[(200, 10), (500, 20), (1000, 32)] };
+    for &(n, m) in heur_points {
         let inst = InstanceBuilder::unit_cost(n, m, 13).build();
         bench(&format!("heuristic/greedy n={n} m={m}"), 3, || greedy(&inst));
         bench(&format!("heuristic/local_search n={n} m={m}"), 3, || {
@@ -47,20 +61,111 @@ fn main() {
     // per candidate) on the same n=500/m=20 instance. The two local
     // optima may differ slightly; both costs are printed so quality and
     // speed are judged together. Record the numbers in CHANGES.md.
-    header("core refactor: completion baseline vs incremental (n=500, m=20)");
-    let inst = InstanceBuilder::unit_cost(500, 20, 17).build();
-    let completion = LocalSearchOptions { mode: LsMode::Completion, ..Default::default() };
-    let incremental = LocalSearchOptions { mode: LsMode::Incremental, ..Default::default() };
-    bench("ls/completion(full-rescore) n=500 m=20", 3, || {
-        local_search(&inst, &completion)
-    });
-    bench("ls/incremental(delta-eval) n=500 m=20", 3, || {
-        local_search(&inst, &incremental)
-    });
-    let c = local_search(&inst, &completion);
-    let i = local_search(&inst, &incremental);
-    println!(
-        "ls quality: completion cost {:.3} ({} moves) | incremental cost {:.3} ({} moves)",
-        c.cost, c.moves, i.cost, i.moves
-    );
+    if !smoke {
+        header("core refactor: completion baseline vs incremental (n=500, m=20)");
+        let inst = InstanceBuilder::unit_cost(500, 20, 17).build();
+        let completion = LocalSearchOptions { mode: LsMode::Completion, ..Default::default() };
+        let incremental = LocalSearchOptions { mode: LsMode::Incremental, ..Default::default() };
+        bench("ls/completion(full-rescore) n=500 m=20", 3, || {
+            local_search(&inst, &completion)
+        });
+        bench("ls/incremental(delta-eval) n=500 m=20", 3, || {
+            local_search(&inst, &incremental)
+        });
+        let c = local_search(&inst, &completion);
+        let i = local_search(&inst, &incremental);
+        println!(
+            "ls quality: completion cost {:.3} ({} moves) | incremental cost {:.3} ({} moves)",
+            c.cost, c.moves, i.cost, i.moves
+        );
+    }
+
+    // -- sharded region-parallel scale trajectory --------------------------
+    // One solve per point (the solve's own wall clock is the measurement;
+    // a warmup at n=1M would double the bench cost for nothing). Every
+    // point reports the Eq. 1 cost, the aggregated-LP lower bound and the
+    // relative gap, plus the candidate-structure memory against the dense
+    // matrix it replaces — the sublinear-memory claim made checkable.
+    header("sharded scale: region-parallel sparse solves (cost vs aggregated-LP bound)");
+    let scale_points: &[(usize, usize, usize)] = if smoke {
+        &[(2_000, 16, 8), (5_000, 32, 8)]
+    } else {
+        &[(2_000, 16, 8), (5_000, 32, 8), (100_000, 128, 12), (1_000_000, 512, 12)]
+    };
+    let mut events = Vec::new();
+    for &(n, m, cand_k) in scale_points {
+        let t0 = std::time::Instant::now();
+        let sp = SparseInstance::clustered(n, m, 4242, cand_k);
+        let build_s = t0.elapsed().as_secs_f64();
+        let mut opts = SolveOptions::sharded();
+        opts.shard.root_seed = 4242;
+        let out = solve_sparse(&sp, &opts).expect("sharded solve");
+        let stats = out.sharded.expect("sharded stats");
+        let bound = aggregated_lp_bound(&sp);
+        let cost = out.solution.cost;
+        let gap = if bound > 0.0 { (cost - bound) / bound } else { 0.0 };
+        let cand_mb = sp.candidate_bytes() as f64 / 1e6;
+        let dense_mb = sp.dense_equiv_bytes() as f64 / 1e6;
+        println!(
+            "sharded n={n} m={m} k={cand_k}: cost {cost:.1} bound {bound:.1} \
+             gap {:.2}% | build {build_s:.2}s solve {:.2}s | {} regions, \
+             {} repairs, {} rescued | mem {cand_mb:.1} MB vs dense {dense_mb:.1} MB",
+            gap * 100.0,
+            out.solution.wall_s,
+            stats.regions,
+            stats.repair_moves,
+            stats.rescued,
+        );
+        events.push(Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("m", Json::Num(m as f64)),
+            ("cand_k", Json::Num(cand_k as f64)),
+            ("cost", Json::Num(cost)),
+            ("bound", Json::Num(bound)),
+            ("gap", Json::Num(gap)),
+            ("wall_s", Json::Num(out.solution.wall_s)),
+            ("build_s", Json::Num(build_s)),
+            ("regions", Json::Num(stats.regions as f64)),
+            ("repair_moves", Json::Num(stats.repair_moves as f64)),
+            ("rescued", Json::Num(stats.rescued as f64)),
+            ("candidate_mb", Json::Num(cand_mb)),
+            ("dense_equiv_mb", Json::Num(dense_mb)),
+        ]));
+    }
+
+    // Worker-count determinism spot check at the smallest scale point:
+    // the same root seed must give a bit-identical solution at 1 and 8
+    // workers (the full property test lives in tests/sharded_equivalence).
+    let sp = SparseInstance::clustered(2_000, 16, 4242, 8);
+    let solve_at = |workers: usize| {
+        let mut opts = SolveOptions::sharded();
+        opts.shard.root_seed = 4242;
+        opts.shard.workers = workers;
+        solve_sparse(&sp, &opts).expect("sharded solve").solution
+    };
+    let a = solve_at(1);
+    let b = solve_at(8);
+    let identical =
+        a.cost.to_bits() == b.cost.to_bits() && a.assignment.assign == b.assignment.assign;
+    assert!(identical, "sharded solve must be worker-count independent");
+    println!("  -> worker determinism: 1 vs 8 workers bit-identical = {identical}");
+
+    let artifact = Json::obj(vec![
+        ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("events", Json::Arr(events)),
+        (
+            "determinism",
+            Json::obj(vec![
+                ("point", Json::Str("n=2000 m=16 cand_k=8".into())),
+                ("workers_1_vs_8_identical", Json::Bool(identical)),
+            ]),
+        ),
+        (
+            "note",
+            Json::Str("sharded solver scale trajectory; see BENCHMARKS.md".into()),
+        ),
+    ]);
+    std::fs::write("BENCH_solver.json", artifact.to_pretty()).expect("write BENCH_solver.json");
+    println!("  -> wrote BENCH_solver.json");
 }

@@ -8,9 +8,9 @@
 //! feasibility for practically-sized instances (§IV-C).
 
 use crate::config::params::ParamSpec;
-use crate::hflop::InstanceBuilder;
+use crate::hflop::{InstanceBuilder, SparseInstance};
 use crate::metrics::export::ascii_table;
-use crate::solver::{branch_and_bound, BbOptions};
+use crate::solver::{aggregated_lp_bound, branch_and_bound, solve_sparse, BbOptions, SolveOptions};
 use crate::util::stats::Summary;
 
 use super::registry::{Experiment, ExperimentCtx, ParamDefault, Report};
@@ -23,7 +23,20 @@ pub struct Fig2Row {
     pub mean_s: f64,
     pub ci95_s: f64,
     pub mean_nodes: f64,
+    pub mean_cost: f64,
     pub all_optimal: bool,
+}
+
+/// One sharded sweep point (`solver=sharded`): wall time, Eq. 1 cost and
+/// the relative gap to the aggregated-LP lower bound.
+#[derive(Debug, Clone)]
+pub struct Fig2ShardedRow {
+    pub n: usize,
+    pub m: usize,
+    pub mean_s: f64,
+    pub ci95_s: f64,
+    pub mean_cost: f64,
+    pub mean_gap: f64,
 }
 
 /// Default sweep: the paper's 2-D grid shape (devices × edge hosts),
@@ -39,20 +52,29 @@ pub fn default_sweep() -> Vec<(usize, usize)> {
     ]
 }
 
-/// Run the sweep: `reps` random instances per size.
-pub fn run(sweep: &[(usize, usize)], reps: usize, time_limit_s: f64) -> Vec<Fig2Row> {
+/// Default sharded sweep: metro-scale clustered instances the dense
+/// solvers cannot touch without materializing n·m costs. The benchmark
+/// (`bench_solver`) extends the same family to n = 1M.
+pub fn default_sharded_sweep() -> Vec<(usize, usize)> {
+    vec![(2_000, 16), (10_000, 64), (50_000, 128)]
+}
+
+/// Run the sweep: `reps` random instances per size, seeded `seed + rep`.
+pub fn run(sweep: &[(usize, usize)], reps: usize, time_limit_s: f64, seed: u64) -> Vec<Fig2Row> {
     let mut rows = Vec::with_capacity(sweep.len());
     for &(n, m) in sweep {
         let mut times = Vec::with_capacity(reps);
         let mut nodes = Vec::with_capacity(reps);
+        let mut costs = Vec::with_capacity(reps);
         let mut all_optimal = true;
         for rep in 0..reps {
-            let inst = InstanceBuilder::unit_cost(n, m, 1000 + rep as u64).build();
+            let inst = InstanceBuilder::unit_cost(n, m, seed.wrapping_add(rep as u64)).build();
             let opts = BbOptions { time_limit_s, ..Default::default() };
             let out = branch_and_bound(&inst, &opts);
             all_optimal &= out.proven_optimal;
             times.push(out.wall_s);
             nodes.push(out.nodes as f64);
+            costs.push(out.cost);
         }
         let ts = Summary::of(&times);
         let ns = Summary::of(&nodes);
@@ -62,10 +84,52 @@ pub fn run(sweep: &[(usize, usize)], reps: usize, time_limit_s: f64) -> Vec<Fig2
             mean_s: ts.mean,
             ci95_s: if ts.ci95.is_finite() { ts.ci95 } else { 0.0 },
             mean_nodes: ns.mean,
+            mean_cost: Summary::of(&costs).mean,
             all_optimal,
         });
     }
     rows
+}
+
+/// Run the sharded sweep: clustered sparse instances solved through the
+/// region-parallel path, with the aggregated-LP bound as the gap
+/// reference.
+pub fn run_sharded(
+    sweep: &[(usize, usize)],
+    reps: usize,
+    seed: u64,
+    cand_k: usize,
+    regions: usize,
+) -> anyhow::Result<Vec<Fig2ShardedRow>> {
+    let mut rows = Vec::with_capacity(sweep.len());
+    for &(n, m) in sweep {
+        let mut times = Vec::with_capacity(reps);
+        let mut costs = Vec::with_capacity(reps);
+        let mut gaps = Vec::with_capacity(reps);
+        for rep in 0..reps {
+            let rep_seed = seed.wrapping_add(rep as u64);
+            let sp = SparseInstance::clustered(n, m, rep_seed, cand_k);
+            let mut opts = SolveOptions::sharded();
+            opts.shard.root_seed = rep_seed;
+            opts.shard.regions = regions;
+            let out = solve_sparse(&sp, &opts).map_err(anyhow::Error::new)?;
+            let bound = aggregated_lp_bound(&sp);
+            let cost = out.solution.cost;
+            times.push(out.solution.wall_s);
+            costs.push(cost);
+            gaps.push(if bound > 0.0 { (cost - bound) / bound } else { 0.0 });
+        }
+        let ts = Summary::of(&times);
+        rows.push(Fig2ShardedRow {
+            n,
+            m,
+            mean_s: ts.mean,
+            ci95_s: if ts.ci95.is_finite() { ts.ci95 } else { 0.0 },
+            mean_cost: Summary::of(&costs).mean,
+            mean_gap: Summary::of(&gaps).mean,
+        });
+    }
+    Ok(rows)
 }
 
 /// Registry port (DESIGN.md §5): the Fig. 2 solve-time sweep as a typed
@@ -88,6 +152,36 @@ const SCHEMA: &[ParamSpec] = &[
         default: ParamDefault::Int(6),
         help: "how many of the default sweep sizes to run",
     },
+    ParamSpec {
+        key: "seed",
+        default: ParamDefault::Int(1000),
+        help: "base instance seed (rep r uses seed + r)",
+    },
+    ParamSpec {
+        key: "solver",
+        default: ParamDefault::Str("exact"),
+        help: "'exact' (dense B&B sweep) or 'sharded' (sparse region-parallel sweep)",
+    },
+    ParamSpec {
+        key: "cand_k",
+        default: ParamDefault::Int(8),
+        help: "candidate edges per device (sharded solver only)",
+    },
+    ParamSpec {
+        key: "regions",
+        default: ParamDefault::Int(0),
+        help: "shard region count, 0 = auto (sharded solver only)",
+    },
+    ParamSpec {
+        key: "sharded_n",
+        default: ParamDefault::Int(0),
+        help: "override: single sharded sweep point, devices (0 = default sweep)",
+    },
+    ParamSpec {
+        key: "sharded_m",
+        default: ParamDefault::Int(0),
+        help: "override: single sharded sweep point, edge hosts (0 = default sweep)",
+    },
 ];
 
 impl Experiment for Fig2Experiment {
@@ -108,10 +202,18 @@ impl Experiment for Fig2Experiment {
         let time_limit_s = ctx.params.f64("time_limit_s")?;
         // Smoke runs keep only the two smallest points.
         let max_points = ctx.usize_capped("max_points", 2)?.max(1);
+        let seed = ctx.params.i64("seed")? as u64;
+        let solver = ctx.params.str("solver")?;
+
+        if solver == "sharded" {
+            return self.run_sharded_sweep(ctx, reps, max_points, seed);
+        }
+        anyhow::ensure!(solver == "exact", "unknown fig2 solver '{solver}'");
+
         let mut sweep = default_sweep();
         sweep.truncate(max_points);
 
-        let rows = run(&sweep, reps, time_limit_s);
+        let rows = run(&sweep, reps, time_limit_s, seed);
         let table: Vec<Vec<String>> = rows
             .iter()
             .map(|r| {
@@ -135,11 +237,74 @@ impl Experiment for Fig2Experiment {
             "max_mean_s",
             rows.iter().map(|r| r.mean_s).fold(0.0f64, f64::max),
         );
+        report.num(
+            "eq1_cost",
+            rows.iter().map(|r| r.mean_cost).sum::<f64>() / rows.len() as f64,
+        );
         report.table(
             "fig2",
-            &["n", "m", "mean_s", "ci95_s", "mean_nodes"],
+            &["n", "m", "mean_s", "ci95_s", "mean_nodes", "mean_cost"],
             rows.iter()
-                .map(|r| vec![r.n as f64, r.m as f64, r.mean_s, r.ci95_s, r.mean_nodes])
+                .map(|r| {
+                    vec![r.n as f64, r.m as f64, r.mean_s, r.ci95_s, r.mean_nodes, r.mean_cost]
+                })
+                .collect(),
+        );
+        Ok(report)
+    }
+}
+
+impl Fig2Experiment {
+    fn run_sharded_sweep(
+        &self,
+        ctx: &mut ExperimentCtx,
+        reps: usize,
+        max_points: usize,
+        seed: u64,
+    ) -> anyhow::Result<Report> {
+        let cand_k = ctx.params.usize("cand_k")?.max(1);
+        let regions = ctx.params.usize("regions")?;
+        let n_override = ctx.params.usize("sharded_n")?;
+        let m_override = ctx.params.usize("sharded_m")?;
+        let mut sweep = if n_override > 0 && m_override > 0 {
+            vec![(n_override, m_override)]
+        } else {
+            default_sharded_sweep()
+        };
+        sweep.truncate(max_points);
+
+        let rows = run_sharded(&sweep, reps, seed, cand_k, regions)?;
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}", r.n),
+                    format!("{}", r.m),
+                    format!("{:.4}", r.mean_s),
+                    format!("{:.4}", r.ci95_s),
+                    format!("{:.2}", r.mean_cost),
+                    format!("{:.4}", r.mean_gap),
+                ]
+            })
+            .collect();
+        ctx.say(|| ascii_table(&["n", "m", "mean_s", "ci95", "cost", "gap"], &table));
+
+        let mut report = Report::new("fig2");
+        report.num("n_points", rows.len() as f64);
+        report.num("reps", reps as f64);
+        report.num(
+            "eq1_cost",
+            rows.iter().map(|r| r.mean_cost).sum::<f64>() / rows.len() as f64,
+        );
+        report.num(
+            "max_gap",
+            rows.iter().map(|r| r.mean_gap).fold(0.0f64, f64::max),
+        );
+        report.table(
+            "fig2_sharded",
+            &["n", "m", "mean_s", "ci95_s", "mean_cost", "mean_gap"],
+            rows.iter()
+                .map(|r| vec![r.n as f64, r.m as f64, r.mean_s, r.ci95_s, r.mean_cost, r.mean_gap])
                 .collect(),
         );
         Ok(report)
@@ -149,23 +314,47 @@ impl Experiment for Fig2Experiment {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::params::Params;
+    use crate::config::params::{Params, Value};
 
     #[test]
     fn small_sweep_runs_and_grows() {
-        let rows = run(&[(10, 3), (40, 5)], 3, 60.0);
+        let rows = run(&[(10, 3), (40, 5)], 3, 60.0, 1000);
         assert_eq!(rows.len(), 2);
         assert!(rows.iter().all(|r| r.all_optimal));
         assert!(rows.iter().all(|r| r.mean_s >= 0.0));
+        assert!(rows.iter().all(|r| r.mean_cost > 0.0));
         // Bigger instances must not be (meaningfully) faster.
         assert!(rows[1].mean_s >= rows[0].mean_s * 0.5);
     }
 
     #[test]
     fn rows_expose_ci() {
-        let rows = run(&[(10, 3)], 4, 60.0);
+        let rows = run(&[(10, 3)], 4, 60.0, 1000);
         assert!(rows[0].ci95_s >= 0.0);
         assert!(rows[0].mean_nodes >= 1.0);
+    }
+
+    #[test]
+    fn sharded_sweep_reports_cost_and_gap() {
+        let rows = run_sharded(&[(300, 8)], 2, 5, 4, 0).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].mean_cost > 0.0);
+        assert!(rows[0].mean_gap >= 0.0);
+    }
+
+    #[test]
+    fn experiment_trait_runs_sharded_solver() {
+        let mut params = Params::defaults(Fig2Experiment.param_schema());
+        params.set("solver", Value::Str("sharded".into())).unwrap();
+        params.set("sharded_n", Value::Int(250)).unwrap();
+        params.set("sharded_m", Value::Int(8)).unwrap();
+        params.set("reps", Value::Int(1)).unwrap();
+        params.set("max_points", Value::Int(1)).unwrap();
+        let mut ctx = ExperimentCtx::cell(params);
+        let report = Fig2Experiment.run(&mut ctx).unwrap();
+        assert!(report.get_f64("eq1_cost").unwrap() > 0.0);
+        assert!(report.get_f64("max_gap").unwrap() >= 0.0);
+        assert_eq!(report.tables[0].name, "fig2_sharded");
     }
 
     #[test]

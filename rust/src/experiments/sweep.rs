@@ -607,11 +607,11 @@ fn run_cell_at(grid: &SweepGrid, idx: usize) -> anyhow::Result<CellOutcome> {
         grid.experiment
     );
     anyhow::ensure!(
-        report.get_f64("requests").is_some(),
-        "sweep cell {label}: experiment '{}' reported no serving metrics ('requests' missing), \
-         so every cell field would read 0 — select a serving-shaped mode on the row axis \
-         (e.g. fig7 --rows setup=flat,location,hflop or an interference preset; setup=all, \
-         fig6 and cl reports are not sweep-compatible)",
+        report.get_f64("requests").is_some() || report.get_f64("eq1_cost").is_some(),
+        "sweep cell {label}: experiment '{}' reported no serving metrics ('requests' and \
+         'eq1_cost' both missing), so every cell field would read 0 — select a serving-shaped \
+         mode on the row axis (e.g. fig7 --rows setup=flat,location,hflop or an interference \
+         preset; setup=all, fig6 and cl reports are not sweep-compatible)",
         grid.experiment
     );
     Ok(CellOutcome::from_report(
@@ -794,6 +794,32 @@ mod tests {
     #[test]
     fn custom_grid_rejects_unknown_experiment_and_unsweepable_schema() {
         assert!(SweepGrid::custom("fig11", vec![], vec![], vec![], vec![], 1, 0).is_err());
+    }
+
+    #[test]
+    fn custom_grid_over_fig2_sharded_reports_cost_cells() {
+        // Solver-shaped experiments carry no serving counters; the cost
+        // key alone must satisfy the compaction guard.
+        let g = SweepGrid::custom(
+            "fig2",
+            vec![
+                ov("solver", Value::Str("sharded".into())),
+                ov("sharded_n", Value::Int(250)),
+                ov("sharded_m", Value::Int(8)),
+                ov("reps", Value::Int(1)),
+                ov("max_points", Value::Int(1)),
+            ],
+            vec![AxisPoint::hashed("fig2", "k4", vec![ov("cand_k", Value::Int(4))])],
+            vec![AxisPoint::neutral("base")],
+            vec![AxisPoint::neutral("base")],
+            1,
+            7,
+        )
+        .unwrap();
+        let m = run_grid(&g, 1).unwrap();
+        assert_eq!(m.cells.len(), 1);
+        assert!(m.cells[0].eq1_cost > 0.0, "sharded cell must report Eq.1 cost");
+        assert_eq!(m.cells[0].requests, 0);
     }
 
     #[test]

@@ -392,6 +392,7 @@ mod tests {
             r: vec![100.0, 100.0].into(),
             l: 2.0,
             t_min: n,
+            meta: Default::default(),
         };
         let window = ContinualWindow::new(500, 100, 0, 800);
         let mut cfg = base_config();

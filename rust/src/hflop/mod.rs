@@ -16,9 +16,40 @@
 //! unsplittable flows (NP-hard); see [`crate::solver`] for the exact
 //! branch & bound and the heuristics.
 
+pub mod sparse;
+
+pub use sparse::SparseInstance;
+
 use crate::core::{Capacity, DenseMatrix, Workload};
 use crate::topology::Topology;
 use crate::util::rng::Rng;
+
+/// Build-time bookkeeping carried by an [`Instance`]: the validation
+/// flag set by [`InstanceBuilder::build`] (so `solve()` can skip the
+/// full O(n·m) re-scan on every call) and the lazily built sorted-λ
+/// prefix table behind [`Instance::capacity_feasible`]. Hand-written
+/// instance literals get `Default::default()` here, which keeps the
+/// hard validation error on the solve path for them.
+#[derive(Debug, Clone, Default)]
+pub struct InstanceMeta {
+    /// True iff `validate()` passed at build time. Mutating a built
+    /// instance afterwards is on the caller; `solve()` still
+    /// cross-checks under `debug_assertions`.
+    pub validated: bool,
+    /// Ascending prefix sums of sorted λ, built on the first
+    /// capacity-short feasibility query (λ is immutable by contract).
+    feas_prefix: std::sync::OnceLock<Vec<f64>>,
+}
+
+impl InstanceMeta {
+    /// Meta carrying a set `validated` flag, for instances assembled
+    /// field-by-field from an already-validated source (the sharded
+    /// solver's per-region sub-instances). The caller vouches for
+    /// validity; `solve()` still cross-checks under `debug_assertions`.
+    pub fn prevalidated() -> InstanceMeta {
+        InstanceMeta { validated: true, feas_prefix: std::sync::OnceLock::new() }
+    }
+}
 
 /// One HFLOP instance. Immutable once built; solvers borrow it.
 #[derive(Debug, Clone)]
@@ -35,6 +66,8 @@ pub struct Instance {
     pub l: f64,
     /// Minimum number of participating devices (constraint 6).
     pub t_min: usize,
+    /// Validation/caching state (see [`InstanceMeta`]).
+    pub meta: InstanceMeta,
 }
 
 impl Instance {
@@ -69,25 +102,44 @@ impl Instance {
     /// Quick necessary feasibility check: can `t_min` devices fit at all?
     /// (Sufficient only when every device can reach every edge, which holds
     /// for all our generators; the solvers detect residual infeasibility.)
+    ///
+    /// Allocation-free on the hot path: the common all-fits case is a
+    /// plain O(n) sum, and the capacity-short case binary-searches a
+    /// sorted-λ prefix table built once per instance (`OnceLock`) —
+    /// `solve()` used to clone and fully sort λ on every call.
     pub fn capacity_feasible(&self) -> bool {
         let total: f64 = self.r.iter().sum();
         if total.is_infinite() {
             return true;
         }
-        // Greedy: smallest lambdas packed into total capacity. NaN-safe
-        // total order (validate rejects NaN, but never trust a sort to it).
-        let mut lam = self.lambda.to_vec();
-        lam.sort_by(f64::total_cmp);
-        let mut used = 0.0;
-        let mut fit = 0usize;
-        for v in lam {
-            if used + v <= total + 1e-9 {
-                used += v;
-                fit += 1;
-            } else {
-                break;
-            }
+        let lambda_total: f64 = self.lambda.iter().sum();
+        if lambda_total <= total + 1e-9 {
+            // Every device fits; the greedy pack would count all n.
+            return self.lambda.len() >= self.t_min;
         }
+        // Capacity-short: pack smallest lambdas into total capacity.
+        // NaN-safe total order (validate rejects NaN, but never trust a
+        // sort to it). Prefix sums accumulate in the same ascending
+        // order as the old per-solve greedy loop, so the verdict is
+        // bit-for-bit unchanged.
+        let prefix = self.meta.feas_prefix.get_or_init(|| {
+            let mut lam = self.lambda.to_vec();
+            lam.sort_by(f64::total_cmp);
+            let mut acc = 0.0;
+            for v in lam.iter_mut() {
+                acc += *v;
+                *v = acc;
+            }
+            lam
+        });
+        debug_assert_eq!(
+            prefix.len(),
+            self.lambda.len(),
+            "lambda mutated after the feasibility prefix table was built"
+        );
+        // λ ≥ 0 ⇒ prefix is nondecreasing, so the greedy stop point is a
+        // partition point.
+        let fit = prefix.partition_point(|&p| p <= total + 1e-9);
         fit >= self.t_min
     }
 }
@@ -108,6 +160,7 @@ impl InstanceBuilder {
                 r: topo.edges.iter().map(|e| e.capacity).collect(),
                 l,
                 t_min,
+                meta: InstanceMeta::default(),
             },
         }
     }
@@ -160,6 +213,7 @@ impl InstanceBuilder {
                 r,
                 l: 2.0, // paper: one global round every two local rounds
                 t_min: n,
+                meta: InstanceMeta::default(),
             },
         }
     }
@@ -175,7 +229,7 @@ impl InstanceBuilder {
             .map(|_| rng.uniform(0.8, 1.6) * 1.5 * total / m as f64)
             .collect();
         InstanceBuilder {
-            inst: Instance { c_d, c_e, lambda, r, l: 2.0, t_min: n },
+            inst: Instance { c_d, c_e, lambda, r, l: 2.0, t_min: n, meta: InstanceMeta::default() },
         }
     }
 
@@ -198,9 +252,14 @@ impl InstanceBuilder {
         self
     }
 
+    /// Validate once, here — `solve()` trusts the flag and only
+    /// re-validates under `debug_assertions` (hand-built literals keep
+    /// the hard error on the solve path; their flag stays false).
     pub fn build(self) -> Instance {
-        self.inst.validate().expect("invalid instance");
-        self.inst
+        let mut inst = self.inst;
+        inst.validate().expect("invalid instance");
+        inst.meta.validated = true;
+        inst
     }
 }
 
@@ -260,6 +319,65 @@ mod tests {
             *r = 0.1;
         }
         assert!(!inst.capacity_feasible());
+    }
+
+    #[test]
+    fn capacity_verdict_unchanged_by_prefix_cache() {
+        // Regression for the cached-prefix rewrite: the verdict on the
+        // existing feasible/overload fixtures must match the old
+        // clone-and-sort greedy, including repeated queries (the cache
+        // is built at most once) and post-build capacity mutation.
+        let feasible = InstanceBuilder::unit_cost(100, 10, 2).build();
+        assert!(feasible.capacity_feasible());
+        assert!(feasible.capacity_feasible(), "second query hits the fast path");
+
+        let mut overload = InstanceBuilder::unit_cost(10, 2, 6).build();
+        for r in overload.r.iter_mut() {
+            *r = 0.1;
+        }
+        assert!(!overload.capacity_feasible());
+        assert!(!overload.capacity_feasible(), "second query hits the prefix cache");
+
+        // Reference greedy (the pre-cache implementation), cross-checked
+        // over a spread of partially-overloaded instances.
+        for seed in 0..20u64 {
+            let mut inst = InstanceBuilder::unit_cost(40, 4, seed).t_min(30).build();
+            let squeeze = 0.05 + 0.05 * seed as f64;
+            for r in inst.r.iter_mut() {
+                *r *= squeeze;
+            }
+            let total: f64 = inst.r.iter().sum();
+            let mut lam = inst.lambda.to_vec();
+            lam.sort_by(f64::total_cmp);
+            let mut used = 0.0;
+            let mut fit = 0usize;
+            for v in lam {
+                if used + v <= total + 1e-9 {
+                    used += v;
+                    fit += 1;
+                } else {
+                    break;
+                }
+            }
+            assert_eq!(inst.capacity_feasible(), fit >= inst.t_min, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn build_marks_validated_literals_do_not() {
+        let built = InstanceBuilder::unit_cost(5, 2, 1).build();
+        assert!(built.meta.validated);
+        let literal = Instance {
+            c_d: vec![vec![0.0, 1.0]].into(),
+            c_e: vec![1.0, 1.0],
+            lambda: vec![1.0].into(),
+            r: vec![2.0, 2.0].into(),
+            l: 1.0,
+            t_min: 1,
+            meta: InstanceMeta::default(),
+        };
+        assert!(!literal.meta.validated);
+        literal.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! Candidate-sparse HFLOP instances for million-device solves.
+//!
+//! A dense [`Instance`](super::Instance) materializes the full `n×m`
+//! cost matrix — 4 GB of `f64` at n=1M, m=512 — when almost all of it is
+//! irrelevant: a device is only ever competitively served by its few
+//! nearest edge hosts. [`SparseInstance`] keeps device and edge
+//! *positions* plus a top-k candidate list per device, and computes any
+//! pair cost on demand from an implicit geographic cost function, so
+//! memory is O(n·k + m) instead of O(n·m). The sharded solver
+//! (`solver::sharded`) runs entirely on this representation; small
+//! instances can still be materialized with [`SparseInstance::to_dense`]
+//! for the exact/heuristic dense paths and for feasibility checks in
+//! tests.
+//!
+//! The cost function matches the geo topology builder's convention:
+//! distance in km (equirectangular projection about the edge-set mean
+//! latitude — exact enough at metro scale and ~20× cheaper than a
+//! haversine), zero within `free_radius_km`.
+
+use crate::core::{Capacity, DenseMatrix, Workload};
+use crate::hflop::{Instance, InstanceMeta};
+use crate::topology::geo::GeoPoint;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// km per degree of latitude (2πR/360, R = 6371 km) — keeps the implicit
+/// cost function consistent with `haversine_km` at small separations.
+pub const KM_PER_DEG: f64 = 6371.0 * std::f64::consts::PI / 180.0;
+
+/// Zero-cost radius, same convention as the geo topology builder.
+pub const FREE_RADIUS_KM: f64 = 3.0;
+
+/// Refusal threshold for [`SparseInstance::to_dense`]: materializing
+/// more x-variables than this is almost certainly a bug (the 1M×512
+/// target would allocate 4 GB).
+pub const DENSE_MATERIALIZE_MAX: usize = 64_000_000;
+
+/// Equirectangular projection fixed at a reference latitude; converts
+/// lat/lon degrees to km so pair distances are two subs, two muls and a
+/// sqrt.
+#[derive(Debug, Clone, Copy)]
+pub struct Proj {
+    cos_lat: f64,
+}
+
+impl Proj {
+    /// Reference the mean edge latitude (deterministic: summed in edge
+    /// order).
+    pub fn for_edges(edges: &[GeoPoint]) -> Proj {
+        assert!(!edges.is_empty(), "projection over empty edge set");
+        let mean_lat = edges.iter().map(|p| p.lat).sum::<f64>() / edges.len() as f64;
+        Proj { cos_lat: mean_lat.to_radians().cos() }
+    }
+
+    /// Project to (x, y) km.
+    pub fn xy(&self, p: GeoPoint) -> (f64, f64) {
+        (p.lon * self.cos_lat * KM_PER_DEG, p.lat * KM_PER_DEG)
+    }
+
+    /// Distance in km between two points.
+    pub fn dist_km(&self, a: GeoPoint, b: GeoPoint) -> f64 {
+        let dx = (a.lon - b.lon) * self.cos_lat * KM_PER_DEG;
+        let dy = (a.lat - b.lat) * KM_PER_DEG;
+        (dx * dx + dy * dy).sqrt()
+    }
+}
+
+/// Candidate ordering: distance first, edge id as the tiebreak, so the
+/// per-device top-k is a unique, total-order-determined set.
+fn by_dist_then_id(a: &(f64, u32), b: &(f64, u32)) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+}
+
+/// A candidate-sparse HFLOP instance: Eq. 1–7 over an implicit geo cost
+/// function, with per-device top-k candidate edge lists instead of a
+/// dense `c_d`.
+#[derive(Debug, Clone)]
+pub struct SparseInstance {
+    pub device_pos: Vec<GeoPoint>,
+    pub edge_pos: Vec<GeoPoint>,
+    /// Edge-to-cloud communication cost, `m`.
+    pub c_e: Vec<f64>,
+    /// Per-device inference request rate λ_i, `n`.
+    pub lambda: Workload,
+    /// Per-edge inference processing capacity r_j, `m`.
+    pub r: Capacity,
+    /// Local aggregation rounds per global round (the `l` in Eq. 1).
+    pub l: f64,
+    /// Minimum number of participating devices (constraint 6).
+    pub t_min: usize,
+    /// Zero-cost radius of the implicit cost function, km.
+    pub free_radius_km: f64,
+    /// Candidate edges per device (clamped to m at build).
+    pub cand_k: usize,
+    /// Flattened candidate lists, `n·cand_k`, cost-ascending per device
+    /// (ties broken by edge id, so the layout is a pure function of the
+    /// geometry).
+    pub cand_edges: Vec<u32>,
+    /// Costs aligned with `cand_edges`.
+    pub cand_costs: Vec<f64>,
+}
+
+impl SparseInstance {
+    pub fn n(&self) -> usize {
+        self.device_pos.len()
+    }
+
+    pub fn m(&self) -> usize {
+        self.edge_pos.len()
+    }
+
+    /// The projection the candidate lists were built under. O(m); hoist
+    /// out of hot loops.
+    pub fn proj(&self) -> Proj {
+        Proj::for_edges(&self.edge_pos)
+    }
+
+    /// Implicit `c_d[i][j]`, defined for *every* pair — the candidate
+    /// list only bounds what is materialized, not what is reachable.
+    pub fn pair_cost(&self, pr: &Proj, i: usize, j: usize) -> f64 {
+        let d = pr.dist_km(self.device_pos[i], self.edge_pos[j]);
+        if d <= self.free_radius_km { 0.0 } else { d }
+    }
+
+    /// Device `i`'s candidate (edge, cost) pairs, cost-ascending.
+    pub fn candidates(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = i * self.cand_k;
+        self.cand_edges[lo..lo + self.cand_k]
+            .iter()
+            .zip(&self.cand_costs[lo..lo + self.cand_k])
+            .map(|(&j, &c)| (j as usize, c))
+    }
+
+    /// Bytes held by the candidate structure (the part that replaces the
+    /// dense matrix).
+    pub fn candidate_bytes(&self) -> usize {
+        self.cand_edges.len() * std::mem::size_of::<u32>()
+            + self.cand_costs.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Bytes a dense `c_d` for the same shape would take.
+    pub fn dense_equiv_bytes(&self) -> usize {
+        self.n() * self.m() * std::mem::size_of::<f64>()
+    }
+
+    /// Shape/value sanity (O(n + m); no n·m scan exists to run).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let (n, m) = (self.n(), self.m());
+        anyhow::ensure!(n > 0 && m > 0, "empty instance");
+        anyhow::ensure!(self.t_min <= n, "t_min {} > n {}", self.t_min, n);
+        anyhow::ensure!(self.l.is_finite() && self.l > 0.0, "l must be positive and finite");
+        anyhow::ensure!(self.lambda.len() == n, "lambda len mismatch");
+        anyhow::ensure!(self.r.len() == m, "r len mismatch");
+        anyhow::ensure!(self.c_e.len() == m, "c_e len mismatch");
+        anyhow::ensure!(self.cand_k >= 1 && self.cand_k <= m, "cand_k out of range");
+        anyhow::ensure!(self.cand_edges.len() == n * self.cand_k, "cand_edges len mismatch");
+        anyhow::ensure!(self.cand_costs.len() == n * self.cand_k, "cand_costs len mismatch");
+        anyhow::ensure!(self.c_e.iter().all(|&c| c >= 0.0 && c.is_finite()), "bad c_e");
+        anyhow::ensure!(self.lambda.iter().all(|&v| v >= 0.0 && v.is_finite()), "bad lambda");
+        anyhow::ensure!(self.r.iter().all(|&v| !v.is_nan() && v >= 0.0), "bad r");
+        anyhow::ensure!(self.cand_edges.iter().all(|&j| (j as usize) < m), "bad candidate edge");
+        Ok(())
+    }
+
+    /// Build the candidate lists from positions. Deterministic for any
+    /// worker count: each chunk of devices is a fixed index range, and
+    /// the per-device top-k under the (cost, edge id) total order is
+    /// unique.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        device_pos: Vec<GeoPoint>,
+        edge_pos: Vec<GeoPoint>,
+        lambda: Workload,
+        r: Capacity,
+        c_e: Vec<f64>,
+        l: f64,
+        t_min: usize,
+        cand_k: usize,
+        workers: usize,
+    ) -> anyhow::Result<SparseInstance> {
+        let (n, m) = (device_pos.len(), edge_pos.len());
+        anyhow::ensure!(n > 0 && m > 0, "empty instance");
+        let cand_k = cand_k.clamp(1, m);
+        let pr = Proj::for_edges(&edge_pos);
+        let exy: Vec<(f64, f64)> = edge_pos.iter().map(|&p| pr.xy(p)).collect();
+        let free_radius_km = FREE_RADIUS_KM;
+
+        let workers = if workers == 0 {
+            pool::default_workers()
+        } else {
+            workers
+        };
+        let pairs: Vec<(u32, f64)> = pool::scoped_chunk_map(workers, n, 4096, |range| {
+            let mut out = Vec::with_capacity(range.len() * cand_k);
+            let mut scratch: Vec<(f64, u32)> = Vec::with_capacity(m);
+            for i in range {
+                let (px, py) = pr.xy(device_pos[i]);
+                scratch.clear();
+                for (j, &(ex, ey)) in exy.iter().enumerate() {
+                    let (dx, dy) = (px - ex, py - ey);
+                    scratch.push(((dx * dx + dy * dy).sqrt(), j as u32));
+                }
+                if cand_k < m {
+                    scratch.select_nth_unstable_by(cand_k - 1, by_dist_then_id);
+                    scratch.truncate(cand_k);
+                }
+                scratch.sort_by(by_dist_then_id);
+                for &(d, j) in &scratch {
+                    out.push((j, if d <= free_radius_km { 0.0 } else { d }));
+                }
+            }
+            out
+        });
+        let mut cand_edges = Vec::with_capacity(pairs.len());
+        let mut cand_costs = Vec::with_capacity(pairs.len());
+        for (j, c) in pairs {
+            cand_edges.push(j);
+            cand_costs.push(c);
+        }
+        let inst = SparseInstance {
+            device_pos,
+            edge_pos,
+            c_e,
+            lambda,
+            r,
+            l,
+            t_min,
+            free_radius_km,
+            cand_k,
+            cand_edges,
+            cand_costs,
+        };
+        inst.validate()?;
+        Ok(inst)
+    }
+
+    /// Synthetic metro-scale instance family for the scaling benchmarks
+    /// and the sharded-solver tests: `m` edge sites uniform over a bbox
+    /// whose area grows with m (constant edge density), each device
+    /// Gaussian-scattered (σ = 2 km) around a uniformly chosen anchor
+    /// edge. Capacities are sized per edge from the anchored demand with
+    /// 1.6× headroom, so instances stay regionally — not just globally —
+    /// feasible. Deterministic in `seed` alone (the candidate build uses
+    /// no RNG, so worker count cannot leak in).
+    pub fn clustered(n: usize, m: usize, seed: u64, cand_k: usize) -> SparseInstance {
+        assert!(n > 0 && m > 0);
+        let mut rng = Rng::new(seed);
+        // Scale the LA bbox so edge density stays ~8 edges per base box.
+        let scale = ((m as f64) / 8.0).sqrt().max(1.0);
+        let (lat0, lon0) = (34.0, -118.5);
+        let (dlat, dlon) = (0.2 * scale, 0.3 * scale);
+        let edge_pos: Vec<GeoPoint> = (0..m)
+            .map(|_| GeoPoint {
+                lat: lat0 + rng.f64() * dlat,
+                lon: lon0 + rng.f64() * dlon,
+            })
+            .collect();
+        let sigma_deg = 2.0 / KM_PER_DEG;
+        let mut device_pos = Vec::with_capacity(n);
+        let mut anchor_load = vec![0.0f64; m];
+        let mut lambda = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = rng.below(m);
+            let p = GeoPoint {
+                lat: edge_pos[a].lat + rng.normal() * sigma_deg,
+                lon: edge_pos[a].lon + rng.normal() * sigma_deg,
+            };
+            let lam = rng.uniform(0.5, 2.0);
+            anchor_load[a] += lam;
+            lambda.push(lam);
+            device_pos.push(p);
+        }
+        let r: Capacity = anchor_load.iter().map(|&load| 1.6 * load + 1.0).collect();
+        let c_e: Vec<f64> = (0..m).map(|_| rng.uniform(15.0, 35.0)).collect();
+        SparseInstance::build(device_pos, edge_pos, lambda.into(), r, c_e, 2.0, n, cand_k, 0)
+            .expect("clustered generator produces valid instances")
+    }
+
+    /// Materialize the dense equivalent (tests, and the small-instance
+    /// fast path in `solver::solve_sparse`). Panics above
+    /// [`DENSE_MATERIALIZE_MAX`] x-variables — that is the situation the
+    /// sparse representation exists to avoid.
+    pub fn to_dense(&self) -> Instance {
+        let (n, m) = (self.n(), self.m());
+        assert!(
+            n.saturating_mul(m) <= DENSE_MATERIALIZE_MAX,
+            "refusing to materialize a {n}x{m} dense instance; use Mode::Sharded"
+        );
+        let pr = self.proj();
+        let c_d = DenseMatrix::from_fn(n, m, |i, j| self.pair_cost(&pr, i, j));
+        let mut inst = Instance {
+            c_d,
+            c_e: self.c_e.clone(),
+            lambda: self.lambda.clone(),
+            r: self.r.clone(),
+            l: self.l,
+            t_min: self.t_min,
+            meta: InstanceMeta::default(),
+        };
+        inst.validate().expect("sparse instance materialized invalid");
+        inst.meta.validated = true;
+        inst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::haversine_km;
+
+    #[test]
+    fn equirect_tracks_haversine_at_metro_scale() {
+        let a = GeoPoint { lat: 34.02, lon: -118.45 };
+        let b = GeoPoint { lat: 34.17, lon: -118.23 };
+        let pr = Proj::for_edges(&[a, b]);
+        let d_eq = pr.dist_km(a, b);
+        let d_hv = haversine_km(a, b);
+        assert!((d_eq - d_hv).abs() < 0.05 * d_hv, "{d_eq} vs {d_hv}");
+    }
+
+    #[test]
+    fn clustered_builds_valid_and_deterministic() {
+        let a = SparseInstance::clustered(200, 8, 42, 4);
+        let b = SparseInstance::clustered(200, 8, 42, 4);
+        a.validate().unwrap();
+        assert_eq!(a.cand_edges, b.cand_edges);
+        assert_eq!(
+            a.cand_costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+            b.cand_costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a.t_min, 200);
+        assert_eq!(a.cand_k, 4);
+    }
+
+    #[test]
+    fn candidates_are_cost_ascending_and_nearest() {
+        let inst = SparseInstance::clustered(100, 10, 7, 5);
+        let pr = inst.proj();
+        for i in 0..inst.n() {
+            let cand: Vec<(usize, f64)> = inst.candidates(i).collect();
+            assert_eq!(cand.len(), 5);
+            for w in cand.windows(2) {
+                assert!(w[0].1 <= w[1].1 + 1e-12);
+            }
+            // The worst candidate beats (or ties) every non-candidate.
+            let worst = cand.last().unwrap().1;
+            let in_list: Vec<usize> = cand.iter().map(|&(j, _)| j).collect();
+            for j in 0..inst.m() {
+                if !in_list.contains(&j) {
+                    assert!(inst.pair_cost(&pr, i, j) >= worst - 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_costs_match_pair_cost() {
+        let inst = SparseInstance::clustered(60, 6, 3, 3);
+        let pr = inst.proj();
+        for i in 0..inst.n() {
+            for (j, c) in inst.candidates(i) {
+                assert!((c - inst.pair_cost(&pr, i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_build_identical_across_worker_counts() {
+        let inst = SparseInstance::clustered(150, 12, 5, 6);
+        let one = SparseInstance::build(
+            inst.device_pos.clone(),
+            inst.edge_pos.clone(),
+            inst.lambda.clone(),
+            inst.r.clone(),
+            inst.c_e.clone(),
+            inst.l,
+            inst.t_min,
+            inst.cand_k,
+            1,
+        )
+        .unwrap();
+        let eight = SparseInstance::build(
+            inst.device_pos.clone(),
+            inst.edge_pos.clone(),
+            inst.lambda.clone(),
+            inst.r.clone(),
+            inst.c_e.clone(),
+            inst.l,
+            inst.t_min,
+            inst.cand_k,
+            8,
+        )
+        .unwrap();
+        assert_eq!(one.cand_edges, eight.cand_edges);
+        assert_eq!(
+            one.cand_costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+            eight.cand_costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn to_dense_matches_implicit_costs_and_validates() {
+        let inst = SparseInstance::clustered(50, 5, 11, 3);
+        let dense = inst.to_dense();
+        assert!(dense.meta.validated);
+        let pr = inst.proj();
+        for i in 0..inst.n() {
+            for j in 0..inst.m() {
+                assert_eq!(dense.c_d[i][j].to_bits(), inst.pair_cost(&pr, i, j).to_bits());
+            }
+        }
+        assert_eq!(dense.t_min, inst.t_min);
+    }
+
+    #[test]
+    fn memory_is_sublinear_in_nm() {
+        let inst = SparseInstance::clustered(400, 32, 1, 8);
+        assert!(inst.candidate_bytes() < inst.dense_equiv_bytes() / 2);
+    }
+}

@@ -148,6 +148,7 @@ impl LearningController {
             r: edges.iter().map(|e| e.capacity).collect(),
             l: self.config.l,
             t_min: t_min.min(devices.len()),
+            meta: Default::default(),
         };
         Ok((inst, device_ids, edge_ids))
     }

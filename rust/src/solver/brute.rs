@@ -123,6 +123,7 @@ mod tests {
             r: vec![10.0, 10.0].into(),
             l: 2.0,
             t_min: 2,
+            meta: Default::default(),
         };
         let (sol, cost) = brute_force(&inst).unwrap();
         assert!((cost - 2.0).abs() < 1e-9);
@@ -140,6 +141,7 @@ mod tests {
             r: vec![10.0, 10.0].into(),
             l: 2.0,
             t_min: 2,
+            meta: Default::default(),
         };
         let (sol, cost) = brute_force(&inst).unwrap();
         assert!((cost - 12.0).abs() < 1e-9);
@@ -157,6 +159,7 @@ mod tests {
             r: vec![1.0, 10.0].into(),
             l: 1.0,
             t_min: 2,
+            meta: Default::default(),
         };
         let (sol, cost) = brute_force(&inst).unwrap();
         sol.check_feasible(&inst).unwrap();
@@ -173,6 +176,7 @@ mod tests {
             r: vec![10.0, 10.0].into(),
             l: 1.0,
             t_min: 1,
+            meta: Default::default(),
         };
         let (sol, cost) = brute_force(&inst).unwrap();
         assert_eq!(sol.assign[1], None);
@@ -188,6 +192,7 @@ mod tests {
             r: vec![1.0].into(),
             l: 1.0,
             t_min: 1,
+            meta: Default::default(),
         };
         assert!(brute_force(&inst).is_none());
     }

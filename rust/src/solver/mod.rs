@@ -3,9 +3,12 @@
 //! heuristics for large instances (§IV-C), an exhaustive oracle for tests,
 //! and the in-tree dense simplex they all stand on.
 //!
-//! Entry point: [`solve`] with [`SolveOptions`] — `exact()`, `heuristic()`
-//! or `auto()` (exact while the instance is small enough, heuristic
-//! beyond).
+//! Entry points: [`solve`] on a dense [`Instance`] and [`solve_sparse`]
+//! on a candidate-sparse [`SparseInstance`], both driven by
+//! [`SolveOptions`] — `exact()`, `heuristic()`, `sharded()` or `auto()`
+//! (exact while the instance is small enough, heuristic beyond, and —
+//! for sparse instances — region-parallel sharded past
+//! `auto_sharded_above` x-variables).
 
 pub mod bb;
 pub mod brute;
@@ -13,15 +16,17 @@ pub mod greedy;
 pub mod local_search;
 pub mod lp;
 pub mod milp;
+pub mod sharded;
 pub mod solution;
 pub mod trust;
 
 pub use bb::{branch_and_bound, BbOptions, BbOutcome};
 pub use local_search::{LocalSearchOptions, LsMode};
+pub use sharded::{aggregated_lp_bound, solve_sharded, ShardOptions, ShardStats, ShardedOutcome};
 pub use solution::{complete_assignment, refine_assignment, Assignment, IncrementalEvaluator};
 pub use trust::{solve_with_trust, TrustMatrix};
 
-use crate::hflop::Instance;
+use crate::hflop::{Instance, SparseInstance};
 
 /// Which algorithm (and budget) to use.
 #[derive(Debug, Clone)]
@@ -31,12 +36,20 @@ pub struct SolveOptions {
     pub ls: local_search::LocalSearchOptions,
     /// `auto` switches to the heuristic above this many x-variables.
     pub auto_exact_below: usize,
+    /// `auto` on a sparse instance switches to the sharded path above
+    /// this many x-variables (n·m); below it the dense equivalent is
+    /// materialized and solved with the regular stack.
+    pub auto_sharded_above: usize,
+    /// Knobs for the region-parallel sharded path.
+    pub shard: ShardOptions,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     Exact,
     Heuristic,
+    /// Region-parallel sharded pipeline; sparse instances only.
+    Sharded,
     Auto,
 }
 
@@ -51,11 +64,19 @@ impl SolveOptions {
             // local-search heuristic (within a few % of optimal on the
             // unit-cost family) is the right default.
             auto_exact_below: 320,
+            // Past ~256k x-variables the dense row materialization alone
+            // dominates; the sharded path keeps memory at O(n·k + m).
+            auto_sharded_above: 262_144,
+            shard: ShardOptions::default(),
         }
     }
 
     pub fn heuristic() -> Self {
         SolveOptions { mode: Mode::Heuristic, ..Self::exact() }
+    }
+
+    pub fn sharded() -> Self {
+        SolveOptions { mode: Mode::Sharded, ..Self::exact() }
     }
 
     pub fn auto() -> Self {
@@ -84,8 +105,17 @@ pub enum SolveError {
 }
 
 /// Solve an HFLOP instance.
+///
+/// Instances produced by `InstanceBuilder::build` were validated there
+/// (`meta.validated`), so the entry check is a debug assertion only;
+/// hand-constructed or hand-mutated instances still get the full hard
+/// validation.
 pub fn solve(inst: &Instance, opts: &SolveOptions) -> Result<Solution, SolveError> {
-    inst.validate().map_err(|e| SolveError::Invalid(e.to_string()))?;
+    if inst.meta.validated {
+        debug_assert!(inst.validate().is_ok(), "validated instance failed re-validation");
+    } else {
+        inst.validate().map_err(|e| SolveError::Invalid(e.to_string()))?;
+    }
     if !inst.capacity_feasible() {
         return Err(SolveError::Infeasible(
             "aggregate capacity below t_min demand".into(),
@@ -95,6 +125,11 @@ pub fn solve(inst: &Instance, opts: &SolveOptions) -> Result<Solution, SolveErro
     let use_exact = match opts.mode {
         Mode::Exact => true,
         Mode::Heuristic => false,
+        Mode::Sharded => {
+            return Err(SolveError::Invalid(
+                "Mode::Sharded needs a SparseInstance; call solve_sparse".into(),
+            ))
+        }
         Mode::Auto => inst.n() * inst.m() <= opts.auto_exact_below,
     };
 
@@ -125,9 +160,47 @@ pub fn solve(inst: &Instance, opts: &SolveOptions) -> Result<Solution, SolveErro
     }
 }
 
+/// Result of [`solve_sparse`]: the solution, plus shard diagnostics when
+/// the sharded path ran.
+#[derive(Debug, Clone)]
+pub struct SparseSolution {
+    pub solution: Solution,
+    pub sharded: Option<ShardStats>,
+}
+
+/// Solve a candidate-sparse instance. `Mode::Sharded` (or `Mode::Auto`
+/// past `auto_sharded_above` x-variables) runs the region-parallel
+/// pipeline without ever materializing the dense cost matrix; the other
+/// modes materialize the dense equivalent and use the regular stack.
+pub fn solve_sparse(
+    sp: &SparseInstance,
+    opts: &SolveOptions,
+) -> Result<SparseSolution, SolveError> {
+    let use_sharded = match opts.mode {
+        Mode::Sharded => true,
+        Mode::Auto => sp.n() * sp.m() > opts.auto_sharded_above,
+        Mode::Exact | Mode::Heuristic => false,
+    };
+    if use_sharded {
+        let out = solve_sharded(sp, opts)?;
+        return Ok(SparseSolution { solution: out.solution, sharded: Some(out.stats) });
+    }
+    if sp.n() * sp.m() > crate::hflop::sparse::DENSE_MATERIALIZE_MAX {
+        return Err(SolveError::Invalid(format!(
+            "refusing to materialize a {}x{} dense instance; use Mode::Sharded",
+            sp.n(),
+            sp.m()
+        )));
+    }
+    let dense = sp.to_dense();
+    let solution = solve(&dense, opts)?;
+    Ok(SparseSolution { solution, sharded: None })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::DenseMatrix;
     use crate::hflop::InstanceBuilder;
 
     #[test]
@@ -174,5 +247,58 @@ mod tests {
         let inst = InstanceBuilder::random(12, 3, 6).t_min(10).build();
         let s = solve(&inst, &SolveOptions::exact()).unwrap();
         assert!((s.cost - s.assignment.cost(&inst)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharded_mode_on_dense_instance_errors() {
+        let inst = InstanceBuilder::unit_cost(10, 3, 3).build();
+        assert!(matches!(
+            solve(&inst, &SolveOptions::sharded()),
+            Err(SolveError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn invalid_hand_built_instance_still_hard_errors() {
+        // Literal construction skips build-time validation, so the solve
+        // entry must catch the shape mismatch as a hard error.
+        let inst = Instance {
+            c_d: DenseMatrix::from_fn(2, 2, |_, _| 1.0),
+            c_e: vec![1.0, 1.0],
+            lambda: vec![1.0].into(), // wrong length: 1 != n = 2
+            r: vec![5.0, 5.0].into(),
+            l: 1.0,
+            t_min: 1,
+            meta: Default::default(),
+        };
+        assert!(matches!(
+            solve(&inst, &SolveOptions::exact()),
+            Err(SolveError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn auto_routes_sparse_by_size() {
+        let sp = SparseInstance::clustered(200, 6, 4, 3);
+        // 200 * 6 = 1200 x-variables: below the default sharded cutoff,
+        // so auto materializes the dense equivalent.
+        let small = solve_sparse(&sp, &SolveOptions::auto()).unwrap();
+        assert!(small.sharded.is_none());
+        // Force the cutoff down and the same instance routes sharded.
+        let mut opts = SolveOptions::auto();
+        opts.auto_sharded_above = 0;
+        let big = solve_sparse(&sp, &opts).unwrap();
+        assert!(big.sharded.is_some());
+        let dense = sp.to_dense();
+        big.solution.assignment.check_feasible(&dense).unwrap();
+    }
+
+    #[test]
+    fn explicit_sharded_mode_runs_sparse() {
+        let sp = SparseInstance::clustered(150, 5, 6, 3);
+        let out = solve_sparse(&sp, &SolveOptions::sharded()).unwrap();
+        let stats = out.sharded.expect("sharded stats present");
+        assert!(stats.regions >= 1);
+        out.solution.assignment.check_feasible(&sp.to_dense()).unwrap();
     }
 }

@@ -1,0 +1,618 @@
+//! Sharded, region-parallel HFLOP solves for candidate-sparse instances.
+//!
+//! One global solve over a million devices is intractable for the dense
+//! solver stack, but the *geography* of the problem decomposes it: a
+//! device is only competitively served by nearby edges. The sharded path
+//! exploits that in four deterministic stages:
+//!
+//! 1. **Partition** — weighted k-means (`topology::kmeans_weighted`,
+//!    weights = λ) over a stride-sample of device positions yields K
+//!    region centroids; every edge joins its nearest centroid and every
+//!    device joins the region of its nearest candidate edge. The global
+//!    `t_min` is split across regions by device count (largest-remainder
+//!    rounding).
+//! 2. **Regional solves** — each region builds a *dense* sub-instance
+//!    (small: Σ n_k·m_k ≈ n·m/K) and solves it with the existing
+//!    exact/heuristic stack, plus seeded random-restart starts. Regions
+//!    run on `util::pool` workers; each region's RNG stream derives from
+//!    `mix_seed(root_seed, [SALT_REGION, k])`, so the outcome is
+//!    bit-identical at any worker count.
+//! 3. **Rescue** — if regional capacity shortfalls left the global
+//!    participation constraint unmet, unassigned devices (cheapest λ
+//!    first) are placed on their best candidate edge anywhere — in
+//!    region or halo — opening edges as needed.
+//! 4. **Repair** — bounded sweeps re-associate devices whose *halo*
+//!    candidate (an open out-of-region edge with residual capacity)
+//!    strictly beats their current assignment. Moves never open or close
+//!    edges and respect capacity residuals, so feasibility is invariant.
+//!
+//! [`aggregated_lp_bound`] provides an O(n·k + m log m) lower bound on
+//! the optimum (no LP tableau, no dense matrix), used by `bench_solver`
+//! to report the heuristic gap at scale.
+
+use crate::core::DenseMatrix;
+use crate::hflop::sparse::{Proj, SparseInstance};
+use crate::hflop::{Instance, InstanceMeta};
+use crate::solver::{
+    complete_assignment, refine_assignment, solve, Assignment, Mode, SolveError, SolveOptions,
+    Solution,
+};
+use crate::topology::kmeans_weighted;
+use crate::util::pool;
+use crate::util::rng::{mix_seed, Rng};
+use crate::util::time_it;
+
+/// Seed-derivation salts: region partitioning and per-region solve
+/// streams must be unrelated even for equal indices.
+const SALT_KMEANS: u64 = 0x6b6d_6561_6e73; // "kmeans"
+const SALT_REGION: u64 = 0x7265_6769_6f6e; // "region"
+
+/// k-means runs on at most this many sampled devices (stride sampling —
+/// deterministic, and plenty for metro-scale centroid placement).
+const KMEANS_SAMPLE_MAX: usize = 4096;
+const KMEANS_ITERS: usize = 40;
+
+/// Sharding knobs, carried inside [`SolveOptions`].
+#[derive(Debug, Clone)]
+pub struct ShardOptions {
+    /// Region count K; 0 = auto (`m/8`, clamped to `[1, 256]`).
+    pub regions: usize,
+    /// Root seed; every per-region stream derives from it via
+    /// `mix_seed`, so one u64 reproduces the entire solve.
+    pub root_seed: u64,
+    /// Worker threads for the region fan-out; 0 = available parallelism.
+    /// Changes wall time only, never the result.
+    pub workers: usize,
+    /// Seeded random-restart starts per region, tried in addition to the
+    /// deterministic base solve (best of all wins; ties keep the
+    /// earliest).
+    pub restarts: usize,
+    /// Cross-region repair sweeps over halo candidates.
+    pub repair_sweeps: usize,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        ShardOptions { regions: 0, root_seed: 7, workers: 0, restarts: 1, repair_sweeps: 2 }
+    }
+}
+
+/// Diagnostics from a sharded solve.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Non-empty regions actually solved.
+    pub regions: usize,
+    /// Device count of the largest region (shard balance indicator).
+    pub largest_region_devices: usize,
+    /// Σ over regions of participation the region could not serve
+    /// locally (capacity-reduced t_min); made up by the rescue pass.
+    pub region_t_min_shortfall: usize,
+    /// Devices assigned by the global rescue pass.
+    pub rescued: usize,
+    /// Improving halo re-associations applied by the repair pass.
+    pub repair_moves: usize,
+}
+
+/// A sharded solve result: the solution plus shard diagnostics.
+#[derive(Debug, Clone)]
+pub struct ShardedOutcome {
+    pub solution: Solution,
+    pub stats: ShardStats,
+}
+
+/// Solve a candidate-sparse instance with the region-parallel pipeline.
+/// Bit-identical for a fixed `opts.shard.root_seed` at any worker count.
+pub fn solve_sharded(
+    sp: &SparseInstance,
+    opts: &SolveOptions,
+) -> Result<ShardedOutcome, SolveError> {
+    let (res, wall_s) = time_it(|| shard_inner(sp, opts));
+    let (assignment, cost, stats) = res?;
+    Ok(ShardedOutcome {
+        solution: Solution { assignment, cost, proven_optimal: false, nodes: 0, wall_s },
+        stats,
+    })
+}
+
+fn shard_inner(
+    sp: &SparseInstance,
+    opts: &SolveOptions,
+) -> Result<(Assignment, f64, ShardStats), SolveError> {
+    sp.validate().map_err(|e| SolveError::Invalid(e.to_string()))?;
+    if !sparse_capacity_feasible(sp) {
+        return Err(SolveError::Infeasible("aggregate capacity below t_min demand".into()));
+    }
+    let (n, m) = (sp.n(), sp.m());
+    let so = &opts.shard;
+    let pr = sp.proj();
+
+    // --- 1. regions: weighted k-means over a device sample ---------------
+    let k_target = if so.regions > 0 { so.regions } else { (m / 8).clamp(1, 256) }.min(m);
+    let stride = n.div_ceil(KMEANS_SAMPLE_MAX).max(1);
+    let sample_idx: Vec<usize> = (0..n).step_by(stride).collect();
+    let sample_pts: Vec<_> = sample_idx.iter().map(|&i| sp.device_pos[i]).collect();
+    let sample_w: Vec<f64> = sample_idx.iter().map(|&i| sp.lambda[i]).collect();
+    let mut km_rng = Rng::new(mix_seed(so.root_seed, &[SALT_KMEANS]));
+    let km = kmeans_weighted(&sample_pts, Some(&sample_w), k_target, KMEANS_ITERS, &mut km_rng);
+
+    // Edges to nearest centroid; drop centroids that attracted no edge
+    // (region ids are compacted in first-edge order — deterministic).
+    let raw_of_edge: Vec<usize> = sp
+        .edge_pos
+        .iter()
+        .map(|&e| {
+            (0..km.centroids.len())
+                .min_by(|&a, &b| {
+                    pr.dist_km(e, km.centroids[a]).total_cmp(&pr.dist_km(e, km.centroids[b]))
+                })
+                .expect("at least one centroid")
+        })
+        .collect();
+    let mut remap = vec![usize::MAX; km.centroids.len()];
+    let mut n_regions = 0usize;
+    for &c in &raw_of_edge {
+        if remap[c] == usize::MAX {
+            remap[c] = n_regions;
+            n_regions += 1;
+        }
+    }
+    let mut edges_of: Vec<Vec<usize>> = vec![Vec::new(); n_regions];
+    for (j, &c) in raw_of_edge.iter().enumerate() {
+        edges_of[remap[c]].push(j);
+    }
+    // A device belongs to the region of its nearest candidate edge, so it
+    // always has at least one in-region candidate.
+    let mut devs_of: Vec<Vec<usize>> = vec![Vec::new(); n_regions];
+    for i in 0..n {
+        let nearest = sp.cand_edges[i * sp.cand_k] as usize;
+        devs_of[remap[raw_of_edge[nearest]]].push(i);
+    }
+    let tmins = split_t_min(sp.t_min, &devs_of);
+
+    // --- 2. regional solves on the worker pool ---------------------------
+    let workers = if so.workers == 0 { pool::default_workers() } else { so.workers };
+    let results: Vec<RegionResult> = pool::scoped_map(workers, n_regions, |k| {
+        let seed = mix_seed(so.root_seed, &[SALT_REGION, k as u64]);
+        solve_region(sp, &pr, &devs_of[k], &edges_of[k], tmins[k], opts, seed)
+    });
+
+    // --- merge to global state -------------------------------------------
+    let mut assign: Vec<Option<usize>> = vec![None; n];
+    let mut open = vec![false; m];
+    let mut stats = ShardStats { regions: n_regions, ..Default::default() };
+    for (k, res) in results.iter().enumerate() {
+        stats.largest_region_devices = stats.largest_region_devices.max(devs_of[k].len());
+        stats.region_t_min_shortfall += res.shortfall;
+        for (lj, &o) in res.open.iter().enumerate() {
+            if o {
+                open[edges_of[k][lj]] = true;
+            }
+        }
+        for (li, &a) in res.assign.iter().enumerate() {
+            if let Some(lj) = a {
+                assign[devs_of[k][li]] = Some(edges_of[k][lj]);
+            }
+        }
+    }
+    let mut residual: Vec<f64> = sp.r.to_vec();
+    let mut served = 0usize;
+    for (i, &a) in assign.iter().enumerate() {
+        if let Some(j) = a {
+            residual[j] -= sp.lambda[i];
+            served += 1;
+        }
+    }
+
+    // --- 3. rescue: meet global t_min over any candidate edge ------------
+    if served < sp.t_min {
+        let mut unassigned: Vec<usize> = (0..n).filter(|&i| assign[i].is_none()).collect();
+        unassigned.sort_by(|&a, &b| sp.lambda[a].total_cmp(&sp.lambda[b]).then(a.cmp(&b)));
+        for i in unassigned {
+            if served >= sp.t_min {
+                break;
+            }
+            let lam = sp.lambda[i];
+            let mut best: Option<(f64, usize)> = None;
+            for (j, c) in sp.candidates(i) {
+                if residual[j] + 1e-9 < lam {
+                    continue;
+                }
+                let eff = sp.l * c + if open[j] { 0.0 } else { sp.c_e[j] };
+                let better = match best {
+                    None => true,
+                    Some((bc, bj)) => eff.total_cmp(&bc).then(j.cmp(&bj)).is_lt(),
+                };
+                if better {
+                    best = Some((eff, j));
+                }
+            }
+            if let Some((_, j)) = best {
+                open[j] = true;
+                assign[i] = Some(j);
+                residual[j] -= lam;
+                served += 1;
+                stats.rescued += 1;
+            }
+        }
+        if served < sp.t_min {
+            return Err(SolveError::Infeasible(format!(
+                "sharded solve served {served} devices < t_min {}",
+                sp.t_min
+            )));
+        }
+    }
+
+    // --- 4. repair: improving halo moves, feasibility-invariant ----------
+    for _ in 0..so.repair_sweeps {
+        let mut moved = false;
+        for i in 0..n {
+            let Some(cur) = assign[i] else { continue };
+            let lam = sp.lambda[i];
+            let cur_cost = sp.pair_cost(&pr, i, cur);
+            let mut best: Option<(f64, usize)> = None;
+            for (j, c) in sp.candidates(i) {
+                if j == cur || !open[j] || residual[j] + 1e-9 < lam || c >= cur_cost - 1e-12 {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((bc, bj)) => c.total_cmp(&bc).then(j.cmp(&bj)).is_lt(),
+                };
+                if better {
+                    best = Some((c, j));
+                }
+            }
+            if let Some((_, j)) = best {
+                residual[cur] += lam;
+                residual[j] -= lam;
+                assign[i] = Some(j);
+                stats.repair_moves += 1;
+                moved = true;
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+
+    // Close edges the repair pass emptied (constraint 3; pure cost win).
+    let mut used = vec![false; m];
+    for &a in &assign {
+        if let Some(j) = a {
+            used[j] = true;
+        }
+    }
+    for (o, &u) in open.iter_mut().zip(&used) {
+        if !u {
+            *o = false;
+        }
+    }
+
+    // --- final cost, summed in fixed index order (bit-stable) ------------
+    let mut local = 0.0;
+    for (i, &a) in assign.iter().enumerate() {
+        if let Some(j) = a {
+            local += sp.pair_cost(&pr, i, j);
+        }
+    }
+    let mut opening = 0.0;
+    for (j, &o) in open.iter().enumerate() {
+        if o {
+            opening += sp.c_e[j];
+        }
+    }
+    let cost = local * sp.l + opening;
+    Ok((Assignment { assign, open }, cost, stats))
+}
+
+struct RegionResult {
+    /// Local device index → local edge index.
+    assign: Vec<Option<usize>>,
+    open: Vec<bool>,
+    /// Participation this region was asked for but could not serve.
+    shortfall: usize,
+}
+
+/// Solve one region as a dense sub-instance: deterministic base solve,
+/// then seeded random-restart starts; best cost wins (ties keep the
+/// earliest candidate, so the outcome is a pure function of the inputs).
+fn solve_region(
+    sp: &SparseInstance,
+    pr: &Proj,
+    devs: &[usize],
+    edges: &[usize],
+    t_min_k: usize,
+    opts: &SolveOptions,
+    region_seed: u64,
+) -> RegionResult {
+    let (nk, mk) = (devs.len(), edges.len());
+    if nk == 0 || mk == 0 {
+        return RegionResult { assign: vec![None; nk], open: vec![false; mk], shortfall: t_min_k };
+    }
+    // Reduce the regional participation target to what regional capacity
+    // can hold; the global rescue pass makes up the difference over halo
+    // edges.
+    let total_r: f64 = edges.iter().map(|&j| sp.r[j]).sum();
+    let t_eff = if total_r.is_infinite() {
+        t_min_k
+    } else {
+        let mut lam: Vec<f64> = devs.iter().map(|&i| sp.lambda[i]).collect();
+        lam.sort_by(f64::total_cmp);
+        let mut acc = 0.0;
+        let mut fit = 0usize;
+        for v in lam {
+            if acc + v <= total_r + 1e-9 {
+                acc += v;
+                fit += 1;
+            } else {
+                break;
+            }
+        }
+        t_min_k.min(fit)
+    };
+    let sub = Instance {
+        c_d: DenseMatrix::from_fn(nk, mk, |a, b| sp.pair_cost(pr, devs[a], edges[b])),
+        c_e: edges.iter().map(|&j| sp.c_e[j]).collect(),
+        lambda: devs.iter().map(|&i| sp.lambda[i]).collect(),
+        r: edges.iter().map(|&j| sp.r[j]).collect(),
+        l: sp.l,
+        t_min: t_eff,
+        meta: InstanceMeta::prevalidated(),
+    };
+    let mut sub_opts = opts.clone();
+    sub_opts.mode = Mode::Auto;
+    let mut best: Option<(Assignment, f64)> = None;
+    if let Ok(sol) = solve(&sub, &sub_opts) {
+        best = Some((sol.assignment, sol.cost));
+    }
+    for t in 0..opts.shard.restarts {
+        let mut rng = Rng::new(mix_seed(region_seed, &[t as u64]));
+        let mut mask = vec![false; mk];
+        for o in mask.iter_mut() {
+            *o = rng.chance(0.5);
+        }
+        if !mask.iter().any(|&o| o) {
+            mask[rng.below(mk)] = true;
+        }
+        if let Some(asg) = complete_assignment(&sub, &mask) {
+            let asg = refine_assignment(&sub, &asg);
+            let cost = asg.cost(&sub);
+            let better = match &best {
+                None => true,
+                Some((_, bc)) => cost < bc - 1e-12,
+            };
+            if better {
+                best = Some((asg, cost));
+            }
+        }
+    }
+    match best {
+        Some((asg, _)) => {
+            let assigned = asg.assign.iter().filter(|a| a.is_some()).count();
+            RegionResult {
+                assign: asg.assign,
+                open: asg.open,
+                shortfall: t_min_k.saturating_sub(assigned),
+            }
+        }
+        None => RegionResult { assign: vec![None; nk], open: vec![false; mk], shortfall: t_min_k },
+    }
+}
+
+/// Split the global `t_min` across regions proportionally to device
+/// counts (largest-remainder rounding, capped at each region's size).
+/// Sums to exactly `t_min` whenever `t_min ≤ Σ region sizes`.
+fn split_t_min(t_min: usize, devs_of: &[Vec<usize>]) -> Vec<usize> {
+    let n_total: usize = devs_of.iter().map(|d| d.len()).sum();
+    if n_total == 0 || t_min == 0 {
+        return vec![0; devs_of.len()];
+    }
+    let mut base = Vec::with_capacity(devs_of.len());
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(devs_of.len());
+    let mut assigned = 0usize;
+    for (k, devs) in devs_of.iter().enumerate() {
+        let quota = t_min as f64 * devs.len() as f64 / n_total as f64;
+        let b = (quota.floor() as usize).min(devs.len());
+        base.push(b);
+        assigned += b;
+        fracs.push((quota - b as f64, k));
+    }
+    // Remainder by largest fractional part, region index as tiebreak;
+    // keep cycling while capacity remains (floors sum to ≤ t_min ≤ n).
+    fracs.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    let mut rem = t_min.saturating_sub(assigned);
+    while rem > 0 {
+        let mut progressed = false;
+        for &(_, k) in &fracs {
+            if rem == 0 {
+                break;
+            }
+            if base[k] < devs_of[k].len() {
+                base[k] += 1;
+                rem -= 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    base
+}
+
+/// Necessary capacity check, mirroring `Instance::capacity_feasible` on
+/// the sparse representation (greedy-pack smallest λ into Σr).
+fn sparse_capacity_feasible(sp: &SparseInstance) -> bool {
+    let total: f64 = sp.r.iter().sum();
+    if total.is_infinite() {
+        return true;
+    }
+    if sp.lambda.iter().sum::<f64>() <= total + 1e-9 {
+        return sp.lambda.len() >= sp.t_min;
+    }
+    let mut lam = sp.lambda.to_vec();
+    lam.sort_by(f64::total_cmp);
+    let mut acc = 0.0;
+    let mut fit = 0usize;
+    for v in lam {
+        if acc + v <= total + 1e-9 {
+            acc += v;
+            fit += 1;
+        } else {
+            break;
+        }
+    }
+    fit >= sp.t_min
+}
+
+/// Lower bound on the HFLOP optimum from the aggregated-LP decomposition,
+/// in O(n log n + m log m) with no dense matrix:
+///
+/// * assignment part — any feasible solution assigns ≥ t_min devices, and
+///   each assigned device pays at least its row-minimum cost (the first
+///   candidate, lists being cost-ascending), so `l · Σ` of the t_min
+///   smallest row minima is a valid floor;
+/// * opening part — summing capacity constraint (4) over edges gives
+///   `Σ r_j y_j ≥ Σ assigned λ ≥ Λ`, where Λ is the sum of the t_min
+///   smallest λ; the fractional knapsack `min Σ c_e_j y_j` under that
+///   aggregate constraint (greedy by c_e/r ratio) lower-bounds the edge
+///   opening cost. (Λ is relaxed by 1e-6 to stay below the solvers'
+///   per-edge capacity tolerance.)
+pub fn aggregated_lp_bound(sp: &SparseInstance) -> f64 {
+    let t = sp.t_min;
+    if t == 0 {
+        return 0.0;
+    }
+    let mut cmin: Vec<f64> = (0..sp.n()).map(|i| sp.cand_costs[i * sp.cand_k]).collect();
+    cmin.sort_by(f64::total_cmp);
+    let assign_part: f64 = sp.l * cmin[..t].iter().sum::<f64>();
+
+    let mut lam = sp.lambda.to_vec();
+    lam.sort_by(f64::total_cmp);
+    let needed = lam[..t].iter().sum::<f64>() - 1e-6;
+    let mut opening = 0.0;
+    if needed > 0.0 {
+        let mut order: Vec<usize> = (0..sp.m()).collect();
+        order.sort_by(|&a, &b| {
+            cost_per_capacity(sp.c_e[a], sp.r[a])
+                .total_cmp(&cost_per_capacity(sp.c_e[b], sp.r[b]))
+                .then(a.cmp(&b))
+        });
+        let mut remaining = needed;
+        for &j in &order {
+            if remaining <= 0.0 {
+                break;
+            }
+            let rj = sp.r[j];
+            if rj <= 0.0 {
+                continue;
+            }
+            if rj.is_infinite() {
+                // y_j → 0⁺ already satisfies the aggregate constraint;
+                // the LP infimum adds nothing here.
+                remaining = 0.0;
+                break;
+            }
+            let y = (remaining / rj).min(1.0);
+            opening += y * sp.c_e[j];
+            remaining -= y * rj;
+        }
+        // If capacity ran out the instance has no feasible solution
+        // either, so the partial sum is still a valid bound.
+    }
+    assign_part + opening
+}
+
+fn cost_per_capacity(c: f64, r: f64) -> f64 {
+    if r <= 0.0 {
+        f64::INFINITY
+    } else if r.is_infinite() {
+        0.0
+    } else {
+        c / r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sharded_opts(root_seed: u64, workers: usize) -> SolveOptions {
+        let mut opts = SolveOptions::sharded();
+        opts.shard.root_seed = root_seed;
+        opts.shard.workers = workers;
+        opts
+    }
+
+    #[test]
+    fn sharded_solution_is_feasible_on_dense_equivalent() {
+        let sp = SparseInstance::clustered(400, 8, 3, 4);
+        let out = solve_sharded(&sp, &sharded_opts(11, 2)).unwrap();
+        let dense = sp.to_dense();
+        out.solution.assignment.check_feasible(&dense).unwrap();
+        let dense_cost = out.solution.assignment.cost(&dense);
+        assert!((out.solution.cost - dense_cost).abs() < 1e-9);
+        assert!(out.stats.regions >= 1);
+    }
+
+    #[test]
+    fn sharded_identical_across_worker_counts() {
+        let sp = SparseInstance::clustered(500, 16, 9, 4);
+        let base = solve_sharded(&sp, &sharded_opts(5, 1)).unwrap();
+        for workers in [2, 8] {
+            let out = solve_sharded(&sp, &sharded_opts(5, workers)).unwrap();
+            assert_eq!(out.solution.assignment.assign, base.solution.assignment.assign);
+            assert_eq!(out.solution.assignment.open, base.solution.assignment.open);
+            assert_eq!(out.solution.cost.to_bits(), base.solution.cost.to_bits());
+        }
+    }
+
+    #[test]
+    fn bound_is_below_cost_and_exact_optimum() {
+        // Small enough for the exact solver via the dense equivalent.
+        let sp = SparseInstance::clustered(14, 3, 21, 2);
+        let bound = aggregated_lp_bound(&sp);
+        let dense = sp.to_dense();
+        let exact = solve(&dense, &SolveOptions::exact()).unwrap();
+        assert!(exact.proven_optimal);
+        assert!(bound <= exact.cost + 1e-9, "bound {bound} > optimum {}", exact.cost);
+        let sharded = solve_sharded(&sp, &sharded_opts(3, 1)).unwrap();
+        assert!(sharded.solution.cost + 1e-9 >= bound);
+        assert!(sharded.solution.cost + 1e-9 >= exact.cost);
+    }
+
+    #[test]
+    fn split_t_min_sums_and_respects_sizes() {
+        let devs_of: Vec<Vec<usize>> = vec![(0..5).collect(), (5..8).collect(), (8..20).collect()];
+        for t in 0..=20 {
+            let split = split_t_min(t, &devs_of);
+            assert_eq!(split.iter().sum::<usize>(), t, "t={t}");
+            for (k, s) in split.iter().enumerate() {
+                assert!(*s <= devs_of[k].len());
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_capacity_is_reported() {
+        let mut sp = SparseInstance::clustered(50, 4, 2, 2);
+        for r in sp.r.iter_mut() {
+            *r = 0.01;
+        }
+        assert!(matches!(
+            solve_sharded(&sp, &sharded_opts(1, 1)),
+            Err(SolveError::Infeasible(_))
+        ));
+    }
+
+    #[test]
+    fn uncapacitated_sparse_solves() {
+        let mut sp = SparseInstance::clustered(120, 6, 8, 3);
+        for r in sp.r.iter_mut() {
+            *r = f64::INFINITY;
+        }
+        let out = solve_sharded(&sp, &sharded_opts(2, 2)).unwrap();
+        let dense = sp.to_dense();
+        out.solution.assignment.check_feasible(&dense).unwrap();
+    }
+}

@@ -446,6 +446,7 @@ mod tests {
             r: vec![2.0, 2.0].into(),
             l: 2.0,
             t_min: 3,
+            meta: Default::default(),
         }
     }
 

@@ -20,10 +20,31 @@ pub struct KMeansResult {
 
 /// Run k-means++ / Lloyd. `k` is clamped to the number of points.
 pub fn kmeans(points: &[GeoPoint], k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
+    kmeans_weighted(points, None, k, max_iter, rng)
+}
+
+/// Weighted k-means++ / Lloyd: `weights[i]` scales point `i`'s pull in
+/// both the seeding distribution and the centroid update, so demand-heavy
+/// devices attract region centers (the sharded solver weights by λ).
+/// `weights: None` is the unit-weight case and is bit-identical to
+/// [`kmeans`] — multiplying by exactly 1.0 and summing exact integer
+/// counts changes no float.
+pub fn kmeans_weighted(
+    points: &[GeoPoint],
+    weights: Option<&[f64]>,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Rng,
+) -> KMeansResult {
     assert!(!points.is_empty(), "kmeans over empty points");
+    if let Some(ws) = weights {
+        assert_eq!(ws.len(), points.len(), "weights len mismatch");
+        assert!(ws.iter().all(|&w| w.is_finite() && w >= 0.0), "bad weight");
+    }
+    let w = |i: usize| weights.map_or(1.0, |ws| ws[i]);
     let k = k.clamp(1, points.len());
 
-    // --- k-means++ seeding -------------------------------------------------
+    // --- k-means++ seeding (weight-scaled d^2 sampling) --------------------
     let mut centroids: Vec<GeoPoint> = Vec::with_capacity(k);
     centroids.push(points[rng.below(points.len())]);
     let mut d2: Vec<f64> = points
@@ -31,15 +52,15 @@ pub fn kmeans(points: &[GeoPoint], k: usize, max_iter: usize, rng: &mut Rng) -> 
         .map(|&p| haversine_km(p, centroids[0]).powi(2))
         .collect();
     while centroids.len() < k {
-        let total: f64 = d2.iter().sum();
+        let total: f64 = d2.iter().enumerate().map(|(i, &d)| w(i) * d).sum();
         let next = if total <= 1e-12 {
             // All points coincide with existing centroids; pick any.
             points[rng.below(points.len())]
         } else {
             let mut target = rng.f64() * total;
             let mut idx = 0;
-            for (i, &w) in d2.iter().enumerate() {
-                target -= w;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= w(i) * d;
                 if target <= 0.0 {
                     idx = i;
                     break;
@@ -75,19 +96,21 @@ pub fn kmeans(points: &[GeoPoint], k: usize, max_iter: usize, rng: &mut Rng) -> 
         if !changed && it > 0 {
             break;
         }
-        // Update (mean in lat/lon space is fine at city scale).
-        let mut sums = vec![(0.0f64, 0.0f64, 0usize); centroids.len()];
+        // Update: weighted mean in lat/lon space (fine at city scale).
+        let mut sums = vec![(0.0f64, 0.0f64, 0.0f64); centroids.len()];
         for (i, &p) in points.iter().enumerate() {
+            let wi = w(i);
             let s = &mut sums[assignment[i]];
-            s.0 += p.lat;
-            s.1 += p.lon;
-            s.2 += 1;
+            s.0 += wi * p.lat;
+            s.1 += wi * p.lon;
+            s.2 += wi;
         }
         for (c, s) in centroids.iter_mut().zip(&sums) {
-            if s.2 > 0 {
-                *c = GeoPoint { lat: s.0 / s.2 as f64, lon: s.1 / s.2 as f64 };
+            if s.2 > 0.0 {
+                *c = GeoPoint { lat: s.0 / s.2, lon: s.1 / s.2 };
             } else {
-                // Re-seed an empty cluster at the farthest point.
+                // Re-seed an empty (or zero-weight) cluster at the
+                // farthest point.
                 let far = points
                     .iter()
                     .max_by(|&&a, &&b| {
@@ -192,6 +215,40 @@ mod tests {
                 assert!(d_assigned <= haversine_km(p, c) + 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn unit_weights_bit_identical_to_unweighted() {
+        let mut rng = Rng::new(21);
+        let pts: Vec<GeoPoint> = (0..80)
+            .map(|_| GeoPoint {
+                lat: rng.uniform(34.0, 34.2),
+                lon: rng.uniform(-118.5, -118.2),
+            })
+            .collect();
+        let ones = vec![1.0; pts.len()];
+        let a = kmeans(&pts, 5, 100, &mut Rng::new(9));
+        let b = kmeans_weighted(&pts, Some(&ones), 5, 100, &mut Rng::new(9));
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.iterations, b.iterations);
+        for (ca, cb) in a.centroids.iter().zip(&b.centroids) {
+            assert_eq!(ca.lat.to_bits(), cb.lat.to_bits());
+            assert_eq!(ca.lon.to_bits(), cb.lon.to_bits());
+        }
+        assert_eq!(a.inertia.to_bits(), b.inertia.to_bits());
+    }
+
+    #[test]
+    fn heavy_weight_pulls_centroid() {
+        // One cluster: the weighted mean must sit on the heavy point side.
+        let pts = vec![
+            GeoPoint { lat: 34.0, lon: -118.4 },
+            GeoPoint { lat: 34.2, lon: -118.2 },
+        ];
+        let ws = vec![9.0, 1.0];
+        let r = kmeans_weighted(&pts, Some(&ws), 1, 50, &mut Rng::new(5));
+        assert!((r.centroids[0].lat - 34.02).abs() < 1e-9, "{}", r.centroids[0].lat);
+        assert!((r.centroids[0].lon + 118.38).abs() < 1e-9);
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod geo;
 pub mod kmeans;
 
 pub use geo::{haversine_km, GeoPoint, LA_BBOX};
-pub use kmeans::{kmeans, KMeansResult};
+pub use kmeans::{kmeans, kmeans_weighted, KMeansResult};
 
 use crate::core::DenseMatrix;
 use crate::util::rng::Rng;

@@ -79,6 +79,31 @@ where
         .collect()
 }
 
+/// Map `f` over contiguous index chunks of `0..n_items` (the last chunk
+/// may be short) and concatenate the per-chunk outputs in index order.
+/// The element-granularity cousin of [`scoped_map`] for jobs that are too
+/// cheap to dispatch one at a time (e.g. per-device candidate
+/// construction); the same determinism contract applies — chunk
+/// boundaries are a pure function of `(n_items, chunk)`, so output is
+/// independent of worker count.
+pub fn scoped_chunk_map<T, F>(workers: usize, n_items: usize, chunk: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> Vec<T> + Sync,
+{
+    assert!(chunk > 0, "chunk must be positive");
+    let n_jobs = n_items.div_ceil(chunk);
+    let parts = scoped_map(workers, n_jobs, |job| {
+        let lo = job * chunk;
+        f(lo..(lo + chunk).min(n_items))
+    });
+    let mut out = Vec::with_capacity(n_items);
+    for part in parts {
+        out.extend(part);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +156,35 @@ mod tests {
     #[test]
     fn more_workers_than_jobs_is_fine() {
         assert_eq!(scoped_map(32, 3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn chunk_map_matches_element_map() {
+        let f = |i: usize| i * 3 + 1;
+        let expect: Vec<usize> = (0..103).map(f).collect();
+        for (workers, chunk) in [(1, 7), (4, 7), (8, 16), (3, 200)] {
+            let got = scoped_chunk_map(workers, 103, chunk, |range| {
+                range.map(f).collect::<Vec<_>>()
+            });
+            assert_eq!(got, expect, "workers={workers} chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn chunk_map_zero_items_is_empty() {
+        let out: Vec<usize> = scoped_chunk_map(4, 0, 8, |r| r.collect());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn chunk_map_ranges_partition_exactly_once() {
+        let seen = AtomicUsize::new(0);
+        let out = scoped_chunk_map(6, 50, 9, |range| {
+            seen.fetch_add(range.len(), Ordering::Relaxed);
+            range.collect::<Vec<_>>()
+        });
+        assert_eq!(out, (0..50).collect::<Vec<_>>());
+        assert_eq!(seen.load(Ordering::Relaxed), 50);
     }
 
     #[test]

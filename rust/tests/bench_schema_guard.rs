@@ -1,26 +1,32 @@
-//! Guard: the committed kernel-bench artifact stays parseable and
+//! Guard: the committed bench artifacts stay parseable and
 //! schema-versioned.
 //!
-//! `benches/bench_kernel.rs` overwrites `BENCH_kernel.json` on every run
-//! (CI uploads it as an artifact), so the file's shape is a contract:
+//! `benches/bench_kernel.rs` overwrites `BENCH_kernel.json` and
+//! `benches/bench_solver.rs` overwrites `BENCH_solver.json` on every run
+//! (CI uploads both as artifacts), so each file's shape is a contract:
 //! downstream tooling keys on `schema_version` to interpret the
-//! trajectory. This test pins that the checked-in baseline (or a
-//! freshly regenerated artifact — the bench writes to the same path)
-//! parses as JSON and carries the current schema version.
+//! trajectory. This test pins that the checked-in baselines (or freshly
+//! regenerated artifacts — the benches write to the same paths) parse as
+//! JSON and carry the current schema version.
 
 use hflop::metrics::export::SCHEMA_VERSION;
 use hflop::util::json::Json;
 
-const ARTIFACT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_kernel.json");
+const ARTIFACTS: &[&str] = &[
+    concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_kernel.json"),
+    concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_solver.json"),
+];
 
 #[test]
-fn bench_kernel_artifact_is_schema_versioned_json() {
-    let raw = std::fs::read_to_string(ARTIFACT)
-        .unwrap_or_else(|e| panic!("BENCH_kernel.json must be committed at {ARTIFACT}: {e}"));
-    let json = Json::parse(&raw).expect("BENCH_kernel.json parses as JSON");
-    let version = json
-        .get("schema_version")
-        .and_then(Json::as_f64)
-        .expect("BENCH_kernel.json carries a numeric schema_version");
-    assert_eq!(version as u32, SCHEMA_VERSION, "artifact schema version drifted");
+fn bench_artifacts_are_schema_versioned_json() {
+    for path in ARTIFACTS {
+        let raw = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("bench artifact must be committed at {path}: {e}"));
+        let json = Json::parse(&raw).unwrap_or_else(|e| panic!("{path} parses as JSON: {e}"));
+        let version = json
+            .get("schema_version")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("{path} carries a numeric schema_version"));
+        assert_eq!(version as u32, SCHEMA_VERSION, "{path}: artifact schema version drifted");
+    }
 }

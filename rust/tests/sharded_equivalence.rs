@@ -1,0 +1,73 @@
+//! Acceptance properties of the sharded region-parallel solver
+//! (solver::sharded):
+//!
+//! * worker-count independence — the same root seed yields a
+//!   byte-identical assignment, open set and cost at 1, 2 and 8 workers;
+//! * feasibility — across ≥20 seeds, the merged + rescued + repaired
+//!   solution passes the dense `check_feasible` (so the repair pass never
+//!   breaks capacity, linking or participation), and the sparse-side cost
+//!   matches the dense evaluation;
+//! * soundness of the gap reference — every solve lands at or above the
+//!   aggregated-LP lower bound;
+//! * the auto tier routes small sparse instances dense and large ones
+//!   sharded.
+
+use hflop::hflop::SparseInstance;
+use hflop::solver::{aggregated_lp_bound, solve_sparse, SolveOptions};
+
+fn opts_with(seed: u64, workers: usize) -> SolveOptions {
+    let mut o = SolveOptions::sharded();
+    o.shard.root_seed = seed;
+    o.shard.workers = workers;
+    o
+}
+
+#[test]
+fn worker_count_never_changes_the_solution() {
+    for seed in 0..20u64 {
+        let sp = SparseInstance::clustered(200, 8, 100 + seed, 4);
+        let base = solve_sparse(&sp, &opts_with(seed, 1)).unwrap().solution;
+        for workers in [2, 8] {
+            let out = solve_sparse(&sp, &opts_with(seed, workers)).unwrap().solution;
+            assert_eq!(out.assignment.assign, base.assignment.assign, "seed {seed} w{workers}");
+            assert_eq!(out.assignment.open, base.assignment.open, "seed {seed} w{workers}");
+            assert_eq!(out.cost.to_bits(), base.cost.to_bits(), "seed {seed} w{workers}");
+        }
+    }
+}
+
+#[test]
+fn sharded_solutions_stay_feasible_and_above_bound_across_seeds() {
+    for seed in 0..20u64 {
+        let sp = SparseInstance::clustered(240, 8, 500 + seed, 4);
+        let out = solve_sparse(&sp, &opts_with(seed, 4)).unwrap();
+        let sol = out.solution;
+        let stats = out.sharded.expect("sharded stats");
+        assert!(stats.regions >= 1);
+        // The dense equivalent re-checks every constraint the repair and
+        // rescue passes touched: capacity residuals, assigned-edge-open
+        // linking, and t_min participation.
+        let dense = sp.to_dense();
+        sol.assignment.check_feasible(&dense).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(
+            (sol.cost - sol.assignment.cost(&dense)).abs() < 1e-9,
+            "seed {seed}: sparse cost drifted from dense evaluation"
+        );
+        let bound = aggregated_lp_bound(&sp);
+        assert!(sol.cost >= bound - 1e-9, "seed {seed}: cost {} < bound {bound}", sol.cost);
+    }
+}
+
+#[test]
+fn auto_tier_routes_by_instance_size() {
+    let sp = SparseInstance::clustered(300, 8, 3, 4);
+    // 2400 x-variables: far below the default cutoff, dense fast path.
+    let small = solve_sparse(&sp, &SolveOptions::auto()).unwrap();
+    assert!(small.sharded.is_none());
+    // Lowering the cutoff routes the very same instance sharded.
+    let mut opts = SolveOptions::auto();
+    opts.auto_sharded_above = 1_000;
+    let big = solve_sparse(&sp, &opts).unwrap();
+    assert!(big.sharded.is_some());
+    big.solution.assignment.check_feasible(&sp.to_dense()).unwrap();
+}
