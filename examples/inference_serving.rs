@@ -106,11 +106,12 @@ fn main() -> anyhow::Result<()> {
             let seq = engine.variant().seq_len;
             let mut server = BatchingServer::new(&engine, params);
             let mut rng = Rng::new(1);
+            let clock = hflop::util::WallClock::start();
             for id in 0..2048u64 {
                 let window: Vec<f32> = (0..seq).map(|_| rng.normal() as f32).collect();
-                server.submit(InferenceRequest { id, window })?;
+                server.submit(InferenceRequest { id, window }, clock.elapsed_s())?;
             }
-            server.flush()?;
+            server.flush(clock.elapsed_s())?;
             let s = &server.stats;
             println!(
                 "batched: {} requests / {} batches | mean batch exec {:.3} ms | throughput {:.0} req/s",
@@ -123,8 +124,8 @@ fn main() -> anyhow::Result<()> {
             let mut single = BatchingServer::new(&engine, manifest.load_init_params(engine.variant())?);
             for id in 0..256u64 {
                 let window: Vec<f32> = (0..seq).map(|_| rng.normal() as f32).collect();
-                single.submit(InferenceRequest { id, window })?;
-                single.flush()?;
+                single.submit(InferenceRequest { id, window }, clock.elapsed_s())?;
+                single.flush(clock.elapsed_s())?;
             }
             println!(
                 "unbatched: mean exec {:.3} ms | throughput {:.0} req/s  (batching speedup: {:.2}x per request)",

@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     let time_limit = args.f64_or("time-limit", 60.0)?;
 
     println!("== Fig. 2: exact HFLOP solve times (in-tree B&B + simplex, 1 core) ==");
-    let rows = fig2::run(&fig2::default_sweep(), reps, time_limit);
+    let rows = fig2::run(&fig2::default_sweep(), reps, time_limit, 1000);
     let table: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {
@@ -52,7 +52,13 @@ fn main() -> anyhow::Result<()> {
         for rep in 0..reps as u64 {
             let inst = InstanceBuilder::unit_cost(n, m, 500 + rep).build();
             let (e, te) = hflop::util::time_it(|| {
-                branch_and_bound(&inst, &BbOptions { time_limit_s: time_limit, ..Default::default() })
+                branch_and_bound(
+                    &inst,
+                    &BbOptions {
+                        time_limit_s: (time_limit > 0.0).then_some(time_limit),
+                        ..Default::default()
+                    },
+                )
             });
             let (g, tg) = hflop::util::time_it(|| greedy(&inst));
             let (l, tl) = hflop::util::time_it(|| local_search(&inst, &LocalSearchOptions::default()));

@@ -69,11 +69,14 @@ fn main() {
             .map(|_| (0..v.seq_len * v.in_dim).map(|_| rng.normal() as f32).collect())
             .collect();
         let mut id = 0u64;
+        let clock = hflop::util::WallClock::start();
         let rs = bench_auto(&format!("runtime/{variant}/batcher_cycle_b8"), 2.0, || {
             let mut out = Vec::new();
             for w in &windows {
                 id += 1;
-                out = server.submit(InferenceRequest { id, window: w.clone() }).unwrap();
+                out = server
+                    .submit(InferenceRequest { id, window: w.clone() }, clock.elapsed_s())
+                    .unwrap();
             }
             out
         });

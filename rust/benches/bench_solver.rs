@@ -33,7 +33,7 @@ fn main() {
         bench(&format!("fig2/solve_exact n={n} m={m}"), 3, || {
             let inst = &insts[i % insts.len()];
             i += 1;
-            branch_and_bound(inst, &BbOptions { time_limit_s: 30.0, ..Default::default() })
+            branch_and_bound(inst, &BbOptions { time_limit_s: Some(30.0), ..Default::default() })
         });
     }
 

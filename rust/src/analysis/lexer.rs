@@ -1,0 +1,492 @@
+//! Hand-rolled Rust lexer for `detlint` (in the spirit of
+//! `util::tomlmini`: a small, dependency-free parser for exactly the
+//! subset the tool needs — no regex, no syn).
+//!
+//! The token stream carries 1-based line/column positions so rule hits
+//! render as rustc-style `file:line:col` diagnostics. Comments and
+//! string/char literals are consumed (never tokenized as code), which is
+//! what makes the rules immune to `// HashMap` prose; line comments are
+//! additionally scanned for `// detlint: allow(<rule>) -- <reason>`
+//! escape-hatch directives.
+
+/// Token class. Keywords are ordinary [`TokKind::Ident`]s — the rules
+/// match on text (`fn`, `as`, ...) where grammar matters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Int,
+    Float,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One lexed token with its source position (1-based).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A well-formed `// detlint: allow(<rule>) -- <reason>` directive. It
+/// suppresses findings for `rule` on its own line and on the next line.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub line: u32,
+}
+
+/// A comment that mentions `detlint:` but does not parse as a complete
+/// allow directive (missing rule or missing justification).
+#[derive(Debug, Clone)]
+pub struct Malformed {
+    pub line: u32,
+    pub col: u32,
+    pub msg: String,
+}
+
+/// Full lexer output for one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<Allow>,
+    pub malformed: Vec<Malformed>,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn peek(&self, k: usize) -> Option<char> {
+        self.chars.get(self.i + k).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex one Rust source file.
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor { chars: src.chars().collect(), i: 0, line: 1, col: 1 };
+    let mut out = Lexed::default();
+    while let Some(c) = cur.peek(0) {
+        let (line, col) = (cur.line, cur.col);
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+        // Line comment (also covers /// and //! docs): consume to EOL and
+        // check for a detlint directive.
+        if c == '/' && cur.peek(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            scan_directive(&text, line, col, &mut out);
+            continue;
+        }
+        // Block comment, nested per Rust rules. Directives are not
+        // recognized here — the escape hatch is line-comment only.
+        if c == '/' && cur.peek(1) == Some('*') {
+            cur.bump();
+            cur.bump();
+            let mut depth = 1usize;
+            while depth > 0 {
+                match cur.bump() {
+                    None => break,
+                    Some('/') if cur.peek(0) == Some('*') => {
+                        cur.bump();
+                        depth += 1;
+                    }
+                    Some('*') if cur.peek(0) == Some('/') => {
+                        cur.bump();
+                        depth -= 1;
+                    }
+                    _ => {}
+                }
+            }
+            continue;
+        }
+        // r"..." / r#"..."# raw strings and r#ident raw identifiers.
+        if c == 'r' && matches!(cur.peek(1), Some('"') | Some('#')) {
+            if cur.peek(1) == Some('#') && cur.peek(2).is_some_and(is_ident_start) {
+                cur.bump(); // r
+                cur.bump(); // #
+                let text = lex_ident_text(&mut cur);
+                out.toks.push(Tok { kind: TokKind::Ident, text, line, col });
+            } else if raw_string_follows(&cur, 1) {
+                cur.bump(); // r
+                consume_raw_string(&mut cur);
+                out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+            } else {
+                // `r#` not followed by a raw string or ident: lone ident r.
+                cur.bump();
+                out.toks.push(Tok { kind: TokKind::Ident, text: "r".into(), line, col });
+            }
+            continue;
+        }
+        // b"..." byte strings, br"..." raw byte strings, b'.' byte chars.
+        if c == 'b' && matches!(cur.peek(1), Some('"') | Some('\'') | Some('r')) {
+            if cur.peek(1) == Some('"') {
+                cur.bump();
+                cur.bump();
+                consume_plain_string(&mut cur);
+                out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+                continue;
+            }
+            if cur.peek(1) == Some('\'') {
+                cur.bump();
+                cur.bump();
+                consume_char_body(&mut cur);
+                out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line, col });
+                continue;
+            }
+            if raw_string_follows(&cur, 2) {
+                cur.bump(); // b
+                cur.bump(); // r
+                consume_raw_string(&mut cur);
+                out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+                continue;
+            }
+            // plain identifier starting with b (e.g. `branch`): fall through.
+        }
+        if c == '"' {
+            cur.bump();
+            consume_plain_string(&mut cur);
+            out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+            continue;
+        }
+        // 'x' char literal vs 'label lifetime.
+        if c == '\'' {
+            let lifetime = cur.peek(1).is_some_and(is_ident_start) && cur.peek(2) != Some('\'');
+            cur.bump();
+            if lifetime {
+                let text = lex_ident_text(&mut cur);
+                out.toks.push(Tok { kind: TokKind::Lifetime, text, line, col });
+            } else {
+                consume_char_body(&mut cur);
+                out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line, col });
+            }
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (text, float) = lex_number(&mut cur);
+            let kind = if float { TokKind::Float } else { TokKind::Int };
+            out.toks.push(Tok { kind, text, line, col });
+            continue;
+        }
+        if is_ident_start(c) {
+            let text = lex_ident_text(&mut cur);
+            out.toks.push(Tok { kind: TokKind::Ident, text, line, col });
+            continue;
+        }
+        // Everything else: one punctuation char per token (`::` is two
+        // `:` tokens — the rules match sequences where that matters).
+        cur.bump();
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line, col });
+    }
+    out
+}
+
+fn lex_ident_text(cur: &mut Cursor) -> String {
+    let mut text = String::new();
+    while let Some(ch) = cur.peek(0) {
+        if !is_ident_continue(ch) {
+            break;
+        }
+        text.push(ch);
+        cur.bump();
+    }
+    text
+}
+
+/// After an `r` (offset 1) or `br` (offset 2) prefix: do `#`s followed by
+/// `"` — or a bare `"` — come next?
+fn raw_string_follows(cur: &Cursor, from: usize) -> bool {
+    let mut k = from;
+    while cur.peek(k) == Some('#') {
+        k += 1;
+    }
+    cur.peek(k) == Some('"')
+}
+
+/// Cursor sits on the `#`s/`"` of a raw string; consume through the
+/// matching `"###...` terminator.
+fn consume_raw_string(cur: &mut Cursor) {
+    let mut hashes = 0usize;
+    while cur.peek(0) == Some('#') {
+        hashes += 1;
+        cur.bump();
+    }
+    cur.bump(); // opening quote
+    loop {
+        match cur.bump() {
+            None => return,
+            Some('"') => {
+                let mut k = 0usize;
+                while k < hashes && cur.peek(k) == Some('#') {
+                    k += 1;
+                }
+                if k == hashes {
+                    for _ in 0..hashes {
+                        cur.bump();
+                    }
+                    return;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Cursor sits just past the opening `"`; consume through the closing one.
+fn consume_plain_string(cur: &mut Cursor) {
+    loop {
+        match cur.bump() {
+            None | Some('"') => return,
+            Some('\\') => {
+                cur.bump();
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Cursor sits just past the opening `'`; consume through the closing one
+/// (handles `'\''`, `'\u{1F600}'`, multi-char escapes).
+fn consume_char_body(cur: &mut Cursor) {
+    loop {
+        match cur.bump() {
+            None | Some('\'') => return,
+            Some('\\') => {
+                cur.bump();
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Cursor sits on a leading digit. Returns (text, is_float). Handles
+/// `0x/0o/0b` prefixes, `_` separators, `1.5`, `1.`, `1e-4`, and type
+/// suffixes (`1.0f32`, `10usize`); `0..n` ranges and `x.0` tuple fields
+/// stay integers.
+fn lex_number(cur: &mut Cursor) -> (String, bool) {
+    let mut text = String::new();
+    let mut float = false;
+    if cur.peek(0) == Some('0') && matches!(cur.peek(1), Some('x') | Some('X') | Some('o') | Some('b')) {
+        text.push(cur.bump().unwrap());
+        text.push(cur.bump().unwrap());
+        while cur.peek(0).is_some_and(|ch| ch.is_ascii_alphanumeric() || ch == '_') {
+            text.push(cur.bump().unwrap());
+        }
+        return (text, false);
+    }
+    while cur.peek(0).is_some_and(|ch| ch.is_ascii_digit() || ch == '_') {
+        text.push(cur.bump().unwrap());
+    }
+    if cur.peek(0) == Some('.') {
+        let next = cur.peek(1);
+        let range_or_field = next == Some('.') || next.is_some_and(is_ident_start);
+        if !range_or_field {
+            float = true;
+            text.push(cur.bump().unwrap());
+            while cur.peek(0).is_some_and(|ch| ch.is_ascii_digit() || ch == '_') {
+                text.push(cur.bump().unwrap());
+            }
+        }
+    }
+    if matches!(cur.peek(0), Some('e') | Some('E')) {
+        let (sign, digit) = (cur.peek(1), cur.peek(2));
+        let exp = match sign {
+            Some('+') | Some('-') => digit.is_some_and(|ch| ch.is_ascii_digit()),
+            other => other.is_some_and(|ch| ch.is_ascii_digit()),
+        };
+        if exp {
+            float = true;
+            text.push(cur.bump().unwrap()); // e
+            if matches!(cur.peek(0), Some('+') | Some('-')) {
+                text.push(cur.bump().unwrap());
+            }
+            while cur.peek(0).is_some_and(|ch| ch.is_ascii_digit() || ch == '_') {
+                text.push(cur.bump().unwrap());
+            }
+        }
+    }
+    // Type suffix (f64 marks the literal float even without a dot).
+    let mut suffix = String::new();
+    while cur.peek(0).is_some_and(is_ident_continue) {
+        suffix.push(cur.bump().unwrap());
+    }
+    if suffix.starts_with('f') {
+        float = true;
+    }
+    text.push_str(&suffix);
+    (text, float)
+}
+
+/// Recognize `detlint:` directives inside one line comment's text.
+fn scan_directive(comment: &str, line: u32, col: u32, out: &mut Lexed) {
+    let Some(pos) = comment.find("detlint:") else {
+        return;
+    };
+    let body = comment[pos + "detlint:".len()..].trim();
+    let parsed = (|| {
+        let inner = body.strip_prefix("allow(")?;
+        let close = inner.find(')')?;
+        let rule = inner[..close].trim();
+        if rule.is_empty() {
+            return None;
+        }
+        let rest = inner[close + 1..].trim();
+        let reason = rest.strip_prefix("--")?.trim();
+        if reason.is_empty() {
+            return None;
+        }
+        Some(rule.to_string())
+    })();
+    match parsed {
+        Some(rule) => out.allows.push(Allow { rule, line }),
+        None => out.malformed.push(Malformed {
+            line,
+            col,
+            msg: "detlint directive must read `// detlint: allow(<rule>) -- <reason>` \
+                  (rule and justification both required)"
+                .into(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_keywords_and_puncts() {
+        let got = texts("fn f(x: u32) -> u32 { x }");
+        assert_eq!(got, vec!["fn", "f", "(", "x", ":", "u32", ")", "-", ">", "u32", "{", "x", "}"]);
+    }
+
+    #[test]
+    fn positions_are_one_based() {
+        let l = lex("ab\n  cd");
+        assert_eq!((l.toks[0].line, l.toks[0].col), (1, 1));
+        assert_eq!((l.toks[1].line, l.toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn comments_do_not_tokenize() {
+        let l = lex("a // HashMap here\n/* Instant::now /* nested */ */ b");
+        let t: Vec<_> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(t, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn strings_and_chars_are_opaque() {
+        let l = lex(r#"x("HashMap", 'H', "esc\"aped", b"Instant")"#);
+        assert!(l.toks.iter().all(|t| t.text != "HashMap" && t.text != "Instant"));
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Str).count(), 3);
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Char).count(), 1);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let l = lex(r##"let s = r#"a "quoted" HashMap"# ; tail"##);
+        let t: Vec<_> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(t, vec!["let", "s", "=", "", ";", "tail"]);
+        assert_eq!(l.toks[3].kind, TokKind::Str);
+    }
+
+    #[test]
+    fn raw_ident_and_lifetime() {
+        let l = lex("r#type 'a 'x' <'static>");
+        assert_eq!(l.toks[0].kind, TokKind::Ident);
+        assert_eq!(l.toks[0].text, "type");
+        assert_eq!(l.toks[1].kind, TokKind::Lifetime);
+        assert_eq!(l.toks[1].text, "a");
+        assert_eq!(l.toks[2].kind, TokKind::Char);
+        assert_eq!(l.toks[4].kind, TokKind::Lifetime);
+        assert_eq!(l.toks[4].text, "static");
+    }
+
+    #[test]
+    fn numbers_int_vs_float() {
+        let l = lex("1 1.5 1e-4 0x1F 2.0f32 10usize 0..n x.0 3.");
+        let kinds: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| matches!(t.kind, TokKind::Int | TokKind::Float))
+            .map(|t| (t.text.clone(), t.kind))
+            .collect();
+        assert_eq!(kinds[0], ("1".into(), TokKind::Int));
+        assert_eq!(kinds[1], ("1.5".into(), TokKind::Float));
+        assert_eq!(kinds[2], ("1e-4".into(), TokKind::Float));
+        assert_eq!(kinds[3], ("0x1F".into(), TokKind::Int));
+        assert_eq!(kinds[4], ("2.0f32".into(), TokKind::Float));
+        assert_eq!(kinds[5], ("10usize".into(), TokKind::Int));
+        assert_eq!(kinds[6], ("0".into(), TokKind::Int)); // 0..n stays int
+        assert_eq!(kinds[7], ("0".into(), TokKind::Int)); // x.0 tuple field
+        assert_eq!(kinds[8], ("3.".into(), TokKind::Float));
+    }
+
+    #[test]
+    fn allow_directive_parses() {
+        let l = lex("let x = 1; // detlint: allow(wall-clock) -- bench-only timer\n");
+        assert_eq!(l.allows.len(), 1);
+        assert_eq!(l.allows[0].rule, "wall-clock");
+        assert_eq!(l.allows[0].line, 1);
+        assert!(l.malformed.is_empty());
+    }
+
+    #[test]
+    fn directive_without_reason_is_malformed() {
+        for bad in [
+            "// detlint: allow(wall-clock)",
+            "// detlint: allow(wall-clock) --",
+            "// detlint: allow() -- reason",
+            "// detlint: suppress(wall-clock) -- reason",
+        ] {
+            let l = lex(bad);
+            assert!(l.allows.is_empty(), "{bad}");
+            assert_eq!(l.malformed.len(), 1, "{bad}");
+        }
+    }
+
+    #[test]
+    fn ordinary_comments_are_not_directives() {
+        let l = lex("// detlint is the linter's name\n// nothing to see\n");
+        assert!(l.allows.is_empty());
+        assert!(l.malformed.is_empty());
+    }
+}

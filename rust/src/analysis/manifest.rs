@@ -1,0 +1,185 @@
+//! `rust/lint.toml` — the committed detlint manifest.
+//!
+//! Declares which paths under the crate's `src/` are deterministic
+//! zones, which files inside them are excluded verbatim (the frozen
+//! `sim/oracle.rs` differential baseline), and each rule's severity.
+//! Parsed with [`crate::util::tomlmini`] (arrays single-line, per that
+//! parser's subset). Unknown rule names in `[severity]` are hard errors
+//! so a typo cannot silently disable a rule.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::rules;
+use crate::util::tomlmini::{Config, Value};
+
+/// What a rule hit does to the exit code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Reported; makes `hflop lint` exit nonzero.
+    Deny,
+    /// Reported; exit code unaffected.
+    Warn,
+    /// Rule disabled.
+    Allow,
+}
+
+impl Severity {
+    fn parse(s: &str) -> Option<Severity> {
+        match s {
+            "deny" => Some(Severity::Deny),
+            "warn" => Some(Severity::Warn),
+            "allow" => Some(Severity::Allow),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Deny => "deny",
+            Severity::Warn => "warn",
+            Severity::Allow => "allow",
+        }
+    }
+}
+
+/// Parsed manifest: zone map plus per-rule severities.
+#[derive(Debug, Clone)]
+pub struct LintManifest {
+    /// Source root the zone paths are relative to (default `src`).
+    pub root: String,
+    /// Deterministic-zone path prefixes, relative to `root`. An entry
+    /// matches a directory subtree (`solver`) or a single file with or
+    /// without its `.rs` extension (`experiments/sweep`).
+    pub zones: Vec<String>,
+    /// Files inside zones scanned never (frozen oracles).
+    pub exclude: Vec<String>,
+    /// Per-rule severity; rules absent here default to deny.
+    pub severity: BTreeMap<String, Severity>,
+}
+
+impl LintManifest {
+    pub fn parse(text: &str) -> anyhow::Result<LintManifest> {
+        let cfg = Config::parse(text)?;
+        let root = cfg.str_or("detlint.root", "src").to_string();
+        let zones = str_array(&cfg, "zones.deterministic")?;
+        anyhow::ensure!(!zones.is_empty(), "lint.toml declares no deterministic zones");
+        let exclude = match cfg.get("zones.exclude") {
+            Some(_) => str_array(&cfg, "zones.exclude")?,
+            None => Vec::new(),
+        };
+        let mut severity = BTreeMap::new();
+        for (key, value) in cfg.section("severity") {
+            let rule = key.strip_prefix("severity.").unwrap_or(key.as_str());
+            anyhow::ensure!(
+                rules::names().contains(&rule),
+                "lint.toml [severity] names unknown rule '{rule}' (rules: {})",
+                rules::names().join(", ")
+            );
+            let sev = value
+                .as_str()
+                .and_then(Severity::parse)
+                .ok_or_else(|| anyhow::anyhow!("rule '{rule}': severity must be deny|warn|allow"))?;
+            severity.insert(rule.to_string(), sev);
+        }
+        Ok(LintManifest { root, zones, exclude, severity })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<LintManifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        LintManifest::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+    }
+
+    /// Severity of `rule` (deny when the manifest is silent).
+    pub fn severity_of(&self, rule: &str) -> Severity {
+        self.severity.get(rule).copied().unwrap_or(Severity::Deny)
+    }
+
+    /// The zone entry covering `rel` (a `/`-separated path relative to
+    /// `root`), if any.
+    pub fn zone_of(&self, rel: &str) -> Option<&str> {
+        self.zones.iter().map(String::as_str).find(|z| path_matches(z, rel))
+    }
+
+    pub fn excluded(&self, rel: &str) -> bool {
+        self.exclude.iter().any(|e| path_matches(e, rel))
+    }
+}
+
+/// `entry` matches `rel` as the whole path, a directory prefix, or a
+/// file named with or without the `.rs` extension.
+pub(crate) fn path_matches(entry: &str, rel: &str) -> bool {
+    match rel.strip_prefix(entry) {
+        Some(rest) => rest.is_empty() || rest == ".rs" || rest.starts_with('/'),
+        None => false,
+    }
+}
+
+fn str_array(cfg: &Config, key: &str) -> anyhow::Result<Vec<String>> {
+    let arr = cfg
+        .get(key)
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("lint.toml: '{key}' must be an array of strings"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("lint.toml: '{key}' entries must be strings"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[detlint]
+version = 1
+root = "src"
+
+[zones]
+deterministic = ["solver", "experiments/sweep"]
+exclude = ["solver/frozen.rs"]
+
+[severity]
+wall-clock = "deny"
+float-cast = "warn"
+"#;
+
+    #[test]
+    fn parses_zones_and_severities() {
+        let m = LintManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.root, "src");
+        assert_eq!(m.zones, vec!["solver", "experiments/sweep"]);
+        assert_eq!(m.severity_of("wall-clock"), Severity::Deny);
+        assert_eq!(m.severity_of("float-cast"), Severity::Warn);
+        // Unlisted rules default to deny.
+        assert_eq!(m.severity_of("hash-iteration"), Severity::Deny);
+    }
+
+    #[test]
+    fn zone_matching_covers_dirs_and_extensionless_files() {
+        let m = LintManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.zone_of("solver/bb.rs"), Some("solver"));
+        assert_eq!(m.zone_of("solver/deep/nested.rs"), Some("solver"));
+        assert_eq!(m.zone_of("experiments/sweep.rs"), Some("experiments/sweep"));
+        assert_eq!(m.zone_of("experiments/fig2.rs"), None);
+        // Prefixes only match at path-component boundaries.
+        assert_eq!(m.zone_of("solverx/other.rs"), None);
+        assert!(m.excluded("solver/frozen.rs"));
+        assert!(!m.excluded("solver/bb.rs"));
+    }
+
+    #[test]
+    fn unknown_rule_and_bad_severity_rejected() {
+        let bad_rule = "[zones]\ndeterministic = [\"solver\"]\n[severity]\nno-such-rule = \"deny\"\n";
+        assert!(LintManifest::parse(bad_rule).is_err());
+        let bad_sev = "[zones]\ndeterministic = [\"solver\"]\n[severity]\nwall-clock = \"fatal\"\n";
+        assert!(LintManifest::parse(bad_sev).is_err());
+        let no_zones = "[severity]\nwall-clock = \"deny\"\n";
+        assert!(LintManifest::parse(no_zones).is_err());
+    }
+}

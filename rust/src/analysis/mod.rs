@@ -1,0 +1,234 @@
+//! detlint — determinism/correctness static analysis for the
+//! deterministic zones (DESIGN.md §9).
+//!
+//! The repo's core contract — byte-identical `SweepMatrix`/solver output
+//! at any worker count — is enforced at runtime by differential tests;
+//! this module enforces it at the *source* level: a hand-rolled lexer
+//! ([`lexer`]), token-stream rules ([`rules`]), and a committed manifest
+//! (`rust/lint.toml`, [`manifest`]) declaring which paths must stay
+//! deterministic and how severe each rule is. `hflop lint` walks the
+//! tree and exits nonzero on any deny-severity finding.
+//!
+//! Escape hatch: `// detlint: allow(<rule>) -- <reason>` on the
+//! offending line (or the line above) suppresses one rule there; the
+//! justification string is mandatory, and a directive that does not
+//! parse is itself a finding (`malformed-allow`).
+
+pub mod lexer;
+pub mod manifest;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+pub use manifest::{LintManifest, Severity};
+pub use rules::Finding;
+
+/// One reportable lint hit: a [`Finding`] located in a file, with the
+/// manifest severity attached.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub rule: &'static str,
+    /// Display path (as walked, e.g. `src/solver/bb.rs`).
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub token: String,
+    pub note: String,
+}
+
+impl Diagnostic {
+    /// rustc-style one-line rendering:
+    /// `src/solver/bb.rs:148:14: deny[wall-clock] `Instant` — note`.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}:{}: {}[{}] `{}` — {}",
+            self.file,
+            self.line,
+            self.col,
+            self.severity.label(),
+            self.rule,
+            self.token,
+            self.note
+        )
+    }
+}
+
+/// Result of linting a tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub diagnostics: Vec<Diagnostic>,
+    /// `.rs` files seen under the root.
+    pub files_scanned: usize,
+    /// Files that fell inside a deterministic zone (and were analyzed).
+    pub files_in_zones: usize,
+}
+
+impl LintReport {
+    pub fn deny_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Deny).count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warn).count()
+    }
+
+    /// Full human-readable report (diagnostics + summary line).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "detlint: {} file(s) scanned, {} in deterministic zones: {} deny, {} warn\n",
+            self.files_scanned,
+            self.files_in_zones,
+            self.deny_count(),
+            self.warn_count()
+        ));
+        out
+    }
+}
+
+/// Lint the tree under `base` (the directory containing the manifest's
+/// `root`, i.e. the crate directory for `root = "src"`).
+///
+/// Every zone and exclusion entry must match at least one file — a
+/// module rename cannot silently drop a zone from coverage.
+pub fn lint_tree(m: &LintManifest, base: &Path) -> anyhow::Result<LintReport> {
+    let src_root = base.join(&m.root);
+    anyhow::ensure!(src_root.is_dir(), "source root {} not found", src_root.display());
+    let mut files = Vec::new();
+    collect_rs_files(&src_root, &mut files)?;
+    files.sort();
+
+    let mut report = LintReport::default();
+    let mut zone_used = vec![false; m.zones.len()];
+    let mut exclude_used = vec![false; m.exclude.len()];
+    for path in &files {
+        report.files_scanned += 1;
+        let rel = rel_slash_path(path, &src_root)?;
+        let Some(zone) = m.zone_of(&rel) else { continue };
+        if let Some(zi) = m.zones.iter().position(|z| z == zone) {
+            zone_used[zi] = true;
+        }
+        if m.excluded(&rel) {
+            if let Some(ei) = m.exclude.iter().position(|e| manifest::path_matches(e, &rel)) {
+                exclude_used[ei] = true;
+            }
+            continue;
+        }
+        report.files_in_zones += 1;
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let display = format!("{}/{}", m.root, rel);
+        for f in rules::scan(&src) {
+            let severity = m.severity_of(f.rule);
+            if severity == Severity::Allow {
+                continue;
+            }
+            report.diagnostics.push(Diagnostic {
+                severity,
+                rule: f.rule,
+                file: display.clone(),
+                line: f.line,
+                col: f.col,
+                token: f.token,
+                note: f.note,
+            });
+        }
+    }
+    for (zi, used) in zone_used.iter().enumerate() {
+        anyhow::ensure!(
+            used,
+            "lint.toml zone '{}' matches no files under {} (renamed module?)",
+            m.zones[zi],
+            src_root.display()
+        );
+    }
+    for (ei, used) in exclude_used.iter().enumerate() {
+        anyhow::ensure!(
+            used,
+            "lint.toml exclusion '{}' matches no files (renamed module?)",
+            m.exclude[ei]
+        );
+    }
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    for entry in std::fs::read_dir(dir).map_err(|e| anyhow::anyhow!("{}: {e}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_slash_path(path: &Path, root: &Path) -> anyhow::Result<String> {
+    let rel = path
+        .strip_prefix(root)
+        .map_err(|_| anyhow::anyhow!("{} outside source root", path.display()))?;
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    Ok(parts.join("/"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> LintManifest {
+        LintManifest::parse(
+            "[zones]\ndeterministic = [\"solver\"]\n[severity]\nfloat-cast = \"warn\"\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn diagnostic_renders_rustc_style() {
+        let d = Diagnostic {
+            severity: Severity::Deny,
+            rule: "wall-clock",
+            file: "src/solver/bb.rs".into(),
+            line: 148,
+            col: 14,
+            token: "Instant".into(),
+            note: "wall-clock time source".into(),
+        };
+        assert_eq!(
+            d.render(),
+            "src/solver/bb.rs:148:14: deny[wall-clock] `Instant` — wall-clock time source"
+        );
+    }
+
+    #[test]
+    fn report_counts_by_severity() {
+        let m = manifest();
+        let mut r = LintReport::default();
+        for (rule, src) in [
+            ("wall-clock", "let t = Instant::now();"),
+            ("float-cast", "let x = y.floor() as usize;"),
+        ] {
+            for f in rules::scan(src) {
+                r.diagnostics.push(Diagnostic {
+                    severity: m.severity_of(f.rule),
+                    rule: f.rule,
+                    file: "src/solver/x.rs".into(),
+                    line: f.line,
+                    col: f.col,
+                    token: f.token,
+                    note: f.note,
+                });
+                assert_eq!(f.rule, rule);
+            }
+        }
+        assert_eq!(r.deny_count(), 1);
+        assert_eq!(r.warn_count(), 1);
+        assert!(r.render().contains("1 deny, 1 warn"));
+    }
+}

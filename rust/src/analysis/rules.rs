@@ -1,0 +1,400 @@
+//! Token-stream lint rules for the determinism zones.
+//!
+//! Each rule pattern-matches the [`lexer`] token stream — grammar-aware
+//! enough to tell `fn partial_cmp` (a `PartialOrd` impl) from a
+//! `partial_cmp` call, and to walk a postfix chain backwards from an
+//! `as usize` cast — without being a full parser. `#[cfg(test)]` items
+//! are skipped (tests may use hash containers and ad-hoc clocks), and
+//! `// detlint: allow(rule) -- reason` directives suppress findings on
+//! their own line and the next.
+
+use super::lexer::{self, Lexed, Tok, TokKind};
+
+/// Rule identifiers, in the order findings are reported. The last entry
+/// is the meta-rule for unparseable escape-hatch directives. DESIGN.md §9
+/// lists exactly this table (drift-guarded by `detlint_contract.rs`).
+pub const NAMES: [&str; 6] = [
+    "wall-clock",
+    "hash-iteration",
+    "float-partial-cmp",
+    "unseeded-rng",
+    "float-cast",
+    "malformed-allow",
+];
+
+/// All rule names, including the `malformed-allow` meta-rule.
+pub fn names() -> &'static [&'static str] {
+    &NAMES
+}
+
+/// One raw rule hit (severity is attached later from the manifest).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub line: u32,
+    pub col: u32,
+    /// The offending token span, e.g. `Instant` or `as usize`.
+    pub token: String,
+    pub note: String,
+}
+
+/// Scan one source file, returning suppression-filtered findings sorted
+/// by position.
+pub fn scan(src: &str) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let toks = &lexed.toks;
+    let skip = test_mask(toks);
+    let mut found = Vec::new();
+
+    for i in 0..toks.len() {
+        if skip[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let text = toks[i].text.as_str();
+        match text {
+            "Instant" | "SystemTime" => found.push(at(
+                &toks[i],
+                "wall-clock",
+                text,
+                "wall-clock time source in a deterministic zone; route measurement \
+                 through util::clock and keep it out of control flow",
+            )),
+            "HashMap" | "HashSet" => found.push(at(
+                &toks[i],
+                "hash-iteration",
+                text,
+                "hash-ordered container in a deterministic zone; iteration order is \
+                 unstable — use BTreeMap/BTreeSet or index order",
+            )),
+            "partial_cmp" => {
+                // `fn partial_cmp` is a PartialOrd impl definition, not a
+                // float comparison at a call site.
+                let is_def = i > 0 && toks[i - 1].text == "fn";
+                if !is_def {
+                    found.push(at(
+                        &toks[i],
+                        "float-partial-cmp",
+                        text,
+                        "partial_cmp returns None on NaN and poisons orderings; \
+                         use total_cmp for float comparators",
+                    ));
+                }
+            }
+            "thread_rng" | "from_entropy" | "OsRng" => found.push(at(
+                &toks[i],
+                "unseeded-rng",
+                text,
+                "entropy-seeded RNG in a deterministic zone; construct \
+                 util::rng::Rng with an explicit seed",
+            )),
+            "random" if path_prefix_is(toks, i, "rand") => found.push(at(
+                &toks[i],
+                "unseeded-rng",
+                "rand::random",
+                "rand::random draws from thread-local entropy; construct \
+                 util::rng::Rng with an explicit seed",
+            )),
+            "default" if path_prefix_rng(toks, i) => found.push(at(
+                &toks[i],
+                "unseeded-rng",
+                "Rng::default",
+                "Default-constructed RNG hides its seed; construct \
+                 util::rng::Rng with an explicit seed",
+            )),
+            "as" => {
+                if let Some(f) = float_cast_finding(toks, i) {
+                    found.push(f);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    for m in &lexed.malformed {
+        found.push(Finding {
+            rule: "malformed-allow",
+            line: m.line,
+            col: m.col,
+            token: "detlint:".into(),
+            note: m.msg.clone(),
+        });
+    }
+
+    found.retain(|f| {
+        !lexed
+            .allows
+            .iter()
+            .any(|a| a.rule == f.rule && (a.line == f.line || a.line + 1 == f.line))
+    });
+    found.sort_by_key(|f| (f.line, f.col));
+    found
+}
+
+fn at(tok: &Tok, rule: &'static str, token: &str, note: &str) -> Finding {
+    Finding { rule, line: tok.line, col: tok.col, token: token.into(), note: note.into() }
+}
+
+/// Is token `i` preceded by `<prefix> ::`?
+fn path_prefix_is(toks: &[Tok], i: usize, prefix: &str) -> bool {
+    i >= 3 && toks[i - 1].text == ":" && toks[i - 2].text == ":" && toks[i - 3].text == prefix
+}
+
+/// Is token `i` preceded by `<SomethingRng> ::`?
+fn path_prefix_rng(toks: &[Tok], i: usize) -> bool {
+    i >= 3
+        && toks[i - 1].text == ":"
+        && toks[i - 2].text == ":"
+        && toks[i - 3].kind == TokKind::Ident
+        && toks[i - 3].text.ends_with("Rng")
+}
+
+/// Methods whose receiver is definitely floating point.
+const FLOAT_METHODS: [&str; 10] =
+    ["floor", "ceil", "round", "trunc", "sqrt", "powf", "powi", "exp", "ln", "fract"];
+
+/// Methods that bound or test the value before the cast, defusing NaN /
+/// negative-overflow hazards (`(x).max(0.0) as usize` saturates cleanly).
+const GUARD_METHODS: [&str; 5] = ["max", "min", "clamp", "is_nan", "is_finite"];
+
+/// `as usize` on evidently-float expressions without a NaN/range guard.
+///
+/// Walks the postfix chain backwards from the cast: balanced `(...)` /
+/// `[...]` groups plus idents, literals and `.` continue the chain; any
+/// other token at depth 0 ends it. Float evidence = a float literal, an
+/// `f64`/`f32` ident, or a [`FLOAT_METHODS`] call; a [`GUARD_METHODS`]
+/// call anywhere in the chain defuses the finding.
+fn float_cast_finding(toks: &[Tok], i: usize) -> Option<Finding> {
+    if toks.get(i + 1).map(|t| t.text.as_str()) != Some("usize") {
+        return None;
+    }
+    let mut depth = 0usize;
+    let mut evidence = false;
+    let mut guarded = false;
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = &toks[j];
+        let txt = t.text.as_str();
+        if depth == 0 {
+            let continues = matches!(
+                t.kind,
+                TokKind::Ident | TokKind::Int | TokKind::Float | TokKind::Str
+            ) || txt == "."
+                || txt == ")"
+                || txt == "]";
+            if !continues {
+                break;
+            }
+        }
+        match txt {
+            ")" | "]" => depth += 1,
+            "(" | "[" => depth -= 1, // depth > 0 here: balanced group interior
+            _ => {}
+        }
+        if t.kind == TokKind::Float {
+            evidence = true;
+        }
+        if t.kind == TokKind::Ident {
+            let is_method = j > 0 && toks[j - 1].text == ".";
+            if txt == "f64" || txt == "f32" {
+                evidence = true;
+            }
+            if is_method && FLOAT_METHODS.contains(&txt) {
+                evidence = true;
+            }
+            if is_method && GUARD_METHODS.contains(&txt) {
+                guarded = true;
+            }
+        }
+    }
+    if evidence && !guarded {
+        Some(at(
+            &toks[i],
+            "float-cast",
+            "as usize",
+            "float-to-usize cast without a NaN/range guard; NaN casts to 0 and \
+             negatives saturate — bound the value (e.g. `.max(0.0)`) first",
+        ))
+    } else {
+        None
+    }
+}
+
+/// Mark every token inside a `#[cfg(test)]`-gated item (tests may use
+/// hash containers, ad-hoc clocks, and partial_cmp freely).
+fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut skip = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].text == "#"
+            && tok_text(toks, i + 1) == "["
+            && tok_text(toks, i + 2) == "cfg"
+            && tok_text(toks, i + 3) == "(")
+        {
+            i += 1;
+            continue;
+        }
+        // Find the attribute's closing `]`, checking for a `test` ident
+        // anywhere inside cfg(...) (covers cfg(test) and cfg(all(test, ..))).
+        let mut j = i + 4;
+        let mut depth = 1usize; // inside cfg(
+        let mut has_test = false;
+        let mut has_not = false;
+        while j < toks.len() && depth > 0 {
+            match toks[j].text.as_str() {
+                "(" => depth += 1,
+                ")" => depth -= 1,
+                "test" => has_test = true,
+                "not" => has_not = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        // `cfg(not(test))` gates production code; never skip it.
+        let has_test = has_test && !has_not;
+        // j is now just past `)`; expect `]`.
+        if tok_text(toks, j) != "]" || !has_test {
+            i += 1;
+            continue;
+        }
+        j += 1;
+        // Skip any stacked attributes between the cfg and the item.
+        while tok_text(toks, j) == "#" && tok_text(toks, j + 1) == "[" {
+            let mut d = 0usize;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "[" => d += 1,
+                    "]" => {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            j += 1;
+        }
+        // Find the item's opening brace; a `;` first means a braceless
+        // item (nothing iterable to skip).
+        let mut k = j;
+        while k < toks.len() && toks[k].text != "{" && toks[k].text != ";" {
+            k += 1;
+        }
+        if k >= toks.len() || toks[k].text == ";" {
+            i = k.min(toks.len());
+            continue;
+        }
+        let mut d = 0usize;
+        let mut end = k;
+        while end < toks.len() {
+            match toks[end].text.as_str() {
+                "{" => d += 1,
+                "}" => {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            end += 1;
+        }
+        let end = (end + 1).min(toks.len());
+        for s in skip.iter_mut().take(end).skip(i) {
+            *s = true;
+        }
+        i = end;
+    }
+    skip
+}
+
+fn tok_text(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+/// Re-export for fixture tests: scan plus the raw lexer output.
+pub fn lex_for_tests(src: &str) -> Lexed {
+    lexer::lex(src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(src: &str) -> Vec<&'static str> {
+        scan(src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn wall_clock_hits_with_position() {
+        let f = scan("fn f() { let t0 = std::time::Instant::now(); }");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "wall-clock");
+        assert_eq!(f[0].line, 1);
+        assert_eq!(f[0].col, 30);
+        assert_eq!(f[0].token, "Instant");
+    }
+
+    #[test]
+    fn fn_partial_cmp_definition_exempt() {
+        assert!(rules_hit("impl PartialOrd for X { fn partial_cmp(&self, o: &X) -> Option<Ordering> { None } }")
+            .is_empty());
+        assert_eq!(rules_hit("v.sort_by(|a, b| a.partial_cmp(b).unwrap());"), ["float-partial-cmp"]);
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "
+            fn live() {}
+            #[cfg(test)]
+            mod tests {
+                use std::collections::HashMap;
+                fn clock() { let _ = std::time::Instant::now(); }
+            }
+        ";
+        assert!(rules_hit(src).is_empty());
+    }
+
+    #[test]
+    fn allow_directive_suppresses_same_and_next_line() {
+        let same = "let t = Instant::now(); // detlint: allow(wall-clock) -- bench timer\n";
+        assert!(rules_hit(same).is_empty());
+        let next = "// detlint: allow(wall-clock) -- bench timer\nlet t = Instant::now();\n";
+        assert!(rules_hit(next).is_empty());
+        let wrong_rule = "// detlint: allow(hash-iteration) -- mismatched\nlet t = Instant::now();\n";
+        assert_eq!(rules_hit(wrong_rule), ["wall-clock"]);
+        let too_far = "// detlint: allow(wall-clock) -- too far away\n\nlet t = Instant::now();\n";
+        assert_eq!(rules_hit(too_far), ["wall-clock"]);
+    }
+
+    #[test]
+    fn float_cast_guard_analysis() {
+        assert_eq!(rules_hit("let b = quota.floor() as usize;"), ["float-cast"]);
+        assert!(rules_hit("let b = quota.floor().max(0.0) as usize;").is_empty());
+        assert_eq!(rules_hit("let h = ((n as f64 * frac).ceil() as usize).min(n);"), ["float-cast"]);
+        assert!(rules_hit("let h = ((n as f64 * frac).ceil().max(0.0) as usize).min(n);").is_empty());
+        // Integer chains carry no float evidence.
+        assert!(rules_hit("let x = (hi - lo + 1) as usize; let y = idx as usize;").is_empty());
+    }
+
+    #[test]
+    fn unseeded_rng_patterns() {
+        assert_eq!(rules_hit("let r = rand::thread_rng();"), ["unseeded-rng"]);
+        assert_eq!(rules_hit("let v: f64 = rand::random();"), ["unseeded-rng"]);
+        assert_eq!(rules_hit("let r = SmallRng::from_entropy();"), ["unseeded-rng"]);
+        assert_eq!(rules_hit("let r = Rng::default();"), ["unseeded-rng"]);
+        // An unrelated `random` ident or Default impl is not a hit.
+        assert!(rules_hit("let random = 3; let d = Config::default();").is_empty());
+    }
+
+    #[test]
+    fn hash_iteration_flags_types_not_prose() {
+        assert_eq!(
+            rules_hit("use std::collections::HashMap; fn f(m: &HashMap<u32, u32>) {}"),
+            ["hash-iteration", "hash-iteration"]
+        );
+        assert!(rules_hit("// HashMap in prose\nlet s = \"HashMap\";").is_empty());
+    }
+}

@@ -60,7 +60,12 @@ pub fn default_sharded_sweep() -> Vec<(usize, usize)> {
 }
 
 /// Run the sweep: `reps` random instances per size, seeded `seed + rep`.
+///
+/// `time_limit_s` is the opt-in wall-clock cutoff (this experiment
+/// measures solve *time*, so machine-dependence is inherent); pass 0 or
+/// a negative value to run on the deterministic node budget alone.
 pub fn run(sweep: &[(usize, usize)], reps: usize, time_limit_s: f64, seed: u64) -> Vec<Fig2Row> {
+    let time_limit = if time_limit_s > 0.0 { Some(time_limit_s) } else { None };
     let mut rows = Vec::with_capacity(sweep.len());
     for &(n, m) in sweep {
         let mut times = Vec::with_capacity(reps);
@@ -69,7 +74,7 @@ pub fn run(sweep: &[(usize, usize)], reps: usize, time_limit_s: f64, seed: u64) 
         let mut all_optimal = true;
         for rep in 0..reps {
             let inst = InstanceBuilder::unit_cost(n, m, seed.wrapping_add(rep as u64)).build();
-            let opts = BbOptions { time_limit_s, ..Default::default() };
+            let opts = BbOptions { time_limit_s: time_limit, ..Default::default() };
             let out = branch_and_bound(&inst, &opts);
             all_optimal &= out.proven_optimal;
             times.push(out.wall_s);
@@ -145,7 +150,7 @@ const SCHEMA: &[ParamSpec] = &[
     ParamSpec {
         key: "time_limit_s",
         default: ParamDefault::Float(60.0),
-        help: "B&B time limit per solve",
+        help: "opt-in B&B wall-clock limit per solve (0 = node budget only)",
     },
     ParamSpec {
         key: "max_points",

@@ -587,7 +587,7 @@ fn run_cell_at(grid: &SweepGrid, idx: usize) -> anyhow::Result<CellOutcome> {
     let (r, s, m, e) = grid.coords(idx);
     let seed = grid.cell_seed(r, s, m, e);
     let label = grid.cell_label(r, s, m, e);
-    let t0 = std::time::Instant::now();
+    let clock = crate::util::WallClock::start();
     let exp = registry::lookup(&grid.experiment)?;
     let params = grid.cell_params(r, s, m, e)?;
     let report = exp
@@ -619,7 +619,7 @@ fn run_cell_at(grid: &SweepGrid, idx: usize) -> anyhow::Result<CellOutcome> {
         label,
         seed,
         &report,
-        t0.elapsed().as_secs_f64(),
+        clock.elapsed_s(),
     ))
 }
 

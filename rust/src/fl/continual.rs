@@ -262,7 +262,7 @@ impl<'a> ContinualHfl<'a> {
     pub fn run(&mut self) -> anyhow::Result<()> {
         for round in 0..self.config.rounds {
             let rec = self.step_round(round)?;
-            log::info!(
+            crate::log_info!(
                 "round {:>3}{} train_loss={:.5} val_mse={:.5} comm={:.3} GB",
                 rec.round,
                 if rec.global_round { " [global]" } else { "        " },

@@ -243,7 +243,7 @@ struct TraceSource {
 
 /// Hotspot population size for `frac` of `n` devices (index prefix).
 fn hot_count(n: usize, frac: f64) -> usize {
-    ((n as f64 * frac).ceil() as usize).min(n)
+    ((n as f64 * frac).ceil().max(0.0) as usize).min(n)
 }
 
 impl TraceSource {

@@ -12,10 +12,18 @@
 //! class of model (GRU-128, ~0.15 ms/inference) the scheduling overhead
 //! must stay well under the model execution time — measured in
 //! `benches/bench_runtime.rs` and tracked in EXPERIMENTS.md §Perf.
+//!
+//! Clock discipline (DESIGN.md §9): queue-latency accounting runs on a
+//! *caller-supplied* clock — simulation time in co-sim, a
+//! `util::clock::WallClock` reading in the CLI/bench harnesses — so
+//! `request_ms` is reproducible when driven from deterministic time.
+//! Only `batch_exec_ms`, which measures real model execution, reads the
+//! wall clock (through `util::time_it`, the allowlisted site).
 
 use crate::fl::ModelRuntime;
 use crate::runtime::Engine;
 use crate::util::stats::OnlineStats;
+use crate::util::time_it;
 
 /// One pending request: a normalized input window.
 #[derive(Debug, Clone)]
@@ -29,8 +37,8 @@ pub struct InferenceRequest {
 pub struct ServeStats {
     /// Model-execution wall time per *batch* (ms).
     pub batch_exec_ms: OnlineStats,
-    /// End-to-end per-request latency (ms), incl. queueing inside the
-    /// batcher window.
+    /// End-to-end per-request latency (ms) on the caller's clock, incl.
+    /// queueing inside the batcher window.
     pub request_ms: OnlineStats,
     pub requests: u64,
     pub batches: u64,
@@ -53,7 +61,8 @@ impl ServeStats {
 pub struct BatchingServer<'a> {
     engine: &'a Engine,
     params: Vec<f32>,
-    queue: Vec<(InferenceRequest, std::time::Instant)>,
+    /// Pending requests with their caller-clock submit times (seconds).
+    queue: Vec<(InferenceRequest, f64)>,
     pub max_batch: usize,
     pub stats: ServeStats,
     /// Reusable input buffer (perf: avoids per-batch allocation).
@@ -75,52 +84,56 @@ impl<'a> BatchingServer<'a> {
         self.params = params;
     }
 
-    /// Enqueue a request. Flushes automatically at `max_batch`.
-    pub fn submit(&mut self, req: InferenceRequest) -> anyhow::Result<Vec<(u64, f32)>> {
+    /// Enqueue a request at caller-clock time `now_s` (simulation time,
+    /// or a `WallClock` reading in the harnesses). Flushes automatically
+    /// at `max_batch`.
+    pub fn submit(&mut self, req: InferenceRequest, now_s: f64) -> anyhow::Result<Vec<(u64, f32)>> {
         let t = self.engine.variant().seq_len * self.engine.variant().in_dim;
         anyhow::ensure!(req.window.len() == t, "window len {} != {}", req.window.len(), t);
-        self.queue.push((req, std::time::Instant::now()));
+        self.queue.push((req, now_s));
         if self.queue.len() >= self.max_batch {
-            self.flush()
+            self.flush(now_s)
         } else {
             Ok(Vec::new())
         }
     }
 
-    /// Execute everything queued; returns (request id, prediction).
-    pub fn flush(&mut self) -> anyhow::Result<Vec<(u64, f32)>> {
+    /// Execute everything queued as of caller-clock time `now_s`;
+    /// returns (request id, prediction).
+    pub fn flush(&mut self, now_s: f64) -> anyhow::Result<Vec<(u64, f32)>> {
         if self.queue.is_empty() {
             return Ok(Vec::new());
         }
         let v = self.engine.variant().clone();
         let t = v.seq_len * v.in_dim;
         let n = self.queue.len();
-        let t_exec = std::time::Instant::now();
 
-        let preds: Vec<f32> = if n == 1 {
-            self.engine.predict(&self.params, &self.queue[0].0.window)?
-        } else {
-            // Pad to serve_batch with copies of the first row.
-            self.scratch.clear();
-            for (req, _) in &self.queue {
-                self.scratch.extend_from_slice(&req.window);
+        let (preds, exec_s) = time_it(|| -> anyhow::Result<Vec<f32>> {
+            if n == 1 {
+                self.engine.predict(&self.params, &self.queue[0].0.window)
+            } else {
+                // Pad to serve_batch with copies of the first row.
+                self.scratch.clear();
+                for (req, _) in &self.queue {
+                    self.scratch.extend_from_slice(&req.window);
+                }
+                self.stats.padded_rows += (self.max_batch - n) as u64;
+                for _ in n..self.max_batch {
+                    let first: Vec<f32> = self.scratch[..t].to_vec();
+                    self.scratch.extend_from_slice(&first);
+                }
+                self.engine.predict_batch(&self.params, &self.scratch)
             }
-            self.stats.padded_rows += (self.max_batch - n) as u64;
-            for _ in n..self.max_batch {
-                let first: Vec<f32> = self.scratch[..t].to_vec();
-                self.scratch.extend_from_slice(&first);
-            }
-            self.engine.predict_batch(&self.params, &self.scratch)?
-        };
+        });
+        let preds = preds?;
 
-        let exec_ms = t_exec.elapsed().as_secs_f64() * 1000.0;
-        self.stats.batch_exec_ms.push(exec_ms);
+        self.stats.batch_exec_ms.push(exec_s * 1000.0);
         self.stats.batches += 1;
 
         let mut out = Vec::with_capacity(n);
-        for (i, (req, t_in)) in self.queue.drain(..).enumerate() {
+        for (i, (req, t_in_s)) in self.queue.drain(..).enumerate() {
             let pred = preds[i * v.out_dim];
-            self.stats.request_ms.push(t_in.elapsed().as_secs_f64() * 1000.0);
+            self.stats.request_ms.push((now_s - t_in_s).max(0.0) * 1000.0);
             self.stats.requests += 1;
             out.push((req.id, pred));
         }

@@ -29,6 +29,7 @@
 //! println!("optimal HFL communication cost: {}", sol.cost);
 //! ```
 
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod core;

@@ -49,6 +49,8 @@ USAGE: hflop <subcommand> [options] [--flags]
               [--out results/] [--smoke] [--compare]
   sweep       --experiment <name> [--rows k=v1,v2] [--modes k=v1,v2]
               [--envs k=v1,v2] [--seeds N] [--set k=v]... (custom registry grid)
+  lint        [--manifest lint.toml] (determinism static analysis; exits
+              nonzero on deny findings — see DESIGN.md §9)
   info
 ";
 
@@ -67,6 +69,7 @@ fn main() {
         Some("serve") => run_serve(&args),
         Some("experiment") => run_experiment(&args),
         Some("sweep") => run_sweep(&args),
+        Some("lint") => run_lint(&args),
         Some("info") => run_info(),
         _ => {
             println!("{USAGE}");
@@ -153,11 +156,13 @@ fn run_serve(args: &Args) -> anyhow::Result<()> {
     let mut server = BatchingServer::new(&engine, params);
     let mut rng = Rng::new(args.u64_or("seed", 1)?);
     let mut served = 0usize;
+    // Caller-supplied clock: the serve harness measures real latencies.
+    let clock = hflop::util::WallClock::start();
     for id in 0..n_requests as u64 {
         let window: Vec<f32> = (0..seq).map(|_| rng.normal() as f32).collect();
-        served += server.submit(InferenceRequest { id, window })?.len();
+        served += server.submit(InferenceRequest { id, window }, clock.elapsed_s())?.len();
     }
-    served += server.flush()?.len();
+    served += server.flush(clock.elapsed_s())?.len();
     let s = &server.stats;
     println!(
         "served {served} requests in {} batches: mean_batch_exec={:.3} ms exec_throughput={:.0} req/s mean_request_latency={:.3} ms",
@@ -398,6 +403,38 @@ fn run_sweep(args: &Args) -> anyhow::Result<()> {
         ]),
     )?;
     println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn run_lint(args: &Args) -> anyhow::Result<()> {
+    use hflop::analysis::{lint_tree, LintManifest};
+    use std::path::{Path, PathBuf};
+
+    // Manifest resolution: --manifest wins; otherwise probe the two
+    // layouts (`rust/lint.toml` from the repo root, `lint.toml` from
+    // inside rust/).
+    let manifest_path = match args.options.get("manifest") {
+        Some(p) => PathBuf::from(p),
+        None => ["rust/lint.toml", "lint.toml"]
+            .iter()
+            .map(PathBuf::from)
+            .find(|p| p.is_file())
+            .ok_or_else(|| {
+                anyhow::anyhow!("no lint.toml found in ./rust or .; pass --manifest <path>")
+            })?,
+    };
+    let manifest = LintManifest::load(&manifest_path)?;
+    let base = match manifest_path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => Path::new(".").to_path_buf(),
+    };
+    let report = lint_tree(&manifest, &base)?;
+    print!("{}", report.render());
+    anyhow::ensure!(
+        report.deny_count() == 0,
+        "{} deny finding(s) in deterministic zones",
+        report.deny_count()
+    );
     Ok(())
 }
 

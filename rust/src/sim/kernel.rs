@@ -74,7 +74,10 @@
 //! clock, communicating only through scheduled events and a shared world
 //! state (see `inference::cosim`).
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: `clear()` sweeps `tags.values_mut()`, and any
+// future iteration must see a deterministic order (the hash-iteration
+// lint rule; DESIGN.md §9).
+use std::collections::BTreeMap;
 
 /// Smallest/largest wheel sizes; powers of two so `next_power_of_two`
 /// clamps cleanly.
@@ -143,7 +146,7 @@ pub struct Kernel<E> {
     cancelled_count: u64,
     /// Live (scheduled, not yet fired or cancelled) timer count.
     live: usize,
-    tags: HashMap<u64, TagState>,
+    tags: BTreeMap<u64, TagState>,
 }
 
 impl<E> Default for Kernel<E> {
@@ -168,7 +171,7 @@ impl<E> Kernel<E> {
             processed: 0,
             cancelled_count: 0,
             live: 0,
-            tags: HashMap::new(),
+            tags: BTreeMap::new(),
         }
     }
 

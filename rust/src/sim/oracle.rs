@@ -16,6 +16,10 @@
 //! Do not "improve" this module: its value is that it does not change.
 //! It is not wired into any production path.
 
+// Frozen baseline: exempt from the hash-container ban (mirrored by the
+// detlint exclusion in rust/lint.toml).
+#![allow(clippy::disallowed_types)]
+
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 

@@ -10,12 +10,12 @@
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
-use std::time::Instant;
 
 use super::milp::{build_relaxation, n_vars, xv, yv, Fixing};
 use super::lp::LpResult;
 use super::solution::{complete_assignment, refine_assignment, Assignment};
 use crate::hflop::Instance;
+use crate::util::WallClock;
 
 /// Branch & bound configuration.
 #[derive(Debug, Clone)]
@@ -23,10 +23,14 @@ pub struct BbOptions {
     /// Use `x_ij ≤ y_j` (tight) linking while `n·m ≤` this threshold.
     pub disaggregate_below: usize,
     /// Give up after this many explored nodes (returns best-so-far,
-    /// `proven_optimal = false`).
+    /// `proven_optimal = false`). This is the *deterministic* budget:
+    /// the same instance and options explore the same tree everywhere.
     pub node_limit: usize,
-    /// Wall-clock budget in seconds.
-    pub time_limit_s: f64,
+    /// Opt-in wall-clock budget in seconds. `None` (the default) means
+    /// termination is governed solely by `node_limit`; `Some(s)` makes
+    /// which incumbent wins machine-dependent, so deterministic
+    /// `SolveOptions` reject it (`wall_s` stays measurement-only).
+    pub time_limit_s: Option<f64>,
     /// Absolute optimality gap below which a node is pruned.
     pub abs_gap: f64,
 }
@@ -39,7 +43,7 @@ impl Default for BbOptions {
             // crossover on this box is a few hundred x-vars (§Perf).
             disaggregate_below: 400,
             node_limit: 200_000,
-            time_limit_s: 60.0,
+            time_limit_s: None,
             abs_gap: 1e-6,
         }
     }
@@ -145,7 +149,7 @@ fn extract_integral(inst: &Instance, x: &[f64]) -> Assignment {
 
 /// Solve HFLOP exactly by branch & bound.
 pub fn branch_and_bound(inst: &Instance, opts: &BbOptions) -> BbOutcome {
-    let t0 = Instant::now();
+    let clock = WallClock::start();
     let disagg = n_vars(inst) <= opts.disaggregate_below;
 
     let mut lp_solves = 0usize;
@@ -176,7 +180,8 @@ pub fn branch_and_bound(inst: &Instance, opts: &BbOptions) -> BbOutcome {
         if node.bound >= incumbent_cost - opts.abs_gap {
             continue; // pruned by bound (heap is bound-ordered: all done)
         }
-        if nodes >= opts.node_limit || t0.elapsed().as_secs_f64() > opts.time_limit_s {
+        let out_of_time = opts.time_limit_s.is_some_and(|lim| clock.elapsed_s() > lim);
+        if nodes >= opts.node_limit || out_of_time {
             proven = false;
             break;
         }
@@ -239,7 +244,7 @@ pub fn branch_and_bound(inst: &Instance, opts: &BbOptions) -> BbOutcome {
         proven_optimal: proven,
         nodes,
         lp_solves,
-        wall_s: t0.elapsed().as_secs_f64(),
+        wall_s: clock.elapsed_s(),
     }
 }
 

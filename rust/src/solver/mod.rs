@@ -42,6 +42,12 @@ pub struct SolveOptions {
     pub auto_sharded_above: usize,
     /// Knobs for the region-parallel sharded path.
     pub shard: ShardOptions,
+    /// Reject machine-dependent termination (the default). With this
+    /// set, an opt-in `bb.time_limit_s` is an invalid configuration:
+    /// wall time steering which B&B incumbent wins breaks the repo's
+    /// bit-reproducibility contract (DESIGN.md §9). Turn it off only
+    /// for interactive "give me *an* answer in N seconds" use.
+    pub deterministic: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +74,7 @@ impl SolveOptions {
             // dominates; the sharded path keeps memory at O(n·k + m).
             auto_sharded_above: 262_144,
             shard: ShardOptions::default(),
+            deterministic: true,
         }
     }
 
@@ -111,6 +118,7 @@ pub enum SolveError {
 /// hand-constructed or hand-mutated instances still get the full hard
 /// validation.
 pub fn solve(inst: &Instance, opts: &SolveOptions) -> Result<Solution, SolveError> {
+    check_deterministic(opts)?;
     if inst.meta.validated {
         debug_assert!(inst.validate().is_ok(), "validated instance failed re-validation");
     } else {
@@ -160,6 +168,19 @@ pub fn solve(inst: &Instance, opts: &SolveOptions) -> Result<Solution, SolveErro
     }
 }
 
+/// Deterministic mode forbids wall-clock B&B termination: identical
+/// inputs must explore identical trees on every machine.
+fn check_deterministic(opts: &SolveOptions) -> Result<(), SolveError> {
+    if opts.deterministic && opts.bb.time_limit_s.is_some() {
+        return Err(SolveError::Invalid(
+            "bb.time_limit_s is wall-clock termination, which deterministic mode rejects; \
+             use node_limit, or set SolveOptions::deterministic = false"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
 /// Result of [`solve_sparse`]: the solution, plus shard diagnostics when
 /// the sharded path ran.
 #[derive(Debug, Clone)]
@@ -176,6 +197,7 @@ pub fn solve_sparse(
     sp: &SparseInstance,
     opts: &SolveOptions,
 ) -> Result<SparseSolution, SolveError> {
+    check_deterministic(opts)?;
     let use_sharded = match opts.mode {
         Mode::Sharded => true,
         Mode::Auto => sp.n() * sp.m() > opts.auto_sharded_above,

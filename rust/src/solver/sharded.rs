@@ -412,7 +412,7 @@ fn split_t_min(t_min: usize, devs_of: &[Vec<usize>]) -> Vec<usize> {
     let mut assigned = 0usize;
     for (k, devs) in devs_of.iter().enumerate() {
         let quota = t_min as f64 * devs.len() as f64 / n_total as f64;
-        let b = (quota.floor() as usize).min(devs.len());
+        let b = (quota.floor().max(0.0) as usize).min(devs.len());
         base.push(b);
         assigned += b;
         fracs.push((quota - b as f64, k));

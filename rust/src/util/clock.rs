@@ -1,0 +1,62 @@
+//! The crate's single wall-clock site.
+//!
+//! Every deterministic zone (see `rust/lint.toml` and DESIGN.md §9) is
+//! forbidden from touching `std::time` directly: wall time must never
+//! influence control flow there, only measurement. Code that needs a
+//! duration *reading* goes through [`time_it`] or [`WallClock`], which
+//! keeps the `Instant::now` calls in one allowlisted module that both
+//! `hflop lint` and clippy's `disallowed-methods` list can pin down.
+
+// Sole sanctioned `Instant::now` call sites (clippy.toml disallows the
+// method everywhere else).
+#![allow(clippy::disallowed_methods)]
+
+use std::time::Instant;
+
+/// A started stopwatch. Read-only: the elapsed seconds feed `wall_s`
+/// style diagnostics and must not steer algorithmic decisions.
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    /// Start a stopwatch now.
+    pub fn start() -> WallClock {
+        WallClock { t0: Instant::now() }
+    }
+
+    /// Seconds elapsed since [`WallClock::start`].
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// Measure wall time of `f` in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let c = WallClock::start();
+    let v = f();
+    let s = c.elapsed_s();
+    (v, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value_and_positive_time() {
+        let (v, t) = time_it(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn wall_clock_is_monotonic_nonnegative() {
+        let c = WallClock::start();
+        let a = c.elapsed_s();
+        let b = c.elapsed_s();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+}

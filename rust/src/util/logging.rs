@@ -1,61 +1,96 @@
-//! Leveled stderr logger implementing the `log` facade.
+//! Leveled stderr logger (no external `log` facade — the offline image
+//! carries no crates beyond the Cargo.toml baseline).
 //!
-//! `HFLOP_LOG=debug|info|warn|error` controls verbosity (default info).
-//! Timestamps are seconds since logger init — wall-clock formatting is
-//! irrelevant for experiment logs, monotonic offsets are what you diff.
+//! `HFLOP_LOG=trace|debug|info|warn|error|off` controls verbosity
+//! (default info). Timestamps are seconds since logger init —
+//! wall-clock formatting is irrelevant for experiment logs, monotonic
+//! offsets are what you diff. Emit lines with [`log_at`] or the
+//! [`crate::log_info!`] / [`crate::log_warn!`] macros.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
-use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::OnceCell;
+use crate::util::clock::WallClock;
 
-static START: OnceCell<Instant> = OnceCell::new();
-static INSTALLED: AtomicBool = AtomicBool::new(false);
-
-struct StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
-        let lvl = match record.level() {
-            Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
-            Level::Debug => "DEBUG",
-            Level::Trace => "TRACE",
-        };
-        eprintln!("[{t:10.3}] {lvl} {}: {}", record.target(), record.args());
-    }
-
-    fn flush(&self) {}
+/// Message severity, ordered from most to least verbose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Trace => "TRACE",
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        }
+    }
+}
+
+/// Numeric filter: messages with `level as u8 >= FILTER` are emitted;
+/// `OFF` silences everything.
+const OFF: u8 = 5;
+static FILTER: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<WallClock> = OnceLock::new();
 
 /// Install the logger (idempotent). Level from `HFLOP_LOG` env var.
 pub fn init() {
-    if INSTALLED.swap(true, Ordering::SeqCst) {
+    START.get_or_init(WallClock::start);
+    let filter = match std::env::var("HFLOP_LOG").as_deref() {
+        Ok("trace") => Level::Trace as u8,
+        Ok("debug") => Level::Debug as u8,
+        Ok("warn") => Level::Warn as u8,
+        Ok("error") => Level::Error as u8,
+        Ok("off") => OFF,
+        _ => Level::Info as u8,
+    };
+    FILTER.store(filter, Ordering::SeqCst);
+}
+
+/// True when `level` passes the current filter.
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= FILTER.load(Ordering::SeqCst)
+}
+
+/// Emit one line at `level`; called by the `log_*` macros. `init()` need
+/// not have run — messages then carry a 0.000 offset and default filter.
+pub fn log_at(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
         return;
     }
-    START.get_or_init(Instant::now);
-    let level = match std::env::var("HFLOP_LOG").as_deref() {
-        Ok("trace") => LevelFilter::Trace,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("error") => LevelFilter::Error,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Info,
+    let t = START.get().map(|c| c.elapsed_s()).unwrap_or(0.0);
+    eprintln!("[{t:10.3}] {} {target}: {args}", level.tag());
+}
+
+/// Emit an info-level log line, `format!`-style.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log_at(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
     };
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+}
+
+/// Emit a warn-level log line, `format!`-style.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log_at(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
@@ -63,10 +98,23 @@ mod tests {
     use super::*;
 
     #[test]
-    fn init_is_idempotent() {
+    fn init_is_idempotent_and_filters() {
         init();
         init();
-        log::info!("logging smoke test");
-        assert!(INSTALLED.load(Ordering::SeqCst));
+        // Default filter is info: warn passes, trace does not (unless the
+        // environment overrides HFLOP_LOG, in which case skip the check).
+        if std::env::var("HFLOP_LOG").is_err() {
+            assert!(enabled(Level::Warn));
+            assert!(!enabled(Level::Trace));
+        }
+        crate::log_info!("logging smoke test {}", 42);
+    }
+
+    #[test]
+    fn level_order_matches_severity() {
+        assert!(Level::Trace < Level::Debug);
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
     }
 }

@@ -3,6 +3,7 @@
 //! statistics, a scoped worker pool, TOML-subset configs, logging, and a
 //! tiny bench timer.
 
+pub mod clock;
 pub mod json;
 pub mod logging;
 pub mod pool;
@@ -10,14 +11,7 @@ pub mod rng;
 pub mod stats;
 pub mod tomlmini;
 
-use std::time::Instant;
-
-/// Measure wall time of `f` in seconds.
-pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
-    let t0 = Instant::now();
-    let v = f();
-    (v, t0.elapsed().as_secs_f64())
-}
+pub use clock::{time_it, WallClock};
 
 /// CI smoke mode: `HFLOP_BENCH_SMOKE=1` asks every harness — benches
 /// *and* registry experiments — to shrink its workload so workflows can
@@ -34,9 +28,9 @@ pub fn smoke_mode() -> bool {
 #[cfg(test)]
 mod tests {
     #[test]
-    fn time_it_returns_value_and_positive_time() {
-        let (v, t) = super::time_it(|| (0..1000).sum::<u64>());
-        assert_eq!(v, 499500);
-        assert!(t >= 0.0);
+    fn smoke_mode_reads_env_shape() {
+        // Only shape-check the predicate (env mutation in tests races);
+        // the CI workflows exercise the =1 path for real.
+        let _ = super::smoke_mode();
     }
 }

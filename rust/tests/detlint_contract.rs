@@ -1,0 +1,95 @@
+//! Table-drift guard (same pattern as `registry_contract.rs` for §5):
+//! DESIGN.md §9, `rust/lint.toml`, and `analysis::rules::NAMES` must
+//! mirror each other exactly. Every zone in the manifest needs a doc row
+//! in the §9 zone table, every rule needs a doc row in the §9 rule
+//! table, and vice versa — so neither the docs nor the manifest can
+//! silently rot as rules or zones are added, renamed, or dropped.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use hflop::analysis::{rules, LintManifest, Severity};
+
+fn design_md() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../DESIGN.md");
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+/// The §9 section body (from its header to the next `## §` or EOF).
+fn section9(text: &str) -> &str {
+    let start = text.find("## §9").expect("DESIGN.md lost its §9 header");
+    let rest = &text[start..];
+    let end = rest[5..].find("\n## §").map(|i| i + 5).unwrap_or(rest.len());
+    &rest[..end]
+}
+
+/// Backticked first cells of the §9 table body rows (`| \`name\` | ... |`) —
+/// the union of the zone table and the rule table.
+fn documented_cells(sec: &str) -> BTreeSet<String> {
+    sec.lines()
+        .filter_map(|line| {
+            let line = line.trim();
+            let rest = line.strip_prefix("| `")?;
+            let name = rest.split('`').next()?;
+            Some(name.to_string())
+        })
+        .collect()
+}
+
+fn manifest() -> LintManifest {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("lint.toml");
+    LintManifest::load(&path).expect("parse rust/lint.toml")
+}
+
+#[test]
+fn design_section9_mirrors_manifest_zones_and_rule_set() {
+    let text = design_md();
+    let documented = documented_cells(section9(&text));
+    let m = manifest();
+
+    let mut expected: BTreeSet<String> = m.zones.iter().cloned().collect();
+    expected.extend(rules::names().iter().map(|s| s.to_string()));
+
+    let undocumented: Vec<&String> = expected.difference(&documented).collect();
+    assert!(
+        undocumented.is_empty(),
+        "zones/rules missing from the DESIGN.md §9 tables: {undocumented:?}"
+    );
+    let stale: Vec<&String> = documented.difference(&expected).collect();
+    assert!(
+        stale.is_empty(),
+        "DESIGN.md §9 documents zones/rules that no longer exist: {stale:?}"
+    );
+    // Zone names and rule names must not collide, or the two tables
+    // would be ambiguous to this guard.
+    assert_eq!(documented.len(), m.zones.len() + rules::names().len());
+}
+
+#[test]
+fn manifest_covers_every_rule_and_stays_deny() {
+    let m = manifest();
+    // The committed policy: every rule is deny severity. Loosening one
+    // to warn/allow is a deliberate contract change — update §9 and
+    // this test together.
+    for rule in rules::names() {
+        assert_eq!(
+            m.severity_of(rule),
+            Severity::Deny,
+            "lint.toml severity for '{rule}' is no longer deny"
+        );
+    }
+}
+
+#[test]
+fn design_section9_documents_the_oracle_exclusion_and_escape_hatch() {
+    let text = design_md();
+    let sec = section9(&text);
+    for needle in ["sim/oracle.rs", "detlint: allow(", "hflop lint", "util::clock"] {
+        assert!(sec.contains(needle), "DESIGN.md §9 no longer mentions '{needle}'");
+    }
+    // The manifest's exclusion list and the §9 prose must agree.
+    let m = manifest();
+    for ex in &m.exclude {
+        assert!(sec.contains(ex.as_str()), "§9 does not mention exclusion '{ex}'");
+    }
+}

@@ -1,0 +1,197 @@
+//! Fixture tests for the detlint analysis pass (`hflop lint`).
+//!
+//! Each fixture is a small Rust snippet fed straight through
+//! [`hflop::analysis::rules::scan`]; the assertions pin which rules
+//! fire, where (line:col), and which escape hatches are honoured. The
+//! final test runs the real manifest over the real source tree — the
+//! same scan `hflop lint` performs — and requires zero deny findings,
+//! so a regression in any deterministic zone fails `cargo test` before
+//! it ever reaches CI.
+
+use std::path::Path;
+
+use hflop::analysis::rules::scan;
+use hflop::analysis::{lint_tree, LintManifest};
+
+/// The rule names that fired, in reported (line, col) order.
+fn rules_of(src: &str) -> Vec<&'static str> {
+    scan(src).into_iter().map(|f| f.rule).collect()
+}
+
+// ---- wall-clock -----------------------------------------------------------
+
+#[test]
+fn wall_clock_instant_and_systemtime_flagged() {
+    let src = "fn f() { let t = std::time::Instant::now(); }\n\
+               fn g() { let s = std::time::SystemTime::now(); }\n";
+    assert_eq!(rules_of(src), ["wall-clock", "wall-clock"]);
+}
+
+#[test]
+fn wall_clock_allow_directive_suppresses() {
+    let src = "// detlint: allow(wall-clock) -- sanctioned measurement shim\n\
+               fn f() { let t = std::time::Instant::now(); }\n";
+    assert!(rules_of(src).is_empty(), "allow on previous line must suppress");
+
+    let inline = "fn f() { let t = std::time::Instant::now(); } \
+                  // detlint: allow(wall-clock) -- same-line escape\n";
+    assert!(rules_of(inline).is_empty(), "same-line allow must suppress");
+}
+
+#[test]
+fn wall_clock_clean_code_passes() {
+    let src = "fn f() { let clock = crate::util::WallClock::start(); \
+               let dt = clock.elapsed_s(); }\n";
+    assert!(rules_of(src).is_empty());
+}
+
+// ---- hash-iteration -------------------------------------------------------
+
+#[test]
+fn hash_containers_flagged_with_position() {
+    let src = "use std::collections::HashMap;\n\
+               fn f() { let m: HashMap<u64, f64> = HashMap::new(); }\n";
+    let found = scan(src);
+    assert_eq!(found.len(), 3, "one per HashMap mention: {found:?}");
+    assert!(found.iter().all(|f| f.rule == "hash-iteration"));
+    // `HashMap` in line 1 starts at column 23 (1-based).
+    assert_eq!((found[0].line, found[0].col), (1, 23));
+}
+
+#[test]
+fn hash_mention_in_comment_or_string_not_flagged() {
+    let src = "// HashMap iteration order is why we use BTreeMap here\n\
+               fn f() -> &'static str { \"HashMap HashSet Instant thread_rng\" }\n";
+    assert!(rules_of(src).is_empty(), "comments and strings are opaque");
+}
+
+#[test]
+fn hash_container_in_cfg_test_not_flagged() {
+    let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashSet;\n\
+               \n    fn scratch() { let s: HashSet<u32> = HashSet::new(); }\n}\n";
+    assert!(rules_of(src).is_empty(), "test-only code may use hash containers");
+    // ...but cfg(not(test)) is production code and stays in scope.
+    let prod = "#[cfg(not(test))]\nfn f() { let s = std::collections::HashSet::<u32>::new(); }\n";
+    assert_eq!(rules_of(prod), ["hash-iteration"]);
+}
+
+// ---- float-partial-cmp ----------------------------------------------------
+
+#[test]
+fn partial_cmp_comparator_flagged_but_trait_impl_exempt() {
+    let bad = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+    assert_eq!(rules_of(bad), ["float-partial-cmp"]);
+
+    let exempt = "impl PartialOrd for Node {\n\
+                      fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n\
+                          Some(self.cmp(other))\n    }\n}\n";
+    assert!(rules_of(exempt).is_empty(), "a PartialOrd impl is not a comparator");
+
+    let clean = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.total_cmp(b)); }\n";
+    assert!(rules_of(clean).is_empty());
+}
+
+// ---- unseeded-rng ---------------------------------------------------------
+
+#[test]
+fn unseeded_rng_sources_flagged() {
+    let src = "fn f() { let mut r = thread_rng(); }\n\
+               fn g() { let r = SmallRng::from_entropy(); }\n\
+               fn h() { let v: u64 = rand::random(); }\n\
+               fn k() { let r = StdRng::default(); }\n";
+    assert_eq!(
+        rules_of(src),
+        ["unseeded-rng", "unseeded-rng", "unseeded-rng", "unseeded-rng"]
+    );
+}
+
+#[test]
+fn seeded_rng_and_unrelated_default_pass() {
+    let src = "fn f() { let r = crate::util::rng::Rng::new(42); }\n\
+               fn g() { let o: Options = Options::default(); }\n\
+               fn h(m: &Map) { let v = m.random_field; }\n";
+    assert!(rules_of(src).is_empty());
+}
+
+// ---- float-cast -----------------------------------------------------------
+
+#[test]
+fn unguarded_float_to_usize_cast_flagged() {
+    let bad = "fn f(q: f64) -> usize { q.floor() as usize }\n";
+    assert_eq!(rules_of(bad), ["float-cast"]);
+
+    let bad2 = "fn f(n: usize, frac: f64) -> usize { (n as f64 * frac).ceil() as usize }\n";
+    assert_eq!(rules_of(bad2), ["float-cast"]);
+}
+
+#[test]
+fn guarded_or_integer_casts_pass() {
+    let src = "fn f(q: f64) -> usize { q.floor().max(0.0) as usize }\n\
+               fn g(q: f64, n: usize) -> usize { (q.clamp(0.0, n as f64)) as usize }\n\
+               fn h(x: u32) -> usize { x as usize }\n\
+               fn k(m: u128) -> usize { (m >> 64) as usize }\n";
+    assert!(rules_of(src).is_empty());
+}
+
+// ---- malformed-allow ------------------------------------------------------
+
+#[test]
+fn malformed_allow_directives_are_findings() {
+    // Missing the `-- reason` justification.
+    let no_reason = "// detlint: allow(wall-clock)\n\
+                     fn f() { let t = std::time::Instant::now(); }\n";
+    let rules = rules_of(no_reason);
+    assert!(rules.contains(&"malformed-allow"), "missing reason: {rules:?}");
+    assert!(rules.contains(&"wall-clock"), "broken directive must not suppress");
+
+    // Missing the rule name entirely.
+    let no_rule = "// detlint: please ignore this one\nfn f() {}\n";
+    assert_eq!(rules_of(no_rule), ["malformed-allow"]);
+}
+
+#[test]
+fn allow_for_wrong_rule_or_stale_line_does_not_suppress() {
+    let wrong_rule = "// detlint: allow(hash-iteration) -- wrong rule\n\
+                      fn f() { let t = std::time::Instant::now(); }\n";
+    assert_eq!(rules_of(wrong_rule), ["wall-clock"]);
+
+    let too_far = "// detlint: allow(wall-clock) -- two lines above the finding\n\
+                   fn unrelated() {}\n\
+                   fn f() { let t = std::time::Instant::now(); }\n";
+    assert_eq!(rules_of(too_far), ["wall-clock"], "allows reach one line, not two");
+}
+
+// ---- positions ------------------------------------------------------------
+
+#[test]
+fn findings_report_one_based_line_and_col() {
+    let src = "\n\nfn f() {\n    let t = Instant::now();\n}\n";
+    let found = scan(src);
+    assert_eq!(found.len(), 1);
+    // `Instant` sits on line 4, column 13 (1-based, after 4 spaces + `let t = `).
+    assert_eq!((found[0].line, found[0].col), (4, 13), "{found:?}");
+}
+
+// ---- the real tree --------------------------------------------------------
+
+/// The acceptance gate: the committed manifest over the committed source
+/// tree has zero deny-severity findings. This is exactly what
+/// `hflop lint` runs, so this test green means the CI lint job's detlint
+/// step is green too.
+#[test]
+fn self_scan_real_tree_has_zero_deny_findings() {
+    let base = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let manifest = LintManifest::load(&base.join("lint.toml")).expect("parse rust/lint.toml");
+    let report = lint_tree(&manifest, base).expect("walk rust/src");
+    assert!(
+        report.files_in_zones >= 20,
+        "zone walk looks truncated: only {} files in zones",
+        report.files_in_zones
+    );
+    assert_eq!(
+        report.deny_count(),
+        0,
+        "deny findings on the committed tree:\n{}",
+        report.render()
+    );
+}

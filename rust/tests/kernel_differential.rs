@@ -172,9 +172,54 @@ fn differential_run(seed: u64, n_ops: usize) {
 fn calendar_kernel_matches_heap_oracle_over_random_ops() {
     // ~10k ops per seed; several seeds so clustered/far-future mixtures,
     // re-anchors and growth rebuilds all get distinct interleavings.
-    for seed in [1, 2026, 0xC0FFEE] {
-        differential_run(seed, 10_000);
+    // Smoke mode (the nightly Miri job runs this test under the
+    // interpreter at ~100x slowdown) trims to one seed and ~1k ops —
+    // still enough to cross bucket-growth and re-anchor paths.
+    let (seeds, n_ops): (&[u64], usize) = if hflop::util::smoke_mode() {
+        (&[1], 1_000)
+    } else {
+        (&[1, 2026, 0xC0FFEE], 10_000)
+    };
+    for &seed in seeds {
+        differential_run(seed, n_ops);
     }
+}
+
+#[test]
+fn calendar_kernel_matches_heap_oracle_with_many_distinct_tags() {
+    // PR 7 moved the kernel's tag-generation table from HashMap to
+    // BTreeMap; a wide tag universe (every schedule under its own tag,
+    // interleaved invalidations) exercises the converted paths well past
+    // the 4-tag rotation of the main differential stream.
+    let mut rng = Rng::new(31);
+    let mut new = Kernel::new();
+    let mut old = HeapKernel::new();
+    let n = if hflop::util::smoke_mode() { 400u64 } else { 2_000u64 };
+    for i in 0..n {
+        let t = (rng.below(64) as f64) * 0.125;
+        new.schedule_tagged(t, i, i as u32);
+        old.schedule_tagged(t, i, i as u32);
+        if rng.chance(0.2) {
+            let tag = rng.below(i as usize + 1) as u64;
+            assert_eq!(new.invalidate_tag(tag), old.invalidate_tag(tag), "tag {tag}");
+            assert_eq!(new.generation(tag), old.generation(tag));
+        }
+        if rng.chance(0.25) {
+            let a = new.next().map(|(t, e)| (t.to_bits(), e));
+            let b = old.next().map(|(t, e)| (t.to_bits(), e));
+            assert_eq!(a, b);
+        }
+    }
+    loop {
+        let a = new.next().map(|(t, e)| (t.to_bits(), e));
+        let b = old.next().map(|(t, e)| (t.to_bits(), e));
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+    assert_eq!(new.processed(), old.processed());
+    assert_eq!(new.cancelled_count(), old.cancelled_count());
 }
 
 #[test]

@@ -27,11 +27,14 @@ fn batcher_results_match_direct_predict() {
     let windows: Vec<Vec<f32>> = (0..13)
         .map(|_| (0..seq).map(|_| rng.normal() as f32).collect())
         .collect();
+    // Deterministic caller clock: one tick per submission.
     let mut results = Vec::new();
     for (i, w) in windows.iter().enumerate() {
-        results.extend(server.submit(InferenceRequest { id: i as u64, window: w.clone() }).unwrap());
+        let now_s = i as f64 * 1e-3;
+        results
+            .extend(server.submit(InferenceRequest { id: i as u64, window: w.clone() }, now_s).unwrap());
     }
-    results.extend(server.flush().unwrap());
+    results.extend(server.flush(13.0 * 1e-3).unwrap());
     assert_eq!(results.len(), 13);
 
     for (id, pred) in results {
@@ -58,15 +61,47 @@ fn batcher_param_update_changes_predictions() {
     let mut server = BatchingServer::new(&engine, params.clone());
     let window: Vec<f32> = (0..seq).map(|i| i as f32 * 0.1).collect();
 
-    server.submit(InferenceRequest { id: 0, window: window.clone() }).unwrap();
-    let before = server.flush().unwrap()[0].1;
+    server.submit(InferenceRequest { id: 0, window: window.clone() }, 0.0).unwrap();
+    let before = server.flush(0.001).unwrap()[0].1;
 
     // New model version (e.g. after a global round): all-zero params.
     server.update_params(vec![0.0; params.len()]);
-    server.submit(InferenceRequest { id: 1, window }).unwrap();
-    let after = server.flush().unwrap()[0].1;
+    server.submit(InferenceRequest { id: 1, window }, 0.002).unwrap();
+    let after = server.flush(0.003).unwrap()[0].1;
     assert_ne!(before, after);
     assert!(after.abs() < 1e-6, "zero model must predict 0, got {after}");
+}
+
+#[test]
+fn queue_latency_bit_identical_on_virtual_clock() {
+    // The satellite fix for the old wall-clock batcher: with submit/flush
+    // driven by a caller-supplied clock, request_ms is a pure function of
+    // the inputs and must not drift between runs.
+    let Some(manifest) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let run = || {
+        let engine = Engine::new(&manifest, "small", Preload::Serving).unwrap();
+        let params = manifest.load_init_params(engine.variant()).unwrap();
+        let seq = engine.variant().seq_len;
+        let mut server = BatchingServer::new(&engine, params);
+        let mut rng = Rng::new(7);
+        for id in 0..13u64 {
+            let w: Vec<f32> = (0..seq).map(|_| rng.normal() as f32).collect();
+            server.submit(InferenceRequest { id, window: w }, id as f64 * 0.25).unwrap();
+        }
+        server.flush(4.0).unwrap();
+        (server.stats.request_ms.mean(), server.stats.requests)
+    };
+    let (mean_a, n_a) = run();
+    let (mean_b, n_b) = run();
+    assert_eq!(n_a, n_b);
+    assert_eq!(
+        mean_a.to_bits(),
+        mean_b.to_bits(),
+        "virtual-clock queue latency must be bit-identical across runs"
+    );
 }
 
 #[test]

@@ -1,19 +1,16 @@
 //! Source-level regression guard: PR 1 swept the solver stack's sorts
 //! onto `f64::total_cmp`, and PR 3 fixed the last straggler in
-//! `solver/lp.rs`. This test greps the solver sources so a NaN-unsafe
-//! comparator (`partial_cmp(..).unwrap()` inside a sort/min/max) cannot
-//! silently come back: `partial_cmp` returns `None` on NaN, and the
-//! unwrap turns one poisoned cost into a panic mid-solve.
+//! `solver/lp.rs`. PR 7 replaced the original grep scan with the
+//! detlint analyzer — the token-level `float-partial-cmp` rule knows
+//! the one legitimate mention (`fn partial_cmp` inside a `PartialOrd`
+//! impl, e.g. `solver::bb`'s heap entry) from a NaN-unsafe comparator:
+//! `partial_cmp` returns `None` on NaN, and the customary `.unwrap()`
+//! turns one poisoned cost into a panic mid-solve.
 
 use std::fs;
 use std::path::Path;
 
-/// Lines that may legitimately mention `partial_cmp`: a `PartialOrd`
-/// impl forwarding to a total order (e.g. `solver::bb`'s heap entry).
-fn is_allowed(line: &str) -> bool {
-    let t = line.trim_start();
-    t.starts_with("//") || t.starts_with("fn partial_cmp(")
-}
+use hflop::analysis::rules::scan;
 
 #[test]
 fn no_partial_cmp_comparators_in_solver_sources() {
@@ -27,13 +24,11 @@ fn no_partial_cmp_comparators_in_solver_sources() {
         }
         scanned += 1;
         let text = fs::read_to_string(&path).expect("read solver source");
-        for (lineno, line) in text.lines().enumerate() {
-            if !line.contains("partial_cmp") || is_allowed(line) {
-                continue;
+        for f in scan(&text) {
+            if f.rule != "float-partial-cmp" {
+                continue; // the other zone rules are covered by the self-scan
             }
-            // A comparator built from partial_cmp — whether in sort_by,
-            // max_by, min_by or a hand-rolled closure — is the NaN hazard.
-            offenders.push(format!("{}:{}: {}", path.display(), lineno + 1, line.trim()));
+            offenders.push(format!("{}:{}:{}: {}", path.display(), f.line, f.col, f.note));
         }
     }
     assert!(scanned >= 5, "expected the solver module tree, found {scanned} files");
