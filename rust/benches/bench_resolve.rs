@@ -1,0 +1,142 @@
+//! Bench: warm-start re-orchestration (ISSUE 9) — cold vs warm vs
+//! cache-hit re-solves/sec under a fault-churn + surge workload, plus
+//! the warm-vs-cold cost gap per scale point. Writes the
+//! schema-versioned `BENCH_resolve.json` artifact that CI uploads on
+//! every run (BENCHMARKS.md tracks the trajectory).
+
+mod bench_common;
+use bench_common::{bench, header, smoke};
+
+use hflop::hflop::{Instance, InstanceBuilder};
+use hflop::metrics::export::SCHEMA_VERSION;
+use hflop::solver::{resolve, solve, DirtySet, SolveCache, SolveOptions};
+use hflop::util::json::Json;
+
+/// One re-orchestration trigger: the churned instance plus the dirty
+/// rows/columns the churn touched.
+struct ChurnStep {
+    inst: Instance,
+    dirty: DirtySet,
+}
+
+/// Deterministic fault-churn + surge schedule: rotate a dead edge,
+/// squeeze its neighbor, and every fourth step surge a fifth of the
+/// devices. Each step churns the *base* instance — the installed-plan
+/// repair pattern the control plane runs per trigger.
+fn churn_steps(base: &Instance, steps: usize) -> Vec<ChurnStep> {
+    let (n, m) = (base.n(), base.m());
+    let mut out = Vec::new();
+    for k in 0..steps {
+        let mut inst = base.clone();
+        let dead = k % m;
+        let squeezed = (dead + 1) % m;
+        inst.r[dead] = 0.0;
+        inst.r[squeezed] *= 0.7;
+        let mut rows = Vec::new();
+        if k % 4 == 3 {
+            for i in 0..n {
+                if i % 5 == k % 5 {
+                    inst.lambda[i] *= 1.8;
+                    rows.push(i);
+                }
+            }
+        }
+        inst.meta = Default::default();
+        let mut cols = vec![dead, squeezed];
+        cols.sort_unstable();
+        out.push(ChurnStep { inst, dirty: DirtySet { rows, cols } });
+    }
+    out
+}
+
+fn main() {
+    let smoke = smoke();
+
+    header("Warm-start re-orchestration: cold vs warm vs cache-hit re-solves");
+    let points: &[(usize, usize, usize)] = if smoke {
+        &[(120, 6, 4)]
+    } else {
+        // (n, m, churn steps); n=2000 is the acceptance-criteria point.
+        &[(500, 12, 16), (2000, 24, 16)]
+    };
+    let iters = if smoke { 1 } else { 3 };
+
+    let mut points_json = Vec::new();
+    for &(n, m, raw_steps) in points {
+        let opts = SolveOptions::heuristic();
+        let base = InstanceBuilder::random(n, m, 7).t_min(n * 3 / 4).build();
+        let prev = solve(&base, &opts).expect("base instance solves");
+        // Keep only steps whose cold solve is feasible so every measured
+        // path does identical work per step.
+        let mut steps = churn_steps(&base, raw_steps);
+        steps.retain(|s| solve(&s.inst, &opts).is_ok());
+        assert!(!steps.is_empty(), "every churn step went infeasible at n={n}");
+        if steps.len() < raw_steps {
+            println!("  (n={n}: kept {}/{raw_steps} feasible churn steps)", steps.len());
+        }
+
+        let cold_r = bench(&format!("resolve/cold n={n} m={m}"), iters, || {
+            for s in &steps {
+                std::hint::black_box(solve(&s.inst, &opts).expect("cold solve"));
+            }
+        });
+        let warm_r = bench(&format!("resolve/warm n={n} m={m}"), iters, || {
+            for s in &steps {
+                std::hint::black_box(
+                    resolve(&s.inst, &prev, &s.dirty, &opts).expect("warm repair"),
+                );
+            }
+        });
+        // Cache hits: pre-warm one entry, then measure pure lookups
+        // (including the content hash — the honest per-trigger cost).
+        let mut cache = SolveCache::new(8);
+        cache.solve(&base, &opts).expect("prime the cache");
+        let hit_r = bench(&format!("resolve/cache-hit n={n} m={m}"), iters, || {
+            for _ in 0..steps.len() {
+                std::hint::black_box(cache.solve(&base, &opts).expect("cache hit"));
+            }
+        });
+        assert!(cache.hits() > 0, "cache never hit");
+
+        // Cost gap, outside the timed loops.
+        let mut gaps = Vec::new();
+        for s in &steps {
+            let cold = solve(&s.inst, &opts).expect("cold solve");
+            let warm = resolve(&s.inst, &prev, &s.dirty, &opts).expect("warm repair");
+            gaps.push(warm.cost / cold.cost);
+        }
+        let mean_gap = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let max_gap = gaps.iter().fold(0.0f64, |a, &b| a.max(b));
+
+        let per_s = |r: &bench_common::BenchResult| steps.len() as f64 / r.mean_s;
+        let warm_speedup = per_s(&warm_r) / per_s(&cold_r);
+        println!(
+            "  -> n={n}: warm {:.1}x cold, cost gap mean {mean_gap:.4} max {max_gap:.4}",
+            warm_speedup
+        );
+
+        points_json.push(Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("m", Json::Num(m as f64)),
+            ("steps", Json::Num(steps.len() as f64)),
+            ("cold_per_s", Json::Num(per_s(&cold_r))),
+            ("warm_per_s", Json::Num(per_s(&warm_r))),
+            ("cache_hit_per_s", Json::Num(per_s(&hit_r))),
+            ("warm_speedup", Json::Num(warm_speedup)),
+            ("mean_cost_gap", Json::Num(mean_gap)),
+            ("max_cost_gap", Json::Num(max_gap)),
+        ]));
+    }
+
+    let artifact = Json::obj(vec![
+        ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("points", Json::Arr(points_json)),
+        (
+            "note",
+            Json::Str("cold vs warm vs cache-hit re-solve throughput; see BENCHMARKS.md".into()),
+        ),
+    ]);
+    std::fs::write("BENCH_resolve.json", artifact.to_pretty()).expect("write BENCH_resolve.json");
+    println!("  -> wrote BENCH_resolve.json");
+}

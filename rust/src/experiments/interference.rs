@@ -39,7 +39,7 @@ use crate::metrics::cost::hfl_bytes;
 use crate::metrics::export::ascii_table;
 use crate::orchestrator::{
     DeploymentPlan, Gpo, InferenceController, InferenceCtlConfig, LearningController,
-    LearningCtlConfig,
+    LearningCtlConfig, ResolveStrategy,
 };
 use crate::sim::Kernel;
 use crate::solver::{LocalSearchOptions, LsMode, Mode, SolveOptions};
@@ -98,6 +98,9 @@ pub struct InterferenceConfig {
     /// Solver options for the control plane's re-solves (the sweep
     /// engine's `LsMode` axis plugs in here).
     pub solve: SolveOptions,
+    /// Re-solve strategy for the control plane (the sweep engine's
+    /// `resolve_strategy` axis); `Full` is the legacy cold-solve path.
+    pub resolve: ResolveStrategy,
     /// Arrival generation. With an open-loop [`ArrivalModel::Trace`],
     /// preset surge faults are folded into the trace as overlays (the
     /// trace owns the λ timeline) instead of multiplier pokes.
@@ -122,6 +125,7 @@ impl Default for InterferenceConfig {
             epochs: 5,
             model_bytes: 4 * 65_536,
             solve: SolveOptions::auto(),
+            resolve: ResolveStrategy::Full,
             arrivals: ArrivalModel::PerDevicePoisson,
             seed: 7,
             record_trace: false,
@@ -218,12 +222,13 @@ pub fn run_with_kernel(
     let mut learning = LearningController::new(LearningCtlConfig {
         l: sc.cfg.l,
         solve: cfg.solve.clone(),
+        strategy: cfg.resolve,
         ..Default::default()
     });
     for (dev, &l) in lambdas.iter().enumerate() {
         learning.set_lambda(dev, l);
     }
-    learning.current_plan = Some(DeploymentPlan {
+    learning.seed_plan(DeploymentPlan {
         assignment: sc.assign_hflop.clone(),
         edge_ids: (0..m).collect(),
         device_ids: (0..n).collect(),
@@ -372,6 +377,11 @@ const SCHEMA: &[ParamSpec] = &[
         help: "control-plane re-solve engine: auto|completion|incremental",
     },
     ParamSpec {
+        key: "resolve_strategy",
+        default: ParamDefault::Str("full"),
+        help: "control-plane re-solve strategy: full|warm|auto",
+    },
+    ParamSpec {
         key: "trace",
         default: ParamDefault::Str("none"),
         help: "open-loop arrival trace: none|constant|diurnal|flash-crowd|hotspot",
@@ -422,6 +432,7 @@ fn config_from(
         lambda_scale: ctx.params.f64("lambda_scale")?,
         model_bytes: ctx.params.usize("model_bytes")?,
         solve: solve_from_ls_mode(&ctx.params.str("ls_mode")?)?,
+        resolve: ResolveStrategy::parse(&ctx.params.str("resolve_strategy")?)?,
         arrivals: ArrivalModel::from_named(
             &ctx.params.str("trace")?,
             ctx.params.f64("trace_peak")?,

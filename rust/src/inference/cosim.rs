@@ -960,6 +960,12 @@ pub struct CoSimOutcome {
     pub rounds_completed: usize,
     pub plan_swaps: usize,
     pub reclusters: usize,
+    /// Plans produced by a warm-start repair instead of a cold solve
+    /// (0 under the default `ResolveStrategy::Full`).
+    pub warm_resolves: usize,
+    /// Triggers answered from the solve cache or the GPO epoch
+    /// short-circuit (0 under `ResolveStrategy::Full`).
+    pub cache_hits: usize,
     pub retrain_triggers: usize,
     pub resolve_failures: usize,
     pub events_processed: u64,
@@ -1153,6 +1159,12 @@ impl CoSim {
             rounds_completed: self.training.rounds_completed,
             plan_swaps: self.shared.plan_swaps,
             reclusters: self.control.as_ref().map(|c| c.learning.reclusters).unwrap_or(0),
+            warm_resolves: self.control.as_ref().map(|c| c.learning.warm_resolves).unwrap_or(0),
+            cache_hits: self
+                .control
+                .as_ref()
+                .map(|c| c.learning.cache_hits + c.learning.epoch_hits)
+                .unwrap_or(0),
             retrain_triggers: self.control.as_ref().map(|c| c.retrain_triggers).unwrap_or(0),
             resolve_failures: self.control.as_ref().map(|c| c.resolve_failures).unwrap_or(0),
             events_processed: self.kernel.processed(),
@@ -1194,7 +1206,7 @@ pub fn run_cell_reusing(
 mod tests {
     use super::*;
     use crate::inference::simulation::simulate;
-    use crate::orchestrator::{InferenceCtlConfig, LearningCtlConfig};
+    use crate::orchestrator::{InferenceCtlConfig, LearningCtlConfig, ResolveStrategy};
     use crate::topology::GeoPoint;
 
     fn serving_cfg(
@@ -1641,5 +1653,59 @@ mod tests {
         assert_eq!(fresh.serving.samples, reused.serving.samples);
         assert_eq!(fresh.events_processed, reused.events_processed);
         assert_eq!(fresh.events_cancelled, reused.events_cancelled);
+    }
+
+    #[test]
+    fn failed_resolve_keeps_stale_plan_and_serving_alive() {
+        // Both edges die: the second failure's re-solve has no ready
+        // edge host left, so it errs, `resolve_failures` ticks, and the
+        // stale plan stays installed — no deployment is applied after
+        // the blackout — while serving keeps absorbing arrivals
+        // (degraded, via the cloud paths).
+        let faults = vec![(20.0, FaultEvent::EdgeFail(0)), (25.0, FaultEvent::EdgeFail(1))];
+        let out = run_cell(one_round_on_edge0(60.0, faults), Some(two_edge_control(1.0)));
+        assert!(out.resolve_failures >= 1, "no failed re-solve: {:?}", out.gpo_events);
+        let second_fail = out
+            .gpo_events
+            .iter()
+            .position(|e| e == "edge 1 failed")
+            .expect("second failure not logged");
+        let last_applied = out
+            .gpo_events
+            .iter()
+            .rposition(|e| e.starts_with("applied"))
+            .expect("no plan was ever installed");
+        assert!(
+            last_applied < second_fail,
+            "a plan was installed after the blackout: {:?}",
+            out.gpo_events
+        );
+        assert!(out.serving.total() > 0, "serving died with the edges");
+    }
+
+    #[test]
+    fn warm_strategy_cosim_is_deterministic_and_engages() {
+        let control = || {
+            let mut c = two_edge_control(1.0);
+            c.learning.config.strategy = ResolveStrategy::WarmStart;
+            c
+        };
+        let faults =
+            || vec![(20.0, FaultEvent::EdgeFail(0)), (40.0, FaultEvent::EdgeRecover(0))];
+        let a = run_cell(one_round_on_edge0(80.0, faults()), Some(control()));
+        let b = run_cell(one_round_on_edge0(80.0, faults()), Some(control()));
+        assert_eq!(a.gpo_events, b.gpo_events);
+        assert_eq!(a.plan_swaps, b.plan_swaps);
+        assert_eq!(a.reclusters, b.reclusters);
+        assert_eq!(a.warm_resolves, b.warm_resolves);
+        assert_eq!(a.cache_hits, b.cache_hits);
+        assert_eq!(a.serving.samples, b.serving.samples);
+        assert!(
+            a.warm_resolves + a.cache_hits >= 1,
+            "warm machinery never engaged: warm={} cache={}",
+            a.warm_resolves,
+            a.cache_hits
+        );
+        assert_eq!(a.resolve_failures, b.resolve_failures);
     }
 }

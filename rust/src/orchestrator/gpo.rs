@@ -6,7 +6,7 @@
 //! same interface in-process, plus fault injection for re-clustering
 //! tests.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::topology::GeoPoint;
 
@@ -42,13 +42,21 @@ pub enum Deployment {
     InferenceAgent { node_id: usize, kind: NodeKind },
 }
 
-/// The GPO mock: inventory + deployment ledger + event log.
+/// The GPO mock: inventory + deployment ledger + event log, with
+/// epoch-stamped dirty tracking for warm-start re-orchestration
+/// (DESIGN.md §10). The epoch bumps on every *effective* inventory
+/// mutation (registration, liveness flip, actual capacity change); the
+/// dirty sets accumulate which nodes changed since the orchestrator last
+/// installed a plan and called [`clear_dirty`](Gpo::clear_dirty).
 #[derive(Debug, Default)]
 pub struct Gpo {
     devices: BTreeMap<usize, NodeInfo>,
     edges: BTreeMap<usize, NodeInfo>,
     deployments: Vec<Deployment>,
     pub events: Vec<String>,
+    epoch: u64,
+    dirty_devices: BTreeSet<usize>,
+    dirty_edges: BTreeSet<usize>,
 }
 
 impl Gpo {
@@ -61,6 +69,8 @@ impl Gpo {
             id,
             NodeInfo { id, kind: NodeKind::Device, location, capacity: 0.0, state: NodeState::Ready },
         );
+        self.epoch += 1;
+        self.dirty_devices.insert(id);
     }
 
     pub fn register_edge(&mut self, id: usize, location: GeoPoint, capacity: f64) {
@@ -68,19 +78,29 @@ impl Gpo {
             id,
             NodeInfo { id, kind: NodeKind::EdgeHost, location, capacity, state: NodeState::Ready },
         );
+        self.epoch += 1;
+        self.dirty_edges.insert(id);
     }
 
     /// Fault injection: mark a node failed and log the event.
     pub fn fail_edge(&mut self, id: usize) {
         if let Some(n) = self.edges.get_mut(&id) {
-            n.state = NodeState::Failed;
+            if n.state != NodeState::Failed {
+                n.state = NodeState::Failed;
+                self.epoch += 1;
+                self.dirty_edges.insert(id);
+            }
             self.events.push(format!("edge {id} failed"));
         }
     }
 
     pub fn recover_edge(&mut self, id: usize) {
         if let Some(n) = self.edges.get_mut(&id) {
-            n.state = NodeState::Ready;
+            if n.state != NodeState::Ready {
+                n.state = NodeState::Ready;
+                self.epoch += 1;
+                self.dirty_edges.insert(id);
+            }
             self.events.push(format!("edge {id} recovered"));
         }
     }
@@ -89,9 +109,36 @@ impl Gpo {
     /// workload landed on the node) — §VI "environment dynamics".
     pub fn set_edge_capacity(&mut self, id: usize, capacity: f64) {
         if let Some(n) = self.edges.get_mut(&id) {
-            n.capacity = capacity;
+            if n.capacity.to_bits() != capacity.to_bits() {
+                n.capacity = capacity;
+                self.epoch += 1;
+                self.dirty_edges.insert(id);
+            }
             self.events.push(format!("edge {id} capacity -> {capacity}"));
         }
+    }
+
+    /// Monotone change stamp: unchanged epoch ⇒ the inventory is
+    /// byte-identical to the last time the caller looked.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Devices changed since the last [`clear_dirty`](Gpo::clear_dirty).
+    pub fn dirty_devices(&self) -> &BTreeSet<usize> {
+        &self.dirty_devices
+    }
+
+    /// Edges changed since the last [`clear_dirty`](Gpo::clear_dirty).
+    pub fn dirty_edges(&self) -> &BTreeSet<usize> {
+        &self.dirty_edges
+    }
+
+    /// Forget accumulated dirt — the orchestrator calls this when a plan
+    /// is installed, so the next dirty set is relative to that plan.
+    pub fn clear_dirty(&mut self) {
+        self.dirty_devices.clear();
+        self.dirty_edges.clear();
     }
 
     /// Ready edge hosts (what the learning controller may place on).
@@ -157,6 +204,43 @@ mod tests {
         g.set_edge_capacity(3, 4.0);
         assert_eq!(g.edge(3).unwrap().capacity, 4.0);
         assert!(g.events[0].contains("capacity"));
+    }
+
+    #[test]
+    fn epoch_and_dirty_track_effective_changes_only() {
+        let mut g = Gpo::new();
+        g.register_device(7, p());
+        g.register_edge(0, p(), 10.0);
+        let e0 = g.epoch();
+        assert!(e0 >= 2);
+        assert!(g.dirty_devices().contains(&7));
+        assert!(g.dirty_edges().contains(&0));
+
+        g.clear_dirty();
+        assert!(g.dirty_devices().is_empty() && g.dirty_edges().is_empty());
+        assert_eq!(g.epoch(), e0, "clear_dirty must not advance the epoch");
+
+        g.fail_edge(0);
+        assert_eq!(g.epoch(), e0 + 1);
+        assert!(g.dirty_edges().contains(&0));
+        // Redundant fail: still logged, but no epoch bump / re-dirty.
+        g.clear_dirty();
+        g.fail_edge(0);
+        assert_eq!(g.epoch(), e0 + 1);
+        assert!(g.dirty_edges().is_empty());
+        assert_eq!(g.events.len(), 2, "every fault call is logged regardless");
+
+        g.recover_edge(0);
+        assert_eq!(g.epoch(), e0 + 2);
+
+        // Same-value capacity report: logged, not a change.
+        g.clear_dirty();
+        g.set_edge_capacity(0, 10.0);
+        assert_eq!(g.epoch(), e0 + 2);
+        assert!(g.dirty_edges().is_empty());
+        g.set_edge_capacity(0, 4.0);
+        assert_eq!(g.epoch(), e0 + 3);
+        assert!(g.dirty_edges().contains(&0));
     }
 
     #[test]

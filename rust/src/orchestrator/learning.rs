@@ -10,11 +10,50 @@
 //!   invalidates the current plan (§VI "dealing with environment
 //!   dynamics").
 
+use std::collections::{BTreeMap, BTreeSet};
+
 use super::gpo::{Deployment, Gpo, NodeKind};
 use crate::core::DenseMatrix;
 use crate::hflop::Instance;
-use crate::solver::{self, Assignment, SolveOptions};
+use crate::solver::{self, Assignment, DirtySet, SolveCache, SolveOptions};
 use crate::topology::haversine_km;
+
+/// How [`LearningController::cluster`] reacts to a trigger
+/// (DESIGN.md §10 "Re-orchestration fast path").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolveStrategy {
+    /// Cold solve on every trigger — the default; every golden-matrix
+    /// and oracle path runs this verbatim legacy behavior.
+    Full,
+    /// Warm-start repair seeded from the installed plan
+    /// ([`solver::resolve`]), with the content-addressed [`SolveCache`]
+    /// and the GPO epoch short-circuit in front. Falls back to a cold
+    /// solve only when the repair goes infeasible.
+    WarmStart,
+    /// `WarmStart` while the dirty fraction stays at or below
+    /// [`LearningCtlConfig::warm_dirty_max_frac`], cold beyond it (a
+    /// mostly-changed instance gains nothing from repair).
+    Auto,
+}
+
+impl ResolveStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ResolveStrategy::Full => "full",
+            ResolveStrategy::WarmStart => "warm",
+            ResolveStrategy::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<ResolveStrategy> {
+        match s {
+            "full" => Ok(ResolveStrategy::Full),
+            "warm" => Ok(ResolveStrategy::WarmStart),
+            "auto" => Ok(ResolveStrategy::Auto),
+            other => anyhow::bail!("unknown resolve strategy '{other}' (full|warm|auto)"),
+        }
+    }
+}
 
 /// Controller configuration.
 #[derive(Debug, Clone)]
@@ -28,6 +67,14 @@ pub struct LearningCtlConfig {
     /// Edge↔cloud cost per exchange.
     pub cloud_cost: f64,
     pub solve: SolveOptions,
+    /// Re-solve strategy; `Full` keeps every legacy path intact.
+    pub strategy: ResolveStrategy,
+    /// `Auto` falls back to a cold solve when the dirty fraction of the
+    /// rebuilt instance exceeds this.
+    pub warm_dirty_max_frac: f64,
+    /// Entry bound for the content-addressed solve cache (warm paths
+    /// only; `Full` never consults it).
+    pub cache_entries: usize,
 }
 
 impl Default for LearningCtlConfig {
@@ -38,6 +85,9 @@ impl Default for LearningCtlConfig {
             free_radius_km: 3.0,
             cloud_cost: 25.0,
             solve: SolveOptions::auto(),
+            strategy: ResolveStrategy::Full,
+            warm_dirty_max_frac: 0.35,
+            cache_entries: 32,
         }
     }
 }
@@ -97,25 +147,73 @@ impl DeploymentPlan {
 /// The learning controller.
 pub struct LearningController {
     pub config: LearningCtlConfig,
-    /// Per-device inference rates λ_i, keyed by GPO device id.
-    pub lambda: std::collections::BTreeMap<usize, f64>,
+    /// Per-device inference rates λ_i, keyed by GPO device id. Write via
+    /// [`set_lambda`](Self::set_lambda) so dirty tracking and the cached
+    /// per-edge loads stay coherent.
+    pub lambda: BTreeMap<usize, f64>,
     pub current_plan: Option<DeploymentPlan>,
     /// Count of re-clustering runs (observability).
     pub reclusters: usize,
+    /// Plans produced by a warm-start repair (observability).
+    pub warm_resolves: usize,
+    /// Plans served from the content-addressed solve cache.
+    pub cache_hits: usize,
+    /// Triggers short-circuited because the GPO epoch and the λ view
+    /// were both unchanged since the last installed plan.
+    pub epoch_hits: usize,
+    /// Warm repairs that went infeasible and fell back to a cold solve.
+    pub warm_fallbacks: usize,
+    cache: SolveCache,
+    /// Device ids whose λ changed since the last installed plan.
+    dirty_lambda: BTreeSet<usize>,
+    /// GPO epoch at the last install (None until a plan is installed or
+    /// after an external [`seed_plan`](Self::seed_plan)).
+    installed_epoch: Option<u64>,
+    /// Per-plan-column assigned load, rebuilt lazily — plan installs and
+    /// λ changes invalidate. Turns the plan-invalidation verdict from an
+    /// O(n·m) rescan per event into O(m) (O(n+m) right after a change).
+    plan_loads: Vec<f64>,
+    plan_loads_valid: bool,
 }
 
 impl LearningController {
     pub fn new(config: LearningCtlConfig) -> LearningController {
+        let cache = SolveCache::new(config.cache_entries);
         LearningController {
             config,
             lambda: Default::default(),
             current_plan: None,
             reclusters: 0,
+            warm_resolves: 0,
+            cache_hits: 0,
+            epoch_hits: 0,
+            warm_fallbacks: 0,
+            cache,
+            dirty_lambda: BTreeSet::new(),
+            installed_epoch: None,
+            plan_loads: Vec::new(),
+            plan_loads_valid: false,
         }
     }
 
     pub fn set_lambda(&mut self, device_id: usize, rate: f64) {
-        self.lambda.insert(device_id, rate);
+        let prev = self.lambda.insert(device_id, rate);
+        if prev.map(f64::to_bits) != Some(rate.to_bits()) {
+            self.dirty_lambda.insert(device_id);
+            self.plan_loads_valid = false;
+        }
+    }
+
+    /// Install an externally computed plan (e.g. a scenario's HFLOP
+    /// solution) as the incumbent. Use this instead of writing
+    /// `current_plan` directly so the cached per-edge loads invalidate
+    /// and warm-start state resets.
+    pub fn seed_plan(&mut self, plan: DeploymentPlan) {
+        self.current_plan = Some(plan);
+        self.plan_loads_valid = false;
+        // Unknown provenance relative to the GPO: no epoch short-circuit
+        // until this controller installs a plan itself.
+        self.installed_epoch = None;
     }
 
     /// Build the HFLOP instance from current GPO state.
@@ -153,11 +251,113 @@ impl LearningController {
         Ok((inst, device_ids, edge_ids))
     }
 
-    /// Run the clustering mechanism and install the plan into the GPO.
-    pub fn cluster(&mut self, gpo: &mut Gpo) -> anyhow::Result<&DeploymentPlan> {
+    /// [`build_instance`](Self::build_instance) plus the instance-local
+    /// dirty set: rows/columns whose λ, capacity, or liveness changed
+    /// since the last installed plan, mapped from GPO ids into instance
+    /// indices. GPO-dirty nodes that are not in the instance (failed
+    /// edges, deregistered devices) are represented indirectly — they
+    /// change the column/row sets, which the warm path's plan projection
+    /// marks dirty on its own.
+    pub fn build_instance_dirty(
+        &self,
+        gpo: &Gpo,
+    ) -> anyhow::Result<(Instance, Vec<usize>, Vec<usize>, DirtySet)> {
         let (inst, device_ids, edge_ids) = self.build_instance(gpo)?;
-        let sol = solver::solve(&inst, &self.config.solve)
-            .map_err(|e| anyhow::anyhow!("clustering failed: {e}"))?;
+        let changed_devices: BTreeSet<usize> =
+            self.dirty_lambda.iter().chain(gpo.dirty_devices()).copied().collect();
+        let rows: Vec<usize> = changed_devices
+            .iter()
+            .filter_map(|id| device_ids.binary_search(id).ok())
+            .collect();
+        let cols: Vec<usize> =
+            gpo.dirty_edges().iter().filter_map(|id| edge_ids.binary_search(id).ok()).collect();
+        Ok((inst, device_ids, edge_ids, DirtySet { rows, cols }))
+    }
+
+    /// Run the clustering mechanism and install the plan into the GPO.
+    /// Dispatch on [`LearningCtlConfig::strategy`]: `Full` is the
+    /// verbatim legacy cold path; the warm strategies try, in order, the
+    /// GPO epoch short-circuit, the content-addressed solve cache, and a
+    /// warm-start repair of the installed plan before paying for a cold
+    /// solve.
+    pub fn cluster(&mut self, gpo: &mut Gpo) -> anyhow::Result<&DeploymentPlan> {
+        match self.config.strategy {
+            ResolveStrategy::Full => self.cluster_full(gpo),
+            ResolveStrategy::WarmStart | ResolveStrategy::Auto => self.cluster_warm(gpo),
+        }
+    }
+
+    fn cluster_full(&mut self, gpo: &mut Gpo) -> anyhow::Result<&DeploymentPlan> {
+        let (inst, device_ids, edge_ids) = self.build_instance(gpo)?;
+        let sol = cold_solve(&inst, &self.config.solve)?;
+        self.install(gpo, sol, device_ids, edge_ids)
+    }
+
+    fn cluster_warm(&mut self, gpo: &mut Gpo) -> anyhow::Result<&DeploymentPlan> {
+        // O(1) short-circuit: nothing changed since the last install, so
+        // the installed plan is still THE answer — skip even the
+        // instance build.
+        if self.current_plan.is_some()
+            && self.installed_epoch == Some(gpo.epoch())
+            && self.dirty_lambda.is_empty()
+        {
+            self.epoch_hits += 1;
+            return Ok(self.current_plan.as_ref().unwrap());
+        }
+        let (inst, device_ids, edge_ids, mut dirty) = self.build_instance_dirty(gpo)?;
+
+        // Content-addressed memoization: a byte-identical instance
+        // (churn that reverted, or λ-only wobble that cancelled out)
+        // returns the previously computed plan outright.
+        let key = SolveCache::cacheable(&self.config.solve)
+            .then(|| SolveCache::key(&inst, &self.config.solve));
+        if let Some(k) = key {
+            if let Some(sol) = self.cache.get(k) {
+                self.cache_hits += 1;
+                return self.install(gpo, sol, device_ids, edge_ids);
+            }
+        }
+
+        let (n, m) = (inst.n(), inst.m());
+        let warm_seed = self
+            .current_plan
+            .as_ref()
+            .map(|plan| project_plan(plan, &device_ids, &edge_ids, &mut dirty));
+        let try_warm = warm_seed.is_some()
+            && (self.config.strategy == ResolveStrategy::WarmStart
+                || dirty.fraction(n, m) <= self.config.warm_dirty_max_frac);
+        let (sol, was_cold) = match warm_seed {
+            Some(prev) if try_warm => {
+                match solver::resolve_assignment(&inst, &prev, &dirty, &self.config.solve) {
+                    Ok(sol) => {
+                        self.warm_resolves += 1;
+                        (sol, false)
+                    }
+                    Err(_) => {
+                        self.warm_fallbacks += 1;
+                        (cold_solve(&inst, &self.config.solve)?, true)
+                    }
+                }
+            }
+            _ => (cold_solve(&inst, &self.config.solve)?, true),
+        };
+        // Only cold results enter the cache: a warm repair depends on
+        // the incumbent, which is not part of the content key.
+        if was_cold {
+            if let Some(k) = key {
+                self.cache.put(k, sol.clone());
+            }
+        }
+        self.install(gpo, sol, device_ids, edge_ids)
+    }
+
+    fn install(
+        &mut self,
+        gpo: &mut Gpo,
+        sol: solver::Solution,
+        device_ids: Vec<usize>,
+        edge_ids: Vec<usize>,
+    ) -> anyhow::Result<&DeploymentPlan> {
         let plan = DeploymentPlan {
             assignment: sol.assignment,
             edge_ids,
@@ -168,42 +368,58 @@ impl LearningController {
         gpo.apply_deployments(plan.deployments());
         self.current_plan = Some(plan);
         self.reclusters += 1;
+        // The installed plan is the new baseline: dirt accumulated so
+        // far is accounted for, and the cached loads are stale.
+        gpo.clear_dirty();
+        self.dirty_lambda.clear();
+        self.installed_epoch = Some(gpo.epoch());
+        self.plan_loads_valid = false;
         Ok(self.current_plan.as_ref().unwrap())
+    }
+
+    /// Rebuild the cached per-column loads of the installed plan. Rows
+    /// are accumulated in ascending order — the same per-column addition
+    /// order as the legacy per-event rescan, so the floating-point sums
+    /// (and therefore the invalidation verdicts) are bit-identical to
+    /// it (pinned by `tests/resolve_warm.rs`).
+    fn rebuild_plan_loads(&mut self) {
+        let mut loads = std::mem::take(&mut self.plan_loads);
+        loads.clear();
+        if let Some(plan) = &self.current_plan {
+            loads.resize(plan.edge_ids.len(), 0.0);
+            for (row, &dev) in plan.device_ids.iter().enumerate() {
+                if let Some(col) = plan.assignment.assign[row] {
+                    loads[col] += self.lambda.get(&dev).copied().unwrap_or(1.0);
+                }
+            }
+        }
+        self.plan_loads = loads;
+        self.plan_loads_valid = true;
     }
 
     /// React to an environmental event: if the current plan references a
     /// failed edge or stale capacity, re-cluster. Returns true if a new
     /// plan was produced.
     pub fn on_environment_change(&mut self, gpo: &mut Gpo) -> anyhow::Result<bool> {
-        let plan_invalid = match &self.current_plan {
-            None => true,
-            Some(plan) => {
-                // Any open aggregator on a non-ready or capacity-reduced edge?
-                plan.edge_ids.iter().enumerate().any(|(col, &eid)| {
-                    plan.assignment.open[col]
-                        && match gpo.edge(eid) {
-                            None => true,
-                            Some(n) => {
-                                n.state != super::gpo::NodeState::Ready || {
-                                    // Capacity below the load we routed to it.
-                                    let load: f64 = plan
-                                        .device_ids
-                                        .iter()
-                                        .enumerate()
-                                        .filter(|(row, _)| plan.assignment.assign[*row] == Some(col))
-                                        .map(|(row, _)| {
-                                            self.lambda
-                                                .get(&plan.device_ids[row])
-                                                .copied()
-                                                .unwrap_or(1.0)
-                                        })
-                                        .sum();
-                                    load > n.capacity + 1e-9
-                                }
-                            }
-                        }
-                })
+        let plan_invalid = if self.current_plan.is_none() {
+            true
+        } else {
+            if !self.plan_loads_valid {
+                self.rebuild_plan_loads();
             }
+            let plan = self.current_plan.as_ref().expect("checked above");
+            let loads = &self.plan_loads;
+            // Any open aggregator on a non-ready or capacity-reduced edge?
+            plan.edge_ids.iter().enumerate().any(|(col, &eid)| {
+                plan.assignment.open[col]
+                    && match gpo.edge(eid) {
+                        None => true,
+                        Some(n) => {
+                            n.state != super::gpo::NodeState::Ready
+                                || loads[col] > n.capacity + 1e-9
+                        }
+                    }
+            })
         };
         if plan_invalid {
             self.cluster(gpo)?;
@@ -212,6 +428,58 @@ impl LearningController {
             Ok(false)
         }
     }
+}
+
+fn cold_solve(inst: &Instance, opts: &SolveOptions) -> anyhow::Result<solver::Solution> {
+    solver::solve(inst, opts).map_err(|e| anyhow::anyhow!("clustering failed: {e}"))
+}
+
+/// Project the installed plan onto a freshly built instance: rows and
+/// columns are matched by GPO id. Assignments whose edge vanished are
+/// dropped (their rows join the dirty set); columns the plan has never
+/// seen arrive closed and dirty; devices the plan has never seen arrive
+/// unassigned and dirty.
+fn project_plan(
+    plan: &DeploymentPlan,
+    device_ids: &[usize],
+    edge_ids: &[usize],
+    dirty: &mut DirtySet,
+) -> Assignment {
+    let prev_row: BTreeMap<usize, usize> =
+        plan.device_ids.iter().enumerate().map(|(r, &id)| (id, r)).collect();
+    let prev_col: BTreeMap<usize, usize> =
+        plan.edge_ids.iter().enumerate().map(|(c, &id)| (id, c)).collect();
+
+    let mut extra_rows: BTreeSet<usize> = dirty.rows.iter().copied().collect();
+    let mut extra_cols: BTreeSet<usize> = dirty.cols.iter().copied().collect();
+
+    let mut open = vec![false; edge_ids.len()];
+    for (c, eid) in edge_ids.iter().enumerate() {
+        match prev_col.get(eid) {
+            Some(&pc) => open[c] = plan.assignment.open[pc],
+            None => {
+                extra_cols.insert(c);
+            }
+        }
+    }
+    let mut assign = vec![None; device_ids.len()];
+    for (r, did) in device_ids.iter().enumerate() {
+        let carried = prev_row
+            .get(did)
+            .and_then(|&pr| plan.assignment.assign[pr])
+            .map(|pc| plan.edge_ids[pc])
+            .and_then(|eid| edge_ids.binary_search(&eid).ok())
+            .filter(|&c| open[c]);
+        match carried {
+            Some(c) => assign[r] = Some(c),
+            None => {
+                extra_rows.insert(r);
+            }
+        }
+    }
+    dirty.rows = extra_rows.into_iter().collect();
+    dirty.cols = extra_cols.into_iter().collect();
+    Assignment { assign, open }
 }
 
 #[cfg(test)]
@@ -332,5 +600,166 @@ mod tests {
         let mut gpo = Gpo::new();
         let mut ctl = LearningController::new(LearningCtlConfig::default());
         assert!(ctl.cluster(&mut gpo).is_err());
+    }
+
+    fn setup_with(n_dev: usize, n_edge: usize, strategy: ResolveStrategy) -> (Gpo, LearningController) {
+        let (gpo, mut ctl) = setup(n_dev, n_edge);
+        ctl.config.strategy = strategy;
+        (gpo, ctl)
+    }
+
+    #[test]
+    fn warm_recluster_after_fault_is_feasible() {
+        let (mut gpo, mut ctl) = setup_with(10, 3, ResolveStrategy::WarmStart);
+        ctl.cluster(&mut gpo).unwrap();
+        let used = ctl
+            .current_plan
+            .as_ref()
+            .unwrap()
+            .edge_ids
+            .iter()
+            .enumerate()
+            .find(|(c, _)| ctl.current_plan.as_ref().unwrap().assignment.open[*c])
+            .map(|(_, &e)| e)
+            .unwrap();
+        gpo.fail_edge(used);
+        assert!(ctl.on_environment_change(&mut gpo).unwrap());
+        assert_eq!(ctl.reclusters, 2);
+        // Exactly one warm attempt happened (repair or its cold fallback).
+        assert_eq!(ctl.warm_resolves + ctl.warm_fallbacks, 1);
+        let plan = ctl.current_plan.as_ref().unwrap().clone();
+        assert!(!plan.edge_ids.contains(&used));
+        let (inst, _, _) = ctl.build_instance(&gpo).unwrap();
+        plan.assignment.check_feasible(&inst).unwrap();
+    }
+
+    #[test]
+    fn unchanged_epoch_short_circuits_warm_cluster() {
+        let (mut gpo, mut ctl) = setup_with(10, 3, ResolveStrategy::WarmStart);
+        let cost = ctl.cluster(&mut gpo).unwrap().cost;
+        ctl.cluster(&mut gpo).unwrap();
+        assert_eq!(ctl.epoch_hits, 1);
+        assert_eq!(ctl.reclusters, 1, "short-circuit must not install a new plan");
+        assert_eq!(ctl.current_plan.as_ref().unwrap().cost.to_bits(), cost.to_bits());
+        // Any effective change breaks the short-circuit.
+        ctl.set_lambda(0, 2.0);
+        ctl.cluster(&mut gpo).unwrap();
+        assert_eq!(ctl.epoch_hits, 1);
+        assert_eq!(ctl.reclusters, 2);
+    }
+
+    #[test]
+    fn cache_returns_identical_plan_when_environment_reverts() {
+        let (mut gpo, mut ctl) = setup_with(10, 3, ResolveStrategy::WarmStart);
+        let plan1 = ctl.cluster(&mut gpo).unwrap().clone();
+        let used = plan1
+            .edge_ids
+            .iter()
+            .enumerate()
+            .find(|(c, _)| plan1.assignment.open[*c])
+            .map(|(_, &e)| e)
+            .unwrap();
+        gpo.fail_edge(used);
+        assert!(ctl.on_environment_change(&mut gpo).unwrap());
+        gpo.recover_edge(used);
+        // The rebuilt instance is byte-identical to the first one, so
+        // the content-addressed cache returns the original plan — and
+        // the hit is bit-identical to that recompute.
+        ctl.cluster(&mut gpo).unwrap();
+        assert_eq!(ctl.cache_hits, 1);
+        let plan3 = ctl.current_plan.as_ref().unwrap();
+        assert_eq!(plan3.assignment, plan1.assignment);
+        assert_eq!(plan3.cost.to_bits(), plan1.cost.to_bits());
+    }
+
+    #[test]
+    fn auto_strategy_pivots_on_dirty_fraction() {
+        let (mut gpo, mut ctl) = setup_with(10, 3, ResolveStrategy::Auto);
+        ctl.config.warm_dirty_max_frac = 0.0;
+        ctl.cluster(&mut gpo).unwrap();
+        ctl.set_lambda(0, 2.0);
+        ctl.cluster(&mut gpo).unwrap();
+        assert_eq!(ctl.warm_resolves, 0, "zero threshold must force the cold path");
+        assert_eq!(ctl.reclusters, 2);
+
+        let (mut gpo, mut ctl) = setup_with(10, 3, ResolveStrategy::Auto);
+        ctl.config.warm_dirty_max_frac = 1.0;
+        ctl.cluster(&mut gpo).unwrap();
+        ctl.set_lambda(0, 2.0);
+        ctl.cluster(&mut gpo).unwrap();
+        assert_eq!(ctl.warm_resolves, 1, "full threshold must allow the warm path");
+    }
+
+    #[test]
+    fn failed_resolve_keeps_stale_plan_installed() {
+        for strategy in [ResolveStrategy::Full, ResolveStrategy::WarmStart] {
+            let (mut gpo, mut ctl) = setup_with(6, 2, strategy);
+            ctl.cluster(&mut gpo).unwrap();
+            let stale = ctl.current_plan.as_ref().unwrap().clone();
+            gpo.fail_edge(100);
+            gpo.fail_edge(101);
+            assert!(ctl.on_environment_change(&mut gpo).is_err(), "{strategy:?}");
+            let kept = ctl.current_plan.as_ref().unwrap();
+            assert_eq!(kept.assignment, stale.assignment, "{strategy:?}");
+            assert_eq!(ctl.reclusters, 1, "{strategy:?}");
+        }
+    }
+
+    /// The legacy O(n·m) invalidation rescan, kept verbatim as the
+    /// oracle for the incremental per-edge-load verdict.
+    fn legacy_verdict(ctl: &LearningController, gpo: &Gpo) -> bool {
+        match &ctl.current_plan {
+            None => true,
+            Some(plan) => plan.edge_ids.iter().enumerate().any(|(col, &eid)| {
+                plan.assignment.open[col]
+                    && match gpo.edge(eid) {
+                        None => true,
+                        Some(n) => {
+                            n.state != crate::orchestrator::gpo::NodeState::Ready || {
+                                let load: f64 = plan
+                                    .device_ids
+                                    .iter()
+                                    .enumerate()
+                                    .filter(|(row, _)| plan.assignment.assign[*row] == Some(col))
+                                    .map(|(row, _)| {
+                                        ctl.lambda
+                                            .get(&plan.device_ids[row])
+                                            .copied()
+                                            .unwrap_or(1.0)
+                                    })
+                                    .sum();
+                                load > n.capacity + 1e-9
+                            }
+                        }
+                    }
+            }),
+        }
+    }
+
+    #[test]
+    fn invalidation_verdicts_match_legacy_scan() {
+        for strategy in [ResolveStrategy::Full, ResolveStrategy::WarmStart] {
+            for seed in 0..6usize {
+                let (mut gpo, mut ctl) = setup_with(12, 3, strategy);
+                ctl.cluster(&mut gpo).unwrap();
+                for step in 0..10 {
+                    let k = seed + step;
+                    match k % 4 {
+                        0 => gpo.set_edge_capacity(100 + k % 3, 3.0),
+                        1 => ctl.set_lambda(k % 12, 1.0 + (k % 3) as f64),
+                        2 => gpo.set_edge_capacity(100 + k % 3, 8.0),
+                        _ => {}
+                    }
+                    let expect = legacy_verdict(&ctl, &gpo);
+                    match ctl.on_environment_change(&mut gpo) {
+                        Ok(got) => assert_eq!(
+                            got, expect,
+                            "{strategy:?} seed {seed} step {step}: verdict diverged"
+                        ),
+                        Err(_) => assert!(expect, "re-solve only runs on an invalid plan"),
+                    }
+                }
+            }
+        }
     }
 }

@@ -16,4 +16,4 @@ pub mod learning;
 
 pub use gpo::{Gpo, NodeKind, NodeState};
 pub use inference_ctl::{InferenceController, InferenceCtlConfig};
-pub use learning::{DeploymentPlan, LearningController, LearningCtlConfig};
+pub use learning::{DeploymentPlan, LearningController, LearningCtlConfig, ResolveStrategy};

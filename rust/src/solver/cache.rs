@@ -1,0 +1,347 @@
+//! Content-addressed solve memoization.
+//!
+//! Back-to-back control-plane triggers often rebuild a byte-identical
+//! [`Instance`] (the GPO snapshot didn't change between them, or churned
+//! and reverted). [`SolveCache`] keys solutions by an FNV-1a digest of
+//! the instance's canonical bytes plus a canonicalized [`SolveOptions`],
+//! so such triggers return the already-installed plan in O(hash) instead
+//! of re-running the solver. Hits are byte-identical to a recompute by
+//! construction — the cached value IS a prior recompute for the same
+//! content key, and every keyed field is hashed at full `f64` bit
+//! precision.
+//!
+//! Key scheme (DESIGN.md §10): every solver-visible field participates
+//! except the two that cannot steer a deterministic result —
+//! `bb.time_limit_s` (wall-clock termination; configurations carrying it
+//! bypass the cache entirely rather than risk sharing entries between
+//! divergent runs) and `shard.workers` (thread count changes wall time
+//! only, never the result). The shard `root_seed` IS hashed: different
+//! seeds explore different restarts. Both hash helpers destructure their
+//! structs exhaustively, so adding a field fails compilation here and
+//! forces a decision about whether it belongs in the key.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::local_search::{LocalSearchOptions, LsMode};
+use super::{solve, BbOptions, Mode, ShardOptions, SolveError, SolveOptions, Solution};
+use crate::hflop::Instance;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a over the canonical byte encoding of the key fields.
+struct Fnv(u64);
+
+impl Fnv {
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+}
+
+/// Bounded content-addressed memo of [`solve`] results, FIFO-evicted.
+#[derive(Debug)]
+pub struct SolveCache {
+    capacity: usize,
+    entries: BTreeMap<u64, Solution>,
+    order: VecDeque<u64>,
+    hits: u64,
+    misses: u64,
+    bypasses: u64,
+}
+
+impl SolveCache {
+    /// A cache holding at most `capacity` solutions (min 1).
+    pub fn new(capacity: usize) -> SolveCache {
+        SolveCache {
+            capacity: capacity.max(1),
+            entries: BTreeMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+            bypasses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Served from the memo without solving.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Solved cold and stored.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Solved cold and NOT stored (uncacheable options).
+    pub fn bypasses(&self) -> u64 {
+        self.bypasses
+    }
+
+    /// Whether `opts` may use the cache at all. Wall-clock-limited
+    /// configurations are machine-dependent, so their results are never
+    /// stored or served.
+    pub fn cacheable(opts: &SolveOptions) -> bool {
+        opts.bb.time_limit_s.is_none()
+    }
+
+    /// The content key for `(inst, opts)`. Only meaningful when
+    /// [`cacheable`](Self::cacheable) holds.
+    pub fn key(inst: &Instance, opts: &SolveOptions) -> u64 {
+        let mut h = Fnv(FNV_OFFSET);
+        hash_instance(&mut h, inst);
+        hash_options(&mut h, opts);
+        h.0
+    }
+
+    /// The memoized solution for `key`, if present (cloned).
+    pub fn get(&mut self, key: u64) -> Option<Solution> {
+        let hit = self.entries.get(&key).cloned();
+        if hit.is_some() {
+            self.hits += 1;
+        }
+        hit
+    }
+
+    /// Store a cold result under `key`, evicting the oldest entry past
+    /// capacity. Overwrites silently (same key ⇒ same content).
+    pub fn put(&mut self, key: u64, sol: Solution) {
+        self.misses += 1;
+        if self.entries.insert(key, sol).is_none() {
+            self.order.push_back(key);
+            if self.order.len() > self.capacity {
+                if let Some(old) = self.order.pop_front() {
+                    self.entries.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Memoized [`solve`]: serve a hit when the content key is known,
+    /// otherwise solve cold and store. Uncacheable options pass straight
+    /// through to the solver.
+    pub fn solve(&mut self, inst: &Instance, opts: &SolveOptions) -> Result<Solution, SolveError> {
+        if !Self::cacheable(opts) {
+            self.bypasses += 1;
+            return solve(inst, opts);
+        }
+        let key = Self::key(inst, opts);
+        if let Some(sol) = self.get(key) {
+            return Ok(sol);
+        }
+        let sol = solve(inst, opts)?;
+        self.put(key, sol.clone());
+        Ok(sol)
+    }
+}
+
+/// Canonical bytes of everything the solver reads from the instance.
+/// `meta` is excluded: it caches validation/feasibility bookkeeping
+/// derived from the fields already hashed.
+fn hash_instance(h: &mut Fnv, inst: &Instance) {
+    let Instance { c_d, c_e, lambda, r, l, t_min, meta: _ } = inst;
+    h.usize(c_d.rows());
+    h.usize(c_d.cols());
+    for &v in c_d.as_slice() {
+        h.f64(v);
+    }
+    for &v in c_e.iter() {
+        h.f64(v);
+    }
+    for &v in lambda.iter() {
+        h.f64(v);
+    }
+    for &v in r.iter() {
+        h.f64(v);
+    }
+    h.f64(*l);
+    h.usize(*t_min);
+}
+
+/// Canonicalized options: every result-steering field, nothing else.
+fn hash_options(h: &mut Fnv, opts: &SolveOptions) {
+    let SolveOptions { mode, bb, ls, auto_exact_below, auto_sharded_above, shard, deterministic } =
+        opts;
+    h.u64(match mode {
+        Mode::Exact => 0,
+        Mode::Heuristic => 1,
+        Mode::Sharded => 2,
+        Mode::Auto => 3,
+    });
+    let BbOptions { disaggregate_below, node_limit, time_limit_s, abs_gap } = bb;
+    h.usize(*disaggregate_below);
+    h.usize(*node_limit);
+    // `time_limit_s` is deliberately NOT hashed: wall-clock termination
+    // is machine-dependent, so `cacheable` keeps such configurations out
+    // of the cache entirely — hashing the field would only suggest that
+    // two limited runs are interchangeable.
+    let _ = time_limit_s;
+    h.f64(*abs_gap);
+    let LocalSearchOptions { max_rounds, mode: ls_mode } = ls;
+    h.usize(*max_rounds);
+    h.u64(match ls_mode {
+        LsMode::Auto => 0,
+        LsMode::Completion => 1,
+        LsMode::Incremental => 2,
+    });
+    h.usize(*auto_exact_below);
+    h.usize(*auto_sharded_above);
+    let ShardOptions { regions, root_seed, workers, restarts, repair_sweeps } = shard;
+    h.usize(*regions);
+    // The seed IS part of the key: different seeds explore different
+    // sharded restarts and may legitimately return different plans.
+    h.u64(*root_seed);
+    // `workers` is deliberately NOT hashed: thread count changes wall
+    // time only, never the result (pinned by sharded equivalence tests).
+    let _ = workers;
+    h.usize(*restarts);
+    h.usize(*repair_sweeps);
+    h.u64(u64::from(*deterministic));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hflop::InstanceBuilder;
+
+    fn inst(seed: u64) -> Instance {
+        InstanceBuilder::random(30, 5, seed).t_min(24).build()
+    }
+
+    #[test]
+    fn key_ignores_wall_clock_and_worker_count() {
+        let i = inst(1);
+        let base = SolveOptions::heuristic();
+        let k0 = SolveCache::key(&i, &base);
+
+        let mut timed = base.clone();
+        timed.bb.time_limit_s = Some(9.0);
+        assert_eq!(k0, SolveCache::key(&i, &timed), "time_limit_s must not reach the key");
+        // ...but such options never touch the cache in the first place.
+        assert!(!SolveCache::cacheable(&timed));
+        assert!(SolveCache::cacheable(&base));
+
+        let mut threaded = base.clone();
+        threaded.shard.workers = 8;
+        assert_eq!(k0, SolveCache::key(&i, &threaded), "workers must not reach the key");
+    }
+
+    #[test]
+    fn key_includes_every_result_steering_field() {
+        let i = inst(2);
+        let base = SolveOptions::heuristic();
+        let k0 = SolveCache::key(&i, &base);
+
+        // One mutation per result-steering SolveOptions field. Keep this
+        // list in sync with the exhaustive destructures above — a new
+        // field breaks compilation there, then gets a row here.
+        let mutations: Vec<(&str, fn(&mut SolveOptions))> = vec![
+            ("mode", |o| o.mode = Mode::Exact),
+            ("bb.disaggregate_below", |o| o.bb.disaggregate_below += 1),
+            ("bb.node_limit", |o| o.bb.node_limit += 1),
+            ("bb.abs_gap", |o| o.bb.abs_gap += 0.5),
+            ("ls.max_rounds", |o| o.ls.max_rounds += 1),
+            ("ls.mode", |o| o.ls.mode = LsMode::Incremental),
+            ("auto_exact_below", |o| o.auto_exact_below += 1),
+            ("auto_sharded_above", |o| o.auto_sharded_above += 1),
+            ("shard.regions", |o| o.shard.regions += 1),
+            ("shard.root_seed", |o| o.shard.root_seed += 1),
+            ("shard.restarts", |o| o.shard.restarts += 1),
+            ("shard.repair_sweeps", |o| o.shard.repair_sweeps += 1),
+            ("deterministic", |o| o.deterministic = false),
+        ];
+        // SolveOptions carries 15 result-relevant-or-not leaf fields;
+        // 13 steer results, 2 (time_limit_s, workers) do not.
+        assert_eq!(mutations.len(), 13);
+        for (name, mutate) in mutations {
+            let mut opts = base.clone();
+            mutate(&mut opts);
+            assert_ne!(k0, SolveCache::key(&i, &opts), "field '{name}' must change the key");
+        }
+    }
+
+    #[test]
+    fn key_is_content_addressed_over_the_instance() {
+        let opts = SolveOptions::heuristic();
+        let a = inst(3);
+        assert_eq!(SolveCache::key(&a, &opts), SolveCache::key(&a.clone(), &opts));
+        assert_ne!(SolveCache::key(&a, &opts), SolveCache::key(&inst(4), &opts));
+
+        let mut surged = a.clone();
+        surged.lambda[0] *= 2.0;
+        surged.meta = Default::default();
+        assert_ne!(SolveCache::key(&a, &opts), SolveCache::key(&surged, &opts));
+
+        let mut squeezed = a.clone();
+        squeezed.r[1] *= 0.5;
+        squeezed.meta = Default::default();
+        assert_ne!(SolveCache::key(&a, &opts), SolveCache::key(&squeezed, &opts));
+    }
+
+    #[test]
+    fn hit_is_byte_identical_to_a_recompute() {
+        let i = inst(5);
+        let opts = SolveOptions::heuristic();
+        let mut cache = SolveCache::new(4);
+        let first = cache.solve(&i, &opts).unwrap();
+        let hit = cache.solve(&i, &opts).unwrap();
+        let fresh = solve(&i, &opts).unwrap();
+        assert_eq!(hit.assignment, fresh.assignment);
+        assert_eq!(hit.cost.to_bits(), fresh.cost.to_bits());
+        assert_eq!(hit.assignment, first.assignment);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn uncacheable_options_bypass_without_storing() {
+        let i = inst(6);
+        let mut opts = SolveOptions::exact();
+        opts.deterministic = false;
+        opts.bb.time_limit_s = Some(60.0);
+        let mut cache = SolveCache::new(4);
+        cache.solve(&i, &opts).unwrap();
+        cache.solve(&i, &opts).unwrap();
+        assert!(cache.is_empty());
+        assert_eq!(cache.bypasses(), 2);
+        assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_oldest_first() {
+        let opts = SolveOptions::heuristic();
+        let (a, b, c) = (inst(7), inst(8), inst(9));
+        let mut cache = SolveCache::new(2);
+        cache.solve(&a, &opts).unwrap();
+        cache.solve(&b, &opts).unwrap();
+        cache.solve(&c, &opts).unwrap();
+        assert_eq!(cache.len(), 2);
+        // `a` was evicted: solving it again is a miss, not a hit.
+        cache.solve(&a, &opts).unwrap();
+        assert_eq!(cache.hits(), 0);
+        assert_eq!(cache.misses(), 4);
+    }
+}

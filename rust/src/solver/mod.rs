@@ -12,16 +12,20 @@
 
 pub mod bb;
 pub mod brute;
+pub mod cache;
 pub mod greedy;
 pub mod local_search;
 pub mod lp;
 pub mod milp;
+pub mod resolve;
 pub mod sharded;
 pub mod solution;
 pub mod trust;
 
 pub use bb::{branch_and_bound, BbOptions, BbOutcome};
+pub use cache::SolveCache;
 pub use local_search::{LocalSearchOptions, LsMode};
+pub use resolve::{resolve, resolve_assignment, DirtySet};
 pub use sharded::{aggregated_lp_bound, solve_sharded, ShardOptions, ShardStats, ShardedOutcome};
 pub use solution::{complete_assignment, refine_assignment, Assignment, IncrementalEvaluator};
 pub use trust::{solve_with_trust, TrustMatrix};

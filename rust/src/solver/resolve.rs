@@ -1,0 +1,437 @@
+//! Warm-start re-solve: repair a previous assignment against a mutated
+//! instance and polish it with a dirty-restricted local search.
+//!
+//! The control plane re-solves on every environmental trigger (fault,
+//! recovery, capacity report, surge). Between consecutive triggers only a
+//! handful of rows/columns actually change, so a cold
+//! [`solve`](super::solve) re-derives an almost-identical plan from
+//! scratch. [`resolve`] instead repairs the incumbent in O(changed):
+//! drop assignments to closed columns, evict overloads λ-descending onto
+//! residual capacity, reseat the displaced devices greedily, then run
+//! first-improvement sweeps restricted to the dirty rows/columns and
+//! whatever the repair touched. Invariants (DESIGN.md §10): the result is
+//! always feasible for the *new* instance or an error, never a silently
+//! degraded plan; identical `(inst, prev, dirty)` inputs produce
+//! bit-identical outputs.
+
+use super::solution::{close_empty_edges, IncrementalEvaluator};
+use super::{Assignment, SolveError, SolveOptions, Solution};
+use crate::hflop::Instance;
+
+/// Rows (devices) and columns (edges) that changed since the incumbent
+/// was installed: capacity, λ, liveness, or membership. Entries are
+/// instance-local indices, each list sorted ascending and duplicate-free.
+#[derive(Debug, Clone, Default)]
+pub struct DirtySet {
+    pub rows: Vec<usize>,
+    pub cols: Vec<usize>,
+}
+
+impl DirtySet {
+    /// Nothing changed.
+    pub fn empty() -> DirtySet {
+        DirtySet::default()
+    }
+
+    /// Everything changed — degrades [`resolve`] to a full-neighborhood
+    /// repair, still seeded from the incumbent.
+    pub fn all(n: usize, m: usize) -> DirtySet {
+        DirtySet { rows: (0..n).collect(), cols: (0..m).collect() }
+    }
+
+    /// Fraction of the instance that is dirty, in `[0, 1]` — the `Auto`
+    /// strategy's warm-vs-cold pivot.
+    pub fn fraction(&self, n: usize, m: usize) -> f64 {
+        if n + m == 0 {
+            return 0.0;
+        }
+        let dirty = (self.rows.len() + self.cols.len()) as f64;
+        (dirty / (n + m) as f64).min(1.0)
+    }
+}
+
+/// Warm-start re-solve: repair `prev` against `inst` and polish with a
+/// search restricted to `dirty` rows/columns (plus anything the repair
+/// itself displaced). Heuristic by construction — `proven_optimal` is
+/// always false, even when `prev` was exact.
+///
+/// Errors mirror [`solve`](super::solve): `Invalid` on shape/content
+/// mismatch, `Infeasible` when the repaired plan cannot reach `t_min`
+/// participation. On `Infeasible` the caller should fall back to a cold
+/// solve or keep the stale plan (the control plane does the latter when
+/// both fail).
+pub fn resolve(
+    inst: &Instance,
+    prev: &Solution,
+    dirty: &DirtySet,
+    opts: &SolveOptions,
+) -> Result<Solution, SolveError> {
+    resolve_assignment(inst, &prev.assignment, dirty, opts)
+}
+
+/// [`resolve`] taking the bare incumbent assignment — what the
+/// orchestrator holds after projecting an installed plan onto a freshly
+/// built instance (the plan's cost is stale there, so a full `Solution`
+/// would be a lie).
+pub fn resolve_assignment(
+    inst: &Instance,
+    prev: &Assignment,
+    dirty: &DirtySet,
+    opts: &SolveOptions,
+) -> Result<Solution, SolveError> {
+    super::check_deterministic(opts)?;
+    if inst.meta.validated {
+        debug_assert!(inst.validate().is_ok(), "validated instance failed re-validation");
+    } else {
+        inst.validate().map_err(|e| SolveError::Invalid(e.to_string()))?;
+    }
+    let (n, m) = (inst.n(), inst.m());
+    if prev.assign.len() != n || prev.open.len() != m {
+        return Err(SolveError::Invalid(format!(
+            "warm start shape mismatch: incumbent is {}x{}, instance is {n}x{m}",
+            prev.assign.len(),
+            prev.open.len()
+        )));
+    }
+    if dirty.rows.iter().any(|&i| i >= n) || dirty.cols.iter().any(|&j| j >= m) {
+        return Err(SolveError::Invalid("dirty set indexes outside the instance".into()));
+    }
+    if !inst.capacity_feasible() {
+        return Err(SolveError::Infeasible("aggregate capacity below t_min demand".into()));
+    }
+
+    let (best, wall_s) = crate::util::time_it(|| repair(inst, prev, dirty));
+    match best {
+        Some(assignment) => {
+            // Final cost is a full recompute, not the evaluator's running
+            // sum: warm and cold paths must agree bit-for-bit on cost
+            // whenever they agree on the assignment.
+            let cost = assignment.cost(inst);
+            Ok(Solution { assignment, cost, proven_optimal: false, nodes: 0, wall_s })
+        }
+        None => Err(SolveError::Infeasible(
+            "warm-start repair fell below t_min participation".into(),
+        )),
+    }
+}
+
+/// Cheapest open column with residual for device `i`, ties broken
+/// toward the larger residual — `complete_assignment`'s seat rule.
+fn best_open_column(ev: &IncrementalEvaluator, inst: &Instance, i: usize) -> Option<usize> {
+    let row = inst.c_d.row(i);
+    let lam = inst.lambda[i];
+    let mut best: Option<usize> = None;
+    for j in 0..inst.m() {
+        if !ev.is_open(j) || ev.residual(j) + 1e-9 < lam {
+            continue;
+        }
+        best = Some(match best {
+            None => j,
+            Some(b) => {
+                let better = row[j] < row[b] - 1e-12
+                    || (row[j] < row[b] + 1e-12 && ev.residual(j) > ev.residual(b));
+                if better {
+                    j
+                } else {
+                    b
+                }
+            }
+        });
+    }
+    best
+}
+
+/// The repair pipeline. Returns `None` when the repaired plan cannot
+/// seat `t_min` devices.
+fn repair(inst: &Instance, prev: &Assignment, dirty: &DirtySet) -> Option<Assignment> {
+    let (n, m) = (inst.n(), inst.m());
+
+    // 1. Sanitize the incumbent: assignments to closed columns are
+    //    dropped. The orchestrator's projection normally leaves `None`
+    //    there already; this keeps hand-built incumbents safe too.
+    let mut seed = prev.clone();
+    let mut dropped: Vec<usize> = Vec::new();
+    for (i, a) in seed.assign.iter_mut().enumerate() {
+        if let Some(j) = *a {
+            if !seed.open[j] {
+                *a = None;
+                dropped.push(i);
+            }
+        }
+    }
+    let mut ev = IncrementalEvaluator::new(inst, &seed);
+
+    // 2. Evict overloads: a column whose capacity shrank (or whose
+    //    devices surged) sheds its largest-λ devices first — fewest
+    //    evictions restore feasibility. The evaluator tolerates the
+    //    transient negative residual.
+    let mut evicted: Vec<usize> = Vec::new();
+    for j in 0..m {
+        if !ev.is_open(j) || ev.residual(j) >= -1e-9 {
+            continue;
+        }
+        let mut on_j: Vec<usize> = (0..n).filter(|&i| ev.assign_of(i) == Some(j)).collect();
+        on_j.sort_by(|&a, &b| inst.lambda[b].total_cmp(&inst.lambda[a]).then(a.cmp(&b)));
+        for &i in &on_j {
+            if ev.residual(j) >= -1e-9 {
+                break;
+            }
+            ev.apply_unassign(i);
+            evicted.push(i);
+        }
+    }
+
+    // 3. Reseat the *displaced* devices (sanitize drops + evictions)
+    //    λ-descending into the OPEN columns, mirroring
+    //    `complete_assignment`: cheapest column with residual, ties to
+    //    the larger residual. Devices the incumbent left unassigned stay
+    //    unassigned — repair preserves the incumbent's participation
+    //    choices rather than re-running assign-max (which would perturb
+    //    rows the churn never touched), except where t_min forces more
+    //    seats below.
+    let mut reseated: Vec<usize> = dropped;
+    reseated.extend_from_slice(&evicted);
+    reseated.sort_by(|&a, &b| inst.lambda[b].total_cmp(&inst.lambda[a]).then(a.cmp(&b)));
+    let mut overflow: Vec<usize> = Vec::new();
+    for &i in &reseated {
+        match best_open_column(&ev, inst, i) {
+            Some(j) => {
+                ev.apply_assign(i, j);
+            }
+            None => overflow.push(i),
+        }
+    }
+    if ev.n_assigned() < inst.t_min {
+        // Participation repair: seat smallest-λ unassigned devices first
+        // (most seats per unit of capacity), opening the closed column
+        // that minimizes assignment-plus-opening cost when no open
+        // column fits. Draws from every unassigned device — not just the
+        // displaced ones — because reaching t_min outranks preserving
+        // the incumbent's participation choices.
+        let mut pending: Vec<usize> =
+            (0..n).filter(|&i| ev.assign_of(i).is_none()).collect();
+        pending.sort_by(|&a, &b| inst.lambda[a].total_cmp(&inst.lambda[b]).then(a.cmp(&b)));
+        for &i in &pending {
+            if ev.n_assigned() >= inst.t_min {
+                break;
+            }
+            if let Some(j) = best_open_column(&ev, inst, i) {
+                ev.apply_assign(i, j);
+                reseated.push(i);
+                continue;
+            }
+            let row = inst.c_d.row(i);
+            let lam = inst.lambda[i];
+            let mut cand: Option<usize> = None;
+            for j in 0..m {
+                if ev.is_open(j) || ev.residual(j) + 1e-9 < lam {
+                    continue;
+                }
+                let score = inst.l * row[j] + inst.c_e[j];
+                cand = Some(match cand {
+                    None => j,
+                    Some(b) => {
+                        if score < inst.l * row[b] + inst.c_e[b] - 1e-12 {
+                            j
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+            if let Some(j) = cand {
+                ev.open_edge(j);
+                ev.apply_assign(i, j);
+                reseated.push(i);
+            }
+        }
+        if ev.n_assigned() < inst.t_min {
+            return None;
+        }
+        // Assign-max epilogue: a column opened for t_min may have spare
+        // residual; seat remaining overflow devices in it (λ-descending,
+        // the order `overflow` is already in).
+        for &i in &overflow {
+            if ev.assign_of(i).is_some() {
+                continue;
+            }
+            if let Some(j) = best_open_column(&ev, inst, i) {
+                ev.apply_assign(i, j);
+            }
+        }
+    }
+
+    // 4. Restricted neighborhood: dirty rows, rows the repair displaced,
+    //    and rows currently parked on a dirty column.
+    let mut touched = vec![false; n];
+    for &i in dirty.rows.iter().chain(&evicted).chain(&reseated) {
+        touched[i] = true;
+    }
+    let mut col_dirty = vec![false; m];
+    for &j in &dirty.cols {
+        col_dirty[j] = true;
+    }
+    for i in 0..n {
+        if let Some(j) = ev.assign_of(i) {
+            if col_dirty[j] {
+                touched[i] = true;
+            }
+        }
+    }
+    let rows: Vec<usize> = (0..n).filter(|&i| touched[i]).collect();
+
+    // 4a. First-improvement reassignment sweeps over the touched rows
+    //     only — the same move rule and tolerances as `refine_in_place`,
+    //     with the same sweep cap.
+    for _sweep in 0..20 {
+        let mut improved = false;
+        for &i in &rows {
+            let Some(cur) = ev.assign_of(i) else { continue };
+            let row = inst.c_d.row(i);
+            let mut best: Option<usize> = None;
+            for j in 0..m {
+                if j == cur || !ev.is_open(j) {
+                    continue;
+                }
+                if row[j] < row[cur] - 1e-12 && ev.residual(j) + 1e-9 >= inst.lambda[i] {
+                    let better = match best {
+                        None => true,
+                        Some(b) => row[j] < row[b],
+                    };
+                    if better {
+                        best = Some(j);
+                    }
+                }
+            }
+            if let Some(j) = best {
+                ev.apply_reassign(i, j);
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    // 4b. Facility move restricted to dirty columns: speculatively open
+    //     each dirty closed column, pull strictly-improving touched rows
+    //     onto it, and keep the transaction only when it pays for the
+    //     opening fee. Rollback re-applies the moves in reverse (each
+    //     device returns to a column whose capacity it just vacated) and
+    //     pins the evaluator cost back to the checkpoint.
+    for &j in &dirty.cols {
+        if ev.is_open(j) || inst.r[j] <= 0.0 {
+            continue;
+        }
+        let checkpoint = ev.cost();
+        ev.open_edge(j);
+        let mut moves: Vec<(usize, usize)> = Vec::new();
+        for &i in &rows {
+            let Some(cur) = ev.assign_of(i) else { continue };
+            let row = inst.c_d.row(i);
+            if cur != j
+                && row[j] < row[cur] - 1e-12
+                && ev.residual(j) + 1e-9 >= inst.lambda[i]
+            {
+                ev.apply_reassign(i, j);
+                moves.push((i, cur));
+            }
+        }
+        if ev.cost() < checkpoint - 1e-9 {
+            continue;
+        }
+        for &(i, cur) in moves.iter().rev() {
+            ev.apply_reassign(i, cur);
+        }
+        ev.close_edge(j);
+        ev.reset_cost(checkpoint);
+    }
+
+    close_empty_edges(&mut ev);
+    let out = ev.assignment();
+    debug_assert!(
+        out.check_feasible(inst).is_ok(),
+        "warm repair produced an infeasible assignment: {:?}",
+        out.check_feasible(inst)
+    );
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hflop::InstanceBuilder;
+    use crate::solver::{solve, SolveOptions};
+
+    fn base(seed: u64) -> Instance {
+        InstanceBuilder::random(24, 4, seed).t_min(18).build()
+    }
+
+    #[test]
+    fn unchanged_instance_reproduces_incumbent() {
+        let inst = base(1);
+        let cold = solve(&inst, &SolveOptions::heuristic()).unwrap();
+        let warm =
+            resolve(&inst, &cold, &DirtySet::empty(), &SolveOptions::heuristic()).unwrap();
+        // Nothing was dirty, so the restricted search had nothing to
+        // move: the incumbent survives bit-for-bit.
+        assert_eq!(warm.assignment, cold.assignment);
+        assert_eq!(warm.cost.to_bits(), cold.cost.to_bits());
+        assert!(!warm.proven_optimal);
+    }
+
+    #[test]
+    fn dead_column_devices_are_rehomed() {
+        let inst = base(2);
+        let cold = solve(&inst, &SolveOptions::heuristic()).unwrap();
+        let mut churned = inst.clone();
+        churned.r[0] = 0.0;
+        churned.meta = Default::default();
+        let dirty = DirtySet { rows: Vec::new(), cols: vec![0] };
+        let warm = resolve(&churned, &cold, &dirty, &SolveOptions::heuristic()).unwrap();
+        warm.assignment.check_feasible(&churned).unwrap();
+        assert!(!warm.assignment.open[0], "zero-capacity column must end closed");
+        assert!((0..churned.n()).all(|i| warm.assignment.assign[i] != Some(0)));
+    }
+
+    #[test]
+    fn shape_mismatch_is_invalid() {
+        let inst = base(3);
+        let other = InstanceBuilder::random(10, 3, 3).t_min(8).build();
+        let cold = solve(&other, &SolveOptions::heuristic()).unwrap();
+        let err = resolve(&inst, &cold, &DirtySet::empty(), &SolveOptions::heuristic());
+        assert!(matches!(err, Err(SolveError::Invalid(_))));
+    }
+
+    #[test]
+    fn out_of_range_dirty_set_is_invalid() {
+        let inst = base(4);
+        let cold = solve(&inst, &SolveOptions::heuristic()).unwrap();
+        let dirty = DirtySet { rows: vec![inst.n()], cols: Vec::new() };
+        let err = resolve(&inst, &cold, &dirty, &SolveOptions::heuristic());
+        assert!(matches!(err, Err(SolveError::Invalid(_))));
+    }
+
+    #[test]
+    fn capacity_collapse_is_infeasible() {
+        let inst = base(5);
+        let cold = solve(&inst, &SolveOptions::heuristic()).unwrap();
+        let mut churned = inst.clone();
+        for j in 0..churned.m() {
+            churned.r[j] = 0.0;
+        }
+        churned.meta = Default::default();
+        let dirty = DirtySet::all(churned.n(), churned.m());
+        let err = resolve(&churned, &cold, &dirty, &SolveOptions::heuristic());
+        assert!(matches!(err, Err(SolveError::Infeasible(_))));
+    }
+
+    #[test]
+    fn fraction_is_bounded() {
+        assert_eq!(DirtySet::empty().fraction(10, 5), 0.0);
+        assert_eq!(DirtySet::all(10, 5).fraction(10, 5), 1.0);
+        let half = DirtySet { rows: vec![0, 1, 2], cols: Vec::new() };
+        assert!((half.fraction(3, 3) - 0.5).abs() < 1e-12);
+        assert_eq!(DirtySet::empty().fraction(0, 0), 0.0);
+    }
+}

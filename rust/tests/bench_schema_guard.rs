@@ -15,6 +15,7 @@ use hflop::util::json::Json;
 const ARTIFACTS: &[&str] = &[
     concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_kernel.json"),
     concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_solver.json"),
+    concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_resolve.json"),
 ];
 
 #[test]

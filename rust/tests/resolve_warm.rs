@@ -1,0 +1,90 @@
+//! Warm-start quality contract (ISSUE 9 satellite): across seeded
+//! fault-churn scenarios, `solver::resolve` must (a) stay feasible
+//! whenever the cold solve of the churned instance is feasible, (b) land
+//! within a fixed cost factor of that cold solve, and (c) be
+//! bit-identical across repeated runs on identical inputs.
+
+use hflop::hflop::{Instance, InstanceBuilder};
+use hflop::solver::{resolve, solve, DirtySet, SolveOptions};
+
+const N: usize = 60;
+const M: usize = 6;
+const T_MIN: usize = 45;
+const SEEDS: u64 = 30;
+/// Warm repair may trail the cold solve, but never by more than this.
+const COST_FACTOR: f64 = 2.0;
+
+/// Fault-churn for one seed: kill one edge, squeeze a second, surge a
+/// third of the devices. Returns the churned instance plus the dirty
+/// rows/columns the mutations touched.
+fn churn(base: &Instance, seed: u64) -> (Instance, DirtySet) {
+    let mut inst = base.clone();
+    let dead = (seed as usize) % M;
+    let squeezed = (dead + 1) % M;
+    inst.r[dead] = 0.0;
+    inst.r[squeezed] *= 0.6;
+    let mut rows = Vec::new();
+    for i in 0..N {
+        if i % 3 == (seed as usize) % 3 {
+            inst.lambda[i] *= 1.5;
+            rows.push(i);
+        }
+    }
+    // The λ prefix table and validation flag describe the base instance;
+    // reset so the mutated copy is re-validated from scratch.
+    inst.meta = Default::default();
+    let mut cols = vec![dead, squeezed];
+    cols.sort_unstable();
+    (inst, DirtySet { rows, cols })
+}
+
+#[test]
+fn warm_resolve_quality_over_seeded_churn() {
+    let opts = SolveOptions::heuristic();
+    let mut scenarios = 0usize;
+    for seed in 0..SEEDS {
+        let base = InstanceBuilder::random(N, M, seed).t_min(T_MIN).build();
+        let Ok(prev) = solve(&base, &opts) else { continue };
+        let (churned, dirty) = churn(&base, seed);
+        // The contract is conditional on the cold solve being feasible.
+        let Ok(cold) = solve(&churned, &opts) else { continue };
+        scenarios += 1;
+
+        let warm = resolve(&churned, &prev, &dirty, &opts).unwrap_or_else(|e| {
+            panic!("seed {seed}: warm repair infeasible where cold succeeded: {e}")
+        });
+        warm.assignment.check_feasible(&churned).unwrap_or_else(|e| {
+            panic!("seed {seed}: warm repair violated feasibility: {e}")
+        });
+        assert!(
+            warm.cost <= COST_FACTOR * cold.cost + 1e-9,
+            "seed {seed}: warm cost {} vs cold cost {} exceeds factor {COST_FACTOR}",
+            warm.cost,
+            cold.cost
+        );
+
+        // Determinism: identical inputs, bit-identical outputs.
+        let again = resolve(&churned, &prev, &dirty, &opts).expect("repeat of a feasible repair");
+        assert_eq!(warm.assignment, again.assignment, "seed {seed}: assignment diverged");
+        assert_eq!(
+            warm.cost.to_bits(),
+            again.cost.to_bits(),
+            "seed {seed}: cost bits diverged"
+        );
+    }
+    assert!(scenarios >= 20, "only {scenarios} feasible churn scenarios; need >= 20");
+}
+
+#[test]
+fn warm_resolve_errs_when_cold_would() {
+    let opts = SolveOptions::heuristic();
+    let base = InstanceBuilder::random(N, M, 99).t_min(T_MIN).build();
+    let prev = solve(&base, &opts).expect("base instance solves");
+    let mut dead = base.clone();
+    for j in 0..M {
+        dead.r[j] = 0.0;
+    }
+    dead.meta = Default::default();
+    assert!(solve(&dead, &opts).is_err());
+    assert!(resolve(&dead, &prev, &DirtySet::all(N, M), &opts).is_err());
+}
