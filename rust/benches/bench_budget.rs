@@ -1,0 +1,102 @@
+//! Bench: budget-governed re-orchestration (DESIGN.md §11) — governed
+//! co-sim cells/sec (unbudgeted oracle vs hard-capped governor) plus
+//! the measured spend / deferral / regret numbers for one cell pair.
+//! Writes the schema-versioned `BENCH_budget.json` artifact that CI
+//! uploads on every run (BENCHMARKS.md tracks the trajectory).
+
+mod bench_common;
+use bench_common::{bench, header, smoke};
+
+use hflop::experiments::budget::{run_cell, BudgetCellConfig};
+use hflop::experiments::scenario::{Scenario, ScenarioConfig};
+use hflop::metrics::export::SCHEMA_VERSION;
+use hflop::orchestrator::BudgetPolicy;
+use hflop::sim::Kernel;
+use hflop::util::json::Json;
+
+const CAP_BYTES: u64 = 2_000_000;
+
+fn main() {
+    let smoke = smoke();
+
+    header("Budget control plane: governed co-sim cells (oracle vs hard cap)");
+    let points: &[(usize, usize, f64)] = if smoke {
+        &[(12, 3, 60.0)]
+    } else {
+        // (clients, edges, horizon s); the second point doubles the world.
+        &[(20, 4, 240.0), (40, 6, 240.0)]
+    };
+    let iters = if smoke { 1 } else { 3 };
+
+    let mut points_json = Vec::new();
+    for &(n, m, duration_s) in points {
+        let sc = Scenario::build(ScenarioConfig {
+            n_clients: n,
+            n_edges: m,
+            weeks: 5,
+            balanced_clients: false,
+            ..Default::default()
+        })
+        .expect("bench scenario builds");
+        let cfg = BudgetCellConfig {
+            duration_s,
+            lambda_scale: 0.5,
+            fault_rate: 2,
+            surge_factor: 3.0,
+            ..Default::default()
+        };
+
+        let oracle_r = bench(&format!("budget/oracle n={n} m={m}"), iters, || {
+            std::hint::black_box(
+                run_cell(&sc, &cfg, BudgetPolicy::unlimited(), Kernel::new())
+                    .expect("oracle cell"),
+            )
+        });
+        let capped_r = bench(&format!("budget/capped n={n} m={m}"), iters, || {
+            std::hint::black_box(
+                run_cell(&sc, &cfg, BudgetPolicy::capped(CAP_BYTES), Kernel::new())
+                    .expect("capped cell"),
+            )
+        });
+
+        // One measured pair outside the timed loops: the economics the
+        // budget experiment reports per cell.
+        let (oracle, kernel) =
+            run_cell(&sc, &cfg, BudgetPolicy::unlimited(), Kernel::new()).expect("oracle cell");
+        let (governed, _) =
+            run_cell(&sc, &cfg, BudgetPolicy::capped(CAP_BYTES), kernel).expect("capped cell");
+        assert!(governed.ctl_spend_bytes <= CAP_BYTES, "cap violated in bench cell");
+        let regret_ms = governed.serving.percentiles.p99() - oracle.serving.percentiles.p99();
+        println!(
+            "  -> n={n}: spend {:.4} GB vs oracle {:.4} GB, {} deferrals, regret {regret_ms:+.2} ms",
+            governed.ctl_spend_bytes as f64 / 1e9,
+            oracle.ctl_spend_bytes as f64 / 1e9,
+            governed.budget_deferrals
+        );
+
+        points_json.push(Json::obj(vec![
+            ("clients", Json::Num(n as f64)),
+            ("edges", Json::Num(m as f64)),
+            ("duration_s", Json::Num(duration_s)),
+            ("oracle_cells_per_s", Json::Num(1.0 / oracle_r.mean_s)),
+            ("capped_cells_per_s", Json::Num(1.0 / capped_r.mean_s)),
+            ("cap_gb", Json::Num(CAP_BYTES as f64 / 1e9)),
+            ("spend_gb", Json::Num(governed.ctl_spend_bytes as f64 / 1e9)),
+            ("oracle_spend_gb", Json::Num(oracle.ctl_spend_bytes as f64 / 1e9)),
+            ("deferrals", Json::Num(governed.budget_deferrals as f64)),
+            ("regret_ms", Json::Num(regret_ms)),
+        ]));
+    }
+
+    let artifact = Json::obj(vec![
+        ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("points", Json::Arr(points_json)),
+        (
+            "note",
+            Json::Str("governed co-sim throughput + spend/deferral/regret; see BENCHMARKS.md".into()),
+        ),
+    ]);
+    std::fs::write("BENCH_budget.json", artifact.to_pretty()).expect("write BENCH_budget.json");
+    println!("  -> wrote BENCH_budget.json");
+}

@@ -1,0 +1,505 @@
+//! The `budget` experiment — budget-governed reactive re-orchestration
+//! (DESIGN.md §11).
+//!
+//! Every cell runs the same fault/surge scenario **twice** on one
+//! kernel: once as an *unbudgeted oracle* (unlimited governor — the
+//! orchestrator reconfigures whenever it wants) and once under the
+//! configured [`BudgetPolicy`] (hard cumulative cap and/or epoch-refill
+//! token bucket). The report carries the standard co-sim serving keys
+//! for the budgeted run plus the control-plane economics:
+//!
+//! * `ctl_spend_gb` / `budget_deferrals` — approved reconfiguration
+//!   spend and denied installs (also surfaced per sweep cell);
+//! * `regret_ms` — p99 latency lost to budgeting: budgeted p99 minus
+//!   oracle p99 (can be ≤ 0 when deferring happened to be harmless);
+//! * `bytes_saved_gb` — oracle spend minus budgeted spend: what the
+//!   budget kept off the wire;
+//! * `within_cap` — the acceptance invariant: cumulative budgeted spend
+//!   never exceeds the configured cap.
+//!
+//! The sweep axes are the budget level (`budget_mb` rows), the fault
+//! rate (`fault_rate` modes: edge fail/recover cycles over the horizon)
+//! and the surge factor (`surge_factor` envs) — `SweepGrid::budget`
+//! declares exactly that grid.
+
+use crate::config::params::ParamSpec;
+use crate::experiments::interference::{cosim_summary, solve_from_ls_mode};
+use crate::experiments::registry::{Experiment, ExperimentCtx, ParamDefault, Report};
+use crate::experiments::scenario::{Scenario, ScenarioConfig};
+use crate::fl::timing::RoundTimeModel;
+use crate::inference::cosim::{
+    run_cell_reusing, CoEvent, ControlConfig, ControlPlane, CoSimConfig, CoSimOutcome,
+    DriftModel, FaultEvent, TrainingConfig, TrainingSchedule,
+};
+use crate::inference::simulation::ServingConfig;
+use crate::inference::trace::ArrivalModel;
+use crate::inference::LatencyModel;
+use crate::orchestrator::budget::{ActionCostModel, BudgetGovernor, BudgetPolicy, TokenBucket};
+use crate::orchestrator::{
+    DeploymentPlan, Gpo, InferenceController, InferenceCtlConfig, LearningController,
+    LearningCtlConfig, ResolveStrategy,
+};
+use crate::sim::Kernel;
+use crate::solver::SolveOptions;
+
+/// One budget cell: the shared fault/surge world both the oracle and
+/// the budgeted run execute.
+#[derive(Debug, Clone)]
+pub struct BudgetCellConfig {
+    pub duration_s: f64,
+    pub interference_factor: f64,
+    pub lambda_scale: f64,
+    pub model_bytes: usize,
+    pub solve: SolveOptions,
+    pub resolve: ResolveStrategy,
+    /// Edge fail/recover cycles over the horizon (the fault-rate axis).
+    pub fault_rate: usize,
+    /// Mid-run λ surge multiplier; ≤ 1 disables the surge window.
+    pub surge_factor: f64,
+    pub seed: u64,
+}
+
+impl Default for BudgetCellConfig {
+    fn default() -> Self {
+        BudgetCellConfig {
+            duration_s: 240.0,
+            interference_factor: 0.25,
+            lambda_scale: 1.0,
+            model_bytes: 262_144,
+            solve: SolveOptions::auto(),
+            resolve: ResolveStrategy::Auto,
+            fault_rate: 2,
+            surge_factor: 1.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Deterministic fault/surge schedule: `fault_rate` fail/recover cycles
+/// rotating over the edges in descending-load order (heaviest first),
+/// plus one surge window when `surge_factor > 1`.
+fn fault_schedule(cfg: &BudgetCellConfig, sc: &Scenario, lambdas: &[f64]) -> Vec<(f64, FaultEvent)> {
+    let d = cfg.duration_s;
+    let m = sc.topo.n_edges();
+    let mut faults = Vec::new();
+    if cfg.fault_rate > 0 && m > 0 {
+        let mut load = vec![0.0f64; m];
+        for (dev, a) in sc.assign_hflop.assign.iter().enumerate() {
+            if let Some(j) = *a {
+                load[j] += lambdas[dev];
+            }
+        }
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| load[b].total_cmp(&load[a]).then(a.cmp(&b)));
+        let cycles = cfg.fault_rate as f64;
+        for c in 0..cfg.fault_rate {
+            let victim = order[c % m];
+            faults.push(((c as f64 + 0.25) / cycles * d, FaultEvent::EdgeFail(victim)));
+            faults.push(((c as f64 + 0.70) / cycles * d, FaultEvent::EdgeRecover(victim)));
+        }
+    }
+    if cfg.surge_factor > 1.0 {
+        faults.push((0.30 * d, FaultEvent::SurgeStart { factor: cfg.surge_factor }));
+        faults.push((0.85 * d, FaultEvent::SurgeEnd));
+    }
+    faults.sort_by(|a, b| a.0.total_cmp(&b.0));
+    faults
+}
+
+/// Run one governed co-sim cell on a caller-supplied kernel: wire the
+/// GPO/controllers from the scenario (seeded with its HFLOP plan, like
+/// `interference::run`), install `policy` behind the learning
+/// controller's governor, and run to the horizon.
+pub fn run_cell(
+    sc: &Scenario,
+    cfg: &BudgetCellConfig,
+    policy: BudgetPolicy,
+    kernel: Kernel<CoEvent>,
+) -> anyhow::Result<(CoSimOutcome, Kernel<CoEvent>)> {
+    let n = sc.topo.n_devices();
+    let m = sc.topo.n_edges();
+    let lambdas: Vec<f64> = sc.lambdas().iter().map(|l| l * cfg.lambda_scale).collect();
+    let caps = sc.capacities();
+
+    let mut gpo = Gpo::new();
+    for dev in &sc.topo.devices {
+        gpo.register_device(dev.id, dev.location);
+    }
+    for edge in &sc.topo.edges {
+        gpo.register_edge(edge.id, edge.location, edge.capacity);
+    }
+
+    let mut learning = LearningController::new(LearningCtlConfig {
+        l: sc.cfg.l,
+        solve: cfg.solve.clone(),
+        strategy: cfg.resolve,
+        ..Default::default()
+    });
+    learning.governor = BudgetGovernor::new(ActionCostModel::for_model(cfg.model_bytes), policy);
+    for (dev, &l) in lambdas.iter().enumerate() {
+        learning.set_lambda(dev, l);
+    }
+    learning.seed_plan(DeploymentPlan {
+        assignment: sc.assign_hflop.clone(),
+        edge_ids: (0..m).collect(),
+        device_ids: (0..n).collect(),
+        cost: sc.hflop_cost,
+        proven_optimal: sc.hflop_optimal,
+    });
+
+    let faults = fault_schedule(cfg, sc, &lambdas);
+    let control = ControlPlane::new(
+        gpo,
+        learning,
+        InferenceController::new(InferenceCtlConfig::default()),
+        ControlConfig {
+            monitor_period_s: 2.0,
+            report_delay_s: 3.0,
+            drift: DriftModel { fresh_mse: 0.02, drift_per_s: 0.0 },
+            resolve_on_recover: true,
+        },
+    );
+
+    Ok(run_cell_reusing(
+        CoSimConfig {
+            serving: ServingConfig {
+                assign: sc.assign_hflop.assign.clone(),
+                lambda: lambdas,
+                capacity: caps,
+                latency: LatencyModel::default(),
+                duration_s: cfg.duration_s,
+                queue_window_s: 0.05,
+                seed: cfg.seed,
+            },
+            interference_factor: cfg.interference_factor,
+            training: TrainingConfig {
+                schedule: TrainingSchedule::Periodic {
+                    start_s: 0.1 * cfg.duration_s,
+                    gap_s: (0.05 * cfg.duration_s).max(1.0),
+                },
+                time_model: RoundTimeModel::default(),
+                epochs: 5,
+                model_bytes: cfg.model_bytes,
+            },
+            faults,
+            bucket_s: 10.0,
+            record_trace: false,
+            arrivals: ArrivalModel::PerDevicePoisson,
+        },
+        Some(control),
+        kernel,
+    ))
+}
+
+/// Registry port. Each run reports the budgeted co-sim (standard
+/// serving + orchestration keys) and the regret/bytes-saved comparison
+/// against the unbudgeted oracle — the sweep-cell path the
+/// `SweepGrid::budget` grid drives with per-cell seeds.
+pub struct BudgetExperiment;
+
+const SCHEMA: &[ParamSpec] = &[
+    ParamSpec { key: "clients", default: ParamDefault::Int(20), help: "FL clients / devices" },
+    ParamSpec { key: "edges", default: ParamDefault::Int(4), help: "candidate edge hosts" },
+    ParamSpec { key: "weeks", default: ParamDefault::Int(5), help: "synthetic dataset length" },
+    ParamSpec {
+        key: "balanced",
+        default: ParamDefault::Bool(false),
+        help: "balanced client placement",
+    },
+    ParamSpec { key: "scenario_seed", default: ParamDefault::Int(42), help: "scenario seed" },
+    ParamSpec { key: "data_seed", default: ParamDefault::Int(1234), help: "dataset seed" },
+    ParamSpec {
+        key: "duration_s",
+        default: ParamDefault::Float(240.0),
+        help: "simulated co-sim horizon (s)",
+    },
+    ParamSpec {
+        key: "interference_factor",
+        default: ParamDefault::Float(0.25),
+        help: "serving-capacity multiplier while an edge trains",
+    },
+    ParamSpec {
+        key: "lambda_scale",
+        default: ParamDefault::Float(1.0),
+        help: "scale factor on every lambda_i",
+    },
+    ParamSpec {
+        key: "model_bytes",
+        default: ParamDefault::Int(262_144),
+        help: "model transfer size (redistribution pricing + round timing)",
+    },
+    ParamSpec {
+        key: "ls_mode",
+        default: ParamDefault::Str("auto"),
+        help: "control-plane re-solve engine: auto|completion|incremental",
+    },
+    ParamSpec {
+        key: "resolve_strategy",
+        default: ParamDefault::Str("auto"),
+        help: "control-plane re-solve strategy: full|warm|auto",
+    },
+    ParamSpec {
+        key: "fault_rate",
+        default: ParamDefault::Int(2),
+        help: "edge fail/recover cycles over the horizon (the fault-rate axis)",
+    },
+    ParamSpec {
+        key: "surge_factor",
+        default: ParamDefault::Float(1.0),
+        help: "mid-run lambda surge multiplier; 1 = no surge (the surge axis)",
+    },
+    ParamSpec {
+        key: "budget_mb",
+        default: ParamDefault::Float(8.0),
+        help: "hard cumulative reconfiguration cap in MB; 0 = uncapped (the budget axis)",
+    },
+    ParamSpec {
+        key: "refill_mb",
+        default: ParamDefault::Float(0.0),
+        help: "token-bucket refill per epoch in MB; 0 = no bucket",
+    },
+    ParamSpec {
+        key: "refill_epoch_s",
+        default: ParamDefault::Float(30.0),
+        help: "token-bucket epoch length (s)",
+    },
+    ParamSpec {
+        key: "burst_mb",
+        default: ParamDefault::Float(0.0),
+        help: "token-bucket burst ceiling in MB; 0 = one refill",
+    },
+    ParamSpec {
+        key: "seed",
+        default: ParamDefault::Int(7),
+        help: "co-simulation seed (the sweep writes the cell seed here)",
+    },
+];
+
+/// Guarded MB→bytes conversion (params are floats; negative, NaN and
+/// absurd values clamp to a sane byte count).
+fn mb_to_bytes(mb: f64) -> u64 {
+    (mb * 1e6).clamp(0.0, 1e18) as u64
+}
+
+/// Build the budgeted policy from params; all-zero knobs = unlimited.
+fn policy_from(budget_mb: f64, refill_mb: f64, refill_epoch_s: f64, burst_mb: f64) -> BudgetPolicy {
+    let mut policy = BudgetPolicy::unlimited();
+    if budget_mb > 0.0 {
+        policy.cap_bytes = Some(mb_to_bytes(budget_mb));
+    }
+    if refill_mb > 0.0 {
+        let refill = mb_to_bytes(refill_mb);
+        let burst = if burst_mb > 0.0 { mb_to_bytes(burst_mb) } else { refill };
+        policy = policy.with_bucket(TokenBucket::new(refill, refill_epoch_s, burst));
+    }
+    policy
+}
+
+fn scenario_from(ctx: &ExperimentCtx) -> anyhow::Result<Scenario> {
+    Scenario::build(ScenarioConfig {
+        n_clients: ctx.params.usize("clients")?,
+        n_edges: ctx.params.usize("edges")?,
+        weeks: ctx.params.usize("weeks")?,
+        balanced_clients: ctx.params.bool("balanced")?,
+        seed: ctx.params.u64("scenario_seed")?,
+        data_seed: ctx.params.u64("data_seed")?,
+        ..Default::default()
+    })
+}
+
+impl Experiment for BudgetExperiment {
+    fn name(&self) -> &'static str {
+        "budget"
+    }
+
+    fn describe(&self) -> &'static str {
+        "budget-governed re-orchestration: comm spend, deferrals, p99 regret vs unbudgeted oracle"
+    }
+
+    fn param_schema(&self) -> &'static [ParamSpec] {
+        SCHEMA
+    }
+
+    fn run(&self, ctx: &mut ExperimentCtx) -> anyhow::Result<Report> {
+        let sc = scenario_from(ctx)?;
+        let duration_s = ctx.f64_capped("duration_s", 60.0)?;
+        let cfg = BudgetCellConfig {
+            duration_s,
+            interference_factor: ctx.params.f64("interference_factor")?,
+            lambda_scale: ctx.params.f64("lambda_scale")?,
+            model_bytes: ctx.params.usize("model_bytes")?,
+            solve: solve_from_ls_mode(&ctx.params.str("ls_mode")?)?,
+            resolve: ResolveStrategy::parse(&ctx.params.str("resolve_strategy")?)?,
+            fault_rate: ctx.params.usize("fault_rate")?,
+            surge_factor: ctx.params.f64("surge_factor")?,
+            seed: ctx.params.u64("seed")?,
+        };
+        let policy = policy_from(
+            ctx.params.f64("budget_mb")?,
+            ctx.params.f64("refill_mb")?,
+            ctx.params.f64("refill_epoch_s")?,
+            ctx.params.f64("burst_mb")?,
+        );
+        let cap_bytes = policy.cap_bytes;
+
+        // Same scenario, same seed, one kernel threaded through both
+        // runs: the only difference is the governor's policy.
+        let (oracle, kernel) = run_cell(&sc, &cfg, BudgetPolicy::unlimited(), Kernel::new())?;
+        let (out, _) = run_cell(&sc, &cfg, policy, kernel)?;
+
+        let mut report = Report::new("budget");
+        cosim_summary(&mut report, &sc, &out, cfg.model_bytes);
+        let regret_ms = out.serving.percentiles.p99() - oracle.serving.percentiles.p99();
+        report.num("regret_ms", regret_ms);
+        report.num("oracle_p99_ms", oracle.serving.percentiles.p99());
+        report.num("oracle_spend_gb", oracle.ctl_spend_bytes as f64 / 1e9);
+        report.num("oracle_plan_swaps", oracle.plan_swaps as f64);
+        report.num(
+            "bytes_saved_gb",
+            oracle.ctl_spend_bytes.saturating_sub(out.ctl_spend_bytes) as f64 / 1e9,
+        );
+        report.num("ctl_telemetry_gb", out.ctl_telemetry_bytes as f64 / 1e9);
+        report.num("budget_cap_gb", cap_bytes.map_or(0.0, |c| c as f64 / 1e9));
+        let within = cap_bytes.map_or(true, |cap| out.ctl_spend_bytes <= cap);
+        report.flag("within_cap", within);
+        anyhow::ensure!(
+            within,
+            "budget invariant violated: spent {} bytes over a {:?}-byte cap",
+            out.ctl_spend_bytes,
+            cap_bytes
+        );
+        report.table(
+            "budget_vs_oracle",
+            &["budgeted", "spend_gb", "p99_ms", "plan_swaps", "deferrals"],
+            vec![
+                vec![
+                    1.0,
+                    out.ctl_spend_bytes as f64 / 1e9,
+                    out.serving.percentiles.p99(),
+                    out.plan_swaps as f64,
+                    out.budget_deferrals as f64,
+                ],
+                vec![
+                    0.0,
+                    oracle.ctl_spend_bytes as f64 / 1e9,
+                    oracle.serving.percentiles.p99(),
+                    oracle.plan_swaps as f64,
+                    oracle.budget_deferrals as f64,
+                ],
+            ],
+        );
+        ctx.say(|| {
+            format!(
+                "budget: spend {:.4} GB (oracle {:.4} GB), {} deferrals, p99 regret {:+.2} ms",
+                out.ctl_spend_bytes as f64 / 1e9,
+                oracle.ctl_spend_bytes as f64 / 1e9,
+                out.budget_deferrals,
+                regret_ms
+            )
+        });
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::{Params, Value};
+
+    fn small_params() -> Params {
+        let mut p = Params::defaults(BudgetExperiment.param_schema());
+        p.set("clients", Value::Int(12)).unwrap();
+        p.set("edges", Value::Int(3)).unwrap();
+        p.set("duration_s", Value::Float(60.0)).unwrap();
+        p.set("lambda_scale", Value::Float(0.5)).unwrap();
+        p
+    }
+
+    #[test]
+    fn end_to_end_spend_never_exceeds_cap_and_regret_is_reported() {
+        // The acceptance invariant: under a finite budget the cumulative
+        // comm spend stays under the cap while the p99 regret vs the
+        // unbudgeted oracle is bounded and present in the JSON summary.
+        let mut p = small_params();
+        p.set("budget_mb", Value::Float(2.0)).unwrap();
+        p.set("fault_rate", Value::Int(2)).unwrap();
+        p.set("surge_factor", Value::Float(3.0)).unwrap();
+        let mut ctx = ExperimentCtx::cell(p);
+        let report = BudgetExperiment.run(&mut ctx).unwrap();
+        let spend = report.get_f64("ctl_spend_gb").unwrap();
+        let cap = report.get_f64("budget_cap_gb").unwrap();
+        assert!(cap > 0.0);
+        assert!(spend <= cap, "spend {spend} exceeds cap {cap}");
+        let regret = report.get_f64("regret_ms").unwrap();
+        assert!(regret.is_finite(), "regret must be a finite latency delta");
+        assert!(regret.abs() < 10_000.0, "regret implausibly large: {regret}");
+        assert!(report.get_f64("requests").unwrap() > 100.0, "sweep honesty keys present");
+        assert!(report.get_f64("oracle_spend_gb").unwrap() >= spend);
+        assert!(report.get_f64("bytes_saved_gb").unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn starved_budget_defers_and_saves_bytes() {
+        let mut p = small_params();
+        // 1 KB cap: no reconfiguration can ever be afforded.
+        p.set("budget_mb", Value::Float(0.001)).unwrap();
+        p.set("fault_rate", Value::Int(3)).unwrap();
+        let report = BudgetExperiment.run(&mut ExperimentCtx::cell(p)).unwrap();
+        assert_eq!(report.get_f64("ctl_spend_gb").unwrap(), 0.0);
+        assert!(report.get_f64("budget_deferrals").unwrap() >= 1.0);
+        assert!(
+            report.get_f64("oracle_plan_swaps").unwrap() >= 1.0,
+            "the oracle must actually reconfigure for the comparison to mean anything"
+        );
+        assert_eq!(
+            report.get_f64("bytes_saved_gb").unwrap(),
+            report.get_f64("oracle_spend_gb").unwrap(),
+        );
+    }
+
+    #[test]
+    fn unlimited_budget_has_zero_regret_by_construction() {
+        // budget_mb = 0 disables the cap: the budgeted run IS the oracle
+        // (same seed, same kernel reset), so regret must be exactly 0.
+        let mut p = small_params();
+        p.set("budget_mb", Value::Float(0.0)).unwrap();
+        let report = BudgetExperiment.run(&mut ExperimentCtx::cell(p)).unwrap();
+        assert_eq!(report.get_f64("regret_ms").unwrap(), 0.0);
+        assert_eq!(report.get_f64("bytes_saved_gb").unwrap(), 0.0);
+        assert_eq!(report.get_f64("budget_deferrals").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn report_is_deterministic_across_runs() {
+        let run = || {
+            let mut p = small_params();
+            p.set("budget_mb", Value::Float(1.0)).unwrap();
+            p.set("refill_mb", Value::Float(0.5)).unwrap();
+            p.set("surge_factor", Value::Float(2.0)).unwrap();
+            BudgetExperiment.run(&mut ExperimentCtx::cell(p)).unwrap().to_json().to_pretty()
+        };
+        assert_eq!(run(), run(), "budget cells must be bit-reproducible");
+    }
+
+    #[test]
+    fn fault_schedule_is_sorted_and_scales_with_rate() {
+        let sc = Scenario::build(ScenarioConfig {
+            n_clients: 10,
+            n_edges: 3,
+            weeks: 5,
+            balanced_clients: false,
+            seed: 42,
+            data_seed: 1234,
+            ..Default::default()
+        })
+        .unwrap();
+        let lambdas = sc.lambdas();
+        let mut cfg = BudgetCellConfig { fault_rate: 3, surge_factor: 2.0, ..Default::default() };
+        let faults = fault_schedule(&cfg, &sc, &lambdas);
+        assert_eq!(faults.len(), 3 * 2 + 2, "3 cycles + surge window");
+        assert!(faults.windows(2).all(|w| w[0].0 <= w[1].0), "schedule must be time-sorted");
+        cfg.fault_rate = 0;
+        cfg.surge_factor = 1.0;
+        assert!(fault_schedule(&cfg, &sc, &lambdas).is_empty());
+    }
+}

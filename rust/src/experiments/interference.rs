@@ -319,7 +319,7 @@ pub fn solve_options_for(mode: LsMode) -> SolveOptions {
 /// Map the `ls_mode` parameter onto solver options: `"auto"` keeps the
 /// full auto policy (exact when small — the standalone default), the
 /// other two pin the heuristic engine the way the sweep's axis does.
-fn solve_from_ls_mode(s: &str) -> anyhow::Result<SolveOptions> {
+pub(crate) fn solve_from_ls_mode(s: &str) -> anyhow::Result<SolveOptions> {
     Ok(match s {
         "auto" => SolveOptions::auto(),
         "completion" => solve_options_for(LsMode::Completion),
@@ -446,9 +446,11 @@ fn config_from(
 }
 
 /// Fill a report with one co-sim outcome: the standard serving keys
-/// (shared with `fig7`) plus training/orchestration counters and the
-/// cost accounting the pre-registry sweep cell carried.
-fn cosim_summary(
+/// (shared with `fig7`) plus training/orchestration counters, the cost
+/// accounting the pre-registry sweep cell carried, and the budget
+/// control plane's spend/deferral counters (DESIGN.md §11; shared with
+/// the `budget` experiment, which adds the regret keys on top).
+pub(crate) fn cosim_summary(
     report: &mut Report,
     sc: &Scenario,
     out: &CoSimOutcome,
@@ -464,6 +466,8 @@ fn cosim_summary(
     report.num("eq1_cost", sc.hflop_cost);
     let comm = hfl_bytes(&sc.inst, &sc.assign_hflop, out.rounds_completed, model_bytes);
     report.num("comm_gb", comm as f64 / 1e9);
+    report.num("ctl_spend_gb", out.ctl_spend_bytes as f64 / 1e9);
+    report.num("budget_deferrals", out.budget_deferrals as f64);
 }
 
 impl Experiment for InterferenceExperiment {

@@ -10,6 +10,7 @@
 //! | [`fig9`]   | communication-cost savings vs edge density |
 //! | [`cl_table`] | §V-B1 static vs continually-retrained MSE |
 //! | [`interference`] | joint training/serving timeline (co-sim presets) |
+//! | [`budget`] | budget-governed re-orchestration: spend, deferrals, regret |
 //! | [`scenario`] | the shared world itself (topology + assignments) |
 //!
 //! [`registry::REGISTRY`] is the single typed entry point: `main.rs`
@@ -19,6 +20,7 @@
 //! per-cell coordinate-hashed seeds. The `examples/` binaries and
 //! `rust/benches/` harnesses stay thin drivers over these modules.
 
+pub mod budget;
 pub mod cl_table;
 pub mod fig2;
 pub mod fig6;

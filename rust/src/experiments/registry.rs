@@ -196,6 +196,7 @@ pub static REGISTRY: &[&dyn Experiment] = &[
     &super::fig9::Fig9Experiment,
     &super::cl_table::ClTableExperiment,
     &super::interference::InterferenceExperiment,
+    &super::budget::BudgetExperiment,
     &super::scenario::ScenarioExperiment,
 ];
 
@@ -290,11 +291,13 @@ mod tests {
     }
 
     #[test]
-    fn registry_holds_all_eight_experiments() {
-        for expect in ["fig2", "fig6", "fig7", "fig8", "fig9", "cl", "interference", "scenario"] {
+    fn registry_holds_all_nine_experiments() {
+        for expect in
+            ["fig2", "fig6", "fig7", "fig8", "fig9", "cl", "interference", "budget", "scenario"]
+        {
             assert!(find(expect).is_some(), "experiment '{expect}' not registered");
         }
-        assert_eq!(REGISTRY.len(), 8);
+        assert_eq!(REGISTRY.len(), 9);
     }
 
     #[test]

@@ -256,6 +256,60 @@ impl SweepGrid {
         g
     }
 
+    /// Budget control-plane grid (DESIGN.md §11): budget level rows ×
+    /// fault-rate modes × surge-factor envs × replication seeds, each
+    /// cell a `budget` oracle-vs-governed co-sim pair reporting spend,
+    /// deferrals and p99 regret.
+    pub fn budget(root_seed: u64) -> SweepGrid {
+        SweepGrid {
+            name: "budget".into(),
+            experiment: "budget".into(),
+            base: vec![
+                ov("clients", Value::Int(12)),
+                ov("edges", Value::Int(3)),
+                ov("weeks", Value::Int(5)),
+                ov("balanced", Value::Bool(false)),
+                ov("duration_s", Value::Float(60.0)),
+                ov("model_bytes", Value::Int(4 * 65_536)),
+            ],
+            rows: [("unlimited", 0.0), ("cap8", 8.0), ("cap2", 2.0)]
+                .iter()
+                .map(|(name, mb)| {
+                    AxisPoint::hashed(
+                        "budget",
+                        name,
+                        vec![ov("budget_mb", Value::Float(*mb))],
+                    )
+                })
+                .collect(),
+            modes: [("f1", 1), ("f3", 3)]
+                .iter()
+                .map(|(name, rate)| {
+                    AxisPoint::hashed(
+                        "budget",
+                        name,
+                        vec![ov("fault_rate", Value::Int(*rate))],
+                    )
+                })
+                .collect(),
+            envs: [("s1", 1.0), ("s3", 3.0)]
+                .iter()
+                .map(|(name, f)| {
+                    AxisPoint::hashed(
+                        "budget",
+                        name,
+                        vec![ov("surge_factor", Value::Float(*f))],
+                    )
+                })
+                .collect(),
+            seed_base: 0,
+            n_seeds: 2,
+            seed_key: "seed".into(),
+            duration_s: 60.0,
+            root_seed,
+        }
+    }
+
     /// Built-in grid lookup for the CLI.
     pub fn by_name(name: &str, root_seed: u64) -> Option<SweepGrid> {
         match name {
@@ -263,11 +317,12 @@ impl SweepGrid {
             "smoke" => Some(SweepGrid::smoke(root_seed)),
             "fig7" => Some(SweepGrid::fig7(root_seed)),
             "fig8" => Some(SweepGrid::fig8(root_seed)),
+            "budget" => Some(SweepGrid::budget(root_seed)),
             _ => None,
         }
     }
 
-    pub const BUILTIN: [&'static str; 4] = ["interference", "smoke", "fig7", "fig8"];
+    pub const BUILTIN: [&'static str; 5] = ["interference", "smoke", "fig7", "fig8", "budget"];
 
     /// A custom grid over any registered experiment (the
     /// `hflop sweep --experiment ...` path). Axis points get hashed
@@ -419,6 +474,14 @@ pub struct CellOutcome {
     pub eq1_cost: f64,
     /// Predicted metered traffic (GB) for the cell's training activity.
     pub comm_gb: f64,
+    // --- budget control plane (DESIGN.md §11) ----------------------------
+    /// Reconfiguration bytes the budget governor approved (GB).
+    pub ctl_spend_gb: f64,
+    /// Plan installs the budget governor denied.
+    pub budget_deferrals: usize,
+    /// p99 latency lost vs the unbudgeted oracle (budget experiment; 0
+    /// for experiments that do not run the oracle comparison).
+    pub regret_ms: f64,
     /// Wall-clock seconds this cell took. Recorded for the bench report,
     /// EXCLUDED from [`CellOutcome::to_json`] — wall time varies run to
     /// run and must not break matrix bit-identity.
@@ -466,6 +529,9 @@ impl CellOutcome {
             events_cancelled: g("events_cancelled") as u64,
             eq1_cost: g("eq1_cost"),
             comm_gb: g("comm_gb"),
+            ctl_spend_gb: g("ctl_spend_gb"),
+            budget_deferrals: g("budget_deferrals") as usize,
+            regret_ms: g("regret_ms"),
             wall_s,
         }
     }
@@ -495,6 +561,9 @@ impl CellOutcome {
             ("events_cancelled", Json::Num(self.events_cancelled as f64)),
             ("eq1_cost", Json::Num(self.eq1_cost)),
             ("comm_gb", Json::Num(self.comm_gb)),
+            ("ctl_spend_gb", Json::Num(self.ctl_spend_gb)),
+            ("budget_deferrals", Json::Num(self.budget_deferrals as f64)),
+            ("regret_ms", Json::Num(self.regret_ms)),
         ])
     }
 }

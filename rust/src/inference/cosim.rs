@@ -32,6 +32,7 @@ use super::latency::LatencyModel;
 use super::simulation::{admission_bound, ServingConfig, ServingOutcome};
 use super::trace::{ArrivalModel, RateTrace};
 use crate::fl::timing::RoundTimeModel;
+use crate::orchestrator::budget::plan_delta;
 use crate::orchestrator::{Gpo, InferenceController, LearningController};
 use crate::sim::{Component, Kernel};
 use crate::util::rng::Rng;
@@ -785,29 +786,40 @@ impl ControlPlane {
 
     /// Ask the learning controller whether the live plan survives the
     /// current environment; install the new plan if it re-solved.
-    fn react(&mut self, shared: &mut SharedWorld) {
+    fn react(&mut self, now: f64, shared: &mut SharedWorld) {
         match self.learning.on_environment_change(&mut self.gpo) {
-            Ok(true) => self.install_plan(shared),
+            Ok(true) => self.install_plan(now, shared),
             Ok(false) => {}
             Err(_) => self.resolve_failures += 1,
         }
     }
 
     /// Unconditional re-solve (e.g. on edge recovery).
-    fn force_resolve(&mut self, shared: &mut SharedWorld) {
+    fn force_resolve(&mut self, now: f64, shared: &mut SharedWorld) {
         // `cluster` returns a borrow of the installed plan; drop it
         // before touching `self` again.
         let solved = self.learning.cluster(&mut self.gpo).is_ok();
         if solved {
-            self.install_plan(shared);
+            self.install_plan(now, shared);
         } else {
             self.resolve_failures += 1;
         }
     }
 
-    fn install_plan(&mut self, shared: &mut SharedWorld) {
+    /// Install the controller's current plan into the live world —
+    /// gated by the budget governor (DESIGN.md §11), which prices the
+    /// *actual* delta between the live assignment and the candidate
+    /// plan. A denied install leaves the stale plan live and queues the
+    /// trigger; the next monitor tick re-prices the latest desired plan
+    /// against the refilled budget. With the default unlimited governor
+    /// the gate always approves, so pre-budget timelines are unchanged.
+    fn install_plan(&mut self, now: f64, shared: &mut SharedWorld) {
         if let Some(plan) = &self.learning.current_plan {
             let assign = plan.assignment_by_device(self.n_devices);
+            let delta = plan_delta(&shared.assign, &assign);
+            if !self.learning.governor.approve_install(now, &delta) {
+                return;
+            }
             if assign != shared.assign {
                 shared.assign = assign;
                 shared.plan_swaps += 1;
@@ -855,6 +867,10 @@ impl Component<CoEvent, SharedWorld> for ControlPlane {
     ) {
         match event {
             CoEvent::MonitorTick => {
+                // One monitoring heartbeat: refills the budget bucket
+                // and meters telemetry (charged even when the decision
+                // below is "do nothing").
+                self.learning.governor.note_telemetry(now);
                 let staleness = (now - self.last_fresh_s) as f32;
                 let mse = self.cfg.drift.fresh_mse + self.cfg.drift.drift_per_s * staleness;
                 // Only count (and dispatch) a trigger when the training
@@ -864,13 +880,19 @@ impl Component<CoEvent, SharedWorld> for ControlPlane {
                     self.retrain_triggers += 1;
                     kernel.schedule_in(0.0, CoEvent::TrainTask);
                 }
+                // A budget-deferred install is re-evaluated here, where
+                // the refilled bucket may now afford the latest desired
+                // plan (superseding any intermediate candidates).
+                if self.learning.governor.has_pending() {
+                    self.install_plan(now, shared);
+                }
                 kernel.schedule_in(self.cfg.monitor_period_s, CoEvent::MonitorTick);
             }
             CoEvent::CapacityReport { edge } => {
                 if edge < shared.capacity.len() {
                     // Same formula the serving plane queues by.
                     self.gpo.set_edge_capacity(edge, shared.effective_rate(edge));
-                    self.react(shared);
+                    self.react(now, shared);
                 }
             }
             CoEvent::Fault(fault) => {
@@ -878,12 +900,12 @@ impl Component<CoEvent, SharedWorld> for ControlPlane {
                 match fault {
                     FaultEvent::EdgeFail(j) => {
                         self.gpo.fail_edge(j);
-                        self.react(shared);
+                        self.react(now, shared);
                     }
                     FaultEvent::EdgeRecover(j) => {
                         self.gpo.recover_edge(j);
                         if self.cfg.resolve_on_recover {
-                            self.force_resolve(shared);
+                            self.force_resolve(now, shared);
                         }
                     }
                     FaultEvent::SurgeStart { factor } => {
@@ -892,13 +914,13 @@ impl Component<CoEvent, SharedWorld> for ControlPlane {
                         for d in 0..self.n_devices {
                             self.learning.set_lambda(d, self.base_lambda[d] * factor);
                         }
-                        self.react(shared);
+                        self.react(now, shared);
                     }
                     FaultEvent::SurgeEnd => {
                         for d in 0..self.n_devices {
                             self.learning.set_lambda(d, self.base_lambda[d]);
                         }
-                        self.react(shared);
+                        self.react(now, shared);
                     }
                 }
             }
@@ -968,6 +990,16 @@ pub struct CoSimOutcome {
     pub cache_hits: usize,
     pub retrain_triggers: usize,
     pub resolve_failures: usize,
+    /// Budget-governed reconfiguration spend approved by the control
+    /// plane's [`BudgetPolicy`](crate::orchestrator::BudgetPolicy)
+    /// (model redistribution + signalling bytes; metered even when the
+    /// governor is unlimited, 0 without a control plane).
+    pub ctl_spend_bytes: u64,
+    /// Monitoring telemetry bytes metered by the governor (outside the
+    /// budgeted spend — the monitoring plane is always on).
+    pub ctl_telemetry_bytes: u64,
+    /// Plan installs denied (deferred) by the budget policy.
+    pub budget_deferrals: usize,
     pub events_processed: u64,
     pub events_cancelled: u64,
     /// The GPO's per-edge capacity view at the end of the run, indexed by
@@ -1167,6 +1199,21 @@ impl CoSim {
                 .unwrap_or(0),
             retrain_triggers: self.control.as_ref().map(|c| c.retrain_triggers).unwrap_or(0),
             resolve_failures: self.control.as_ref().map(|c| c.resolve_failures).unwrap_or(0),
+            ctl_spend_bytes: self
+                .control
+                .as_ref()
+                .map(|c| c.learning.governor.policy.spent_bytes)
+                .unwrap_or(0),
+            ctl_telemetry_bytes: self
+                .control
+                .as_ref()
+                .map(|c| c.learning.governor.ledger.telemetry_bytes)
+                .unwrap_or(0),
+            budget_deferrals: self
+                .control
+                .as_ref()
+                .map(|c| c.learning.governor.deferrals)
+                .unwrap_or(0),
             events_processed: self.kernel.processed(),
             events_cancelled: self.kernel.cancelled_count(),
             gpo_edge_capacity,
@@ -1496,6 +1543,75 @@ mod tests {
             .expect("no capacity report for edge 0");
         assert_eq!(last0, "edge 0 capacity -> 200");
         assert_eq!(out.gpo_edge_capacity, vec![200.0, 200.0]);
+    }
+
+    #[test]
+    fn budget_starved_gate_defers_every_swap_and_spends_nothing() {
+        use crate::orchestrator::budget::{ActionCostModel, BudgetGovernor, BudgetPolicy};
+        // Same failure/recovery rig as the stale-capacity test above,
+        // but the governor can afford nothing: every non-noop install is
+        // deferred, the stale plan stays live, and cumulative spend
+        // never exceeds the (1-byte) cap.
+        let faults = vec![(33.0, FaultEvent::EdgeFail(0)), (66.0, FaultEvent::EdgeRecover(0))];
+        let mut control = two_edge_control(5.0);
+        control.learning.governor =
+            BudgetGovernor::new(ActionCostModel::for_model(400_000), BudgetPolicy::capped(1));
+        let out = run_cell(one_round_on_edge0(90.0, faults), Some(control));
+        assert_eq!(out.plan_swaps, 0, "a starved budget must block every reconfiguration");
+        assert!(out.budget_deferrals >= 1, "denied installs must count as deferrals");
+        assert_eq!(out.ctl_spend_bytes, 0);
+        assert!(out.ctl_telemetry_bytes > 0, "monitoring telemetry is metered regardless");
+    }
+
+    #[test]
+    fn budget_bucket_refill_installs_deferred_swap_later() {
+        use crate::orchestrator::budget::{
+            ActionCostModel, BudgetGovernor, BudgetPolicy, TokenBucket,
+        };
+        // An initially-empty bucket: the failure-time re-placement (10
+        // devices × ~400 KB ≈ 4 MB) is deferred, then installs at a
+        // monitor tick once the first 5 MB epoch refill lands.
+        let faults = vec![(33.0, FaultEvent::EdgeFail(0)), (66.0, FaultEvent::EdgeRecover(0))];
+        let mut control = two_edge_control(5.0);
+        control.learning.governor = BudgetGovernor::new(
+            ActionCostModel::for_model(400_000),
+            BudgetPolicy::unlimited()
+                .with_bucket(TokenBucket::starting_empty(5_000_000, 40.0, 5_000_000)),
+        );
+        let out = run_cell(one_round_on_edge0(90.0, faults), Some(control));
+        assert!(out.budget_deferrals >= 1, "the pre-refill trigger must defer");
+        assert!(out.plan_swaps >= 1, "the refilled bucket must eventually fund the swap");
+        assert!(out.ctl_spend_bytes > 0);
+    }
+
+    #[test]
+    fn unlimited_governor_meters_spend_without_changing_decisions() {
+        use crate::orchestrator::budget::{ActionCostModel, BudgetGovernor, BudgetPolicy};
+        // The default governor and an explicit huge-cap governor must
+        // produce byte-identical runs (both approve everything), and an
+        // approved swap must show up as metered spend.
+        let mk = |governor: Option<BudgetGovernor>| {
+            let faults =
+                vec![(33.0, FaultEvent::EdgeFail(0)), (66.0, FaultEvent::EdgeRecover(0))];
+            let mut control = two_edge_control(5.0);
+            if let Some(g) = governor {
+                control.learning.governor = g;
+            }
+            run_cell(one_round_on_edge0(90.0, faults), Some(control))
+        };
+        let a = mk(None);
+        let b = mk(Some(BudgetGovernor::new(
+            ActionCostModel::default(),
+            BudgetPolicy::capped(u64::MAX),
+        )));
+        assert!(a.plan_swaps >= 1);
+        assert_eq!(a.plan_swaps, b.plan_swaps);
+        assert_eq!(a.budget_deferrals, 0);
+        assert_eq!(b.budget_deferrals, 0);
+        assert_eq!(a.serving.latency.mean().to_bits(), b.serving.latency.mean().to_bits());
+        assert_eq!(a.events_processed, b.events_processed);
+        assert!(a.ctl_spend_bytes > 0, "approved swaps must be metered even when unlimited");
+        assert!(b.ctl_spend_bytes <= u64::MAX);
     }
 
     #[test]

@@ -45,7 +45,7 @@ USAGE: hflop <subcommand> [options] [--flags]
   experiment  --list | --names
   experiment  <name> [--help] [--config F.toml] [--set k=v]... [--<param> v]...
               [--out results/] [--smoke]
-  sweep       [--grid interference|smoke|fig7|fig8] [--workers W] [--root-seed S]
+  sweep       [--grid interference|smoke|fig7|fig8|budget] [--workers W] [--root-seed S]
               [--out results/] [--smoke] [--compare]
   sweep       --experiment <name> [--rows k=v1,v2] [--modes k=v1,v2]
               [--envs k=v1,v2] [--seeds N] [--set k=v]... (custom registry grid)

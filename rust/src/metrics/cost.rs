@@ -8,8 +8,14 @@
 use crate::hflop::Instance;
 use crate::solver::Assignment;
 
-/// Running ledger, fed by the FL round engine.
-#[derive(Debug, Clone, Default)]
+/// Running ledger, fed by the FL round engine — and, since the budget
+/// control plane (DESIGN.md §11), by the orchestrator's reconfiguration
+/// actions. Training traffic and control traffic are separate accounts:
+/// [`total_bytes`](CommLedger::total_bytes) stays the paper's §V-D
+/// training-plane metric (local + global only), while the three
+/// control-plane categories sum into
+/// [`control_bytes`](CommLedger::control_bytes).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CommLedger {
     /// Bytes over metered device↔aggregator links.
     pub local_bytes: u64,
@@ -18,6 +24,14 @@ pub struct CommLedger {
     /// Exchange counts for sanity checks.
     pub local_exchanges: u64,
     pub global_exchanges: u64,
+    /// Control plane: model pushes to devices reassigned by a plan swap.
+    pub redistribution_bytes: u64,
+    /// Control plane: reconfiguration signalling (reassignment messages,
+    /// aggregator open/close churn).
+    pub signalling_bytes: u64,
+    /// Control plane: monitoring traffic — charged even when the
+    /// decision is "do nothing".
+    pub telemetry_bytes: u64,
 }
 
 impl CommLedger {
@@ -39,12 +53,43 @@ impl CommLedger {
         self.global_bytes += 2 * model_bytes as u64;
     }
 
+    /// Full-model pushes to `devices` reassigned devices (download only —
+    /// the new plan ships one model copy per displaced device).
+    pub fn model_redistribution(&mut self, devices: usize, model_bytes: usize) {
+        self.redistribution_bytes =
+            self.redistribution_bytes.saturating_add((devices as u64).saturating_mul(model_bytes as u64));
+    }
+
+    /// Reconfiguration signalling bytes (reassignment + churn messages).
+    pub fn reconfiguration_signal(&mut self, bytes: u64) {
+        self.signalling_bytes = self.signalling_bytes.saturating_add(bytes);
+    }
+
+    /// Monitoring / decision telemetry bytes.
+    pub fn telemetry(&mut self, bytes: u64) {
+        self.telemetry_bytes = self.telemetry_bytes.saturating_add(bytes);
+    }
+
+    /// Training-plane traffic only (the paper's §V-D metric) — control
+    /// categories are deliberately excluded so pre-budget callers see
+    /// unchanged numbers.
     pub fn total_bytes(&self) -> u64 {
         self.local_bytes + self.global_bytes
     }
 
     pub fn total_gb(&self) -> f64 {
         self.total_bytes() as f64 / 1e9
+    }
+
+    /// Control-plane traffic: redistribution + signalling + telemetry.
+    pub fn control_bytes(&self) -> u64 {
+        self.redistribution_bytes
+            .saturating_add(self.signalling_bytes)
+            .saturating_add(self.telemetry_bytes)
+    }
+
+    pub fn control_gb(&self) -> f64 {
+        self.control_bytes() as f64 / 1e9
     }
 }
 
@@ -146,6 +191,73 @@ mod tests {
         assert_eq!(ledger.local_exchanges, 1);
         ledger.device_edge_exchange(true, 1000);
         assert_eq!(ledger.local_bytes, 2000);
+    }
+
+    #[test]
+    fn control_categories_do_not_leak_into_training_totals() {
+        // Backward compatibility: `total_bytes()`/`total_gb()` are the
+        // paper's training-plane metric and must ignore the budget
+        // control plane's categories entirely.
+        let mut ledger = CommLedger::new();
+        ledger.device_edge_exchange(true, 1000);
+        ledger.cloud_exchange(1000);
+        let training = ledger.total_bytes();
+        ledger.model_redistribution(5, 2000);
+        ledger.reconfiguration_signal(512);
+        ledger.telemetry(64);
+        assert_eq!(ledger.total_bytes(), training, "control traffic leaked into total_bytes");
+        assert_eq!(ledger.redistribution_bytes, 10_000);
+        assert_eq!(ledger.signalling_bytes, 512);
+        assert_eq!(ledger.telemetry_bytes, 64);
+        assert_eq!(ledger.control_bytes(), 10_000 + 512 + 64);
+        assert!((ledger.control_gb() - (10_576.0 / 1e9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn control_categories_accumulate_independently() {
+        let mut ledger = CommLedger::new();
+        ledger.telemetry(10);
+        ledger.telemetry(10);
+        assert_eq!(ledger.telemetry_bytes, 20);
+        assert_eq!(ledger.redistribution_bytes, 0);
+        assert_eq!(ledger.signalling_bytes, 0);
+        // A do-nothing decision is telemetry only: the other categories
+        // stay untouched until an actual reconfiguration is charged.
+        ledger.model_redistribution(0, 1_000_000);
+        assert_eq!(ledger.redistribution_bytes, 0);
+        assert_eq!(ledger.control_bytes(), 20);
+    }
+
+    #[test]
+    fn flat_vs_hfl_crossover_in_metered_device_count() {
+        // HFL beats flat FL only while enough device↔edge links are
+        // free. With n=20 devices, m=2 open edges, l=2 and k metered
+        // devices: hfl(k) = 2·k·R·B + 2·2·(R/2)·B, flat = 2·20·R·B —
+        // so the crossover sits exactly at k = 19.
+        let inst = InstanceBuilder::unit_cost(20, 2, 3).uncapacitated().build();
+        assert_eq!(inst.l, 2.0, "builder default l drifted; crossover arithmetic assumes l=2");
+        let rounds = 100;
+        let mb = 1000;
+        let free_edge = |i: usize| (0..2).find(|&j| inst.c_d[i][j] == 0.0).unwrap();
+        let metered_edge = |i: usize| (0..2).find(|&j| inst.c_d[i][j] > 0.0).unwrap();
+        let hfl_with_k_metered = |k: usize| {
+            let mut sol = Assignment::empty(20, 2);
+            sol.open = vec![true, true];
+            for i in 0..20 {
+                sol.assign[i] = Some(if i < k { metered_edge(i) } else { free_edge(i) });
+            }
+            hfl_bytes(&inst, &sol, rounds, mb)
+        };
+        let flat = flat_fl_bytes(20, rounds, mb);
+        for k in 1..=20 {
+            assert!(
+                hfl_with_k_metered(k) > hfl_with_k_metered(k - 1),
+                "hfl traffic must grow with metered device count (k={k})"
+            );
+        }
+        assert!(hfl_with_k_metered(18) < flat, "below the crossover HFL must win");
+        assert_eq!(hfl_with_k_metered(19), flat, "k=19 is the exact crossover point");
+        assert!(hfl_with_k_metered(20) > flat, "past the crossover flat FL wins");
     }
 
     #[test]

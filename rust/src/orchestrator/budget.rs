@@ -1,0 +1,504 @@
+//! Budget-governed reactive re-orchestration — the communication-cost
+//! control plane (DESIGN.md §11).
+//!
+//! The paper's orchestrator re-solves on staleness and drift with no
+//! notion of what a reconfiguration costs on the wire, yet its headline
+//! result is that HFL wins precisely because communication is scarce.
+//! Following the group's follow-up work on cost-aware reactive
+//! orchestration, this module prices every control action in bytes and
+//! gates plan installs behind an explicit budget:
+//!
+//! * [`ActionCostModel`] — the price list. A plan install costs one full
+//!   model push plus a signalling message per *reassigned* device and a
+//!   churn message per aggregator opened or closed; a warm partial
+//!   repair is estimated from the [`DirtySet`] it touches; doing nothing
+//!   costs telemetry only.
+//! * [`BudgetPolicy`] — a hard cumulative cap and/or an epoch-refill
+//!   [`TokenBucket`]. Both default to absent (= unlimited), which keeps
+//!   every pre-budget golden path byte-identical: an unlimited governor
+//!   meters traffic but never changes a decision.
+//! * [`BudgetGovernor`] — what the [`LearningController`] carries and
+//!   the co-sim control plane consults before acting. Denied installs
+//!   are *deferred*: the stale plan stays live, the trigger stays
+//!   pending, and the next monitor tick re-prices the latest desired
+//!   plan against the refilled budget.
+//!
+//! Everything here is integer byte arithmetic driven by simulated time,
+//! so the module lives in the detlint deterministic zone
+//! (`rust/lint.toml`): bucket refills are idempotent per epoch and
+//! independent of event tie-ordering at equal timestamps.
+//!
+//! [`LearningController`]: super::learning::LearningController
+
+use crate::metrics::cost::CommLedger;
+use crate::solver::DirtySet;
+
+/// Prices of control-plane actions in bytes (the DESIGN.md §11 table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActionCostModel {
+    /// Full-model transfer size: what one reassigned device downloads.
+    pub model_bytes: usize,
+    /// Reassignment signalling message per displaced device.
+    pub signal_bytes: u64,
+    /// Churn message per aggregator opened or closed by a swap.
+    pub churn_bytes: u64,
+    /// Monitoring telemetry per control decision — charged even when
+    /// the decision is "do nothing".
+    pub telemetry_bytes: u64,
+}
+
+impl Default for ActionCostModel {
+    fn default() -> Self {
+        ActionCostModel {
+            model_bytes: 262_144,
+            signal_bytes: 512,
+            churn_bytes: 4_096,
+            telemetry_bytes: 256,
+        }
+    }
+}
+
+impl ActionCostModel {
+    /// Default message sizes around an explicit model size (the co-sim
+    /// wires its `model_bytes` here so redistribution pricing matches
+    /// the training plane's transfer accounting).
+    pub fn for_model(model_bytes: usize) -> ActionCostModel {
+        ActionCostModel { model_bytes, ..Default::default() }
+    }
+
+    /// Price of actually installing a plan, from the realized
+    /// [`PlanDelta`] — NOT from the instance size. A no-op delta prices
+    /// to zero (the governor then charges telemetry only).
+    pub fn install_bytes(&self, delta: &PlanDelta) -> u64 {
+        (delta.reassigned as u64)
+            .saturating_mul(self.model_bytes as u64 + self.signal_bytes)
+            .saturating_add((delta.churned_edges as u64).saturating_mul(self.churn_bytes))
+    }
+
+    /// Worst-case estimate for a full re-solve: every device
+    /// redistributed, every aggregator churned.
+    pub fn full_estimate(&self, n_devices: usize, n_edges: usize) -> u64 {
+        (n_devices as u64)
+            .saturating_mul(self.model_bytes as u64 + self.signal_bytes)
+            .saturating_add((n_edges as u64).saturating_mul(self.churn_bytes))
+    }
+
+    /// Estimate for a warm partial repair, priced from the [`DirtySet`]
+    /// it would touch: transfers only for the displaced rows, churn only
+    /// for the dirty columns.
+    pub fn repair_estimate(&self, dirty: &DirtySet) -> u64 {
+        (dirty.rows.len() as u64)
+            .saturating_mul(self.model_bytes as u64 + self.signal_bytes)
+            .saturating_add((dirty.cols.len() as u64).saturating_mul(self.churn_bytes))
+    }
+}
+
+/// The realized difference between the live assignment and a candidate
+/// plan — what an install actually moves on the wire.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanDelta {
+    /// Devices whose serving edge changes (including to/from `None`).
+    pub reassigned: usize,
+    /// Edges entering or leaving the set of used aggregators.
+    pub churned_edges: usize,
+}
+
+impl PlanDelta {
+    /// An identical plan: nothing moves, the decision is telemetry only.
+    pub fn is_noop(&self) -> bool {
+        self.reassigned == 0 && self.churned_edges == 0
+    }
+}
+
+/// Diff two dense per-device assignments (old = live, new = candidate).
+/// An edge counts as churned when it gains its first device or loses
+/// its last one — aggregator spin-up/teardown traffic.
+pub fn plan_delta(old: &[Option<usize>], new: &[Option<usize>]) -> PlanDelta {
+    let n = old.len().max(new.len());
+    let mut reassigned = 0usize;
+    let mut old_used = std::collections::BTreeSet::new();
+    let mut new_used = std::collections::BTreeSet::new();
+    for d in 0..n {
+        let a = old.get(d).copied().flatten();
+        let b = new.get(d).copied().flatten();
+        if a != b {
+            reassigned += 1;
+        }
+        if let Some(j) = a {
+            old_used.insert(j);
+        }
+        if let Some(j) = b {
+            new_used.insert(j);
+        }
+    }
+    let churned_edges = old_used.symmetric_difference(&new_used).count();
+    PlanDelta { reassigned, churned_edges }
+}
+
+/// Epoch-refill token bucket over simulated time. `refill_to` is
+/// idempotent within an epoch: any number of calls at the same (or an
+/// earlier) timestamp is a no-op, so spend/refill outcomes cannot
+/// depend on how same-time events happen to be ordered.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenBucket {
+    /// Bytes added once per elapsed epoch.
+    pub refill_bytes: u64,
+    /// Epoch length in simulated seconds.
+    pub epoch_s: f64,
+    /// Level ceiling (unclaimed refills saturate here).
+    pub burst_bytes: u64,
+    level: u64,
+    last_epoch: u64,
+}
+
+impl TokenBucket {
+    /// A bucket that starts full (level = `burst_bytes`).
+    pub fn new(refill_bytes: u64, epoch_s: f64, burst_bytes: u64) -> TokenBucket {
+        TokenBucket { refill_bytes, epoch_s, burst_bytes, level: burst_bytes, last_epoch: 0 }
+    }
+
+    /// A bucket that starts empty: budget accrues one refill per epoch,
+    /// so early triggers defer until spend capacity has accumulated.
+    pub fn starting_empty(refill_bytes: u64, epoch_s: f64, burst_bytes: u64) -> TokenBucket {
+        TokenBucket { refill_bytes, epoch_s, burst_bytes, level: 0, last_epoch: 0 }
+    }
+
+    pub fn level(&self) -> u64 {
+        self.level
+    }
+
+    /// Advance the bucket to simulated time `now_s`, crediting one
+    /// refill per fully elapsed epoch since the last credit.
+    pub fn refill_to(&mut self, now_s: f64) {
+        if !self.epoch_s.is_finite() || self.epoch_s <= 0.0 || !now_s.is_finite() || now_s <= 0.0 {
+            return;
+        }
+        // Guarded float→int: now_s is finite and positive here, and the
+        // epoch index is clamped below u64 range before the cast.
+        let epoch = (now_s / self.epoch_s).min(u32::MAX as f64).max(0.0) as u64;
+        if epoch > self.last_epoch {
+            let credit = (epoch - self.last_epoch).saturating_mul(self.refill_bytes);
+            self.level = self.level.saturating_add(credit).min(self.burst_bytes);
+            self.last_epoch = epoch;
+        }
+    }
+
+    fn affords(&self, cost: u64) -> bool {
+        cost <= self.level
+    }
+
+    fn drain(&mut self, cost: u64) {
+        self.level = self.level.saturating_sub(cost);
+    }
+}
+
+/// The budget itself: an optional hard cumulative cap plus an optional
+/// refilling bucket. `None`/`None` (the default) is unlimited — every
+/// spend is approved, which is what keeps pre-budget behavior intact.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BudgetPolicy {
+    /// Hard ceiling on cumulative approved spend, in bytes.
+    pub cap_bytes: Option<u64>,
+    /// Rate limit on spend over time.
+    pub bucket: Option<TokenBucket>,
+    /// Cumulative approved reconfiguration spend (metered even when
+    /// unlimited, so the oracle run reports its spend too).
+    pub spent_bytes: u64,
+}
+
+impl BudgetPolicy {
+    pub fn unlimited() -> BudgetPolicy {
+        BudgetPolicy::default()
+    }
+
+    pub fn capped(cap_bytes: u64) -> BudgetPolicy {
+        BudgetPolicy { cap_bytes: Some(cap_bytes), ..Default::default() }
+    }
+
+    pub fn with_bucket(mut self, bucket: TokenBucket) -> BudgetPolicy {
+        self.bucket = Some(bucket);
+        self
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.cap_bytes.is_none() && self.bucket.is_none()
+    }
+
+    pub fn refill_to(&mut self, now_s: f64) {
+        if let Some(b) = &mut self.bucket {
+            b.refill_to(now_s);
+        }
+    }
+
+    /// Would `cost` fit right now (cap headroom AND bucket level)?
+    pub fn affords(&self, cost: u64) -> bool {
+        let cap_ok =
+            self.cap_bytes.map_or(true, |cap| self.spent_bytes.saturating_add(cost) <= cap);
+        let bucket_ok = self.bucket.as_ref().map_or(true, |b| b.affords(cost));
+        cap_ok && bucket_ok
+    }
+
+    /// Refill to `now_s`, then spend `cost` if it fits. Returns whether
+    /// the spend was approved; cumulative spend can therefore never
+    /// exceed `cap_bytes`.
+    pub fn try_spend(&mut self, now_s: f64, cost: u64) -> bool {
+        self.refill_to(now_s);
+        if !self.affords(cost) {
+            return false;
+        }
+        self.spent_bytes = self.spent_bytes.saturating_add(cost);
+        if let Some(b) = &mut self.bucket {
+            b.drain(cost);
+        }
+        true
+    }
+}
+
+/// What the learning controller carries: the price list, the budget,
+/// and the per-category [`CommLedger`] the spend is metered into.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BudgetGovernor {
+    pub costs: ActionCostModel,
+    pub policy: BudgetPolicy,
+    /// Control-plane traffic by category (`redistribution_bytes`,
+    /// `signalling_bytes`, `telemetry_bytes`; the training-plane fields
+    /// stay zero here).
+    pub ledger: CommLedger,
+    /// Plan installs denied (and queued) by the policy.
+    pub deferrals: usize,
+    /// A denied install awaits re-evaluation at the next monitor tick.
+    pending: bool,
+}
+
+impl Default for BudgetGovernor {
+    fn default() -> Self {
+        BudgetGovernor::unlimited(ActionCostModel::default())
+    }
+}
+
+impl BudgetGovernor {
+    pub fn new(costs: ActionCostModel, policy: BudgetPolicy) -> BudgetGovernor {
+        BudgetGovernor { costs, policy, ledger: CommLedger::new(), deferrals: 0, pending: false }
+    }
+
+    /// A governor that meters but never denies.
+    pub fn unlimited(costs: ActionCostModel) -> BudgetGovernor {
+        BudgetGovernor::new(costs, BudgetPolicy::unlimited())
+    }
+
+    /// One monitoring heartbeat: refill the bucket and meter telemetry.
+    pub fn note_telemetry(&mut self, now_s: f64) {
+        self.policy.refill_to(now_s);
+        self.ledger.telemetry(self.costs.telemetry_bytes);
+    }
+
+    /// Gate one plan install, priced from the *actual* delta between
+    /// the live assignment and the candidate plan. A no-op delta is
+    /// charged telemetry only and always approved; a real delta spends
+    /// `install_bytes(delta)` or is deferred.
+    pub fn approve_install(&mut self, now_s: f64, delta: &PlanDelta) -> bool {
+        if delta.is_noop() {
+            self.ledger.telemetry(self.costs.telemetry_bytes);
+            self.pending = false;
+            return true;
+        }
+        let cost = self.costs.install_bytes(delta);
+        if self.policy.try_spend(now_s, cost) {
+            self.ledger.model_redistribution(delta.reassigned, self.costs.model_bytes);
+            self.ledger.reconfiguration_signal(
+                (delta.reassigned as u64)
+                    .saturating_mul(self.costs.signal_bytes)
+                    .saturating_add(
+                        (delta.churned_edges as u64).saturating_mul(self.costs.churn_bytes),
+                    ),
+            );
+            self.pending = false;
+            true
+        } else {
+            self.deferrals += 1;
+            self.pending = true;
+            false
+        }
+    }
+
+    /// Is a deferred install queued for re-evaluation on refill?
+    pub fn has_pending(&self) -> bool {
+        self.pending
+    }
+
+    /// Strategy hint for `ResolveStrategy::Auto` under budget pressure:
+    /// prefer a warm partial repair when the worst-case full re-solve
+    /// does not fit the current budget but the DirtySet-priced repair
+    /// does. Always `false` when unlimited, so the pre-budget Auto
+    /// heuristic is unchanged by default.
+    pub fn budget_prefers_partial(&self, n: usize, m: usize, dirty: &DirtySet) -> bool {
+        if self.policy.is_unlimited() {
+            return false;
+        }
+        !self.policy.affords(self.costs.full_estimate(n, m))
+            && self.policy.affords(self.costs.repair_estimate(dirty))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(reassigned: usize, churned_edges: usize) -> PlanDelta {
+        PlanDelta { reassigned, churned_edges }
+    }
+
+    #[test]
+    fn plan_delta_prices_the_actual_diff_not_instance_size() {
+        let old = vec![Some(0), Some(0), Some(1), None];
+        let new = vec![Some(0), Some(2), Some(1), None];
+        // One device moved (1), edge 0 keeps a device, edge 2 gains its
+        // first device (churn 1); edge 1 is untouched.
+        assert_eq!(plan_delta(&old, &new), delta(1, 1));
+        // Identical plans: a no-op regardless of how many devices exist.
+        assert!(plan_delta(&old, &old).is_noop());
+        // Length mismatch treats missing tail entries as unassigned.
+        assert_eq!(plan_delta(&[Some(0)], &[Some(0), Some(1)]), delta(1, 1));
+    }
+
+    #[test]
+    fn noop_install_is_telemetry_only() {
+        // Satellite regression: a re-solve that lands on the identical
+        // plan must charge telemetry, not redistribution or signalling.
+        let mut gov = BudgetGovernor::new(ActionCostModel::default(), BudgetPolicy::capped(1));
+        assert!(gov.approve_install(10.0, &delta(0, 0)));
+        assert_eq!(gov.policy.spent_bytes, 0, "no-op must not touch the budget");
+        assert_eq!(gov.ledger.redistribution_bytes, 0);
+        assert_eq!(gov.ledger.signalling_bytes, 0);
+        assert_eq!(gov.ledger.telemetry_bytes, ActionCostModel::default().telemetry_bytes);
+        assert_eq!(gov.deferrals, 0);
+    }
+
+    #[test]
+    fn install_cost_scales_with_delta_and_meters_categories() {
+        let costs = ActionCostModel {
+            model_bytes: 1_000,
+            signal_bytes: 10,
+            churn_bytes: 100,
+            telemetry_bytes: 1,
+        };
+        let mut gov = BudgetGovernor::unlimited(costs);
+        assert!(gov.approve_install(0.0, &delta(3, 2)));
+        assert_eq!(gov.policy.spent_bytes, 3 * 1_010 + 2 * 100);
+        assert_eq!(gov.ledger.redistribution_bytes, 3_000);
+        assert_eq!(gov.ledger.signalling_bytes, 3 * 10 + 2 * 100);
+        assert_eq!(gov.ledger.telemetry_bytes, 0);
+        assert_eq!(gov.ledger.total_bytes(), 0, "control spend must not pollute training totals");
+    }
+
+    #[test]
+    fn hard_cap_is_never_exceeded_and_denials_defer() {
+        let costs = ActionCostModel {
+            model_bytes: 1_000,
+            signal_bytes: 0,
+            churn_bytes: 0,
+            telemetry_bytes: 1,
+        };
+        let mut gov = BudgetGovernor::new(costs, BudgetPolicy::capped(2_500));
+        assert!(gov.approve_install(1.0, &delta(2, 0))); // 2000 ≤ 2500
+        assert!(!gov.approve_install(2.0, &delta(1, 0)), "1000 more would breach the cap");
+        assert!(gov.has_pending());
+        assert_eq!(gov.deferrals, 1);
+        assert_eq!(gov.policy.spent_bytes, 2_000);
+        // The queue drains once an affordable delta shows up.
+        assert!(!gov.approve_install(3.0, &delta(1, 0)));
+        assert_eq!(gov.deferrals, 2);
+        assert!(gov.approve_install(4.0, &delta(0, 0)), "no-op still approved");
+        assert!(!gov.has_pending(), "an approved decision clears the queue");
+        assert!(gov.policy.spent_bytes <= 2_500);
+    }
+
+    #[test]
+    fn token_bucket_refills_per_epoch_and_saturates_at_burst() {
+        let mut b = TokenBucket::new(100, 10.0, 250);
+        assert_eq!(b.level(), 250, "bucket starts full");
+        b.drain(250);
+        b.refill_to(9.9);
+        assert_eq!(b.level(), 0, "no epoch elapsed yet");
+        b.refill_to(10.0);
+        assert_eq!(b.level(), 100);
+        b.refill_to(45.0); // epochs 1→4: 3 more refills, clipped at burst
+        assert_eq!(b.level(), 250);
+        // Time never flows backwards in the kernel, but a stale call
+        // must still be harmless.
+        b.refill_to(10.0);
+        assert_eq!(b.level(), 250);
+    }
+
+    #[test]
+    fn refill_is_independent_of_event_tie_ordering() {
+        // Two same-timestamp schedules of the same work, interleaved
+        // differently: spend-then-extra-refills vs refills-then-spend.
+        // The refill is idempotent per epoch, so both orders land on the
+        // identical (level, spent) state.
+        let policy = || {
+            BudgetPolicy::capped(10_000).with_bucket(TokenBucket::new(500, 10.0, 1_000))
+        };
+        let t = 30.0;
+
+        let mut a = policy();
+        assert!(a.try_spend(t, 700));
+        a.refill_to(t);
+        a.refill_to(t);
+        assert!(!a.try_spend(t, 700), "level 300 cannot fund another 700 at the same tick");
+
+        let mut b = policy();
+        b.refill_to(t);
+        b.refill_to(t);
+        assert!(b.try_spend(t, 700));
+        assert!(!b.try_spend(t, 700));
+
+        assert_eq!(a, b, "tie-order must not affect bucket state");
+        assert_eq!(a.bucket.as_ref().unwrap().level(), 300);
+        assert_eq!(a.spent_bytes, 700);
+    }
+
+    #[test]
+    fn bucket_rate_limits_but_cap_bounds_cumulative_spend() {
+        let mut p = BudgetPolicy::capped(1_500).with_bucket(TokenBucket::new(1_000, 10.0, 1_000));
+        assert!(p.try_spend(0.0, 1_000));
+        assert!(!p.try_spend(5.0, 1_000), "bucket empty mid-epoch");
+        // The bucket refills at t=10 but the hard cap only has 500 left.
+        assert!(!p.try_spend(10.0, 1_000));
+        assert!(p.try_spend(10.0, 500));
+        assert_eq!(p.spent_bytes, 1_500);
+        assert!(!p.try_spend(100.0, 1), "cap exhausted forever");
+    }
+
+    #[test]
+    fn unlimited_policy_always_approves_but_still_meters() {
+        let mut p = BudgetPolicy::unlimited();
+        assert!(p.is_unlimited());
+        for k in 0..100 {
+            assert!(p.try_spend(k as f64, 1_000_000));
+        }
+        assert_eq!(p.spent_bytes, 100_000_000);
+    }
+
+    #[test]
+    fn budget_pressure_prefers_partial_repair() {
+        let costs = ActionCostModel {
+            model_bytes: 1_000,
+            signal_bytes: 0,
+            churn_bytes: 0,
+            telemetry_bytes: 0,
+        };
+        let dirty = DirtySet { rows: vec![0, 1], cols: vec![0] };
+        // Unlimited: never overrides the Auto heuristic.
+        let gov = BudgetGovernor::unlimited(costs.clone());
+        assert!(!gov.budget_prefers_partial(100, 4, &dirty));
+        // Tight budget: a 100-device full redistribution (100k) does not
+        // fit, the 2-row repair (2k) does.
+        let gov = BudgetGovernor::new(costs.clone(), BudgetPolicy::capped(5_000));
+        assert!(gov.budget_prefers_partial(100, 4, &dirty));
+        // Starved budget: neither fits — no preference, the install gate
+        // will defer whatever the solver produces.
+        let gov = BudgetGovernor::new(costs, BudgetPolicy::capped(1_000));
+        assert!(!gov.budget_prefers_partial(100, 4, &dirty));
+    }
+}

@@ -163,6 +163,12 @@ pub struct LearningController {
     pub epoch_hits: usize,
     /// Warm repairs that went infeasible and fell back to a cold solve.
     pub warm_fallbacks: usize,
+    /// Communication-budget governor (DESIGN.md §11). Defaults to
+    /// unlimited, which meters control traffic but never changes a
+    /// decision; the co-sim control plane consults it before installing
+    /// a plan, and `ResolveStrategy::Auto` lets it bias the full-vs-
+    /// partial choice under budget pressure.
+    pub governor: super::budget::BudgetGovernor,
     cache: SolveCache,
     /// Device ids whose λ changed since the last installed plan.
     dirty_lambda: BTreeSet<usize>,
@@ -188,6 +194,7 @@ impl LearningController {
             cache_hits: 0,
             epoch_hits: 0,
             warm_fallbacks: 0,
+            governor: super::budget::BudgetGovernor::default(),
             cache,
             dirty_lambda: BTreeSet::new(),
             installed_epoch: None,
@@ -325,7 +332,12 @@ impl LearningController {
             .map(|plan| project_plan(plan, &device_ids, &edge_ids, &mut dirty));
         let try_warm = warm_seed.is_some()
             && (self.config.strategy == ResolveStrategy::WarmStart
-                || dirty.fraction(n, m) <= self.config.warm_dirty_max_frac);
+                || dirty.fraction(n, m) <= self.config.warm_dirty_max_frac
+                // Budget pressure (DESIGN.md §11): when a worst-case
+                // full redistribution no longer fits the remaining
+                // budget but the DirtySet-priced repair does, Auto
+                // prefers the partial path. Inert when unlimited.
+                || self.governor.budget_prefers_partial(n, m, &dirty));
         let (sol, was_cold) = match warm_seed {
             Some(prev) if try_warm => {
                 match solver::resolve_assignment(&inst, &prev, &dirty, &self.config.solve) {

@@ -9,11 +9,17 @@
 //! * [`inference_ctl`] — the inference controller: deploys serving agents
 //!   per node, monitors accuracy, and triggers a new HFL task when
 //!   inference accuracy degrades below threshold (continual learning).
+//! * [`budget`] — the communication-cost control plane (DESIGN.md §11):
+//!   an action cost model pricing reconfigurations in bytes, and the
+//!   budget policy (hard cap + epoch-refill token bucket) the learning
+//!   controller consults before installing a plan.
 
+pub mod budget;
 pub mod gpo;
 pub mod inference_ctl;
 pub mod learning;
 
+pub use budget::{ActionCostModel, BudgetGovernor, BudgetPolicy, PlanDelta, TokenBucket};
 pub use gpo::{Gpo, NodeKind, NodeState};
 pub use inference_ctl::{InferenceController, InferenceCtlConfig};
 pub use learning::{DeploymentPlan, LearningController, LearningCtlConfig, ResolveStrategy};

@@ -16,6 +16,7 @@ const ARTIFACTS: &[&str] = &[
     concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_kernel.json"),
     concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_solver.json"),
     concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_resolve.json"),
+    concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_budget.json"),
 ];
 
 #[test]

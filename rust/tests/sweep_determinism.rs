@@ -137,6 +137,40 @@ fn trace_env_axis_is_deterministic_and_moves_traffic() {
 }
 
 #[test]
+fn budget_grid_is_bit_identical_at_1_and_8_workers() {
+    // The budget control plane adds stateful gating (token-bucket
+    // refills, deferral queues) to every cell: the byte-identity
+    // contract must survive it. Shrunk variant of `SweepGrid::budget` —
+    // still covering an unlimited row, a starving cap row, both fault
+    // rates and a surge env.
+    let mut g = SweepGrid::budget(2026);
+    g.set_base("clients", Value::Int(10));
+    g.set_base("duration_s", Value::Float(30.0));
+    g.set_base("lambda_scale", Value::Float(0.5));
+    g.duration_s = 30.0;
+    g.n_seeds = 1;
+    g.rows.truncate(2); // unlimited + cap8
+    g.envs.truncate(2);
+    assert!(g.n_cells() >= 8, "{} cells", g.n_cells());
+    let serial = run_grid(&g, 1).unwrap();
+    let serial_json = serial.to_json().to_pretty();
+    for workers in [8] {
+        let parallel = run_grid(&g, workers).unwrap().to_json().to_pretty();
+        assert_eq!(
+            serial_json.as_bytes(),
+            parallel.as_bytes(),
+            "budget grid diverged at {workers} workers"
+        );
+    }
+    // The budget keys actually flow into the matrix: every cell carries
+    // a finite regret, and the governed cells meter spend or defer.
+    for c in &serial.cells {
+        assert!(c.regret_ms.is_finite(), "cell {}", c.label);
+        assert!(c.requests > 100, "cell {} looks empty", c.label);
+    }
+}
+
+#[test]
 fn custom_registry_grid_is_deterministic_too() {
     // The declarative path new experiments use: sweep `fig7` cells via
     // hashed axis coordinates — same byte-identity contract.

@@ -200,6 +200,8 @@ fn legacy_cell(sc: &Scenario, grid: &LegacyGrid, idx: usize) -> CellOutcome {
     let mut retrain_triggers = 0usize;
     let mut events_processed = 0u64;
     let mut events_cancelled = 0u64;
+    let mut ctl_spend_bytes = 0u64;
+    let mut budget_deferrals = 0usize;
     let serving = match row.workload {
         Workload::Static(setup) => {
             let assign = match setup {
@@ -236,6 +238,11 @@ fn legacy_cell(sc: &Scenario, grid: &LegacyGrid, idx: usize) -> CellOutcome {
             retrain_triggers = out.retrain_triggers;
             events_processed = out.events_processed;
             events_cancelled = out.events_cancelled;
+            // The unlimited governor meters reconfiguration spend even
+            // when it never denies: the oracle reads the same counters
+            // the registry path surfaces through `cosim_summary`.
+            ctl_spend_bytes = out.ctl_spend_bytes;
+            budget_deferrals = out.budget_deferrals;
             out.serving
         }
     };
@@ -283,6 +290,9 @@ fn legacy_cell(sc: &Scenario, grid: &LegacyGrid, idx: usize) -> CellOutcome {
         events_cancelled,
         eq1_cost,
         comm_gb: comm_bytes as f64 / 1e9,
+        ctl_spend_gb: ctl_spend_bytes as f64 / 1e9,
+        budget_deferrals,
+        regret_ms: 0.0,
         wall_s: 0.0,
     }
 }
@@ -433,13 +443,16 @@ fn v2_header_adds_only_schema_version_and_experiment() {
         ]
     );
     let cell = m.get("cells").unwrap().as_arr().unwrap()[0].as_obj().unwrap();
-    // The v1 cell key set, unchanged.
+    // The v1 cell key set plus the three budget control-plane keys
+    // (additive, so the schema version stays at 2 — DESIGN.md §8).
     let keys: Vec<&str> = cell.keys().map(String::as_str).collect();
     assert_eq!(
         keys,
         vec![
+            "budget_deferrals",
             "cell_seed",
             "comm_gb",
+            "ctl_spend_gb",
             "direct_to_cloud",
             "eq1_cost",
             "events_cancelled",
@@ -453,6 +466,7 @@ fn v2_header_adds_only_schema_version_and_experiment() {
             "p99_ms",
             "plan_swaps",
             "reclusters",
+            "regret_ms",
             "requests",
             "retrain_triggers",
             "rounds_completed",
